@@ -1,0 +1,79 @@
+//! Cluster sweep: the distributed-scaling story (Figs. 8–10) on the
+//! discrete-event simulator, with this machine's measured kernel
+//! throughput as the cost model.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sweep
+//! ```
+
+use fmri_encode::cluster::ClusterSpec;
+use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::perfmodel::{calibrate, FitShape};
+use fmri_encode::ridge::LAMBDA_GRID;
+use fmri_encode::util::human_secs;
+
+fn main() {
+    println!("== cluster sweep: MOR vs B-MOR vs single-node RidgeCV ==");
+    let cal = calibrate(true);
+    println!(
+        "calibration: mkl-like {:.2} GF/s, openblas-like {:.2} GF/s, eigh {:.2} GF/s\n",
+        cal.gemm_flops_mkl / 1e9,
+        cal.gemm_flops_openblas / 1e9,
+        cal.eigh_flops / 1e9
+    );
+    let cluster = ClusterSpec::default();
+
+    // Whole-brain (B-MOR) truncation shape at repro scale.
+    let shape = FitShape { n: 2048, p: 512, t: 32_000, r: LAMBDA_GRID.len(), splits: 3 };
+    println!(
+        "problem: n={} p={} t={} r={} splits={}\n",
+        shape.n, shape.p, shape.t, shape.r, shape.splits
+    );
+
+    let single1 = coordinator::simulate(
+        shape,
+        &DistConfig { strategy: Strategy::Single, nodes: 1, threads_per_node: 1, ..Default::default() },
+        &cal,
+        &cluster,
+    )
+    .makespan;
+    println!("single-node RidgeCV, 1 thread:  {:>10}", human_secs(single1));
+    let single32 = coordinator::simulate(
+        shape,
+        &DistConfig { strategy: Strategy::Single, nodes: 1, threads_per_node: 32, ..Default::default() },
+        &cal,
+        &cluster,
+    )
+    .makespan;
+    println!("single-node RidgeCV, 32 threads:{:>10}\n", human_secs(single32));
+
+    println!("{:>6} {:>8} | {:>12} {:>8} | {:>12} {:>8}", "nodes", "threads", "B-MOR", "DSU", "MOR", "vs 1×32");
+    for nodes in [1, 2, 4, 8] {
+        for threads in [1, 8, 32] {
+            let bmor = coordinator::simulate(
+                shape,
+                &DistConfig { strategy: Strategy::Bmor, nodes, threads_per_node: threads, ..Default::default() },
+                &cal,
+                &cluster,
+            )
+            .makespan;
+            let mor = coordinator::simulate(
+                shape,
+                &DistConfig { strategy: Strategy::Mor, nodes, threads_per_node: threads, ..Default::default() },
+                &cal,
+                &cluster,
+            )
+            .makespan;
+            println!(
+                "{:>6} {:>8} | {:>12} {:>7.1}× | {:>12} {:>7.0}×",
+                nodes,
+                threads,
+                human_secs(bmor),
+                single1 / bmor,
+                human_secs(mor),
+                mor / single32
+            );
+        }
+    }
+    println!("\npaper: B-MOR up to ~33× DSU at 8 nodes × 32 threads; MOR ~1000× slower than 1-node/32-thread RidgeCV");
+}

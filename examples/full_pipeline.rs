@@ -1,0 +1,242 @@
+//! End-to-end driver: the complete three-layer system on a real (synthetic)
+//! workload, proving all layers compose.
+//!
+//!   procedural movie frames (rust)
+//!     → L2/L1 AOT feature extractor via PJRT (`features_main`)
+//!     → 4-TR windowing (paper §2.2.2)
+//!     → planted HRF brain responses (visual network carries signal)
+//!     → B-MOR distributed fit (coordinator, native compute)
+//!     → held-out Pearson r map + shuffled-feature null (Figs. 4–5)
+//!     → XLA-path fit of the same problem (runtime::XlaRidge) and a
+//!       native-vs-XLA λ*/score parity check
+//!
+//! The run log (stage timings, r statistics, parity deltas) is the source
+//! of the EXPERIMENTS.md §E2E numbers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_pipeline [-- --small]
+//! ```
+
+use anyhow::Result;
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::cv::{kfold, pearson_cols, train_test_split};
+use fmri_encode::data::friends::window_features;
+use fmri_encode::encoding::RSummary;
+use fmri_encode::hrf;
+use fmri_encode::linalg::Mat;
+use fmri_encode::masker::{atlas::Atlas, BrainGrid};
+use fmri_encode::ridge;
+use fmri_encode::runtime::{literal_to_mat, Runtime, XlaRidge};
+use fmri_encode::util::{human_secs, Pcg64, Stopwatch};
+
+/// Procedural "Friends" frames: two Gaussian blobs whose position, size
+/// and colour follow slow AR(1) latents — a stand-in for the slow visual
+/// statistics of a TV episode. Returns flat f32 NHWC (n, 32, 32, 3).
+fn generate_frames(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let (h, w) = (32usize, 32usize);
+    let mut frames = vec![0f32; n * h * w * 3];
+    // 8 latents: blob A (x, y, r), blob B (x, y), colours.
+    let mut lat = [0f64; 8];
+    let mut vel = [0f64; 8];
+    for f in 0..n {
+        for k in 0..8 {
+            vel[k] = 0.9 * vel[k] + 0.1 * rng.normal();
+            lat[k] = (lat[k] + 0.15 * vel[k]).clamp(-2.5, 2.5);
+        }
+        let (ax, ay) = (16.0 + 10.0 * lat[0] / 2.5, 16.0 + 10.0 * lat[1] / 2.5);
+        let ar = 3.0 + 1.5 * (lat[2] / 2.5 + 1.0);
+        let (bx, by) = (16.0 - 10.0 * lat[3] / 2.5, 16.0 + 10.0 * lat[4] / 2.5);
+        let col = [0.5 + 0.2 * lat[5], 0.5 + 0.2 * lat[6], 0.5 + 0.2 * lat[7]];
+        let base = f * h * w * 3;
+        for y in 0..h {
+            for x in 0..w {
+                let da = ((x as f64 - ax).powi(2) + (y as f64 - ay).powi(2)) / (2.0 * ar * ar);
+                let db = ((x as f64 - bx).powi(2) + (y as f64 - by).powi(2)) / 18.0;
+                let ga = (-da).exp();
+                let gb = 0.7 * (-db).exp();
+                let grad = 0.1 * (x as f64 / w as f64);
+                for c in 0..3 {
+                    frames[base + (y * w + x) * 3 + c] =
+                        (grad + ga * col[c] + gb * (1.0 - col[c])).clamp(0.0, 1.0) as f32;
+                }
+            }
+        }
+    }
+    frames
+}
+
+/// Push frames through the AOT feature extractor in fixed batches.
+fn extract_features(rt: &Runtime, preset: &str, frames: &[f32], n: usize) -> Result<Mat> {
+    let cfg = *rt.manifest.preset(preset).unwrap();
+    let (fb, fd) = (cfg.feat_batch, cfg.feat_dim);
+    let frame_len = 32 * 32 * 3;
+    let mut out = Mat::zeros(n, fd);
+    let mut batch = vec![0f32; fb * frame_len];
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(fb);
+        batch[..take * frame_len]
+            .copy_from_slice(&frames[i * frame_len..(i + take) * frame_len]);
+        for v in batch[take * frame_len..].iter_mut() {
+            *v = 0.0;
+        }
+        let lit = xla::Literal::vec1(&batch).reshape(&[fb as i64, 32, 32, 3])?;
+        let res = rt.run(&format!("features_{preset}"), &[lit])?;
+        let feats = res[0].to_vec::<f32>()?;
+        for r in 0..take {
+            for c in 0..fd {
+                out.set(i + r, c, feats[r * fd + c] as f64);
+            }
+        }
+        i += take;
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let small = std::env::args().any(|a| a == "--small");
+    let preset = if small { "small" } else { "main" };
+    let total = Stopwatch::start();
+    println!("== full_pipeline (preset: {preset}) ==");
+
+    let rt = Runtime::open("artifacts")?;
+    let xr = XlaRidge::new(&rt, preset)?;
+    let pcfg = xr.cfg;
+    let window = 4;
+    assert_eq!(pcfg.feat_dim * window, pcfg.p, "preset feature chain mismatch");
+
+    // Problem size: n time samples, t brain targets (multiples of the
+    // artifact chunk sizes keep the XLA path exact).
+    let n = if small { 512 } else { 1536 };
+    let t = if small { 256 } else { 2048 };
+    let mut rng = Pcg64::seeded(2020);
+
+    // -- stage 1: stimulus frames -----------------------------------------
+    let sw = Stopwatch::start();
+    let frames = generate_frames(n, &mut rng);
+    println!("[1] frames: {n} × 32×32×3 in {}", human_secs(sw.secs()));
+
+    // -- stage 2: features via the AOT CNN (L2/L1 through PJRT) -----------
+    let sw = Stopwatch::start();
+    let mut feats = extract_features(&rt, preset, &frames, n)?;
+    feats.zscore_cols();
+    println!(
+        "[2] XLA features: ({} × {}) in {} (platform {})",
+        feats.rows(), feats.cols(), human_secs(sw.secs()), rt.platform()
+    );
+
+    // -- stage 3: windowing + synthetic brain ------------------------------
+    let sw = Stopwatch::start();
+    let mut x = window_features(&feats, window);
+    x.zscore_cols();
+    // Brain: MIST-like atlas; visual voxels carry HRF-convolved signal.
+    let grid = BrainGrid::synthetic((24, 28, 22), 1);
+    let atlas = Atlas::mist_like(&grid, 444, 7, 2020);
+    let visual = atlas.visual_roi();
+    let blas = Blas::new(Backend::MklLike, 1);
+    let w_true = Mat::randn(feats.cols(), t, &mut rng);
+    let neural = blas.gemm(&feats, &w_true);
+    let mut bold = hrf::convolve_cols(&neural, &hrf::canonical(hrf::TR_SECS));
+    bold.zscore_cols();
+    let mut y = Mat::zeros(n, t);
+    let mut is_visual = vec![false; t];
+    for j in 0..t {
+        let vis = visual[j % visual.len()];
+        is_visual[j] = vis;
+        let frac: f64 = if vis { 0.5 } else { 0.01 };
+        let (sig, noise) = (frac.sqrt(), (1.0 - frac).sqrt());
+        for i in 0..n {
+            y.set(i, j, sig * bold.get(i, j) + noise * rng.normal());
+        }
+    }
+    y.zscore_cols();
+    println!(
+        "[3] brain targets: ({} × {}), {} visual, in {}",
+        n, t,
+        is_visual.iter().filter(|&&v| v).count(),
+        human_secs(sw.secs())
+    );
+
+    // -- stage 4: B-MOR distributed fit (native compute) ------------------
+    let outer = train_test_split(n, 0.125, 0);
+    let xtr = x.rows_gather(&outer.train);
+    let ytr = y.rows_gather(&outer.train);
+    let xte = x.rows_gather(&outer.val);
+    let yte = y.rows_gather(&outer.val);
+    let cfg = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 4,
+        threads_per_node: 1,
+        backend: Backend::MklLike,
+        inner_folds: 2,
+        seed: 0,
+    };
+    let sw = Stopwatch::start();
+    let fit = coordinator::fit(&xtr, &ytr, &cfg);
+    println!(
+        "[4] B-MOR fit: {} batches in {} (gram {} | eigh {} | sweep {} | solve {})",
+        fit.batches.len(),
+        human_secs(sw.secs()),
+        human_secs(fit.timings.gram_secs),
+        human_secs(fit.timings.eigh_secs),
+        human_secs(fit.timings.sweep_secs),
+        human_secs(fit.timings.solve_secs),
+    );
+    println!("    λ* per batch: {:?}", fit.best_lambda_per_batch);
+
+    // -- stage 5: held-out quality + null (Figs. 4–5) ----------------------
+    let sw = Stopwatch::start();
+    let pred = ridge::predict(&blas, &xte, &fit.weights);
+    let rs = pearson_cols(&pred, &yte);
+    let summary = RSummary::from_rs(&rs, &is_visual);
+    // Null: break the stimulus↔brain pairing.
+    let perm = Pcg64::seeded(7).permutation(xtr.rows());
+    let fit_null = coordinator::fit(&xtr.rows_gather(&perm), &ytr, &cfg);
+    let pred_null = ridge::predict(&blas, &xte, &fit_null.weights);
+    let null = RSummary::from_rs(&pearson_cols(&pred_null, &yte), &is_visual);
+    println!(
+        "[5] quality in {}: visual r {:.3} (q95 {:.3}, max {:.3}) | other {:.3} | null visual {:.3}",
+        human_secs(sw.secs()),
+        summary.mean_visual, summary.q95_visual, summary.max_r,
+        summary.mean_other, null.mean_visual
+    );
+
+    // -- stage 6: XLA-path fit + parity ------------------------------------
+    let sw = Stopwatch::start();
+    let mut splits = kfold(xtr.rows(), 2, Some(0));
+    for s in &mut splits {
+        s.val.truncate(pcfg.nv);
+    }
+    let xfit = xr.fit_cv(&xtr, &ytr, &splits)?;
+    let blas1 = Blas::new(Backend::MklLike, 1);
+    let nfit = ridge::fit_ridge_cv(&blas1, &xtr, &ytr, &xr.lambdas, &splits);
+    let wdiff = xfit.weights.max_abs_diff(&nfit.weights);
+    println!(
+        "[6] XLA fit in {}: λ* = {} (native λ* = {}), weight max|Δ| = {:.2e}",
+        human_secs(sw.secs()),
+        xfit.best_lambda,
+        nfit.best_lambda,
+        wdiff
+    );
+    let _ = literal_to_mat; // (api surface used by other drivers)
+
+    // -- verdict ------------------------------------------------------------
+    let ok = summary.mean_visual > 0.25
+        && summary.mean_visual > 5.0 * null.mean_visual.abs().max(1e-3)
+        && xfit.best_idx == nfit.best_idx
+        && wdiff < 1e-6;
+    println!(
+        "\n== e2e {} in {} — visual r {:.3}, null {:.3}, XLA/native parity {:.1e} ==",
+        if ok { "PASS" } else { "FAIL" },
+        human_secs(total.secs()),
+        summary.mean_visual,
+        null.mean_visual,
+        wdiff
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Fig. 5 driver: encoding accuracy against a shuffled-feature null, with
+//! several permutation seeds to show the null's spread.
+//!
+//! ```bash
+//! cargo run --release --example null_distribution
+//! ```
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::data::catalog::Resolution;
+use fmri_encode::data::friends::generate;
+use fmri_encode::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["null".into(), "--quick".into()])?;
+    let exp = ExperimentConfig::from_args(&args)?;
+    let blas = Blas::new(Backend::MklLike, 1);
+    let ds = generate(&exp.friends, 1, Resolution::Parcels);
+
+    println!("== Fig 5 reproduction: matched vs shuffled encoding (sub-01) ==");
+    let real = run_encoding(&blas, &ds, EncodeOpts::default());
+    println!(
+        "matched   : visual mean r = {:+.4}, q95 = {:+.4}, max = {:+.4}",
+        real.summary.mean_visual, real.summary.q95_visual, real.summary.max_r
+    );
+
+    let mut null_means = Vec::new();
+    for seed in 0..5u64 {
+        let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 1000 + seed);
+        println!(
+            "shuffled#{seed}: visual mean r = {:+.4}, q95 = {:+.4}, max = {:+.4}",
+            null.summary.mean_visual, null.summary.q95_visual, null.summary.max_r
+        );
+        null_means.push(null.summary.mean_visual);
+    }
+    let null_mean = null_means.iter().sum::<f64>() / null_means.len() as f64;
+    let null_max = null_means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nnull distribution of visual-mean r: mean {:+.4}, max {:+.4}",
+        null_mean, null_max
+    );
+    println!(
+        "matched / |null| ratio = {:.1}× (paper: matched ≈ 0.5, null < 0.05 — ~an order of magnitude)",
+        real.summary.mean_visual / null_mean.abs().max(1e-3)
+    );
+    anyhow::ensure!(
+        real.summary.mean_visual > 4.0 * null_max.abs().max(1e-3),
+        "encoding does not separate from the null"
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: generate a small synthetic Friends subject, fit the
+//! brain-encoding ridge with the B-MOR coordinator, and print the paper's
+//! headline quality numbers (Fig. 4/5-style) — all native, no artifacts
+//! needed. Runs in well under a minute.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::data::catalog::Resolution;
+use fmri_encode::data::friends::generate;
+use fmri_encode::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+use fmri_encode::util::{human_secs, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    // Quick-scale experiment config (same path the CLI uses).
+    let args = Args::parse(&["quickstart".into(), "--quick".into()])?;
+    let exp = ExperimentConfig::from_args(&args)?;
+
+    println!("== fmri-encode quickstart ==");
+    let sw = Stopwatch::start();
+    let ds = generate(&exp.friends, 1, Resolution::Parcels);
+    println!(
+        "synthetic sub-01 parcels dataset: X ({} × {}), Y ({} × {}) in {}",
+        ds.n(), ds.p(), ds.n(), ds.t(), human_secs(sw.secs())
+    );
+
+    // 1. Distributed fit: B-MOR across 4 (simulated) nodes.
+    let cfg = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 4,
+        threads_per_node: 1,
+        backend: Backend::MklLike,
+        ..Default::default()
+    };
+    let fit = coordinator::fit(&ds.x, &ds.y, &cfg);
+    println!(
+        "\nB-MOR fit over {} batches in {}: λ* per batch = {:?}",
+        fit.batches.len(),
+        human_secs(fit.wall_secs),
+        fit.best_lambda_per_batch
+    );
+
+    // 2. Encoding quality + the null control (the paper's Figs. 4–5).
+    let blas = Blas::new(Backend::MklLike, 1);
+    let real = run_encoding(&blas, &ds, EncodeOpts::default());
+    let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 99);
+    println!("\nheld-out Pearson r (visual / other / max):");
+    println!(
+        "  matched stimuli:  {:.3} / {:.3} / {:.3}",
+        real.summary.mean_visual, real.summary.mean_other, real.summary.max_r
+    );
+    println!(
+        "  shuffled (null):  {:.3} / {:.3} / {:.3}",
+        null.summary.mean_visual, null.summary.mean_other, null.summary.max_r
+    );
+    println!(
+        "\nencoding beats the null by {:.1}× on visual targets (paper: ~10×)",
+        real.summary.mean_visual / null.summary.mean_visual.abs().max(1e-3)
+    );
+    Ok(())
+}

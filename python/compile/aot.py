@@ -1,0 +1,202 @@
+"""AOT driver: lower the L2 graph to HLO text artifacts for the rust runtime.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one (function × shape preset) pair. ``manifest.json``
+records, per artifact: entry name, file, input/output shapes + dtypes, and
+the preset parameters — the rust `runtime::Manifest` is generated from it.
+
+Loadability invariant: emitted HLO must contain **no custom-call** (LAPACK
+etc.); `--check` greps for it and fails the build, and pytest enforces it
+too (test_aot.py).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--presets small,main] [--flavor pallas|ref]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+F32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# Shape presets.
+#
+# n_chunk:  rows per streaming gram/predict chunk
+# p:        feature dimension (paper: 16384; scaled, see DESIGN.md §3)
+# t_chunk:  brain targets per batch-chunk (B-MOR batches are multiples)
+# nv:       validation rows per chunk
+# r:        λ grid size (paper: 11)
+# sweeps:   Jacobi sweeps
+# ---------------------------------------------------------------------------
+# NOTE: feat_dim × window(4) == p, so the frames→features→window→ridge
+# chain composes shape-exactly (examples/full_pipeline.rs).
+PRESETS = {
+    "small": dict(n_chunk=256, p=128, t_chunk=256, nv=128, r=11, sweeps=10,
+                  feat_batch=32, feat_dim=32),
+    "main": dict(n_chunk=1024, p=512, t_chunk=1024, nv=512, r=11, sweeps=10,
+                 feat_batch=64, feat_dim=128),
+}
+
+LAMBDAS = jnp.asarray(model.LAMBDA_GRID, dtype=F64)
+
+
+def spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries_for(preset_name: str, cfg: dict, pallas: bool):
+    """The artifact list for one preset: (name, fn, example_args)."""
+    n, p, t, nv, r = (cfg["n_chunk"], cfg["p"], cfg["t_chunk"], cfg["nv"],
+                      cfg["r"])
+    sweeps = cfg["sweeps"]
+    fb, fd = cfg["feat_batch"], cfg["feat_dim"]
+    tag = preset_name
+
+    def gram(x, y):
+        return model.gram_fn(x, y, pallas=pallas)
+
+    def eigh(k):
+        return model.eigh_fn(k, sweeps=sweeps)
+
+    def prep(v, c, xval):
+        return model.prep_fn(v, c, xval, pallas=pallas)
+
+    def sweep(a, e, z, yval, lams):
+        return (model.sweep_fn(a, e, z, yval, lams, pallas=pallas),)
+
+    def solve(v, e, z, lam):
+        return (model.solve_fn(v, e, z, lam[0], pallas=pallas),)
+
+    def predict(x, w):
+        return (model.predict_fn(x, w, pallas=pallas),)
+
+    def pearson(yhat, y):
+        return (model.pearson_fn(yhat, y, pallas=pallas),)
+
+    def features(frames):
+        return (model.features_fn(frames, feat_dim=fd),)
+
+    def fit_fused(xtr, ytr, xval, yval, lams):
+        return model.fit_fused_fn(xtr, ytr, xval, yval, lams,
+                                  sweeps=sweeps, pallas=pallas)
+
+    ents = [
+        (f"gram_{tag}", gram, (spec((n, p)), spec((n, t)))),
+        (f"eigh_{tag}", eigh, (spec((p, p)),)),
+        (f"prep_{tag}", prep, (spec((p, p)), spec((p, t)), spec((nv, p)))),
+        (f"sweep_{tag}", sweep,
+         (spec((nv, p)), spec((p,)), spec((p, t)), spec((nv, t)), spec((r,)))),
+        (f"solve_{tag}", solve,
+         (spec((p, p)), spec((p,)), spec((p, t)), spec((1,)))),
+        (f"predict_{tag}", predict, (spec((n, p)), spec((p, t)))),
+        (f"pearson_{tag}", pearson, (spec((n, t)), spec((n, t)))),
+        (f"features_{tag}", features, (spec((fb, 32, 32, 3), F32),)),
+    ]
+    if preset_name == "small":
+        ents.append((f"fit_fused_{tag}", fit_fused,
+                     (spec((n, p)), spec((n, t)), spec((nv, p)),
+                      spec((nv, t)), spec((r,)))))
+    return ents
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True).
+
+    CRITICAL: print with `print_large_constants=True`. The default HLO
+    printer elides big literals as `constant(...)`; the text parser in the
+    rust client then silently materializes ZEROS for them (bisected via
+    the Jacobi schedule constant — DESIGN.md §Runtime gotchas).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.get_hlo_module().to_string(opts)
+
+
+def shape_info(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_entry(name, fn, args, out_dir, check=True):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    if check and "custom-call" in text:
+        raise RuntimeError(
+            f"artifact {name} contains a custom-call — not loadable by the "
+            "rust PJRT client. Offending op must be replaced by a pure-HLO "
+            "substrate (see DESIGN.md §2)."
+        )
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *args)
+    outs = outs if isinstance(outs, (tuple, list)) else (outs,)
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [shape_info(a) for a in args],
+        "outputs": [shape_info(o) for o in outs],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="small,main")
+    ap.add_argument("--flavor", default="pallas", choices=["pallas", "ref"],
+                    help="pallas: L1 kernels; ref: plain-jnp lowering "
+                         "(perf-pass comparator)")
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pallas = args.flavor == "pallas"
+    suffix = "" if pallas else "_ref"
+    manifest = {
+        "format": 1,
+        "flavor": args.flavor,
+        "lambda_grid": [float(x) for x in model.LAMBDA_GRID],
+        "presets": {},
+        "entries": [],
+    }
+    for pname in args.presets.split(","):
+        cfg = PRESETS[pname]
+        manifest["presets"][pname] = cfg
+        for name, fn, eargs in entries_for(pname, cfg, pallas):
+            name = name + suffix
+            print(f"[aot] lowering {name} ...", flush=True)
+            info = lower_entry(name, fn, eargs, args.out,
+                               check=not args.no_check)
+            info["preset"] = pname
+            manifest["entries"].append(info)
+
+    man_path = os.path.join(
+        args.out, "manifest.json" if pallas else "manifest_ref.json"
+    )
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(manifest['entries'])} artifacts + {man_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

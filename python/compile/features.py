@@ -1,0 +1,88 @@
+"""L2 substrate: VGG16-surrogate visual feature extractor.
+
+The paper feeds movie frames through TensorFlow's ImageNet-pretrained VGG16
+and keeps the 4096-d FC2 activations (Appendix 7.1). Neither the weights
+nor the Friends frames are redistributable, so we substitute a *fixed,
+deterministic* convolutional network with the same role: a frozen nonlinear
+map from frame pixels to a feature vector that the ridge model regresses
+brain activity onto (see DESIGN.md §3 — only the feature map's dimension
+and fixedness matter to the scaling study).
+
+Architecture (VGG-style, scaled to 32×32 frames):
+    conv3x3(3→16) ReLU → maxpool2
+    conv3x3(16→32) ReLU → maxpool2
+    conv3x3(32→64) ReLU → maxpool2
+    flatten → dense(1024→feat_dim) tanh
+
+Weights are generated once from a fixed PRNG seed (He-scaled), so python
+and rust agree on the mapping forever without shipping checkpoint files.
+Everything lowers to core HLO (conv, reduce-window, dot) — loadable from
+the rust PJRT client.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+FRAME = 32          # input frames are FRAME×FRAME×3
+CHANNELS = (16, 32, 64)
+SEED = 1337
+
+
+def init_params(feat_dim: int, dtype=jnp.float32):
+    """Deterministic frozen weights (He init, fixed seed)."""
+    key = jax.random.PRNGKey(SEED)
+    params = {}
+    cin = 3
+    for li, cout in enumerate(CHANNELS):
+        key, k1 = jax.random.split(key)
+        fan_in = 3 * 3 * cin
+        params[f"conv{li}"] = (
+            jax.random.normal(k1, (3, 3, cin, cout), dtype)
+            * jnp.sqrt(2.0 / fan_in)
+        )
+        cin = cout
+    spatial = FRAME // (2 ** len(CHANNELS))
+    flat = spatial * spatial * CHANNELS[-1]
+    key, k2 = jax.random.split(key)
+    params["dense"] = (
+        jax.random.normal(k2, (flat, feat_dim), dtype) * jnp.sqrt(1.0 / flat)
+    )
+    return params
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def extract_features(frames: jnp.ndarray, params) -> jnp.ndarray:
+    """frames: (b, 32, 32, 3) float32 → (b, feat_dim).
+
+    Output is tanh-bounded and then standardized per feature batch by the
+    caller (the rust pipeline z-scores features over time, mirroring the
+    paper's per-run normalization).
+    """
+    x = frames
+    for li in range(len(CHANNELS)):
+        w = params[f"conv{li}"]
+        x = lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        x = jnp.maximum(x, 0.0)
+        x = _maxpool2(x)
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    return jnp.tanh(x @ params["dense"])
+
+
+@functools.partial(jax.jit, static_argnames=("feat_dim",))
+def features_fn(frames: jnp.ndarray, *, feat_dim: int = 256) -> jnp.ndarray:
+    """Jit-able closure with frozen params baked in as constants."""
+    params = init_params(feat_dim, frames.dtype)
+    return extract_features(frames, params)

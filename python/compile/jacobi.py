@@ -1,0 +1,200 @@
+"""L2 substrate: parallel-ordering Jacobi eigendecomposition in pure jnp/lax.
+
+Why this exists: the paper's decompose-once/reuse-across-λ trick needs an
+orthogonal eigendecomposition of the Gram matrix ``K = XᵀX = V E Vᵀ``
+(equivalent to the SVD of X for ridge purposes — same reuse, see DESIGN.md
+§2). But ``jnp.linalg.{svd,eigh}`` lower on CPU to LAPACK *custom calls*
+registered by jaxlib, which the rust PJRT client (xla_extension 0.5.1)
+cannot execute. So we implement the eigensolver from scratch with core HLO
+ops only, keeping the whole AOT graph loadable from rust.
+
+Algorithm: **parallel Jacobi** with the round-robin ("chess tournament")
+schedule. Each sweep visits all p(p−1)/2 index pairs as (p−1) rounds of
+p/2 *disjoint* rotations; disjoint rotations commute, so a whole round is
+applied as one vectorized update — O(p) sequential steps per sweep instead
+of O(p²), which keeps the lax.fori_loop tractable.
+
+IMPLEMENTATION NOTE: the round update is expressed as
+    permute rows/cols so pairs are (k, k+p/2) → slice-halves arithmetic →
+    concat → inverse permute
+with no scatters and no multi-coordinate gathers. Historical context: the
+original gather/scatter formulation appeared to miscompile under the rust
+PJRT client; bisection eventually traced the failures to the HLO-text
+printer *eliding large constants* (the round-robin schedule parsed back as
+zeros — fixed in aot.py with print_large_constants). The permutation form
+was written during that hunt and is kept: it is equally fast, verified
+end-to-end against the rust client at p ∈ {8, 128, 512}, and structurally
+simpler for the XLA while-loop (pure slice/concat dataflow).
+
+Convergence: quadratic once sweeps start; `sweeps=10` drives the off-norm
+of random SPD matrices below f64 roundoff for p ≤ 2048 (property-tested in
+python/tests/test_jacobi.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def round_robin_schedule(p: int) -> np.ndarray:
+    """Round-robin pairings: (p-1 rounds, 2, p/2) index array, p even.
+
+    Standard circle method: player 0 stays fixed, the others rotate one
+    seat per round; every unordered pair (i, j) appears exactly once per
+    p-1 rounds.
+    """
+    assert p % 2 == 0
+    arr = list(range(p))
+    rounds = []
+    for _ in range(p - 1):
+        top = [arr[i] for i in range(p // 2)]
+        bot = [arr[p - 1 - i] for i in range(p // 2)]
+        lo = [min(a, b) for a, b in zip(top, bot)]
+        hi = [max(a, b) for a, b in zip(top, bot)]
+        rounds.append([lo, hi])
+        arr = [arr[0]] + [arr[-1]] + arr[1:-1]
+    return np.asarray(rounds, dtype=np.int32)  # (p-1, 2, p/2)
+
+
+def permutation_schedule(p: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-round permutations derived from the round-robin pairings.
+
+    Returns (perm, inv) of shape (p-1, p): applying ``perm[r]`` reorders
+    indices so round r's pairs sit at (k, k + p/2); ``inv[r]`` undoes it.
+    """
+    sched = round_robin_schedule(p)
+    rounds = sched.shape[0]
+    perm = np.zeros((rounds, p), dtype=np.int32)
+    inv = np.zeros((rounds, p), dtype=np.int32)
+    h = p // 2
+    for r in range(rounds):
+        lo, hi = sched[r, 0], sched[r, 1]
+        perm[r, :h] = lo
+        perm[r, h:] = hi
+        inv[r, perm[r]] = np.arange(p, dtype=np.int32)
+    return perm, inv
+
+
+def _strided_diag(flat: jnp.ndarray, start: int, stride: int,
+                  count: int) -> jnp.ndarray:
+    """count elements of `flat` from `start` with `stride`, as a slice.
+
+    Equivalent to ``jnp.diagonal`` (which lowers to a 2-coordinate gather);
+    a strided ``lax.slice`` keeps the loop body to the simplest core ops,
+    which proved easiest to validate through the HLO-text roundtrip into
+    the rust PJRT client.
+    """
+    return lax.slice(flat, (start,), (start + (count - 1) * stride + 1,),
+                     (stride,))
+
+
+def _round_update(a: jnp.ndarray, v: jnp.ndarray, perm: jnp.ndarray,
+                  inv: jnp.ndarray):
+    """Apply one round of p/2 disjoint rotations via permute/slice/concat."""
+    p = a.shape[0]
+    h = p // 2
+
+    # Permute so pair k is (k, k+h).
+    ap = jnp.take(jnp.take(a, perm, axis=0), perm, axis=1)
+
+    # Materialization fence: keep the simplifier from fusing slices into
+    # the gather chain (miscompiles on xla_extension 0.5.1, bisected).
+    ap = lax.optimization_barrier(ap)
+
+    # Diagonals via strided slices of the flattened matrix (NOT
+    # jnp.diagonal — see _strided_diag).
+    flat = ap.reshape((p * p,))
+    a_ii = _strided_diag(flat, 0, p + 1, h)
+    a_jj = _strided_diag(flat, h * (p + 1), p + 1, h)
+    a_ij = _strided_diag(flat, h, p + 1, h)  # ap[k, k+h]
+
+    # Stable rotation angle zeroing a_ij (Golub & Van Loan §8.5.2).
+    small = jnp.abs(a_ij) <= 1e-300
+    tau = (a_jj - a_ii) / (2.0 * jnp.where(small, 1.0, a_ij))
+    t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+    t = jnp.where(small, 0.0, t)
+    c = 1.0 / jnp.sqrt(1.0 + t * t)
+    s = t * c
+
+    # Second fence: (c, s) feed both loop-carried outputs (A and V); the
+    # shared values must materialize before either consumer runs.
+    ap, c, s = lax.optimization_barrier((ap, c, s))
+
+    # Row mix: rows k and k+h.
+    top, bot = ap[:h, :], ap[h:, :]
+    ap = jnp.concatenate(
+        [c[:, None] * top - s[:, None] * bot,
+         s[:, None] * top + c[:, None] * bot], axis=0)
+    # Column mix.
+    left, right = ap[:, :h], ap[:, h:]
+    ap = jnp.concatenate(
+        [left * c[None, :] - right * s[None, :],
+         left * s[None, :] + right * c[None, :]], axis=1)
+
+    # Un-permute.
+    a_new = jnp.take(jnp.take(ap, inv, axis=0), inv, axis=1)
+
+    # Accumulate eigenvectors: V ← VJ (column mix in permuted space).
+    vp = jnp.take(v, perm, axis=1)
+    vleft, vright = vp[:, :h], vp[:, h:]
+    vp = jnp.concatenate(
+        [vleft * c[None, :] - vright * s[None, :],
+         vleft * s[None, :] + vright * c[None, :]], axis=1)
+    v_new = jnp.take(vp, inv, axis=1)
+    return a_new, v_new
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def jacobi_eigh(k: jnp.ndarray, *, sweeps: int = 12):
+    """Eigendecomposition of a symmetric matrix: ``K = V diag(e) Vᵀ``.
+
+    Returns (e ascending, V with matching columns). Pure HLO — safe to AOT
+    for the rust runtime. Odd p is padded with a zero border (the padded
+    eigenpair is sliced away afterwards).
+    """
+    p0 = k.shape[0]
+    assert k.shape == (p0, p0)
+    pad = p0 % 2
+    p = p0 + pad
+    if pad:
+        k = jnp.pad(k, ((0, 1), (0, 1)))
+
+    perm_np, inv_np = permutation_schedule(p)
+    perm_all = jnp.asarray(perm_np)  # (p-1, p)
+    inv_all = jnp.asarray(inv_np)
+    rounds = perm_all.shape[0]
+    v0 = jnp.eye(p, dtype=k.dtype)
+
+    def body(step, carry):
+        a, v = carry
+        r = step % rounds
+        perm = lax.dynamic_index_in_dim(perm_all, r, 0, keepdims=False)
+        inv = lax.dynamic_index_in_dim(inv_all, r, 0, keepdims=False)
+        return _round_update(a, v, perm, inv)
+
+    a, v = lax.fori_loop(0, sweeps * rounds, body, (k, v0))
+    a = lax.optimization_barrier(a)
+    e = _strided_diag(a.reshape((p * p,)), 0, p + 1, p)
+
+    order = jnp.argsort(e)
+    e = jnp.take(e, order)
+    v = jnp.take(v, order, axis=1)
+    if pad:
+        # Drop the synthetic zero eigenpair introduced by padding: it is
+        # the one whose eigenvector has all its mass on the padded
+        # coordinate.
+        mass = jnp.abs(v[p0, :])
+        drop = jnp.argmax(mass)
+        keep = jnp.where(jnp.arange(p) < drop, jnp.arange(p), jnp.arange(p) + 1)[: p0]
+        e = jnp.take(e, keep)
+        v = jnp.take(v, keep, axis=1)[:p0, :]
+    return e, v
+
+
+def offdiag_norm(a: jnp.ndarray) -> jnp.ndarray:
+    """Frobenius norm of the off-diagonal part (convergence diagnostic)."""
+    return jnp.sqrt(jnp.sum(a * a) - jnp.sum(jnp.diagonal(a) ** 2))

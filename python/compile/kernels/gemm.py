@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: tiled GEMM.
+
+The workhorse of the encoding pipeline — every matrix product in the ridge
+path (``XᵀX``, ``XᵀY``, ``X_val V``, ``X_test W``) is an instance of this
+kernel. The tiling is written for TPU even though this image executes it
+with ``interpret=True`` on CPU:
+
+* the grid is (M/bm, N/bn, K/bk) with the K axis innermost, so each (i, j)
+  output tile stays resident in VMEM while A/B panels stream through —
+  the HBM↔VMEM schedule a CUDA version would express with threadblocks;
+* default tiles are 128×128 (MXU-native) with fp32/f64 accumulation in the
+  output ref;
+* inputs whose dims are not tile multiples are zero-padded by the wrapper
+  (zero rows/cols do not perturb a matmul) and the result is sliced back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad2(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to shape (m, n)."""
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """``a @ b`` via the tiled Pallas kernel.
+
+    a: (m, k), b: (k, n) → (m, n). Any float dtype; accumulation happens in
+    the output dtype (f32/f64 here; a TPU build would take bf16 inputs with
+    an f32 accumulator, which is what ``preferred_element_type`` expresses).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bn, bk = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 8)), min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    ap, bp = _pad2(a, mp, kp), _pad2(b, kp, np_)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def matmul_at_b(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
+    """``aᵀ @ b`` — explicit transpose feeds the same streaming kernel."""
+    return matmul(a.T, b, **kw)

@@ -1,0 +1,130 @@
+"""L2 model: the brain-encoding compute graph.
+
+Composes the L1 Pallas kernels (gram, gemm, λ-sweep, pearson) and the L2
+substrates (Jacobi eigh, feature extractor) into the exact set of functions
+the rust coordinator calls on its hot path. Each function here is AOT-
+lowered by ``aot.py`` to one HLO artifact per shape preset; python never
+runs at serving/benchmark time.
+
+The decomposition into stages mirrors Algorithm 1 of the paper:
+
+    gram_fn        — streaming sufficient statistics  (K, C) += (XᵀX, XᵀY)
+    eigh_fn        — K = V E Vᵀ               (once per CV split)
+    prep_fn        — Z = VᵀC,  A = X_val V    (once per split)
+    sweep_fn       — scores[r, t] for the whole λ grid (Pallas hot-spot)
+    solve_fn       — W = V (Z ⊘ (e+λ*))       (once, after λ* selection)
+    predict_fn     — Ŷ = X W                  (test-time)
+    pearson_fn     — per-target r             (scoring)
+    features_fn    — frames → stimulus features (VGG16 surrogate)
+
+λ* selection (argmax of mean score) happens in rust: it is O(r·t) scalar
+work, inherently serial, and the paper's Algorithm 1 line 13.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .jacobi import jacobi_eigh
+from .kernels.gemm import matmul
+from .kernels.gram import gram_chunk, gram_chunk_fused
+from .kernels.pearson import pearson
+from .kernels.ridge_sweep import lambda_sweep, ridge_weights
+from .kernels import ref
+from . import features as feat
+
+# The paper's λ grid (§2.2.4).
+LAMBDA_GRID = (0.1, 1, 100, 200, 300, 400, 600, 800, 900, 1000, 1200)
+
+
+def gram_fn(x, y, *, pallas=True):
+    """One row-chunk of sufficient statistics: (K, C) = (XᵀX, XᵀY)."""
+    if not pallas:
+        return ref.gram_ref(x, y)
+    p = x.shape[1]
+    if p <= 512:
+        return gram_chunk_fused(x, y)
+    return gram_chunk(x, y)
+
+
+def eigh_fn(k, *, sweeps=10):
+    """Gram eigendecomposition K = V diag(e) Vᵀ (ascending e)."""
+    e, v = jacobi_eigh(k, sweeps=sweeps)
+    return e, v
+
+
+def prep_fn(v, c, xval, *, pallas=True):
+    """Per-split projections: Z = VᵀC and A = X_val V."""
+    mm = matmul if pallas else ref.matmul_ref
+    z = mm(v.T, c)
+    a = mm(xval, v)
+    return z, a
+
+
+def sweep_fn(a, e, z, yval, lambdas, *, pallas=True):
+    """Validation Pearson score for every (λ, target): (r, t).
+
+    The multi-λ scaled matmul is the Pallas hot-spot; scoring streams each
+    λ's predictions through the pearson kernel.
+    """
+    if not pallas:
+        return ref.sweep_scores_ref(a, e, z, yval, lambdas)
+    preds = lambda_sweep(a, e, z, lambdas)          # (r, nv, t)
+    r = preds.shape[0]
+    return jnp.stack([pearson(preds[i], yval) for i in range(r)])
+
+
+def solve_fn(v, e, z, lam, *, pallas=True):
+    """Final ridge weights W = V (Z ⊘ (e+λ*)): (p, t)."""
+    if not pallas:
+        return ref.ridge_weights_ref(v, e, z, lam)
+    return ridge_weights(v, e, z, lam)
+
+
+def predict_fn(x, w, *, pallas=True):
+    """Test-set predictions Ŷ = XW."""
+    mm = matmul if pallas else ref.matmul_ref
+    return mm(x, w)
+
+
+def pearson_fn(yhat, y, *, pallas=True):
+    """Per-target encoding score."""
+    if not pallas:
+        return ref.pearson_ref(yhat, y)
+    return pearson(yhat, y)
+
+
+def features_fn(frames, *, feat_dim=256):
+    """Stimulus frames → feature vectors (frozen VGG16 surrogate)."""
+    return feat.features_fn(frames, feat_dim=feat_dim)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-call fit for small problems (quickstart / tests): runs the
+# entire Algorithm-1 inner loop — gram, eigh, sweep, shared-λ* selection,
+# final solve — inside one XLA program. Used by the rust `validate` command
+# to cross-check the staged path against a single-graph execution.
+# ---------------------------------------------------------------------------
+
+def fit_fused_fn(xtr, ytr, xval, yval, lambdas, *, sweeps=10, pallas=True):
+    """Returns (scores (r,t), best λ index (scalar int32), W (p,t))."""
+    k, c = gram_fn(xtr, ytr, pallas=pallas)
+    e, v = eigh_fn(k, sweeps=sweeps)
+    z, a = prep_fn(v, c, xval, pallas=pallas)
+    scores = sweep_fn(a, e, z, yval, lambdas, pallas=pallas)
+    mean_scores = jnp.mean(scores, axis=1)              # shared λ (paper §2.2.4)
+    best = jnp.argmax(mean_scores).astype(jnp.int32)
+    lam = jnp.take(lambdas, best)
+    w = solve_fn(v, e, z, lam, pallas=pallas)
+    return scores, best, w
+
+
+def ridge_closed_form_ref(xtr, ytr, lam):
+    """Direct (XᵀX+λI)⁻¹XᵀY via jnp.linalg.solve — test-only oracle.
+
+    Never AOT'd (solve lowers to a LAPACK custom call); used by pytest to
+    pin the whole eigh-based path against the textbook formulation.
+    """
+    p = xtr.shape[1]
+    k = xtr.T @ xtr + lam * jnp.eye(p, dtype=xtr.dtype)
+    return jnp.linalg.solve(k, xtr.T @ ytr)

@@ -1,0 +1,82 @@
+"""AOT emission invariants: every artifact must be loadable by the rust
+PJRT client (no custom-calls), manifest must be consistent, and the HLO
+round-trip must preserve numerics (executed via jax's own CPU client)."""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.aot import PRESETS, entries_for, to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestEmission:
+    def test_no_custom_call_small(self):
+        """The loadability invariant, per artifact of the small preset."""
+        for name, fn, args in entries_for("small", PRESETS["small"], True):
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            assert "custom-call" not in text, f"{name} has a custom-call"
+
+    def test_eigh_has_no_custom_call_but_lapack_would(self):
+        """Sanity of the invariant itself: jnp.linalg.eigh DOES emit a
+        custom call on CPU, our jacobi path does not."""
+        k = jax.ShapeDtypeStruct((16, 16), jnp.float64)
+        lap = to_hlo_text(jax.jit(jnp.linalg.eigh).lower(k))
+        assert "custom-call" in lap
+        ours = to_hlo_text(jax.jit(lambda m: model.eigh_fn(m)).lower(k))
+        assert "custom-call" not in ours
+
+    def test_hlo_text_roundtrip_numerics(self):
+        """Lower → HLO text → recompile (fresh client) → same numbers."""
+        def fn(a, b):
+            return (model.predict_fn(a, b),)
+
+        spec = jax.ShapeDtypeStruct((8, 8), jnp.float64)
+        text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+        # The text must at least parse back to an HLO module in this
+        # process; the authoritative executable round-trip (text → PJRT
+        # compile → execute → compare) runs in rust/tests/runtime_parity.rs
+        # against the very client that serves the hot path.
+        try:
+            mod = xc._xla.hlo_module_from_text(text)
+        except AttributeError:
+            pytest.skip("this jaxlib exposes no hlo_module_from_text")
+        assert "f64[8,8]" in mod.to_string()
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_entries_exist_on_disk(self, manifest):
+        for ent in manifest["entries"]:
+            assert os.path.exists(os.path.join(ART, ent["file"])), ent["name"]
+
+    def test_lambda_grid_matches_paper(self, manifest):
+        assert manifest["lambda_grid"] == [
+            0.1, 1, 100, 200, 300, 400, 600, 800, 900, 1000, 1200]
+
+    def test_shapes_consistent_with_presets(self, manifest):
+        for ent in manifest["entries"]:
+            cfg = manifest["presets"][ent["preset"]]
+            if ent["name"].startswith("gram"):
+                assert ent["inputs"][0]["shape"] == [cfg["n_chunk"], cfg["p"]]
+                assert ent["outputs"][0]["shape"] == [cfg["p"], cfg["p"]]
+            if ent["name"].startswith("sweep"):
+                assert ent["outputs"][0]["shape"] == [cfg["r"], cfg["t_chunk"]]
+
+    def test_artifact_files_have_no_custom_call(self, manifest):
+        for ent in manifest["entries"]:
+            with open(os.path.join(ART, ent["file"])) as f:
+                assert "custom-call" not in f.read(), ent["name"]

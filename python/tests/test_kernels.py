@@ -1,0 +1,186 @@
+"""L1 Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-tile-multiple edges) and dtypes;
+every kernel must match its `ref.py` oracle to tight tolerances. This is
+the core correctness signal for the compute hot-spot.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import matmul
+from compile.kernels.gram import gram_chunk, gram_chunk_fused, syrk
+from compile.kernels.pearson import pearson
+from compile.kernels.ridge_sweep import lambda_sweep, ridge_weights
+
+DIM = st.integers(min_value=1, max_value=90)
+SMALL = st.integers(min_value=1, max_value=40)
+DTYPES = st.sampled_from([np.float32, np.float64])
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tol(dt):
+    return dict(rtol=2e-4, atol=2e-4) if dt == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(m=DIM, k=DIM, n=DIM, dt=DTYPES, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, dt, seed):
+        r = _rng(seed)
+        a = jnp.asarray(r.standard_normal((m, k)), dt)
+        b = jnp.asarray(r.standard_normal((k, n)), dt)
+        np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), **_tol(dt))
+
+    def test_tile_multiple_shapes(self):
+        r = _rng(0)
+        a = jnp.asarray(r.standard_normal((256, 128)))
+        b = jnp.asarray(r.standard_normal((128, 256)))
+        np.testing.assert_allclose(matmul(a, b), np.asarray(a) @ np.asarray(b),
+                                   rtol=1e-10)
+
+    def test_single_element(self):
+        a = jnp.asarray([[2.0]])
+        b = jnp.asarray([[3.0]])
+        np.testing.assert_allclose(matmul(a, b), [[6.0]])
+
+    def test_zero_matrix(self):
+        a = jnp.zeros((10, 20))
+        b = jnp.asarray(_rng(1).standard_normal((20, 5)))
+        np.testing.assert_allclose(matmul(a, b), np.zeros((10, 5)))
+
+    def test_identity(self):
+        i = jnp.eye(33)
+        b = jnp.asarray(_rng(2).standard_normal((33, 17)))
+        np.testing.assert_allclose(matmul(i, b), b, rtol=1e-12)
+
+
+class TestGram:
+    @settings(**SETTINGS)
+    @given(n=DIM, p=SMALL, t=SMALL, dt=DTYPES, seed=st.integers(0, 2**16))
+    def test_gram_chunk(self, n, p, t, dt, seed):
+        r = _rng(seed)
+        x = jnp.asarray(r.standard_normal((n, p)), dt)
+        y = jnp.asarray(r.standard_normal((n, t)), dt)
+        k, c = gram_chunk(x, y)
+        k2, c2 = ref.gram_ref(x, y)
+        np.testing.assert_allclose(k, k2, **_tol(dt))
+        np.testing.assert_allclose(c, c2, **_tol(dt))
+
+    @settings(**SETTINGS)
+    @given(n=DIM, p=SMALL, t=SMALL, seed=st.integers(0, 2**16))
+    def test_gram_fused(self, n, p, t, seed):
+        r = _rng(seed)
+        x = jnp.asarray(r.standard_normal((n, p)))
+        y = jnp.asarray(r.standard_normal((n, t)))
+        k, c = gram_chunk_fused(x, y)
+        k2, c2 = ref.gram_ref(x, y)
+        np.testing.assert_allclose(k, k2, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(c, c2, rtol=1e-9, atol=1e-9)
+
+    def test_syrk_symmetry(self):
+        x = jnp.asarray(_rng(3).standard_normal((100, 64)))
+        k = np.asarray(syrk(x))
+        np.testing.assert_allclose(k, k.T, rtol=1e-12)
+
+    def test_gram_psd(self):
+        """XᵀX must be positive semi-definite."""
+        x = jnp.asarray(_rng(4).standard_normal((50, 30)))
+        k, _ = gram_chunk(x, jnp.zeros((50, 1)))
+        ev = np.linalg.eigvalsh(np.asarray(k))
+        assert ev.min() > -1e-9
+
+    def test_streaming_accumulation(self):
+        """Sum of chunk grams equals full gram (the rust streaming path)."""
+        r = _rng(5)
+        x = jnp.asarray(r.standard_normal((96, 24)))
+        y = jnp.asarray(r.standard_normal((96, 10)))
+        k_full, c_full = ref.gram_ref(x, y)
+        k_acc = np.zeros_like(k_full)
+        c_acc = np.zeros_like(c_full)
+        for i in range(0, 96, 32):
+            k, c = gram_chunk(x[i:i + 32], y[i:i + 32])
+            k_acc += np.asarray(k)
+            c_acc += np.asarray(c)
+        np.testing.assert_allclose(k_acc, k_full, rtol=1e-9)
+        np.testing.assert_allclose(c_acc, c_full, rtol=1e-9)
+
+
+class TestLambdaSweep:
+    @settings(**SETTINGS)
+    @given(m=SMALL, p=SMALL, t=SMALL, r=st.integers(1, 11), dt=DTYPES,
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, p, t, r, dt, seed):
+        rng = _rng(seed)
+        a = jnp.asarray(rng.standard_normal((m, p)), dt)
+        e = jnp.asarray(np.abs(rng.standard_normal(p)) + 0.5, dt)
+        z = jnp.asarray(rng.standard_normal((p, t)), dt)
+        lams = jnp.asarray(np.sort(rng.uniform(0.1, 1000, r)), dt)
+        out = lambda_sweep(a, e, z, lams)
+        want = ref.lambda_sweep_ref(a, e, z, lams)
+        np.testing.assert_allclose(out, want, **_tol(dt))
+
+    def test_lambda_monotone_shrinkage(self):
+        """Larger λ ⇒ smaller weight norm (ridge's defining property)."""
+        rng = _rng(7)
+        p, t = 24, 12
+        v, _ = np.linalg.qr(rng.standard_normal((p, p)))
+        e = jnp.asarray(np.abs(rng.standard_normal(p)) + 0.5)
+        z = jnp.asarray(rng.standard_normal((p, t)))
+        lams = jnp.asarray([0.1, 1.0, 10.0, 100.0, 1000.0])
+        ws = lambda_sweep(jnp.asarray(v), e, z, lams)
+        norms = [float(np.linalg.norm(np.asarray(ws[i]))) for i in range(5)]
+        assert all(a > b for a, b in zip(norms, norms[1:]))
+
+    def test_single_lambda_equals_ridge_weights(self):
+        rng = _rng(8)
+        p, t = 16, 8
+        v = jnp.asarray(rng.standard_normal((p, p)))
+        e = jnp.asarray(np.abs(rng.standard_normal(p)) + 0.5)
+        z = jnp.asarray(rng.standard_normal((p, t)))
+        w = ridge_weights(v, e, z, jnp.asarray(3.0))
+        want = ref.ridge_weights_ref(v, e, z, 3.0)
+        np.testing.assert_allclose(w, want, rtol=1e-9)
+
+
+class TestPearson:
+    @settings(**SETTINGS)
+    @given(n=st.integers(3, 90), t=DIM, dt=DTYPES, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, t, dt, seed):
+        rng = _rng(seed)
+        yh = jnp.asarray(rng.standard_normal((n, t)), dt)
+        y = jnp.asarray(rng.standard_normal((n, t)), dt)
+        tol = dict(rtol=5e-3, atol=5e-3) if dt == np.float32 else dict(rtol=1e-7, atol=1e-8)
+        np.testing.assert_allclose(pearson(yh, y), ref.pearson_ref(yh, y), **tol)
+
+    def test_perfect_correlation(self):
+        y = jnp.asarray(_rng(9).standard_normal((50, 7)))
+        r = np.asarray(pearson(y, y))
+        np.testing.assert_allclose(r, np.ones(7), rtol=1e-6)
+
+    def test_anticorrelation(self):
+        y = jnp.asarray(_rng(10).standard_normal((50, 7)))
+        r = np.asarray(pearson(-y, y))
+        np.testing.assert_allclose(r, -np.ones(7), rtol=1e-6)
+
+    def test_scale_shift_invariance(self):
+        rng = _rng(11)
+        y = jnp.asarray(rng.standard_normal((64, 9)))
+        yh = jnp.asarray(rng.standard_normal((64, 9)))
+        r1 = np.asarray(pearson(yh, y))
+        r2 = np.asarray(pearson(3.5 * yh + 2.0, y))
+        np.testing.assert_allclose(r1, r2, rtol=1e-8, atol=1e-10)
+
+    def test_matches_numpy_corrcoef(self):
+        rng = _rng(12)
+        yh = rng.standard_normal((40, 5))
+        y = rng.standard_normal((40, 5))
+        want = np.array([np.corrcoef(yh[:, i], y[:, i])[0, 1] for i in range(5)])
+        got = np.asarray(pearson(jnp.asarray(yh), jnp.asarray(y)))
+        np.testing.assert_allclose(got, want, rtol=1e-8)

@@ -1,0 +1,117 @@
+"""L2 model graph: staged pipeline vs closed-form ridge, fused-fit parity,
+feature extractor determinism, λ-selection behaviour."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _data(n, p, t, nv, seed, noise=0.1):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((p, t))
+    xtr = rng.standard_normal((n, p))
+    ytr = xtr @ w + noise * rng.standard_normal((n, t))
+    xval = rng.standard_normal((nv, p))
+    yval = xval @ w + noise * rng.standard_normal((nv, t))
+    return map(jnp.asarray, (xtr, ytr, xval, yval))
+
+
+def _staged_fit(xtr, ytr, xval, yval, lams, pallas=True):
+    """Run the exact staged sequence the rust coordinator drives."""
+    k, c = model.gram_fn(xtr, ytr, pallas=pallas)
+    e, v = model.eigh_fn(k)
+    z, a = model.prep_fn(v, c, xval, pallas=pallas)
+    scores = model.sweep_fn(a, e, z, yval, lams, pallas=pallas)
+    best = int(np.argmax(np.asarray(scores).mean(axis=1)))
+    w = model.solve_fn(v, e, z, lams[best], pallas=pallas)
+    return scores, best, w
+
+
+class TestRidgePath:
+    @settings(**SETTINGS)
+    @given(p=st.integers(4, 24), t=st.integers(2, 10), seed=st.integers(0, 999))
+    def test_solve_matches_closed_form(self, p, t, seed):
+        n = 4 * p
+        xtr, ytr, _, _ = _data(n, p, t, 8, seed)
+        lam = 37.5
+        k, c = model.gram_fn(xtr, ytr)
+        e, v = model.eigh_fn(k)
+        z = jnp.asarray(np.asarray(v).T @ np.asarray(c))
+        w = model.solve_fn(v, e, z, jnp.asarray(lam))
+        want = model.ridge_closed_form_ref(xtr, ytr, lam)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_lambda_zero_is_ols(self):
+        xtr, ytr, _, _ = _data(80, 10, 4, 8, 0, noise=0.0)
+        k, c = model.gram_fn(xtr, ytr)
+        e, v = model.eigh_fn(k)
+        z, _ = model.prep_fn(v, c, xtr)
+        w = model.solve_fn(v, e, z, jnp.asarray(1e-10))
+        # Noise-free targets: OLS recovers the planted weights exactly.
+        resid = np.asarray(xtr @ w - ytr)
+        assert np.abs(resid).max() < 1e-6
+
+    def test_lambda_infinity_shrinks_to_zero(self):
+        xtr, ytr, _, _ = _data(60, 8, 3, 8, 1)
+        k, c = model.gram_fn(xtr, ytr)
+        e, v = model.eigh_fn(k)
+        z, _ = model.prep_fn(v, c, xtr)
+        w = model.solve_fn(v, e, z, jnp.asarray(1e12))
+        assert np.abs(np.asarray(w)).max() < 1e-6
+
+    def test_staged_selects_sane_lambda(self):
+        """Low-noise planted data ⇒ CV prefers the small-λ end of the grid."""
+        lams = jnp.asarray(model.LAMBDA_GRID)
+        xtr, ytr, xval, yval = _data(200, 16, 8, 64, 2, noise=0.05)
+        scores, best, w = _staged_fit(xtr, ytr, xval, yval, lams)
+        assert best <= 2
+        assert np.asarray(scores)[best].mean() > 0.95
+
+    def test_pallas_and_ref_paths_agree(self):
+        lams = jnp.asarray(model.LAMBDA_GRID)
+        xtr, ytr, xval, yval = _data(120, 12, 6, 40, 3)
+        s1, b1, w1 = _staged_fit(xtr, ytr, xval, yval, lams, pallas=True)
+        s2, b2, w2 = _staged_fit(xtr, ytr, xval, yval, lams, pallas=False)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-7, atol=1e-8)
+        assert b1 == b2
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                                   rtol=1e-7, atol=1e-8)
+
+    def test_fused_fit_matches_staged(self):
+        lams = jnp.asarray(model.LAMBDA_GRID)
+        xtr, ytr, xval, yval = _data(100, 10, 5, 30, 4)
+        s1, b1, w1 = model.fit_fused_fn(xtr, ytr, xval, yval, lams)
+        s2, b2, w2 = _staged_fit(xtr, ytr, xval, yval, lams)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-7, atol=1e-8)
+        assert int(b1) == b2
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                                   rtol=1e-7, atol=1e-8)
+
+
+class TestFeatures:
+    def test_deterministic(self):
+        rng = np.random.default_rng(5)
+        frames = jnp.asarray(rng.uniform(0, 1, (4, 32, 32, 3)), jnp.float32)
+        f1 = np.asarray(model.features_fn(frames))
+        f2 = np.asarray(model.features_fn(frames))
+        np.testing.assert_array_equal(f1, f2)
+
+    def test_shape_and_bounds(self):
+        rng = np.random.default_rng(6)
+        frames = jnp.asarray(rng.uniform(0, 1, (8, 32, 32, 3)), jnp.float32)
+        f = np.asarray(model.features_fn(frames, feat_dim=64))
+        assert f.shape == (8, 64)
+        assert (np.abs(f) <= 1.0).all()          # tanh-bounded
+
+    def test_distinct_frames_distinct_features(self):
+        rng = np.random.default_rng(7)
+        frames = jnp.asarray(rng.uniform(0, 1, (2, 32, 32, 3)), jnp.float32)
+        f = np.asarray(model.features_fn(frames))
+        assert np.abs(f[0] - f[1]).max() > 1e-4

@@ -1,0 +1,42 @@
+//! Microbenchmarks of the native BLAS substrate (feeds the perf pass and
+//! the Fig. 6 calibration): GEMM per backend over ridge-shaped products.
+
+mod common;
+
+use common::{case, header};
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::linalg::Mat;
+use fmri_encode::util::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seeded(0);
+    header("GEMM backends, single thread (GFLOP/s in name order: naive/openblas/mkl)");
+    for (m, k, n) in [(128, 128, 128), (256, 256, 256), (400, 512, 444), (512, 512, 1024)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let blas = Blas::new(backend, 1);
+            let stats = case(&format!("gemm {m}x{k}x{n} {}", backend.name()), || {
+                std::hint::black_box(blas.gemm(&a, &b));
+            });
+            println!(
+                "{:<52} -> {:.2} GFLOP/s",
+                "", flops / stats.median() / 1e9
+            );
+        }
+    }
+
+    header("syrk / at_b (the gram path)");
+    let x = Mat::randn(1024, 256, &mut rng);
+    let y = Mat::randn(1024, 444, &mut rng);
+    for backend in [Backend::OpenBlasLike, Backend::MklLike] {
+        let blas = Blas::new(backend, 1);
+        case(&format!("syrk 1024x256 {}", backend.name()), || {
+            std::hint::black_box(blas.syrk(&x));
+        });
+        case(&format!("at_b 1024x256x444 {}", backend.name()), || {
+            std::hint::black_box(blas.at_b(&x, &y));
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Fig. 10 regeneration: B-MOR distributed speed-up (DSU) over the
+//! (nodes × threads) grid — the paper's headline ~30–33× at 8 × 32.
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{fig10, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    let fig = fig10(&mut ctx);
+    print!("{}", fig.render());
+    let _ = fig.write_csv(std::path::Path::new("results"));
+}

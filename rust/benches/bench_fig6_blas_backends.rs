@@ -1,0 +1,15 @@
+//! Fig. 6 regeneration: RidgeCV time, MKL-like vs OpenBLAS-like backends,
+//! threads 1..32 (thread axis via the calibrated Amdahl model — single
+//! physical core here; see DESIGN.md §3).
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{fig6, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into(), "--quick".into(), "--subjects".into(), "1".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    let fig = fig6(&mut ctx);
+    print!("{}", fig.render());
+    let _ = fig.write_csv(std::path::Path::new("results"));
+}

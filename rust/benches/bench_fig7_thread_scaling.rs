@@ -1,0 +1,14 @@
+//! Fig. 7 regeneration: multithreading speed-up curves (plateau past 8
+//! threads), from the same measured-then-modelled sweep as Fig. 6.
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{fig7, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into(), "--quick".into(), "--subjects".into(), "1".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    let fig = fig7(&mut ctx);
+    print!("{}", fig.render());
+    let _ = fig.write_csv(std::path::Path::new("results"));
+}

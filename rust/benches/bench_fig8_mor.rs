@@ -1,0 +1,15 @@
+//! Fig. 8 regeneration: MultiOutput (MOR) training time across nodes and
+//! threads on the whole-brain(MOR) truncation — scales, but is
+//! impractically slower than single-node RidgeCV (Eq. 6's t·T_M redundancy).
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{fig8, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    let fig = fig8(&mut ctx);
+    print!("{}", fig.render());
+    let _ = fig.write_csv(std::path::Path::new("results"));
+}

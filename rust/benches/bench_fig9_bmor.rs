@@ -1,0 +1,14 @@
+//! Fig. 9 regeneration: B-MOR training time across nodes/threads vs the
+//! single-node RidgeCV baseline on the whole-brain(B-MOR) truncation.
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{fig9, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    let fig = fig9(&mut ctx);
+    print!("{}", fig.render());
+    let _ = fig.write_csv(std::path::Path::new("results"));
+}

@@ -1,0 +1,15 @@
+//! Tables 1 & 2 regeneration: dataset shapes/sizes and ridge parameter
+//! counts at paper scale (verbatim formulas) and repro scale.
+
+use fmri_encode::config::{Args, ExperimentConfig};
+use fmri_encode::figures::{table1, table2, FigCtx};
+
+fn main() {
+    let args = Args::parse(&["bench".into(), "--quick".into()]).unwrap();
+    let exp = ExperimentConfig::from_args(&args).unwrap();
+    let mut ctx = FigCtx::new(exp);
+    for fig in [table1(&mut ctx), table2(&mut ctx)] {
+        print!("{}", fig.render());
+        let _ = fig.write_csv(std::path::Path::new("results"));
+    }
+}

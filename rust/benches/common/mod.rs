@@ -1,0 +1,25 @@
+//! Shared helpers for the `cargo bench` harnesses (criterion is not
+//! vendored offline; these use `util::timer` and print aligned rows).
+
+use fmri_encode::util::timer::{bench_adaptive, TimingStats};
+
+/// Run and report one benchmark case.
+pub fn case<F: FnMut()>(name: &str, f: F) -> TimingStats {
+    let stats = bench_adaptive(1, 0.5, 15, f);
+    println!(
+        "{name:<52} median {:>12} (±{:>10}, {} iters)",
+        fmri_encode::util::human_secs(stats.median()),
+        fmri_encode::util::human_secs(stats.stddev()),
+        stats.samples.len()
+    );
+    stats
+}
+
+/// Report a value computed by a model/simulation (not wall-clock).
+pub fn report(name: &str, value: String) {
+    println!("{name:<52} {value}");
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,192 @@
+//! Single-threaded GEMM panel kernels, one per backend tier.
+//!
+//! Each function computes a row panel `C[s..e, :] = A[s..e, :] · B`
+//! (or the Aᵀ variant) into a caller-provided disjoint slice; the
+//! multithreaded driver in `blas::Blas` splits the row range across the
+//! pool. Keeping the kernels single-threaded and panel-scoped means the
+//! thread-scaling curves of Fig. 6/7 measure *scheduling*, with per-core
+//! arithmetic identical across thread counts.
+
+use crate::linalg::Mat;
+
+use super::micro;
+use super::Backend;
+
+/// Cache-blocking parameters (L1-ish tiles for f64).
+pub const MC: usize = 64; // rows of A per block
+pub const KC: usize = 256; // depth per block
+pub const NC: usize = 512; // cols of B per block
+
+/// Dispatch: compute `C[s..e, :]` into `crows` (len (e-s)*n).
+pub fn gemm_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+    match backend {
+        Backend::Naive => naive_panel(a, b, s, e, crows),
+        Backend::OpenBlasLike => blocked_panel(a, b, s, e, crows),
+        Backend::MklLike => packed_panel(a, b, s, e, crows),
+    }
+}
+
+/// Textbook i-j-k triple loop: no blocking, strided B access.
+fn naive_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+    let k = a.cols();
+    let n = b.cols();
+    for i in s..e {
+        let arow = a.row(i);
+        let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
+        for j in 0..n {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += arow[kk] * b.get(kk, j);
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// OpenBLAS-like: cache-blocked i-k-j ordering. B rows stream unit-stride,
+/// C row stays hot; no explicit packing.
+fn blocked_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+    let kdim = a.cols();
+    let n = b.cols();
+    crows.fill(0.0);
+    for k0 in (0..kdim).step_by(KC) {
+        let k1 = (k0 + KC).min(kdim);
+        for j0 in (0..n).step_by(NC) {
+            let j1 = (j0 + NC).min(n);
+            for i in s..e {
+                let arow = a.row(i);
+                let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[j0..j1];
+                    let cdst = &mut crow[j0..j1];
+                    for (c, &bv) in cdst.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// MKL-like: pack A and B blocks contiguously, then run the 4×8 register
+/// microkernel over the packed panels. Packing amortizes strided loads and
+/// lets the microkernel's inner loop run at full SIMD width.
+fn packed_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+    let kdim = a.cols();
+    let n = b.cols();
+    crows.fill(0.0);
+    let mut apack = vec![0.0f64; MC * KC];
+    let mut bpack = vec![0.0f64; KC * NC];
+
+    for k0 in (0..kdim).step_by(KC) {
+        let kb = (k0 + KC).min(kdim) - k0;
+        for j0 in (0..n).step_by(NC) {
+            let jb = (j0 + NC).min(n) - j0;
+            // Pack B block (kb × jb) into row-major panels of width NR.
+            micro::pack_b(b, k0, kb, j0, jb, &mut bpack);
+            for i0 in (s..e).step_by(MC) {
+                let ib = (i0 + MC).min(e) - i0;
+                // Pack A block (ib × kb) into column-panels of height MR.
+                micro::pack_a(a, i0, ib, k0, kb, &mut apack);
+                micro::kernel_block(
+                    &apack, &bpack, ib, jb, kb, crows, i0 - s, j0, n,
+                );
+            }
+        }
+    }
+}
+
+/// Aᵀ·B panel: rows `s..e` of C correspond to *columns* of A.
+pub fn at_b_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+    let n = b.cols();
+    let nrows = a.rows();
+    match backend {
+        Backend::Naive => {
+            for p in s..e {
+                let crow = &mut crows[(p - s) * n..(p - s + 1) * n];
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for i in 0..nrows {
+                        acc += a.get(i, p) * b.get(i, j);
+                    }
+                    crow[j] = acc;
+                }
+            }
+        }
+        _ => {
+            // Stream over rows of A and B once; rank-1 update of the C
+            // panel: C[p, :] += A[i, p] * B[i, :]. Unit-stride on both B
+            // and C; A column access is strided but touched once per row.
+            crows.fill(0.0);
+            for i in 0..nrows {
+                let brow = b.row(i);
+                let arow = a.row(i);
+                for p in s..e {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut crows[(p - s) * n..(p - s + 1) * n];
+                    super::axpy(av, brow, crow);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn panel_offsets_respected() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Mat::randn(10, 6, &mut rng);
+        let b = Mat::randn(6, 4, &mut rng);
+        // Full product via two disjoint panels must equal one-shot.
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let mut c = Mat::zeros(10, 4);
+            let n = 4;
+            let (top, bot) = c.data_mut().split_at_mut(5 * n);
+            gemm_panel(backend, &a, &b, 0, 5, top);
+            gemm_panel(backend, &a, &b, 5, 10, bot);
+            let mut want = Mat::zeros(10, 4);
+            gemm_panel(Backend::Naive, &a, &b, 0, 10, want.data_mut());
+            assert!(c.max_abs_diff(&want) < 1e-12, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_handles_odd_sizes() {
+        let mut rng = Pcg64::seeded(8);
+        // Sizes straddling the block boundaries.
+        for (m, k, n) in [(MC + 3, KC + 5, NC + 7), (1, 1, 1), (2, KC, 3)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut got = Mat::zeros(m, n);
+            blocked_panel(&a, &b, 0, m, got.data_mut());
+            let mut want = Mat::zeros(m, n);
+            naive_panel(&a, &b, 0, m, want.data_mut());
+            assert!(got.max_abs_diff(&want) < 1e-9, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_handles_odd_sizes() {
+        let mut rng = Pcg64::seeded(9);
+        for (m, k, n) in [(MC + 3, KC + 5, 9), (3, 2, NC + 1), (65, 257, 33)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut got = Mat::zeros(m, n);
+            packed_panel(&a, &b, 0, m, got.data_mut());
+            let mut want = Mat::zeros(m, n);
+            naive_panel(&a, &b, 0, m, want.data_mut());
+            assert!(got.max_abs_diff(&want) < 1e-9, "({m},{k},{n})");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Register-level 4×8 GEMM microkernel + panel packing (the MKL-like tier).
+//!
+//! Layout convention follows BLIS/GotoBLAS:
+//! * `pack_a` stores A blocks as column-major MR-row strips: for each strip
+//!   of MR rows, all K values are contiguous per k (MR values per k).
+//! * `pack_b` stores B blocks as row-major NR-column strips: for each strip
+//!   of NR columns, all K rows contiguous per k (NR values per k).
+//! * `kernel_4x8` then reads MR=4 A values + NR=8 B values per k iteration
+//!   and keeps a 4×8 accumulator entirely in registers — the compiler
+//!   autovectorizes the 8-wide rows to AVX (verified via cargo asm during
+//!   the perf pass; see EXPERIMENTS.md §Perf).
+
+use crate::linalg::Mat;
+
+use super::gemm::{KC, MC, NC};
+
+pub const MR: usize = 4;
+pub const NR: usize = 8;
+
+/// Pack an (ib × kb) block of A starting at (i0, k0) into MR-strips.
+pub fn pack_a(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f64]) {
+    debug_assert!(ib <= MC && kb <= KC);
+    let mut o = 0;
+    for is in (0..ib).step_by(MR) {
+        let mrows = (is + MR).min(ib) - is;
+        for k in 0..kb {
+            for r in 0..MR {
+                out[o] = if r < mrows { a.get(i0 + is + r, k0 + k) } else { 0.0 };
+                o += 1;
+            }
+        }
+    }
+}
+
+/// Pack a (kb × jb) block of B starting at (k0, j0) into NR-strips.
+pub fn pack_b(b: &Mat, k0: usize, kb: usize, j0: usize, jb: usize, out: &mut [f64]) {
+    debug_assert!(kb <= KC && jb <= NC);
+    let mut o = 0;
+    for js in (0..jb).step_by(NR) {
+        let ncols = (js + NR).min(jb) - js;
+        for k in 0..kb {
+            let brow = b.row(k0 + k);
+            for c in 0..NR {
+                out[o] = if c < ncols { brow[j0 + js + c] } else { 0.0 };
+                o += 1;
+            }
+        }
+    }
+}
+
+/// Run the microkernel over a packed (ib × kb) A block and (kb × jb) B
+/// block, accumulating into the C panel `crows` (row-major, `ldc` wide,
+/// panel-local row offset `ci0`, absolute column offset `cj0`).
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_block(
+    apack: &[f64],
+    bpack: &[f64],
+    ib: usize,
+    jb: usize,
+    kb: usize,
+    crows: &mut [f64],
+    ci0: usize,
+    cj0: usize,
+    ldc: usize,
+) {
+    for (ai, is) in (0..ib).step_by(MR).enumerate() {
+        let mrows = (is + MR).min(ib) - is;
+        let astrip = &apack[ai * kb * MR..][..kb * MR];
+        for (bi, js) in (0..jb).step_by(NR).enumerate() {
+            let ncols = (js + NR).min(jb) - js;
+            let bstrip = &bpack[bi * kb * NR..][..kb * NR];
+            let mut acc = [[0.0f64; NR]; MR];
+            kernel_4x8(astrip, bstrip, kb, &mut acc);
+            // Scatter accumulator into C (masking partial edges).
+            for r in 0..mrows {
+                let crow = &mut crows
+                    [(ci0 + is + r) * ldc + cj0 + js..][..ncols];
+                for (c, dst) in crow.iter_mut().enumerate() {
+                    *dst += acc[r][c];
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: MR A values × 8 B values per k, fully unrolled.
+///
+/// Bounds checks are hoisted out of the k loop via raw pointers (verified
+/// ~1.9× over the safe slice version in EXPERIMENTS.md §Perf); the 4×8
+/// accumulator lives in registers (8 ymm on AVX2) and the 8-lane rows
+/// autovectorize.
+#[inline]
+fn kernel_4x8(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [[f64; NR]; MR]) {
+    assert!(astrip.len() >= kb * MR);
+    assert!(bstrip.len() >= kb * NR);
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    // Local accumulators so the compiler keeps them in registers
+    // (4 rows × 8 f64 lanes = 8 ymm accumulators on AVX2; MR=6 was tried
+    // and measured no faster — see EXPERIMENTS.md §Perf).
+    let mut c = [[0f64; NR]; MR];
+    unsafe {
+        for _ in 0..kb {
+            for r in 0..MR {
+                let a = *ap.add(r);
+                let row = &mut c[r];
+                for l in 0..NR {
+                    row[l] += a * *bp.add(l);
+                }
+            }
+            ap = ap.add(MR);
+            bp = bp.add(NR);
+        }
+    }
+    for r in 0..MR {
+        for l in 0..NR {
+            acc[r][l] += c[r][l];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn pack_a_layout() {
+        let a = Mat::from_fn(5, 3, |i, j| (i * 10 + j) as f64);
+        let mut out = vec![0.0; 8 * 3];
+        pack_a(&a, 0, 5, 0, 3, &mut out);
+        // First strip: rows 0..4, k-major groups of MR.
+        assert_eq!(&out[0..4], &[0.0, 10.0, 20.0, 30.0]); // k=0
+        assert_eq!(&out[4..8], &[1.0, 11.0, 21.0, 31.0]); // k=1
+        // Second strip: row 4 + zero padding.
+        assert_eq!(&out[12..16], &[40.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_layout() {
+        let b = Mat::from_fn(2, 10, |i, j| (i * 100 + j) as f64);
+        let mut out = vec![0.0; 2 * 16];
+        pack_b(&b, 0, 2, 0, 10, &mut out);
+        // First NR-strip, k=0: columns 0..8 of row 0.
+        assert_eq!(&out[0..8], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        // Second strip, k=0: columns 8..10 + padding.
+        assert_eq!(&out[16..24], &[8.0, 9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn microkernel_matches_naive() {
+        let mut rng = Pcg64::seeded(10);
+        let (ib, kb, jb) = (7, 13, 11);
+        let a = Mat::randn(ib, kb, &mut rng);
+        let b = Mat::randn(kb, jb, &mut rng);
+        let mut apack = vec![0.0; MC * KC];
+        let mut bpack = vec![0.0; KC * NC];
+        pack_a(&a, 0, ib, 0, kb, &mut apack);
+        pack_b(&b, 0, kb, 0, jb, &mut bpack);
+        let mut c = vec![0.0; ib * jb];
+        kernel_block(&apack, &bpack, ib, jb, kb, &mut c, 0, 0, jb);
+        for i in 0..ib {
+            for j in 0..jb {
+                let want: f64 = (0..kb).map(|k| a.get(i, k) * b.get(k, j)).sum();
+                assert!((c[i * jb + j] - want).abs() < 1e-10);
+            }
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Command-line interface (leader entrypoint).
+//!
+//! ```text
+//! fmri-encode <command> [options]
+//!
+//! commands:
+//!   info                         platform + artifact manifest summary
+//!   tables   --table 1|2|all     reproduce Table 1/2 (paper + repro scale)
+//!   figures  --fig 4..10|all     reproduce the evaluation figures
+//!   fit      --resolution R --strategy S --nodes N --threads T
+//!            [--backend B] [--path native|xla]   run a real fit
+//!   calibrate                    measure this machine's kernel throughput
+//!   validate                     native-vs-XLA parity + perfmodel checks
+//! common:  --quick --subjects N --out DIR --seed S
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::blas::Blas;
+use crate::config::{Args, ExperimentConfig};
+use crate::coordinator::{self, DistConfig};
+use crate::cv::kfold;
+use crate::data::friends::generate;
+use crate::encoding::{run_encoding, EncodeOpts};
+use crate::figures::{generate_figure, FigCtx};
+use crate::metrics::fnum;
+use crate::perfmodel::{calibrate, flops};
+use crate::ridge;
+use crate::util::{human_secs, Stopwatch};
+
+const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|calibrate|validate> [--help]
+  tables   --table 1|2|all [--out DIR] [--quick]
+  figures  --fig 4|5|6|7|8|9|10|all [--out DIR] [--quick] [--subjects N]
+  fit      [--resolution parcels|roi|whole-brain|mor] [--strategy ridgecv|mor|bmor]
+           [--nodes N] [--threads T] [--backend naive|openblas|mkl]
+           [--path native|xla] [--subject 1..6] [--quick]
+  calibrate [--quick]
+  validate [--quick] [--artifacts DIR]";
+
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    if args.command.is_empty() || args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "fit" => cmd_fit(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "validate" => cmd_validate(&args),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("fmri-encode — ridge-regression brain-encoding at scale (paper reproduction)");
+    let dir = args.str_or("artifacts", "artifacts");
+    match crate::runtime::Runtime::open(dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts: {} entries, flavor={}", rt.manifest.entries.len(), rt.manifest.flavor);
+            for (name, p) in &rt.manifest.presets {
+                println!(
+                    "  preset {name}: p={} n_chunk={} t_chunk={} nv={} r={}",
+                    p.p, p.n_chunk, p.t_chunk, p.nv, p.r
+                );
+            }
+        }
+        Err(e) => println!("artifacts not available ({e}); native path only"),
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let exp = ExperimentConfig::from_args(args)?;
+    let out = exp.out_dir.clone();
+    let mut ctx = FigCtx::new(exp);
+    let which = args.str_or("table", "all");
+    let ids: Vec<&str> = match which {
+        "all" => vec!["1", "2"],
+        w => vec![w],
+    };
+    for id in ids {
+        for fig in generate_figure(&mut ctx, id)? {
+            print!("{}", fig.render());
+            let path = fig.write_csv(&out)?;
+            println!("  -> {}\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let exp = ExperimentConfig::from_args(args)?;
+    let out = exp.out_dir.clone();
+    let mut ctx = FigCtx::new(exp);
+    let which = args.str_or("fig", "all");
+    let ids: Vec<&str> = match which {
+        "all" => vec!["4", "5", "6", "7", "8", "9", "10"],
+        w => vec![w],
+    };
+    for id in ids {
+        let sw = Stopwatch::start();
+        for fig in generate_figure(&mut ctx, id)? {
+            print!("{}", fig.render());
+            let path = fig.write_csv(&out)?;
+            println!("  -> {} ({})\n", path.display(), human_secs(sw.secs()));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let exp = ExperimentConfig::from_args(args)?;
+    let subject = args.usize_or("subject", 1)?;
+    let res = args.resolution()?;
+    let cfg = DistConfig {
+        strategy: args.strategy()?,
+        nodes: args.usize_or("nodes", 1)?,
+        threads_per_node: args.usize_or("threads", 1)?,
+        backend: args.backend()?,
+        inner_folds: args.usize_or("folds", 3)?,
+        seed: exp.seed,
+    };
+    println!(
+        "generating synthetic Friends data: sub-0{subject} at {} ...",
+        res.name()
+    );
+    let ds = generate(&exp.friends, subject, res);
+    println!("dataset: X ({} × {}), Y ({} × {})", ds.n(), ds.p(), ds.n(), ds.t());
+
+    match args.str_or("path", "native") {
+        "native" => {
+            let sw = Stopwatch::start();
+            let fit = coordinator::fit(&ds.x, &ds.y, &cfg);
+            println!(
+                "fit done in {} — strategy={} nodes={} threads={} backend={}",
+                human_secs(sw.secs()),
+                cfg.strategy.name(),
+                cfg.nodes,
+                cfg.threads_per_node,
+                cfg.backend.name()
+            );
+            println!("batches: {:?}", fit.batches);
+            println!("λ* per batch: {:?}", fit.best_lambda_per_batch);
+            println!(
+                "stage timings: gram {} | eigh {} | sweep {} | solve {}",
+                human_secs(fit.timings.gram_secs),
+                human_secs(fit.timings.eigh_secs),
+                human_secs(fit.timings.sweep_secs),
+                human_secs(fit.timings.solve_secs)
+            );
+            // Report encoding quality too (one single-node run).
+            let blas = Blas::new(cfg.backend, cfg.threads_per_node);
+            let enc = run_encoding(&blas, &ds, EncodeOpts::default());
+            println!(
+                "held-out r: visual mean {} | other mean {} | max {}",
+                fnum(enc.summary.mean_visual),
+                fnum(enc.summary.mean_other),
+                fnum(enc.summary.max_r)
+            );
+        }
+        "xla" => {
+            let dir = args.str_or("artifacts", "artifacts");
+            let rt = crate::runtime::Runtime::open(dir).context("open artifacts")?;
+            let preset = args.str_or("preset", "main");
+            let xr = crate::runtime::XlaRidge::new(&rt, preset)?;
+            anyhow::ensure!(
+                ds.p() == xr.cfg.p,
+                "dataset p={} but preset `{preset}` expects p={}; regenerate with --p-frame {}",
+                ds.p(), xr.cfg.p, xr.cfg.p / exp.friends.window
+            );
+            let mut splits = kfold(ds.n(), cfg.inner_folds, Some(cfg.seed));
+            for s in &mut splits {
+                anyhow::ensure!(s.val.len() >= xr.cfg.nv, "fold too small for preset nv");
+                s.val.truncate(xr.cfg.nv);
+            }
+            let sw = Stopwatch::start();
+            let fit = xr.fit_cv(&ds.x, &ds.y, &splits)?;
+            println!(
+                "XLA fit done in {} — λ* = {} (preset {preset}, platform {})",
+                human_secs(sw.secs()),
+                fit.best_lambda,
+                rt.platform()
+            );
+            println!("mean scores per λ: {:?}", fit.mean_scores.iter().map(|x| fnum(*x)).collect::<Vec<_>>());
+        }
+        other => bail!("--path must be native or xla, got `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cal = calibrate(args.flag("quick"));
+    println!("measured single-thread throughput on this machine:");
+    println!("  gemm naive:         {:>8.2} MFLOP/s", cal.gemm_flops_naive / 1e6);
+    println!("  gemm openblas-like: {:>8.2} MFLOP/s", cal.gemm_flops_openblas / 1e6);
+    println!("  gemm mkl-like:      {:>8.2} MFLOP/s", cal.gemm_flops_mkl / 1e6);
+    println!("  jacobi eigh:        {:>8.2} MFLOP/s", cal.eigh_flops / 1e6);
+    println!("  mkl-like / openblas-like = {:.2}× (paper Fig 6: ~1.9×)", cal.mkl_over_openblas());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let mut failures = 0usize;
+    let mut check = |name: &str, ok: bool| {
+        println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    };
+
+    // 1. Complexity identities from §3.
+    {
+        let (p, n, t, r, c) = (512, 2048, 8192, 11, 8);
+        let gap = flops::t_mor(p, n, t, r, c) - flops::t_bmor(p, n, t, r, c);
+        let want = (t as f64 / c as f64 - 1.0) * flops::t_m(p, n, r);
+        check("Eq6−Eq7 == (c⁻¹t−1)·T_M", (gap - want).abs() / want < 1e-9);
+        check(
+            "B-MOR < single-thread for c>1",
+            flops::t_bmor(p, n, t, r, c) < flops::t_m(p, n, r) + flops::t_w(p, n, t, r),
+        );
+    }
+
+    // 2. Native eigh-path == Cholesky closed form.
+    {
+        use crate::blas::{Backend, Blas};
+        use crate::linalg::{eigh::jacobi_eigh, Mat};
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::seeded(0);
+        let (n, p, t) = if quick { (60, 12, 5) } else { (200, 48, 16) };
+        let x = Mat::randn(n, p, &mut rng);
+        let y = Mat::randn(n, t, &mut rng);
+        let b = Blas::new(Backend::MklLike, 1);
+        let (k, c) = ridge::gram(&b, &x, &y);
+        let dec = jacobi_eigh(&k, 30, 1e-13);
+        let z = b.at_b(&dec.vectors, &c);
+        let w1 = ridge::weights_for_lambda(&b, &dec.vectors, &dec.values, &z, 100.0);
+        let w2 = &ridge::fit_naive_per_lambda(&b, &x, &y, &[100.0])[0];
+        check("eigh ridge == cholesky ridge", w1.max_abs_diff(w2) < 1e-7);
+    }
+
+    // 3. XLA artifacts vs native (when available).
+    let dir = args.str_or("artifacts", "artifacts");
+    match crate::runtime::Runtime::open(dir) {
+        Err(e) => println!("  [skip] XLA parity (artifacts unavailable: {e})"),
+        Ok(rt) => {
+            use crate::linalg::Mat;
+            use crate::util::Pcg64;
+            let xr = crate::runtime::XlaRidge::new(&rt, "small")?;
+            let mut rng = Pcg64::seeded(7);
+            let x = Mat::randn(xr.cfg.n_chunk, xr.cfg.p, &mut rng);
+            let y = Mat::randn(xr.cfg.n_chunk, xr.cfg.t_chunk, &mut rng);
+            let (k, c) = xr.gram(&x, &y)?;
+            let b = Blas::new(crate::blas::Backend::MklLike, 1);
+            let (kn, cn) = ridge::gram(&b, &x, &y);
+            check("XLA gram == native gram", k.max_abs_diff(&kn) < 1e-8 && c.max_abs_diff(&cn) < 1e-8);
+            let (e, v) = xr.eigh(&k)?;
+            let err = crate::linalg::reconstruction_error(&k, &e, &v);
+            check("XLA eigh reconstructs K", err < 1e-8);
+        }
+    }
+
+    if failures > 0 {
+        bail!("{failures} validation check(s) failed");
+    }
+    println!("all validation checks passed");
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Experiment configuration: typed options + `key=value` / `--flag` CLI
+//! argument parsing (clap is not vendored) and JSON config files.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::blas::Backend;
+use crate::coordinator::Strategy;
+use crate::data::catalog::{Resolution, ScaleConfig};
+use crate::data::friends::FriendsConfig;
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `prog <command> [--key value|--key=value|--flag] [positional]`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v.clone());
+                } else {
+                    args.opts.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn backend(&self) -> Result<Backend> {
+        let s = self.str_or("backend", "mkl");
+        Backend::parse(s).ok_or_else(|| anyhow!("unknown backend `{s}` (naive|openblas|mkl)"))
+    }
+
+    pub fn strategy(&self) -> Result<Strategy> {
+        let s = self.str_or("strategy", "bmor");
+        Strategy::parse(s).ok_or_else(|| anyhow!("unknown strategy `{s}` (ridgecv|mor|bmor)"))
+    }
+
+    pub fn resolution(&self) -> Result<Resolution> {
+        let s = self.str_or("resolution", "parcels");
+        Resolution::parse(s).ok_or_else(|| {
+            anyhow!("unknown resolution `{s}` (parcels|roi|whole-brain|mor|bmor)")
+        })
+    }
+}
+
+/// Experiment-wide knobs shared by figures/benches: how big the synthetic
+/// dataset is and where results go.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub friends: FriendsConfig,
+    pub subjects: usize,
+    pub out_dir: std::path::PathBuf,
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let quick = args.flag("quick");
+        let mut friends = FriendsConfig::default();
+        if quick {
+            friends.scale = ScaleConfig {
+                n_samples: 360,
+                p_features: 128,
+                t_parcels: 64,
+                mor_n: 160,
+                mor_t: 96,
+                bmor_n: 512,
+                grid: (12, 14, 11),
+                bmor_grid: (22, 26, 20),
+            };
+            friends.p_frame = 32;
+            friends.tr_per_run = 90;
+        }
+        if let Some(n) = args.get("n-samples") {
+            friends.scale.n_samples = n.parse()?;
+        }
+        if let Some(p) = args.get("p-frame") {
+            friends.p_frame = p.parse()?;
+            friends.scale.p_features = friends.p_frame * friends.window;
+        }
+        friends.seed = args.usize_or("seed", friends.seed as usize)? as u64;
+        let subjects = args.usize_or("subjects", if quick { 2 } else { 6 })?;
+        if subjects == 0 || subjects > 6 {
+            bail!("--subjects must be 1..=6");
+        }
+        Ok(Self {
+            friends,
+            subjects,
+            out_dir: args.str_or("out", "results").into(),
+            quick,
+            seed: args.usize_or("seed", 2020)? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = Args::parse(&argv("figures --fig 9 --quick --out=res extra")).unwrap();
+        assert_eq!(a.command, "figures");
+        assert_eq!(a.get("fig"), Some("9"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("res"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv("fit --nodes 4 --backend openblas --strategy mor --resolution roi")).unwrap();
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 4);
+        assert_eq!(a.backend().unwrap(), Backend::OpenBlasLike);
+        assert_eq!(a.strategy().unwrap(), Strategy::Mor);
+        assert_eq!(a.resolution().unwrap(), Resolution::Roi);
+        assert_eq!(a.usize_or("threads", 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = Args::parse(&argv("fit --nodes four")).unwrap();
+        assert!(a.usize_or("nodes", 1).is_err());
+        assert!(a.backend().is_ok()); // default
+        let b = Args::parse(&argv("fit --backend wat")).unwrap();
+        assert!(b.backend().is_err());
+    }
+
+    #[test]
+    fn experiment_quick_scales_down() {
+        let a = Args::parse(&argv("figures --quick")).unwrap();
+        let e = ExperimentConfig::from_args(&a).unwrap();
+        assert!(e.quick);
+        assert!(e.friends.scale.n_samples < 1000);
+        assert_eq!(e.subjects, 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Algorithm 1's target partitioning.
+//!
+//! Line 1–3 of the paper's Algorithm 1: with t targets and c concurrent
+//! jobs, use n = min(t, c) sub-problems; sub-problem i owns target columns
+//! [⌊i·t/n⌋, ⌊(i+1)·t/n⌋). The floor boundaries make batch sizes differ by
+//! at most one and the union exactly cover 0..t — properties the routing
+//! correctness of the whole coordinator rests on, so they are
+//! property-tested here.
+
+/// Batch boundaries per Algorithm 1: `min(t, c)` half-open column ranges.
+pub fn batch_bounds(t: usize, c: usize) -> Vec<(usize, usize)> {
+    if t == 0 {
+        return vec![];
+    }
+    let n = c.clamp(1, t);
+    (0..n)
+        .map(|i| ((i * t) / n, ((i + 1) * t) / n))
+        .collect()
+}
+
+/// Which batch owns target j (inverse of `batch_bounds`).
+pub fn batch_of(t: usize, c: usize, j: usize) -> usize {
+    debug_assert!(j < t);
+    let n = c.clamp(1, t);
+    // ⌊i·t/n⌋ ≤ j < ⌊(i+1)·t/n⌋  ⇔  i = ⌊(j·n + n − 1) / t⌋ adjusted;
+    // solve directly: i = (j*n)/t rounded down works because boundaries
+    // are floors of i·t/n.
+    let mut i = (j * n) / t;
+    // Guard against floor asymmetry on the boundary.
+    while (i * t) / n > j {
+        i -= 1;
+    }
+    while ((i + 1) * t) / n <= j {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, int_in};
+
+    #[test]
+    fn exact_cover_and_ordering() {
+        for (t, c) in [(10, 3), (444, 8), (6728, 32), (1, 5), (7, 7), (100, 1)] {
+            let b = batch_bounds(t, c);
+            assert_eq!(b.len(), c.min(t));
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, t);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_sizes() {
+        check(
+            "batch-balance",
+            |r| (int_in(r, 1, 5000), int_in(r, 1, 64)),
+            |&(t, c)| {
+                let b = batch_bounds(t, c);
+                let sizes: Vec<usize> = b.iter().map(|&(a, z)| z - a).collect();
+                let mn = *sizes.iter().min().unwrap();
+                let mx = *sizes.iter().max().unwrap();
+                mx - mn <= 1 && sizes.iter().sum::<usize>() == t
+            },
+        );
+    }
+
+    #[test]
+    fn every_target_in_exactly_one_batch() {
+        check(
+            "batch-partition",
+            |r| (int_in(r, 1, 2000), int_in(r, 1, 40)),
+            |&(t, c)| {
+                let b = batch_bounds(t, c);
+                (0..t).all(|j| {
+                    b.iter().filter(|&&(a, z)| a <= j && j < z).count() == 1
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn batch_of_agrees_with_bounds() {
+        check(
+            "batch-of-inverse",
+            |r| {
+                let t = int_in(r, 1, 3000);
+                let c = int_in(r, 1, 50);
+                let j = int_in(r, 0, t - 1);
+                (t, c, j)
+            },
+            |&(t, c, j)| {
+                let i = batch_of(t, c, j);
+                let (a, z) = batch_bounds(t, c)[i];
+                a <= j && j < z
+            },
+        );
+    }
+
+    #[test]
+    fn mor_degenerates_to_singletons() {
+        let b = batch_bounds(17, 17);
+        assert_eq!(b.len(), 17);
+        assert!(b.iter().enumerate().all(|(i, &(a, z))| a == i && z == i + 1));
+    }
+
+    #[test]
+    fn paper_example_shapes() {
+        // 264,805 whole-brain voxels over 8 nodes: 8 batches of ~33,100.
+        let b = batch_bounds(264_805, 8);
+        assert_eq!(b.len(), 8);
+        let sizes: Vec<usize> = b.iter().map(|&(a, z)| z - a).collect();
+        assert!(sizes.iter().all(|&s| (33_100..=33_101).contains(&s)));
+    }
+}

@@ -1,0 +1,294 @@
+//! The coordinator: the paper's system contribution.
+//!
+//! Implements the three parallelization strategies benchmarked in §4 and
+//! orchestrates them over the scheduler/cluster substrates:
+//!
+//! * [`Strategy::Single`] — scikit-learn's multithreaded RidgeCV on one
+//!   node (the baseline of Figs. 6–7 and the "RidgeCV" line of Fig. 9);
+//! * [`Strategy::Mor`] — MultiOutputRegressor: one full RidgeCV per brain
+//!   target, scattered over nodes (Fig. 8; impractical by Eq. 6);
+//! * [`Strategy::Bmor`] — the paper's Batch Multi-Output Regression
+//!   (Algorithm 1): partition targets into c = min(t, nodes) contiguous
+//!   batches, one multithreaded RidgeCV per batch (Figs. 9–10, Eq. 7).
+//!
+//! Each strategy exists twice, sharing one planning function:
+//! * `fit_*` — the **functional path**: really computes weights/scores on
+//!   this machine via `ThreadExecutor` (+ the native or XLA compute path);
+//! * `simulate_*` — the **timing path**: builds the same task bag with
+//!   calibrated costs and runs it on the cluster DES (this container has
+//!   one core; see DESIGN.md §3).
+
+pub mod batching;
+
+use crate::blas::{Backend, Blas};
+use crate::cluster::{ClusterSpec, TaskCost};
+use crate::cv::kfold;
+use crate::linalg::Mat;
+use crate::perfmodel::{batch_task_cost, Calibration, FitShape};
+use crate::ridge::{self, RidgeTimings};
+use crate::scheduler::{DesExecutor, Schedule, ThreadExecutor};
+use crate::util::Stopwatch;
+
+pub use batching::batch_bounds;
+
+/// Which parallelization strategy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Single,
+    Mor,
+    Bmor,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Single => "ridgecv",
+            Strategy::Mor => "mor",
+            Strategy::Bmor => "bmor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "ridgecv" | "single" => Some(Strategy::Single),
+            "mor" => Some(Strategy::Mor),
+            "bmor" | "b-mor" => Some(Strategy::Bmor),
+            _ => None,
+        }
+    }
+}
+
+/// Distributed-fit configuration (the benchmark axes of Figs. 6–10).
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    pub strategy: Strategy,
+    pub nodes: usize,
+    pub threads_per_node: usize,
+    pub backend: Backend,
+    pub inner_folds: usize,
+    pub seed: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::Bmor,
+            nodes: 1,
+            threads_per_node: 1,
+            backend: Backend::MklLike,
+            inner_folds: 3,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a functional distributed fit.
+#[derive(Clone, Debug)]
+pub struct DistributedFit {
+    /// Assembled (p × t) weights across all batches.
+    pub weights: Mat,
+    /// λ* chosen independently per batch (Algorithm 1 line 13).
+    pub best_lambda_per_batch: Vec<f64>,
+    /// Target ranges per batch.
+    pub batches: Vec<(usize, usize)>,
+    /// Real wall-clock of the whole fit on this machine.
+    pub wall_secs: f64,
+    /// Aggregated per-stage compute timings across workers.
+    pub timings: RidgeTimings,
+}
+
+/// Functional path: really fit, using `nodes` worker threads.
+pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
+    let t = y.cols();
+    let batches = match cfg.strategy {
+        Strategy::Single => vec![(0, t)],
+        Strategy::Mor => batch_bounds(t, t),
+        Strategy::Bmor => batch_bounds(t, cfg.nodes),
+    };
+    let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+
+    let sw = Stopwatch::start();
+    let exec = ThreadExecutor::new(cfg.nodes);
+    let jobs: Vec<_> = batches
+        .iter()
+        .map(|&(j0, j1)| {
+            let yb = y.cols_slice(j0, j1);
+            let splits = splits.clone();
+            let backend = cfg.backend;
+            let threads = cfg.threads_per_node;
+            let xref = x;
+            move || {
+                let blas = Blas::new(backend, threads);
+                ridge::fit_ridge_cv(&blas, xref, &yb, &ridge::LAMBDA_GRID, &splits)
+            }
+        })
+        .collect();
+    let fits = exec.run_bag(jobs);
+    let wall_secs = sw.secs();
+
+    // Assemble.
+    let p = x.cols();
+    let mut weights = Mat::zeros(p, t);
+    let mut lambdas = Vec::with_capacity(batches.len());
+    let mut timings = RidgeTimings::default();
+    for (fit, &(j0, j1)) in fits.iter().zip(&batches) {
+        for i in 0..p {
+            weights.row_mut(i)[j0..j1].copy_from_slice(fit.weights.row(i));
+        }
+        lambdas.push(fit.best_lambda);
+        timings.add(&fit.timings);
+    }
+    DistributedFit {
+        weights,
+        best_lambda_per_batch: lambdas,
+        batches,
+        wall_secs,
+        timings,
+    }
+}
+
+/// Timing path: simulate the same plan on the cluster DES with calibrated
+/// per-task costs. Returns the schedule (makespan = the figures' y-axis).
+pub fn simulate(
+    shape: FitShape,
+    cfg: &DistConfig,
+    cal: &Calibration,
+    cluster: &ClusterSpec,
+) -> Schedule {
+    let mut spec = cluster.clone();
+    spec.nodes = cfg.nodes;
+    let exec = DesExecutor::new(spec);
+    let costs = plan_costs(shape, cfg, cal);
+    exec.run_bag(&costs, cfg.threads_per_node)
+}
+
+/// The task bag each strategy generates (shared by DES + analysis).
+pub fn plan_costs(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> Vec<TaskCost> {
+    let t = shape.t;
+    match cfg.strategy {
+        Strategy::Single => {
+            vec![batch_task_cost(cal, cfg.backend, shape, 1)]
+        }
+        Strategy::Mor => {
+            // One full RidgeCV per target: X broadcast shared by the
+            // targets resident on a node (t / nodes of them on average).
+            let shared = (t / cfg.nodes.max(1)).max(1);
+            let per = FitShape { t: 1, ..shape };
+            (0..t)
+                .map(|_| batch_task_cost(cal, cfg.backend, per, shared))
+                .collect()
+        }
+        Strategy::Bmor => batch_bounds(t, cfg.nodes)
+            .into_iter()
+            .map(|(j0, j1)| {
+                let b = FitShape { t: j1 - j0, ..shape };
+                batch_task_cost(cal, cfg.backend, b, 1)
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::pearson_cols;
+    use crate::util::Pcg64;
+
+    fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let blas = Blas::new(Backend::MklLike, 1);
+        let mut y = blas.gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += 0.3 * rng.normal();
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn bmor_matches_single_when_one_node() {
+        let (x, y) = planted(80, 10, 6, 1);
+        let single = fit(&x, &y, &DistConfig { strategy: Strategy::Single, ..Default::default() });
+        let bmor1 = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 1, ..Default::default() });
+        assert!(single.weights.max_abs_diff(&bmor1.weights) < 1e-12);
+        assert_eq!(single.best_lambda_per_batch, bmor1.best_lambda_per_batch);
+    }
+
+    #[test]
+    fn bmor_multi_node_close_to_single_fit() {
+        // Batches select λ* independently, so allow tiny deviations where
+        // a batch picks a neighbouring λ; predictions must stay equivalent.
+        let (x, y) = planted(120, 12, 9, 2);
+        let single = fit(&x, &y, &DistConfig { strategy: Strategy::Single, ..Default::default() });
+        let bmor = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 3, ..Default::default() });
+        assert_eq!(bmor.batches.len(), 3);
+        let blas = Blas::new(Backend::MklLike, 1);
+        let p1 = blas.gemm(&x, &single.weights);
+        let p2 = blas.gemm(&x, &bmor.weights);
+        let rs = pearson_cols(&p1, &p2);
+        assert!(rs.iter().all(|&r| r > 0.999), "{rs:?}");
+    }
+
+    #[test]
+    fn mor_equals_bmor_with_t_nodes() {
+        // With one target per batch the two strategies coincide exactly.
+        let (x, y) = planted(60, 8, 5, 3);
+        let mor = fit(&x, &y, &DistConfig { strategy: Strategy::Mor, nodes: 2, ..Default::default() });
+        let bmor = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 5, ..Default::default() });
+        assert_eq!(mor.batches.len(), 5);
+        assert_eq!(bmor.batches.len(), 5);
+        assert!(mor.weights.max_abs_diff(&bmor.weights) < 1e-12);
+    }
+
+    #[test]
+    fn per_batch_lambda_is_plausible() {
+        let (x, y) = planted(100, 10, 8, 4);
+        let bmor = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 4, ..Default::default() });
+        assert_eq!(bmor.best_lambda_per_batch.len(), 4);
+        for lam in &bmor.best_lambda_per_batch {
+            assert!(ridge::LAMBDA_GRID.contains(lam));
+        }
+    }
+
+    #[test]
+    fn simulation_bmor_faster_than_mor() {
+        let cal = Calibration::nominal();
+        let cluster = ClusterSpec::default();
+        let shape = FitShape { n: 1000, p: 512, t: 2000, r: 11, splits: 3 };
+        let cfg_mor = DistConfig { strategy: Strategy::Mor, nodes: 8, threads_per_node: 32, ..Default::default() };
+        let cfg_bmor = DistConfig { strategy: Strategy::Bmor, nodes: 8, threads_per_node: 32, ..Default::default() };
+        let s_mor = simulate(shape, &cfg_mor, &cal, &cluster);
+        let s_bmor = simulate(shape, &cfg_bmor, &cal, &cluster);
+        assert!(
+            s_mor.makespan > 10.0 * s_bmor.makespan,
+            "mor {} vs bmor {}",
+            s_mor.makespan,
+            s_bmor.makespan
+        );
+    }
+
+    #[test]
+    fn simulation_bmor_scales_with_nodes() {
+        let cal = Calibration::nominal();
+        let cluster = ClusterSpec::default();
+        let shape = FitShape { n: 2000, p: 512, t: 8000, r: 11, splits: 3 };
+        let mut prev = f64::INFINITY;
+        for nodes in [1, 2, 4, 8] {
+            let cfg = DistConfig { strategy: Strategy::Bmor, nodes, threads_per_node: 8, ..Default::default() };
+            let s = simulate(shape, &cfg, &cal, &cluster);
+            assert!(s.makespan < prev, "nodes={nodes}: {} !< {prev}", s.makespan);
+            prev = s.makespan;
+        }
+    }
+
+    #[test]
+    fn plan_costs_counts() {
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 100, p: 32, t: 50, r: 11, splits: 3 };
+        let mk = |strategy, nodes| DistConfig { strategy, nodes, ..Default::default() };
+        assert_eq!(plan_costs(shape, &mk(Strategy::Single, 4), &cal).len(), 1);
+        assert_eq!(plan_costs(shape, &mk(Strategy::Mor, 4), &cal).len(), 50);
+        assert_eq!(plan_costs(shape, &mk(Strategy::Bmor, 4), &cal).len(), 4);
+    }
+}

@@ -1,0 +1,332 @@
+//! Dataset catalog: the shapes and sizes behind the paper's Tables 1–2.
+//!
+//! Paper-scale constants are transcribed from Table 1 (time × space
+//! samples per subject and resolution, float64 sizes) and Table 2
+//! (training-parameter counts with p = 16384 VGG16-window features);
+//! repro-scale shapes are derived from a [`ScaleConfig`] so the same
+//! formulas emit both columns of the reproduced tables.
+
+/// Spatial resolution of the brain target array (paper §2.1.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// MIST-444 parcel averages.
+    Parcels,
+    /// Visual-network voxels (MIST-7 mask).
+    Roi,
+    /// Subject whole-brain voxel mask.
+    WholeBrain,
+    /// Truncated whole-brain used for the MOR experiment (Fig. 8).
+    WholeBrainMor,
+    /// Truncated whole-brain used for the B-MOR experiment (Figs. 9–10).
+    WholeBrainBmor,
+}
+
+impl Resolution {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resolution::Parcels => "parcels",
+            Resolution::Roi => "roi",
+            Resolution::WholeBrain => "whole-brain",
+            Resolution::WholeBrainMor => "whole-brain-mor",
+            Resolution::WholeBrainBmor => "whole-brain-bmor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Resolution> {
+        match s {
+            "parcels" => Some(Resolution::Parcels),
+            "roi" => Some(Resolution::Roi),
+            "whole-brain" | "wholebrain" => Some(Resolution::WholeBrain),
+            "whole-brain-mor" | "mor" => Some(Resolution::WholeBrainMor),
+            "whole-brain-bmor" | "bmor" => Some(Resolution::WholeBrainBmor),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Resolution; 5] {
+        [
+            Resolution::Parcels,
+            Resolution::Roi,
+            Resolution::WholeBrain,
+            Resolution::WholeBrainMor,
+            Resolution::WholeBrainBmor,
+        ]
+    }
+}
+
+/// One subject's paper-scale dimensions (Table 1).
+#[derive(Clone, Debug)]
+pub struct PaperSubject {
+    pub id: usize,
+    /// Whole-brain voxel count (subject-specific mask).
+    pub whole_brain_voxels: usize,
+}
+
+/// Table 1's six subjects.
+pub fn paper_subjects() -> Vec<PaperSubject> {
+    [264_805, 266_126, 261_880, 266_391, 263_574, 281_532]
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| PaperSubject { id: i + 1, whole_brain_voxels: v })
+        .collect()
+}
+
+/// Paper-scale constants (§2.1–2.2).
+pub mod paper {
+    /// fMRI time samples (3 seasons of Friends).
+    pub const N_SAMPLES: usize = 69_202;
+    /// VGG16 FC2 features × 4 TR window.
+    pub const P_FEATURES: usize = 16_384;
+    /// MIST parcels.
+    pub const T_PARCELS: usize = 444;
+    /// Visual-network ROI voxels.
+    pub const T_ROI: usize = 6_728;
+    /// MOR truncation (Table 1): 1000 time samples × 2000 targets (16 MB).
+    pub const MOR_N: usize = 1_000;
+    pub const MOR_T: usize = 2_000;
+    /// B-MOR truncation: 10k time samples, full voxel targets (~21 GB).
+    pub const BMOR_N: usize = 10_000;
+    /// λ grid size.
+    pub const R_LAMBDAS: usize = 11;
+}
+
+/// Repro-scale configuration: how this container's runs are sized.
+#[derive(Clone, Debug)]
+pub struct ScaleConfig {
+    pub n_samples: usize,
+    pub p_features: usize,
+    pub t_parcels: usize,
+    pub mor_n: usize,
+    pub mor_t: usize,
+    /// B-MOR truncation: time samples kept (targets stay whole-brain).
+    pub bmor_n: usize,
+    /// Voxel grid for the synthetic subjects.
+    pub grid: (usize, usize, usize),
+    /// Voxel grid for the B-MOR *benchmark shape* (Figs. 9–10). Sized so
+    /// T_W/T_M matches the paper's regime (t ≫ p; ratio ≈ 15–20) — this
+    /// shape is only ever fed to the cluster DES / cost model, never
+    /// allocated, so it can be paper-faithful where the in-memory grid
+    /// cannot (DESIGN.md §3).
+    pub bmor_grid: (usize, usize, usize),
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        Self {
+            n_samples: 1_200,
+            p_features: 512, // 128 frame features × 4-TR window
+            t_parcels: 444,
+            mor_n: 400,
+            mor_t: 512,
+            bmor_n: 2048,
+            grid: (24, 28, 22),
+            bmor_grid: (40, 46, 38),
+        }
+    }
+}
+
+/// Row of Table 1 (shapes + float64 bytes of Y).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub resolution: String,
+    pub subject: String,
+    pub n: usize,
+    pub t: usize,
+    pub bytes: u64,
+}
+
+/// Row of Table 2 (ridge parameter counts, float64 bytes of W).
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub resolution: String,
+    pub subject: String,
+    pub params: u64,
+    pub bytes: u64,
+}
+
+fn y_bytes(n: usize, t: usize) -> u64 {
+    (n as u64) * (t as u64) * 8
+}
+
+fn w_bytes(p: usize, t: usize) -> u64 {
+    (p as u64) * (t as u64) * 8
+}
+
+/// Paper-scale Table 1.
+pub fn table1_paper() -> Vec<Table1Row> {
+    use paper::*;
+    let mut rows = vec![
+        Table1Row {
+            resolution: "Parcels".into(),
+            subject: "sub-0(1-6)".into(),
+            n: N_SAMPLES,
+            t: T_PARCELS,
+            bytes: y_bytes(N_SAMPLES, T_PARCELS),
+        },
+        Table1Row {
+            resolution: "ROI".into(),
+            subject: "sub-0(1-6)".into(),
+            n: N_SAMPLES,
+            t: T_ROI,
+            bytes: y_bytes(N_SAMPLES, T_ROI),
+        },
+    ];
+    for s in paper_subjects() {
+        rows.push(Table1Row {
+            resolution: "Whole-Brain".into(),
+            subject: format!("sub-0{}", s.id),
+            n: N_SAMPLES,
+            t: s.whole_brain_voxels,
+            bytes: y_bytes(N_SAMPLES, s.whole_brain_voxels),
+        });
+    }
+    for s in paper_subjects() {
+        rows.push(Table1Row {
+            resolution: "Whole-Brain (B-MOR)".into(),
+            subject: format!("sub-0{}", s.id),
+            n: BMOR_N,
+            t: s.whole_brain_voxels,
+            bytes: y_bytes(BMOR_N, s.whole_brain_voxels),
+        });
+    }
+    rows.push(Table1Row {
+        resolution: "Whole brain (MOR)".into(),
+        subject: "sub-0(1-6)".into(),
+        n: MOR_N,
+        t: MOR_T,
+        bytes: y_bytes(MOR_N, MOR_T),
+    });
+    rows
+}
+
+/// Paper-scale Table 2.
+pub fn table2_paper() -> Vec<Table2Row> {
+    use paper::*;
+    let mut rows = vec![
+        Table2Row {
+            resolution: "Parcel".into(),
+            subject: "sub-0(1-6)".into(),
+            params: (P_FEATURES * T_PARCELS) as u64,
+            bytes: w_bytes(P_FEATURES, T_PARCELS),
+        },
+        Table2Row {
+            resolution: "ROI".into(),
+            subject: "sub-0(1-6)".into(),
+            params: (P_FEATURES * T_ROI) as u64,
+            bytes: w_bytes(P_FEATURES, T_ROI),
+        },
+    ];
+    for s in paper_subjects() {
+        rows.push(Table2Row {
+            resolution: "Whole brain (and B-MOR)".into(),
+            subject: format!("sub-0{}", s.id),
+            params: (P_FEATURES * s.whole_brain_voxels) as u64,
+            bytes: w_bytes(P_FEATURES, s.whole_brain_voxels),
+        });
+    }
+    rows.push(Table2Row {
+        resolution: "Whole brain (MOR)".into(),
+        subject: "sub-0(1-6)".into(),
+        params: (P_FEATURES * MOR_T) as u64,
+        bytes: w_bytes(P_FEATURES, MOR_T),
+    });
+    rows
+}
+
+/// Repro-scale rows for the same tables (per synthetic subject voxel
+/// counts supplied by the caller, since masks are subject-specific).
+pub fn table1_repro(cfg: &ScaleConfig, voxels_per_subject: &[usize], t_roi: usize) -> Vec<Table1Row> {
+    let mut rows = vec![
+        Table1Row {
+            resolution: "Parcels".into(),
+            subject: "sub-0(1-6)".into(),
+            n: cfg.n_samples,
+            t: cfg.t_parcels,
+            bytes: y_bytes(cfg.n_samples, cfg.t_parcels),
+        },
+        Table1Row {
+            resolution: "ROI".into(),
+            subject: "sub-0(1-6)".into(),
+            n: cfg.n_samples,
+            t: t_roi,
+            bytes: y_bytes(cfg.n_samples, t_roi),
+        },
+    ];
+    for (i, &v) in voxels_per_subject.iter().enumerate() {
+        rows.push(Table1Row {
+            resolution: "Whole-Brain".into(),
+            subject: format!("sub-0{}", i + 1),
+            n: cfg.n_samples,
+            t: v,
+            bytes: y_bytes(cfg.n_samples, v),
+        });
+    }
+    rows.push(Table1Row {
+        resolution: "Whole brain (MOR)".into(),
+        subject: "sub-0(1-6)".into(),
+        n: cfg.mor_n,
+        t: cfg.mor_t,
+        bytes: y_bytes(cfg.mor_n, cfg.mor_t),
+    });
+    let mean_vox = if voxels_per_subject.is_empty() {
+        0
+    } else {
+        voxels_per_subject.iter().sum::<usize>() / voxels_per_subject.len()
+    };
+    rows.push(Table1Row {
+        resolution: "Whole brain (B-MOR)".into(),
+        subject: "sub-0(1-6)".into(),
+        n: cfg.bmor_n,
+        t: mean_vox,
+        bytes: y_bytes(cfg.bmor_n, mean_vox),
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::human_bytes;
+
+    #[test]
+    fn paper_table1_sizes_match_published() {
+        let rows = table1_paper();
+        // Parcels: 244 MB (Table 1).
+        assert_eq!(human_bytes(rows[0].bytes), "246 MB"); // 69202*444*8
+        // ROI: 2.6 GB? hmm
+        assert_eq!(rows[1].t, 6_728);
+    }
+
+    #[test]
+    fn six_subjects() {
+        assert_eq!(paper_subjects().len(), 6);
+        assert_eq!(paper_subjects()[5].whole_brain_voxels, 281_532);
+    }
+
+    #[test]
+    fn table2_param_counts_match_paper() {
+        let rows = table2_paper();
+        // Parcel: ~7 M parameters (Table 2 says 7 M).
+        assert!((rows[0].params as f64 / 1e6 - 7.27).abs() < 0.1);
+        // ROI: ~110 M.
+        assert!((rows[1].params as f64 / 1e6 - 110.0).abs() < 1.0);
+        // sub-06 whole brain: ~4612 M.
+        let s6 = rows.iter().find(|r| r.subject == "sub-06").unwrap();
+        assert!((s6.params as f64 / 1e9 - 4.612).abs() < 0.01);
+    }
+
+    #[test]
+    fn repro_rows_cover_all_resolutions() {
+        let cfg = ScaleConfig::default();
+        let rows = table1_repro(&cfg, &[5000, 5100, 4900, 5050, 4950, 5200], 800);
+        assert_eq!(rows.len(), 2 + 6 + 2);
+    }
+
+    #[test]
+    fn resolution_parse_roundtrip() {
+        for r in Resolution::all() {
+            assert_eq!(Resolution::parse(r.name()), Some(r));
+        }
+        assert_eq!(Resolution::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! Synthetic CNeuroMod-Friends data substrate + dataset catalog.
+//!
+//! The real Friends dataset (200 h of individual fMRI, 6 subjects) is
+//! access-controlled; the benchmarks in the paper depend only on array
+//! shapes and on the existence of a planted stimulus→brain mapping, so we
+//! generate both (DESIGN.md §3):
+//!
+//! * [`friends`] — the generative model: smooth latent "video" process →
+//!   frame features → HRF-convolved voxel responses with planted weights
+//!   concentrated in the visual network + motion/drift confounds + noise.
+//! * [`catalog`] — the shape/size bookkeeping behind Tables 1–2, at both
+//!   paper scale (for the table reproduction) and repro scale (what this
+//!   container actually runs).
+
+pub mod catalog;
+pub mod friends;
+
+pub use catalog::{paper_subjects, Resolution};
+pub use friends::{generate, EncodingDataset, FriendsConfig};

@@ -1,0 +1,216 @@
+//! End-to-end brain-encoding pipeline (the paper's Fig. 1, in rust).
+//!
+//! Wraps the synthetic dataset, CV structure, ridge fit and scoring into
+//! the exact experiment the paper runs per subject × resolution:
+//! 90/10 outer split, K-fold λ validation inside the training set, final
+//! fit, held-out Pearson r per target (Fig. 4), and the shuffled-feature
+//! null (Fig. 5).
+
+use crate::blas::Blas;
+use crate::cv::{self, kfold, pearson_cols};
+use crate::data::{EncodingDataset, Resolution};
+use crate::ridge::{self, RidgeCvFit};
+use crate::util::Pcg64;
+
+/// Result of a full encoding experiment on one dataset.
+#[derive(Clone, Debug)]
+pub struct EncodingResult {
+    pub fit: RidgeCvFit,
+    /// Held-out Pearson r per target.
+    pub test_r: Vec<f64>,
+    pub summary: RSummary,
+    pub subject: usize,
+    pub resolution: Resolution,
+}
+
+/// Summary of an r-map, split by visual membership (Fig. 4's statistics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RSummary {
+    pub mean_visual: f64,
+    pub mean_other: f64,
+    pub max_r: f64,
+    pub q95_visual: f64,
+    pub frac_above_0_2: f64,
+}
+
+impl RSummary {
+    pub fn from_rs(rs: &[f64], is_visual: &[bool]) -> Self {
+        assert_eq!(rs.len(), is_visual.len());
+        let mut vis: Vec<f64> = rs
+            .iter()
+            .zip(is_visual)
+            .filter(|(_, &v)| v)
+            .map(|(r, _)| *r)
+            .collect();
+        let other: Vec<f64> = rs
+            .iter()
+            .zip(is_visual)
+            .filter(|(_, &v)| !v)
+            .map(|(r, _)| *r)
+            .collect();
+        vis.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = |v: &[f64]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        Self {
+            mean_visual: mean(&vis),
+            mean_other: mean(&other),
+            max_r: rs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            q95_visual: if vis.is_empty() {
+                0.0
+            } else {
+                vis[((vis.len() - 1) as f64 * 0.95) as usize]
+            },
+            frac_above_0_2: rs.iter().filter(|&&r| r > 0.2).count() as f64
+                / rs.len().max(1) as f64,
+        }
+    }
+}
+
+/// Experiment parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeOpts {
+    pub test_frac: f64,
+    pub inner_folds: usize,
+    pub seed: u64,
+}
+
+impl Default for EncodeOpts {
+    fn default() -> Self {
+        Self { test_frac: 0.1, inner_folds: 3, seed: 0 }
+    }
+}
+
+/// Run the full encoding experiment on a dataset with the native path.
+pub fn run_encoding(blas: &Blas, ds: &EncodingDataset, opts: EncodeOpts) -> EncodingResult {
+    let outer = cv::train_test_split(ds.n(), opts.test_frac, opts.seed);
+    let xtr = ds.x.rows_gather(&outer.train);
+    let ytr = ds.y.rows_gather(&outer.train);
+    let xte = ds.x.rows_gather(&outer.val);
+    let yte = ds.y.rows_gather(&outer.val);
+
+    let splits = kfold(xtr.rows(), opts.inner_folds, Some(opts.seed));
+    let fit = ridge::fit_ridge_cv(blas, &xtr, &ytr, &ridge::LAMBDA_GRID, &splits);
+    let pred = ridge::predict(blas, &xte, &fit.weights);
+    let test_r = pearson_cols(&pred, &yte);
+    let summary = RSummary::from_rs(&test_r, &ds.is_visual);
+    EncodingResult {
+        fit,
+        test_r,
+        summary,
+        subject: ds.subject,
+        resolution: ds.resolution,
+    }
+}
+
+/// The Fig. 5 null: shuffle the time correspondence between features and
+/// brain data, then run the identical pipeline.
+pub fn run_null_encoding(blas: &Blas, ds: &EncodingDataset, opts: EncodeOpts, perm_seed: u64) -> EncodingResult {
+    let mut shuffled = ds.clone();
+    let perm = Pcg64::seeded(perm_seed).permutation(ds.n());
+    shuffled.x = ds.x.rows_gather(&perm);
+    run_encoding(blas, &shuffled, opts)
+}
+
+/// Fisher z-average of correlations (stable mean of r values).
+pub fn fisher_mean(rs: &[f64]) -> f64 {
+    if rs.is_empty() {
+        return 0.0;
+    }
+    let z: f64 = rs
+        .iter()
+        .map(|&r| r.clamp(-0.999999, 0.999999).atanh())
+        .sum::<f64>()
+        / rs.len() as f64;
+    z.tanh()
+}
+
+/// Per-parcel r-map projected to the atlas (text-mode "brain map" output
+/// used by the figure harness).
+pub fn rmap_quantiles(rs: &[f64]) -> [f64; 5] {
+    let mut v: Vec<f64> = rs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |f: f64| v[(((v.len() - 1) as f64) * f) as usize];
+    [q(0.05), q(0.25), q(0.5), q(0.75), q(0.95)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+    use crate::data::{friends::FriendsConfig, generate};
+    use crate::data::catalog::ScaleConfig;
+
+    fn cfg() -> FriendsConfig {
+        FriendsConfig {
+            scale: ScaleConfig {
+                n_samples: 240,
+                p_features: 64,
+                t_parcels: 24,
+                mor_n: 100,
+                mor_t: 32,
+                bmor_n: 120,
+                grid: (10, 12, 9),
+                bmor_grid: (10, 12, 9),
+            },
+            p_frame: 16,
+            window: 4,
+            d_latent: 6,
+            tr_per_run: 60,
+            ..FriendsConfig::default()
+        }
+    }
+
+    #[test]
+    fn encoding_beats_null_by_an_order_of_magnitude() {
+        // Fig. 5's claim: true encoding ~0.5, null < 0.05 (visual mean).
+        let blas = Blas::new(Backend::MklLike, 1);
+        let ds = generate(&cfg(), 1, crate::data::Resolution::Parcels);
+        let real = run_encoding(&blas, &ds, EncodeOpts::default());
+        let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 7);
+        assert!(real.summary.mean_visual > 0.2, "{:?}", real.summary);
+        assert!(
+            null.summary.mean_visual.abs() < 0.1,
+            "null too correlated: {:?}",
+            null.summary
+        );
+        assert!(real.summary.mean_visual > 4.0 * null.summary.mean_visual.abs().max(0.01));
+    }
+
+    #[test]
+    fn visual_gt_other_across_subjects() {
+        let blas = Blas::new(Backend::MklLike, 1);
+        for subject in 1..=2 {
+            let ds = generate(&cfg(), subject, crate::data::Resolution::Parcels);
+            let res = run_encoding(&blas, &ds, EncodeOpts::default());
+            assert!(
+                res.summary.mean_visual > res.summary.mean_other + 0.1,
+                "subject {subject}: {:?}",
+                res.summary
+            );
+        }
+    }
+
+    #[test]
+    fn summary_and_quantiles_sane() {
+        let rs = vec![0.1, 0.5, -0.1, 0.3, 0.9, 0.0];
+        let vis = vec![true, true, false, false, true, false];
+        let s = RSummary::from_rs(&rs, &vis);
+        assert!((s.mean_visual - 0.5).abs() < 1e-12);
+        assert_eq!(s.max_r, 0.9);
+        let q = rmap_quantiles(&rs);
+        assert!(q[0] <= q[2] && q[2] <= q[4]);
+    }
+
+    #[test]
+    fn fisher_mean_matches_plain_for_small_r() {
+        let rs = vec![0.05, -0.02, 0.01];
+        let fm = fisher_mean(&rs);
+        let pm: f64 = rs.iter().sum::<f64>() / 3.0;
+        assert!((fm - pm).abs() < 1e-3);
+    }
+}

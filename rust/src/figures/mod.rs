@@ -1,0 +1,516 @@
+//! Per-table/figure harnesses: everything §4 of the paper reports,
+//! regenerated (see DESIGN.md §6 for the experiment index).
+//!
+//! Quality figures (4, 5) run the *real* encoding pipeline on the
+//! synthetic Friends data; scaling figures (6–10) combine *real measured*
+//! single-thread kernel times (via `perfmodel::calibrate`) with the
+//! cluster DES for the multi-thread / multi-node axes this single-core
+//! container cannot execute (substitution log, DESIGN.md §3).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::blas::{Backend, Blas};
+use crate::cluster::ClusterSpec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{self, DistConfig, Strategy};
+use crate::data::catalog::{self, Resolution};
+use crate::data::friends::{generate, EncodingDataset};
+use crate::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+use crate::masker::BrainGrid;
+use crate::metrics::{fnum, Figure};
+use crate::perfmodel::{calibrate, Calibration, FitShape};
+use crate::ridge;
+use crate::util::{human_bytes, Stopwatch};
+
+/// Shared context: experiment config, machine calibration, cluster spec,
+/// and a dataset cache (several figures reuse the same subjects).
+pub struct FigCtx {
+    pub exp: ExperimentConfig,
+    pub cal: Calibration,
+    pub cluster: ClusterSpec,
+    cache: HashMap<(usize, &'static str), EncodingDataset>,
+}
+
+impl FigCtx {
+    pub fn new(exp: ExperimentConfig) -> Self {
+        let cal = calibrate(exp.quick);
+        Self { exp, cal, cluster: ClusterSpec::default(), cache: HashMap::new() }
+    }
+
+    /// With an externally supplied calibration (reproducible tests).
+    pub fn with_calibration(exp: ExperimentConfig, cal: Calibration) -> Self {
+        Self { exp, cal, cluster: ClusterSpec::default(), cache: HashMap::new() }
+    }
+
+    fn dataset(&mut self, subject: usize, res: Resolution) -> &EncodingDataset {
+        let key = (subject, res.name());
+        if !self.cache.contains_key(&key) {
+            let ds = generate(&self.exp.friends, subject, res);
+            self.cache.insert(key, ds);
+        }
+        &self.cache[&key]
+    }
+
+}
+
+/// Dispatch by id ("1", "2" for tables; "4".."10" for figures).
+pub fn generate_figure(ctx: &mut FigCtx, id: &str) -> Result<Vec<Figure>> {
+    Ok(match id {
+        "1" | "table1" => vec![table1(ctx)],
+        "2" | "table2" => vec![table2(ctx)],
+        "4" | "fig4" => vec![fig4(ctx)],
+        "5" | "fig5" => vec![fig5(ctx)],
+        "6" | "fig6" => vec![fig6(ctx)],
+        "7" | "fig7" => vec![fig7(ctx)],
+        "8" | "fig8" => vec![fig8(ctx)],
+        "9" | "fig9" => vec![fig9(ctx)],
+        "10" | "fig10" => vec![fig10(ctx)],
+        "all" => {
+            let mut v = Vec::new();
+            for id in ["1", "2", "4", "5", "6", "7", "8", "9", "10"] {
+                v.extend(generate_figure(ctx, id)?);
+            }
+            v
+        }
+        other => bail!("unknown table/figure id `{other}`"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1 & 2 — dataset + parameter bookkeeping, paper and repro scale.
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "table1",
+        "Brain datasets summary: time × space samples and float64 sizes",
+        &["scale", "resolution", "subject", "n", "t", "size"],
+    );
+    for r in catalog::table1_paper() {
+        f.row(vec![
+            "paper".into(), r.resolution, r.subject,
+            r.n.to_string(), r.t.to_string(), human_bytes(r.bytes),
+        ]);
+    }
+    let sc = ctx.exp.friends.scale.clone();
+    let voxels: Vec<usize> = (1..=6)
+        .map(|s| BrainGrid::synthetic(sc.grid, ctx.exp.friends.seed ^ s as u64).n_voxels())
+        .collect();
+    let roi = ctx.dataset(1, Resolution::Roi).t();
+    for r in catalog::table1_repro(&sc, &voxels, roi) {
+        f.row(vec![
+            "repro".into(), r.resolution, r.subject,
+            r.n.to_string(), r.t.to_string(), human_bytes(r.bytes),
+        ]);
+    }
+    f.note("repro scale sized for this container; paper rows are Table 1 verbatim formulas (n×t×8 bytes)");
+    f
+}
+
+pub fn table2(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "table2",
+        "Ridge training parameters and weight-matrix sizes",
+        &["scale", "resolution", "subject", "params", "size"],
+    );
+    for r in catalog::table2_paper() {
+        f.row(vec![
+            "paper".into(), r.resolution, r.subject,
+            format!("{:.0} M", r.params as f64 / 1e6), human_bytes(r.bytes),
+        ]);
+    }
+    let sc = &ctx.exp.friends.scale;
+    let p = sc.p_features as u64;
+    for (res, t) in [
+        ("Parcel", sc.t_parcels as u64),
+        ("Whole brain (MOR)", sc.mor_t as u64),
+    ] {
+        f.row(vec![
+            "repro".into(), res.into(), "sub-0(1-6)".into(),
+            format!("{:.2} M", (p * t) as f64 / 1e6), human_bytes(p * t * 8),
+        ]);
+    }
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — encoding accuracy maps (summary statistics per subject/resolution).
+// ---------------------------------------------------------------------------
+
+pub fn fig4(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig4",
+        "Brain encoding accuracy (held-out Pearson r) per subject and resolution",
+        &["subject", "resolution", "mean r (visual)", "mean r (other)",
+          "q95 r (visual)", "max r", "frac r>0.2", "λ*"],
+    );
+    let blas = Blas::new(Backend::MklLike, 1);
+    let subjects = ctx.exp.subjects;
+    for subject in 1..=subjects {
+        for res in [Resolution::Parcels, Resolution::Roi] {
+            let ds = ctx.dataset(subject, res).clone();
+            let r = run_encoding(&blas, &ds, EncodeOpts::default());
+            f.row(vec![
+                format!("sub-0{subject}"),
+                res.name().into(),
+                fnum(r.summary.mean_visual),
+                fnum(r.summary.mean_other),
+                fnum(r.summary.q95_visual),
+                fnum(r.summary.max_r),
+                fnum(r.summary.frac_above_0_2),
+                fnum(r.fit.best_lambda),
+            ]);
+        }
+    }
+    f.note("paper: r up to ~0.5 in visual cortex, consistent across subjects; expect the same ordering (visual ≫ other) here");
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — true encoding vs shuffled-features null.
+// ---------------------------------------------------------------------------
+
+pub fn fig5(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig5",
+        "Encoding vs null distribution (shuffled stimulus/brain pairing), sub-01",
+        &["condition", "mean r (visual)", "q95 r (visual)", "max r"],
+    );
+    let blas = Blas::new(Backend::MklLike, 1);
+    let ds = ctx.dataset(1, Resolution::Parcels).clone();
+    let real = run_encoding(&blas, &ds, EncodeOpts::default());
+    let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 1234);
+    for (name, r) in [("matched (a)", real), ("shuffled (b)", null)] {
+        f.row(vec![
+            name.into(),
+            fnum(r.summary.mean_visual),
+            fnum(r.summary.q95_visual),
+            fnum(r.summary.max_r),
+        ]);
+    }
+    f.note("paper: matched ≈ 0.5 max, shuffled < 0.05 — an order-of-magnitude gap");
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 — MKL-like vs OpenBLAS-like multithreaded RidgeCV time.
+// Fig 7 — speed-up curves from the same sweep.
+// ---------------------------------------------------------------------------
+
+pub const THREADS_AXIS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Measure the real single-thread RidgeCV time per backend/resolution and
+/// extend over the thread axis with the calibrated Amdahl model.
+fn fig6_data(ctx: &mut FigCtx) -> Vec<(Resolution, usize, Backend, f64, Vec<f64>)> {
+    let mut out = Vec::new();
+    let subjects = if ctx.exp.quick { 1 } else { ctx.exp.subjects.min(3) };
+    for res in [Resolution::Parcels, Resolution::Roi] {
+        for subject in 1..=subjects {
+            let ds = ctx.dataset(subject, res).clone();
+            let splits = crate::cv::kfold(ds.n(), 3, Some(0));
+            for backend in [Backend::MklLike, Backend::OpenBlasLike] {
+                let blas = Blas::new(backend, 1);
+                let sw = Stopwatch::start();
+                let _ = ridge::fit_ridge_cv(&blas, &ds.x, &ds.y, &ridge::LAMBDA_GRID, &splits);
+                let t1 = sw.secs();
+                // Thread axis via the backend-specific Amdahl model (MKL
+                // threads better than OpenBLAS — cluster::AmdahlModel).
+                let amdahl = crate::cluster::AmdahlModel::for_backend(backend);
+                let curve: Vec<f64> = THREADS_AXIS
+                    .iter()
+                    .map(|&th| amdahl.time(t1, th))
+                    .collect();
+                out.push((res, subject, backend, t1, curve));
+            }
+        }
+    }
+    out
+}
+
+pub fn fig6(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig6",
+        "RidgeCV training time: MKL-like vs OpenBLAS-like backends across threads",
+        &["resolution", "subject", "backend", "threads", "time (s)", "measured?"],
+    );
+    for (res, subject, backend, t1, curve) in fig6_data(ctx) {
+        for (i, &th) in THREADS_AXIS.iter().enumerate() {
+            f.row(vec![
+                res.name().into(),
+                format!("sub-0{subject}"),
+                backend.name().into(),
+                th.to_string(),
+                fnum(curve[i]),
+                if th == 1 { format!("measured ({:.2}s)", t1) } else { "amdahl-model".into() },
+            ]);
+        }
+    }
+    f.note(format!(
+        "backend gap is real (measured single-thread): mkl-like/openblas-like throughput ratio = {:.2}× (paper: ~1.9× at 32 threads)",
+        ctx.cal.mkl_over_openblas()
+    ));
+    f.note("thread axis is simulated via the calibrated Amdahl model — this container has one core (DESIGN.md §3)");
+    f
+}
+
+pub fn fig7(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig7",
+        "Multithreading speed-up (SU = T1/Tp) — plateau past 8 threads",
+        &["resolution", "subject", "backend", "threads", "speed-up"],
+    );
+    for (res, subject, backend, _t1, curve) in fig6_data(ctx) {
+        for (i, &th) in THREADS_AXIS.iter().enumerate() {
+            f.row(vec![
+                res.name().into(),
+                format!("sub-0{subject}"),
+                backend.name().into(),
+                th.to_string(),
+                fnum(curve[0] / curve[i]),
+            ]);
+        }
+    }
+    f.note("paper Fig 7: SU ≈ 5–7× at 32 threads with diminishing returns past 8 — same shape by construction of the calibrated Amdahl model");
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8 — MOR scales but is impractically slow.
+// ---------------------------------------------------------------------------
+
+const NODES_AXIS: [usize; 4] = [1, 2, 4, 8];
+
+pub fn fig8(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig8",
+        "MultiOutput (MOR) training time on whole-brain(MOR) truncation",
+        &["nodes", "threads", "strategy", "sim time (s)", "vs single-node RidgeCV"],
+    );
+    // Whole-brain (MOR) truncation shape.
+    let sc = ctx.exp.friends.scale.clone();
+    let shape = FitShape {
+        n: sc.mor_n, p: sc.p_features, t: sc.mor_t,
+        r: ridge::LAMBDA_GRID.len(), splits: 3,
+    };
+    let cal = ctx.cal;
+    // Baseline: single-node multithreaded RidgeCV (the "~1 s" the paper
+    // contrasts MOR's ~1000 s against).
+    let base_cfg = DistConfig {
+        strategy: Strategy::Single, nodes: 1, threads_per_node: 32,
+        ..Default::default()
+    };
+    let base = coordinator::simulate(shape, &base_cfg, &cal, &ctx.cluster).makespan;
+    for nodes in NODES_AXIS {
+        for threads in [1, 8, 32] {
+            let cfg = DistConfig {
+                strategy: Strategy::Mor, nodes, threads_per_node: threads,
+                ..Default::default()
+            };
+            let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+            f.row(vec![
+                nodes.to_string(),
+                threads.to_string(),
+                "mor".into(),
+                fnum(s.makespan),
+                format!("{:.0}×", s.makespan / base),
+            ]);
+        }
+    }
+    f.row(vec![
+        "1".into(), "32".into(), "ridgecv (baseline)".into(), fnum(base), "1×".into(),
+    ]);
+    f.note("paper Fig 8: MOR scales across nodes/threads but sits ~1000× above the single-node multithreaded RidgeCV — the t·T_M redundancy of Eq. 6");
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9 — B-MOR training time; Fig 10 — distributed speed-up (DSU).
+// ---------------------------------------------------------------------------
+
+fn bmor_shape(ctx: &mut FigCtx) -> FitShape {
+    let sc = ctx.exp.friends.scale.clone();
+    let voxels = BrainGrid::synthetic(sc.bmor_grid, ctx.exp.friends.seed ^ 1).n_voxels();
+    FitShape {
+        n: sc.bmor_n, p: sc.p_features, t: voxels,
+        r: ridge::LAMBDA_GRID.len(), splits: 3,
+    }
+}
+
+pub fn fig9(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig9",
+        "B-MOR training time on whole-brain(B-MOR) truncation vs RidgeCV",
+        &["nodes", "threads", "strategy", "sim time (s)"],
+    );
+    let shape = bmor_shape(ctx);
+    let cal = ctx.cal;
+    for nodes in NODES_AXIS {
+        for threads in THREADS_AXIS {
+            let cfg = DistConfig {
+                strategy: Strategy::Bmor, nodes, threads_per_node: threads,
+                ..Default::default()
+            };
+            let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+            f.row(vec![
+                nodes.to_string(), threads.to_string(), "bmor".into(), fnum(s.makespan),
+            ]);
+        }
+    }
+    // RidgeCV baseline line (1 node, threads axis).
+    for threads in THREADS_AXIS {
+        let cfg = DistConfig {
+            strategy: Strategy::Single, nodes: 1, threads_per_node: threads,
+            ..Default::default()
+        };
+        let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+        f.row(vec![
+            "1".into(), threads.to_string(), "ridgecv".into(), fnum(s.makespan),
+        ]);
+    }
+    f.note("paper Fig 9: B-MOR scales across nodes AND threads and beats single-node RidgeCV at every thread count");
+    f
+}
+
+pub fn fig10(ctx: &mut FigCtx) -> Figure {
+    let mut f = Figure::new(
+        "fig10",
+        "B-MOR distributed speed-up DSU = T(RidgeCV,1n,1t) / T(B-MOR,c,t)",
+        &["nodes", "threads", "DSU"],
+    );
+    let shape = bmor_shape(ctx);
+    let cal = ctx.cal;
+    let ref_cfg = DistConfig {
+        strategy: Strategy::Single, nodes: 1, threads_per_node: 1,
+        ..Default::default()
+    };
+    let t_ref = coordinator::simulate(shape, &ref_cfg, &cal, &ctx.cluster).makespan;
+    let mut best = 0.0f64;
+    for nodes in NODES_AXIS {
+        for threads in THREADS_AXIS {
+            let cfg = DistConfig {
+                strategy: Strategy::Bmor, nodes, threads_per_node: threads,
+                ..Default::default()
+            };
+            let t = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster).makespan;
+            let dsu = t_ref / t;
+            best = best.max(dsu);
+            f.row(vec![nodes.to_string(), threads.to_string(), fnum(dsu)]);
+        }
+    }
+    f.note(format!(
+        "max DSU here = {best:.1}× at 8 nodes × 32 threads (paper: ~30–33×)"
+    ));
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Args;
+
+    fn quick_ctx() -> FigCtx {
+        let args = Args::parse(
+            &["figures".to_string(), "--quick".to_string(), "--subjects".to_string(), "1".to_string()],
+        )
+        .unwrap();
+        let exp = ExperimentConfig::from_args(&args).unwrap();
+        FigCtx::with_calibration(exp, Calibration::nominal())
+    }
+
+    /// Full-scale shapes (no datasets generated — figs 8–10 only need the
+    /// scale constants and the brain grid), nominal calibration.
+    fn fullscale_ctx() -> FigCtx {
+        let args = Args::parse(&["figures".to_string()]).unwrap();
+        let exp = ExperimentConfig::from_args(&args).unwrap();
+        FigCtx::with_calibration(exp, Calibration::nominal())
+    }
+
+    #[test]
+    fn tables_have_paper_and_repro_rows() {
+        let mut ctx = quick_ctx();
+        let t1 = table1(&mut ctx);
+        assert!(t1.rows.iter().any(|r| r[0] == "paper"));
+        assert!(t1.rows.iter().any(|r| r[0] == "repro"));
+        // Paper parcel row: 69202 × 444.
+        let parcels = &t1.rows[0];
+        assert_eq!(parcels[3], "69202");
+        assert_eq!(parcels[4], "444");
+        let t2 = table2(&mut ctx);
+        assert!(t2.rows.iter().any(|r| r[3].contains('M')));
+    }
+
+    #[test]
+    fn fig10_reaches_paper_scale_speedup() {
+        let mut ctx = fullscale_ctx();
+        let f = fig10(&mut ctx);
+        let best: f64 = f
+            .rows
+            .iter()
+            .map(|r| r[2].parse::<f64>().unwrap_or(0.0))
+            .fold(0.0, f64::max);
+        assert!(
+            (15.0..60.0).contains(&best),
+            "max DSU {best} out of the paper's ballpark (30–33×)"
+        );
+        // DSU grows with nodes at fixed threads=1.
+        let d = |nodes: &str| -> f64 {
+            f.rows
+                .iter()
+                .find(|r| r[0] == nodes && r[1] == "1")
+                .unwrap()[2]
+                .parse()
+                .unwrap()
+        };
+        assert!(d("8") > d("4") && d("4") > d("2") && d("2") > d("1"));
+    }
+
+    #[test]
+    fn fig8_mor_is_impractical() {
+        let mut ctx = quick_ctx();
+        let f = fig8(&mut ctx);
+        // Every MOR row must be well above the RidgeCV baseline.
+        let base: f64 = f
+            .rows
+            .iter()
+            .find(|r| r[2].starts_with("ridgecv"))
+            .unwrap()[3]
+            .parse()
+            .unwrap();
+        for r in f.rows.iter().filter(|r| r[2] == "mor") {
+            let t: f64 = r[3].parse().unwrap();
+            assert!(t > 3.0 * base, "MOR row {r:?} not ≫ baseline {base}");
+        }
+    }
+
+    #[test]
+    fn fig9_bmor_beats_ridgecv_baseline() {
+        let mut ctx = quick_ctx();
+        let f = fig9(&mut ctx);
+        let t = |strategy: &str, nodes: &str, threads: &str| -> f64 {
+            f.rows
+                .iter()
+                .find(|r| r[2] == strategy && r[0] == nodes && r[1] == threads)
+                .unwrap()[3]
+                .parse()
+                .unwrap()
+        };
+        // 8-node B-MOR beats 1-node RidgeCV at the same thread count.
+        for th in ["1", "8", "32"] {
+            assert!(t("bmor", "8", th) < t("ridgecv", "1", th));
+        }
+        // More nodes, faster.
+        assert!(t("bmor", "8", "8") < t("bmor", "1", "8"));
+    }
+
+    #[test]
+    fn dispatch_all_ids() {
+        let mut ctx = quick_ctx();
+        for id in ["1", "2", "8", "9", "10"] {
+            let figs = generate_figure(&mut ctx, id).unwrap();
+            assert!(!figs[0].rows.is_empty(), "{id}");
+        }
+        assert!(generate_figure(&mut ctx, "3").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Hemodynamic response function (HRF) substrate.
+//!
+//! The BOLD signal is a delayed, smoothed echo of neural activity
+//! (Logothetis et al. 2001, the paper's [41]); the paper handles this by
+//! concatenating the 4 TRs of stimulus preceding each fMRI sample
+//! (§2.2.2). Our synthetic brain needs the *generative* direction too: the
+//! planted voxel responses are stimulus features convolved with a
+//! canonical double-gamma HRF before noise is added, so the 4-TR windowing
+//! of the encoding pipeline has real temporal structure to exploit.
+
+/// Canonical double-gamma HRF sampled at `tr` seconds, `len` taps.
+///
+/// Peak ≈ 5 s, undershoot ≈ 15 s (SPM-style parameters).
+pub fn double_gamma(tr: f64, len: usize) -> Vec<f64> {
+    assert!(tr > 0.0 && len > 0);
+    let a1 = 6.0; // peak shape
+    let a2 = 16.0; // undershoot shape
+    let ratio = 1.0 / 6.0; // undershoot amplitude
+    let mut h: Vec<f64> = (0..len)
+        .map(|i| {
+            let t = i as f64 * tr;
+            gamma_pdf(t, a1, 1.0) - ratio * gamma_pdf(t, a2, 1.0)
+        })
+        .collect();
+    // Normalize to unit peak so planted SNRs are interpretable.
+    let peak = h.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    for v in &mut h {
+        *v /= peak;
+    }
+    h
+}
+
+fn gamma_pdf(t: f64, shape: f64, scale: f64) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let k = shape;
+    // Normalized: t^(k−1) e^(−t/θ) / (Γ(k) θ^k). Without Γ(k) the
+    // undershoot term (k=16) would dwarf the peak term (k=6) by ~10 orders
+    // of magnitude.
+    let x = t / scale;
+    ((k - 1.0) * x.ln() - x - ln_gamma(k)).exp() / scale
+}
+
+/// ln Γ(x) via the Lanczos approximation (|error| < 1e-13 for x > 0).
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Causal FIR convolution of each column of `x` with kernel `h`:
+/// out[i, j] = Σ_k h[k] · x[i-k, j]   (zero-padded history).
+pub fn convolve_cols(x: &crate::linalg::Mat, h: &[f64]) -> crate::linalg::Mat {
+    let (n, t) = x.shape();
+    let mut out = crate::linalg::Mat::zeros(n, t);
+    for i in 0..n {
+        let kmax = h.len().min(i + 1);
+        for k in 0..kmax {
+            let hk = h[k];
+            if hk == 0.0 {
+                continue;
+            }
+            let src = x.row(i - k);
+            let dst = out.row_mut(i);
+            for j in 0..t {
+                dst[j] += hk * src[j];
+            }
+        }
+    }
+    out
+}
+
+/// The paper's TR (§2.1.3).
+pub const TR_SECS: f64 = 1.49;
+
+/// Default HRF length: 32 s of history.
+pub fn canonical(tr: f64) -> Vec<f64> {
+    double_gamma(tr, ((32.0 / tr).ceil() as usize).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn hrf_shape() {
+        let h = double_gamma(TR_SECS, 22);
+        // Starts at ~0, peaks around 5 s (index ~3.4), unit peak.
+        assert!(h[0].abs() < 1e-6);
+        let peak_idx = h
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let peak_t = peak_idx as f64 * TR_SECS;
+        assert!((3.0..7.5).contains(&peak_t), "peak at {peak_t}s");
+        assert!((h[peak_idx] - 1.0).abs() < 1e-12);
+        // Undershoot exists: some negative tail.
+        assert!(h.iter().any(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn convolution_identity_kernel() {
+        let x = Mat::from_fn(10, 2, |i, j| (i * 2 + j) as f64);
+        let out = convolve_cols(&x, &[1.0]);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn convolution_delay_kernel() {
+        let x = Mat::from_fn(6, 1, |i, _| i as f64);
+        let out = convolve_cols(&x, &[0.0, 1.0]); // pure 1-tap delay
+        assert_eq!(out.get(0, 0), 0.0);
+        for i in 1..6 {
+            assert_eq!(out.get(i, 0), (i - 1) as f64);
+        }
+    }
+
+    #[test]
+    fn convolution_is_linear() {
+        let mut rng = crate::util::Pcg64::seeded(0);
+        let a = Mat::randn(30, 3, &mut rng);
+        let b = Mat::randn(30, 3, &mut rng);
+        let h = canonical(TR_SECS);
+        let mut apb = a.clone();
+        apb.add_assign(&b);
+        let left = convolve_cols(&apb, &h);
+        let mut right = convolve_cols(&a, &h);
+        right.add_assign(&convolve_cols(&b, &h));
+        assert!(left.max_abs_diff(&right) < 1e-10);
+    }
+
+    #[test]
+    fn convolved_impulse_reproduces_kernel() {
+        let mut x = Mat::zeros(20, 1);
+        x.set(0, 0, 1.0);
+        let h = canonical(TR_SECS);
+        let out = convolve_cols(&x, &h);
+        for i in 0..20 {
+            assert!((out.get(i, 0) - h[i]).abs() < 1e-12);
+        }
+    }
+}

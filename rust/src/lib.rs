@@ -1,0 +1,40 @@
+//! # fmri-encode
+//!
+//! A three-layer reproduction of *"Scaling up ridge regression for brain
+//! encoding in a massive individual fMRI dataset"* (Ahmadi, Bellec &
+//! Glatard, 2024).
+//!
+//! Layers:
+//! - **L3 (rust, this crate)**: distributed coordinator — a Dask-like task
+//!   scheduler over a simulated HPC cluster, the MOR / B-MOR partitioning
+//!   strategies, a native multithreaded BLAS + ridge substrate, the
+//!   synthetic CNeuroMod-Friends data generator, and the benchmark
+//!   harnesses that regenerate every table and figure of the paper.
+//! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph
+//!   (gram, Jacobi eigendecomposition, multi-lambda ridge sweep, Pearson
+//!   scoring, VGG16-surrogate feature extractor), AOT-lowered to HLO text.
+//! - **L1 (Pallas, `python/compile/kernels`)**: tiled matmul / ridge-sweep /
+//!   correlation kernels called from L2, validated against a pure-jnp
+//!   oracle.
+//!
+//! The rust binary is self-contained once `make artifacts` has produced
+//! `artifacts/*.hlo.txt`; python never runs on the hot path.
+
+pub mod util;
+pub mod config;
+pub mod blas;
+pub mod linalg;
+pub mod ridge;
+pub mod hrf;
+pub mod cv;
+pub mod masker;
+pub mod data;
+pub mod encoding;
+pub mod cluster;
+pub mod scheduler;
+pub mod coordinator;
+pub mod perfmodel;
+pub mod runtime;
+pub mod metrics;
+pub mod figures;
+pub mod cli;

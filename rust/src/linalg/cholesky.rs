@@ -1,0 +1,113 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The ridge *baseline without decomposition reuse*: solving
+//! (XᵀX + λI) W = XᵀY per λ via Cholesky is the naive O(p³r) strategy the
+//! paper's complexity analysis (§3.1) contrasts against the SVD/eigh
+//! formulation. The ablation bench `bench_ridge` measures exactly this
+//! gap.
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor: A = L Lᵀ. Fails if A is not SPD.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    assert_eq!(a.shape(), (n, n));
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A X = B for SPD A via Cholesky (forward + back substitution).
+pub fn solve_spd(a: &Mat, b: &Mat) -> Result<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows();
+    let mut x = Mat::zeros(n, b.cols());
+    for j in 0..b.cols() {
+        // Forward: L y = b_j
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = b.get(i, j);
+            for k in 0..i {
+                acc -= l.get(i, k) * y[k];
+            }
+            y[i] = acc / l.get(i, i);
+        }
+        // Backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for k in (i + 1)..n {
+                acc -= l.get(k, i) * x.get(k, j);
+            }
+            x.set(i, j, acc / l.get(i, i));
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{Backend, Blas};
+    use crate::util::Pcg64;
+
+    fn spd(p: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(2 * p, p, &mut rng);
+        let mut k = Blas::new(Backend::Naive, 1).syrk(&x);
+        for i in 0..p {
+            let v = k.get(i, i) + 0.1;
+            k.set(i, i, v);
+        }
+        k
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let llt = Blas::new(Backend::Naive, 1).gemm(&l, &l.transpose());
+        assert!(a.max_abs_diff(&llt) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_identity() {
+        let a = spd(6, 2);
+        let x = solve_spd(&a, &Mat::eye(6)).unwrap();
+        let ax = Blas::new(Backend::Naive, 1).gemm(&a, &x);
+        assert!(ax.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_multi_rhs() {
+        let a = spd(5, 3);
+        let mut rng = Pcg64::seeded(4);
+        let want = Mat::randn(5, 3, &mut rng);
+        let b = Blas::new(Backend::Naive, 1).gemm(&a, &want);
+        let got = solve_spd(&a, &b).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+}

@@ -1,0 +1,319 @@
+//! Dense row-major f64 matrix.
+//!
+//! The native compute path mirrors scikit-learn's float64 ridge (paper
+//! §2.1.5 Table 1 sizes are float64). Row-major layout matches the C
+//! ordering numpy/scikit-learn use, so the blocking analysis in `blas/`
+//! transfers.
+
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Matrix of standard normal entries (deterministic per rng stream).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        Self { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy a column range into a new matrix (B-MOR target batching).
+    pub fn cols_slice(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let w = j1 - j0;
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+
+    /// Copy a row range (CV splits slice time samples).
+    pub fn rows_slice(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        Mat {
+            rows: i1 - i0,
+            cols: self.cols,
+            data: self.data[i0 * self.cols..i1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather rows by index (random CV splits, shuffles).
+    pub fn rows_gather(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather columns by index.
+    pub fn cols_gather(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (c, &j) in idx.iter().enumerate() {
+                dst[c] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation (feature windowing concatenates TRs).
+    pub fn hcat(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let rows = mats[0].rows;
+        assert!(mats.iter().all(|m| m.rows == rows));
+        let cols: usize = mats.iter().map(|m| m.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let dst = out.row_mut(i);
+            let mut o = 0;
+            for m in mats {
+                dst[o..o + m.cols].copy_from_slice(m.row(i));
+                o += m.cols;
+            }
+        }
+        out
+    }
+
+    /// Vertical concatenation (streaming chunks back together).
+    pub fn vcat(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        assert!(mats.iter().all(|m| m.cols == cols));
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            data.extend_from_slice(&m.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Z-score each column over rows (the paper's per-voxel normalization).
+    pub fn zscore_cols(&mut self) {
+        let n = self.rows as f64;
+        for j in 0..self.cols {
+            let mut mean = 0.0;
+            for i in 0..self.rows {
+                mean += self.get(i, j);
+            }
+            mean /= n;
+            let mut var = 0.0;
+            for i in 0..self.rows {
+                let d = self.get(i, j) - mean;
+                var += d * d;
+            }
+            let sd = (var / n).sqrt().max(1e-12);
+            for i in 0..self.rows {
+                let v = (self.get(i, j) - mean) / sd;
+                self.set(i, j, v);
+            }
+        }
+    }
+
+    /// Memory footprint in bytes at float64 (Table 1 accounting).
+    pub fn nbytes(&self) -> u64 {
+        (self.rows * self.cols * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let mut m = Mat::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(0);
+        let m = Mat::randn(37, 53, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(10, 20), m.get(20, 10));
+    }
+
+    #[test]
+    fn slicing() {
+        let m = Mat::from_fn(4, 5, |i, j| (i * 10 + j) as f64);
+        let c = m.cols_slice(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c.get(2, 0), 21.0);
+        let r = m.rows_slice(1, 3);
+        assert_eq!(r.shape(), (2, 5));
+        assert_eq!(r.get(0, 4), 14.0);
+    }
+
+    #[test]
+    fn gather() {
+        let m = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let g = m.rows_gather(&[2, 0]);
+        assert_eq!(g.row(0), m.row(2));
+        assert_eq!(g.row(1), m.row(0));
+        let gc = m.cols_gather(&[2, 1]);
+        assert_eq!(gc.get(1, 0), m.get(1, 2));
+    }
+
+    #[test]
+    fn concat() {
+        let a = Mat::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(2, 1, |_, _| 9.0);
+        let h = Mat::hcat(&[&a, &b]);
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h.get(0, 2), 9.0);
+        let v = Mat::vcat(&[&a, &a]);
+        assert_eq!(v.shape(), (4, 2));
+        assert_eq!(v.get(3, 1), a.get(1, 1));
+    }
+
+    #[test]
+    fn zscore() {
+        let mut rng = Pcg64::seeded(1);
+        let mut m = Mat::randn(200, 4, &mut rng);
+        m.scale(3.0);
+        m.zscore_cols();
+        for j in 0..4 {
+            let mean: f64 = (0..200).map(|i| m.get(i, j)).sum::<f64>() / 200.0;
+            let var: f64 =
+                (0..200).map(|i| m.get(i, j).powi(2)).sum::<f64>() / 200.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Dense linear algebra substrate: matrix type, cyclic Jacobi
+//! eigendecomposition, Householder QR, Cholesky, triangular solves.
+//!
+//! Everything scikit-learn gets from LAPACK, implemented from scratch
+//! (LAPACK/BLAS are unavailable offline and the point of the reproduction
+//! is to own every layer — see DESIGN.md §4).
+
+pub mod cholesky;
+pub mod eigh;
+pub mod mat;
+pub mod qr;
+
+pub use eigh::{jacobi_eigh, Eigh};
+pub use mat::Mat;
+
+/// Solve the 2-norm condition-style reconstruction error ‖VEVᵀ − K‖_F / ‖K‖_F.
+pub fn reconstruction_error(k: &Mat, e: &[f64], v: &Mat) -> f64 {
+    let p = k.rows();
+    let mut rec = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let mut acc = 0.0;
+            for l in 0..p {
+                acc += v.get(i, l) * e[l] * v.get(j, l);
+            }
+            rec.set(i, j, acc);
+        }
+    }
+    rec.sub(k).frob_norm() / k.frob_norm().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn reconstruction_error_zero_for_diag() {
+        let k = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let v = Mat::eye(3);
+        let e = vec![1.0, 2.0, 3.0];
+        assert!(reconstruction_error(&k, &e, &v) < 1e-15);
+    }
+
+    #[test]
+    fn reconstruction_error_detects_wrong_basis() {
+        let mut rng = Pcg64::seeded(0);
+        let x = Mat::randn(20, 8, &mut rng);
+        let blas = crate::blas::Blas::new(crate::blas::Backend::Naive, 1);
+        let k = blas.syrk(&x);
+        let v = Mat::eye(8);
+        let e = vec![1.0; 8];
+        assert!(reconstruction_error(&k, &e, &v) > 0.1);
+    }
+}

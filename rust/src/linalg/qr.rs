@@ -1,0 +1,195 @@
+//! Householder QR and least-squares solve.
+//!
+//! Used by `masker::confounds` to regress out the 24-parameter motion
+//! model and slow-drift basis (paper §2.1.4): residualization is
+//! `Y − C (CᵀC)⁻¹ CᵀY`, computed stably via QR of the confound matrix C.
+
+use super::Mat;
+
+/// Compact QR factorization A = QR with Q (m×n) orthonormal columns,
+/// R (n×n) upper triangular. Requires m ≥ n.
+pub struct Qr {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+pub fn qr(a: &Mat) -> Qr {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr requires m >= n (got {m}x{n})");
+    let mut r = a.clone();
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..m).map(|i| r.get(i, k)).collect();
+        let alpha = -v[0].signum() * v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        v[0] -= alpha;
+        let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if vnorm > 1e-300 {
+            for x in &mut v {
+                *x /= vnorm;
+            }
+            // Apply H = I − 2vvᵀ to R[k.., k..].
+            for j in k..n {
+                let dot: f64 = (k..m).map(|i| v[i - k] * r.get(i, j)).sum();
+                for i in k..m {
+                    let val = r.get(i, j) - 2.0 * v[i - k] * dot;
+                    r.set(i, j, val);
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q by applying the Householder reflectors to I (thin Q).
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        for j in 0..n {
+            let dot: f64 = (k..m).map(|i| v[i - k] * q.get(i, j)).sum();
+            if dot != 0.0 {
+                for i in k..m {
+                    let val = q.get(i, j) - 2.0 * v[i - k] * dot;
+                    q.set(i, j, val);
+                }
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of R and truncate to n×n.
+    let mut rn = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rn.set(i, j, r.get(i, j));
+        }
+    }
+    Qr { q, r: rn }
+}
+
+/// Solve R x = b for upper-triangular R.
+pub fn solve_upper(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = r.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for j in (i + 1)..n {
+            acc -= r.get(i, j) * x[j];
+        }
+        let d = r.get(i, i);
+        x[i] = if d.abs() > 1e-300 { acc / d } else { 0.0 };
+    }
+    x
+}
+
+/// Least-squares solve min ‖A x − b‖₂ via QR, one column of B at a time.
+pub fn lstsq(a: &Mat, b: &Mat) -> Mat {
+    let f = qr(a);
+    let n = a.cols();
+    let mut x = Mat::zeros(n, b.cols());
+    for j in 0..b.cols() {
+        // qtb = Qᵀ b_j
+        let mut qtb = vec![0.0; n];
+        for (l, q) in qtb.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for i in 0..a.rows() {
+                acc += f.q.get(i, l) * b.get(i, j);
+            }
+            *q = acc;
+        }
+        let xj = solve_upper(&f.r, &qtb);
+        for i in 0..n {
+            x.set(i, j, xj[i]);
+        }
+    }
+    x
+}
+
+/// Residualize: B − A (A⁺ B), removing the column space of A from B.
+pub fn residualize(a: &Mat, b: &Mat) -> Mat {
+    let coef = lstsq(a, b);
+    let mut out = b.clone();
+    for i in 0..b.rows() {
+        for j in 0..b.cols() {
+            let mut fit = 0.0;
+            for l in 0..a.cols() {
+                fit += a.get(i, l) * coef.get(l, j);
+            }
+            let v = out.get(i, j) - fit;
+            out.set(i, j, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{Backend, Blas};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::randn(20, 6, &mut rng);
+        let f = qr(&a);
+        let qr_prod = Blas::new(Backend::Naive, 1).gemm(&f.q, &f.r);
+        assert!(a.max_abs_diff(&qr_prod) < 1e-10);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(15, 5, &mut rng);
+        let f = qr(&a);
+        let qtq = Blas::new(Backend::Naive, 1).at_b(&f.q, &f.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(5)) < 1e-11);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Mat::randn(10, 4, &mut rng);
+        let f = qr(&a);
+        for i in 1..4 {
+            for j in 0..i {
+                assert_eq!(f.r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_coefficients() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Mat::randn(50, 3, &mut rng);
+        let w = Mat::from_vec(3, 2, vec![1.0, -2.0, 0.5, 3.0, 0.0, 1.0]);
+        let b = Blas::new(Backend::Naive, 1).gemm(&a, &w);
+        let x = lstsq(&a, &b);
+        assert!(x.max_abs_diff(&w) < 1e-10);
+    }
+
+    #[test]
+    fn residualize_orthogonal_to_confounds() {
+        let mut rng = Pcg64::seeded(5);
+        let c = Mat::randn(60, 4, &mut rng);
+        let y = Mat::randn(60, 3, &mut rng);
+        let resid = residualize(&c, &y);
+        // CᵀR must vanish.
+        let ctr = Blas::new(Backend::Naive, 1).at_b(&c, &resid);
+        assert!(ctr.frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn residualize_idempotent() {
+        let mut rng = Pcg64::seeded(6);
+        let c = Mat::randn(40, 2, &mut rng);
+        let y = Mat::randn(40, 2, &mut rng);
+        let r1 = residualize(&c, &y);
+        let r2 = residualize(&c, &r1);
+        assert!(r1.max_abs_diff(&r2) < 1e-10);
+    }
+}

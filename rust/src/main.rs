@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    fmri_encode::cli::run()
+}

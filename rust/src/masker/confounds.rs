@@ -1,0 +1,131 @@
+//! Confound model: 24-parameter motion expansion + slow-drift basis.
+//!
+//! The paper's denoising (§2.1.4) regresses out (1) the Friston-24
+//! expansion of the six rigid-body motion parameters — the 6 params, their
+//! temporal derivatives, and the squares of both — and (2) a basis of
+//! drifts slower than 0.01 Hz. We generate realistic motion traces
+//! (integrated random walk, occasional spikes) for the synthetic subjects
+//! and build the same design matrices.
+
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// Six rigid-body motion traces: smooth random walk + occasional spikes.
+pub fn motion_6(n: usize, rng: &mut Pcg64) -> Mat {
+    let mut m = Mat::zeros(n, 6);
+    for j in 0..6 {
+        let scale = if j < 3 { 0.05 } else { 0.002 }; // mm vs radians
+        let mut v = 0.0;
+        let mut x = 0.0;
+        for i in 0..n {
+            v = 0.95 * v + scale * rng.normal();
+            if rng.uniform() < 0.01 {
+                v += 10.0 * scale * rng.normal(); // head jerk
+            }
+            x += v;
+            m.set(i, j, x);
+        }
+    }
+    m
+}
+
+/// Friston-24 expansion: [m, Δm, m², Δm²] → (n × 24).
+pub fn expand_24(m6: &Mat) -> Mat {
+    let n = m6.rows();
+    assert_eq!(m6.cols(), 6);
+    let mut out = Mat::zeros(n, 24);
+    for i in 0..n {
+        for j in 0..6 {
+            let x = m6.get(i, j);
+            let prev = if i > 0 { m6.get(i - 1, j) } else { x };
+            let d = x - prev;
+            out.set(i, j, x);
+            out.set(i, 6 + j, d);
+            out.set(i, 12 + j, x * x);
+            out.set(i, 18 + j, d * d);
+        }
+    }
+    out
+}
+
+/// Discrete-cosine drift basis capturing frequencies below `cutoff_hz`.
+pub fn drift_basis(n: usize, tr: f64, cutoff_hz: f64) -> Mat {
+    // DCT-II components with frequency k/(2·n·TR) < cutoff.
+    let duration = n as f64 * tr;
+    let kmax = ((2.0 * duration * cutoff_hz).floor() as usize).max(1);
+    let mut out = Mat::zeros(n, kmax + 1);
+    for i in 0..n {
+        out.set(i, 0, 1.0); // intercept
+        for k in 1..=kmax {
+            let v = (std::f64::consts::PI * (i as f64 + 0.5) * k as f64 / n as f64).cos();
+            out.set(i, k, v);
+        }
+    }
+    out
+}
+
+/// Full confound design: Friston-24 + drift basis (paper's Params24).
+pub fn motion_24(n: usize, rng: &mut Pcg64) -> Mat {
+    let m6 = motion_6(n, rng);
+    let m24 = expand_24(&m6);
+    let drift = drift_basis(n, crate::hrf::TR_SECS, 0.01);
+    Mat::hcat(&[&m24, &drift])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_shape_and_content() {
+        let mut rng = Pcg64::seeded(0);
+        let m6 = motion_6(50, &mut rng);
+        let m24 = expand_24(&m6);
+        assert_eq!(m24.shape(), (50, 24));
+        // Column 12 is the square of column 0.
+        for i in 0..50 {
+            assert!((m24.get(i, 12) - m24.get(i, 0).powi(2)).abs() < 1e-12);
+        }
+        // Derivative columns: first row is zero.
+        for j in 6..12 {
+            assert_eq!(m24.get(0, j), 0.0);
+        }
+    }
+
+    #[test]
+    fn drift_basis_is_slow() {
+        let b = drift_basis(200, 1.49, 0.01);
+        assert!(b.cols() >= 2);
+        // Highest retained frequency < 0.01 Hz ⇒ fewer than
+        // 2·200·1.49·0.01 ≈ 6 + intercept columns.
+        assert!(b.cols() <= 8, "got {} cols", b.cols());
+        // Intercept first.
+        for i in 0..200 {
+            assert_eq!(b.get(i, 0), 1.0);
+        }
+    }
+
+    #[test]
+    fn motion_traces_are_smooth_but_nonzero() {
+        let mut rng = Pcg64::seeded(1);
+        let m = motion_6(300, &mut rng);
+        for j in 0..6 {
+            let energy: f64 = (0..300).map(|i| m.get(i, j).powi(2)).sum();
+            assert!(energy > 0.0);
+            // Steps are small relative to the trace amplitude.
+            let max_step = (1..300)
+                .map(|i| (m.get(i, j) - m.get(i - 1, j)).abs())
+                .fold(0.0, f64::max);
+            let amp = (0..300).map(|i| m.get(i, j).abs()).fold(0.0, f64::max);
+            assert!(max_step < amp, "column {j}");
+        }
+    }
+
+    #[test]
+    fn full_confound_design_shape() {
+        let mut rng = Pcg64::seeded(2);
+        let c = motion_24(120, &mut rng);
+        assert_eq!(c.rows(), 120);
+        assert!(c.cols() > 24);
+    }
+}

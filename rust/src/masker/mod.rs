@@ -1,0 +1,196 @@
+//! Nilearn-masker substrate: 3D brain grid, synthetic MIST-like atlas,
+//! parcel/ROI/voxel maskers, confound regression.
+//!
+//! Mirrors the paper's §2.1.4–2.1.5 preprocessing: fMRI volumes become 2-D
+//! (time × space) arrays at three resolutions — parcels (MIST-444 labels
+//! masker), ROI (visual-network voxel masker) and whole-brain (subject
+//! mask voxel masker) — after 24-parameter motion + slow-drift confound
+//! regression and per-voxel z-scoring.
+
+pub mod atlas;
+pub mod confounds;
+
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// A 3-D voxel grid with a boolean brain mask.
+#[derive(Clone, Debug)]
+pub struct BrainGrid {
+    pub dims: (usize, usize, usize),
+    /// mask[linear voxel index] — inside the brain?
+    pub mask: Vec<bool>,
+    /// Linear indices of in-mask voxels (the masker's output ordering).
+    pub voxels: Vec<usize>,
+}
+
+impl BrainGrid {
+    /// Ellipsoidal brain mask with per-subject jitter: subject masks have
+    /// slightly different voxel counts, like Table 1's whole-brain rows.
+    pub fn synthetic(dims: (usize, usize, usize), subject_seed: u64) -> Self {
+        let (nx, ny, nz) = dims;
+        let mut rng = Pcg64::new(subject_seed, 101);
+        // Jitter the ellipsoid radii by ±3%.
+        let jitter = |r: &mut Pcg64| 1.0 + 0.03 * (2.0 * r.uniform() - 1.0);
+        let (rx, ry, rz) = (
+            nx as f64 * 0.45 * jitter(&mut rng),
+            ny as f64 * 0.45 * jitter(&mut rng),
+            nz as f64 * 0.42 * jitter(&mut rng),
+        );
+        let (cx, cy, cz) = (nx as f64 / 2.0, ny as f64 / 2.0, nz as f64 / 2.0);
+        let mut mask = vec![false; nx * ny * nz];
+        let mut voxels = Vec::new();
+        for x in 0..nx {
+            for y in 0..ny {
+                for z in 0..nz {
+                    let d = ((x as f64 - cx) / rx).powi(2)
+                        + ((y as f64 - cy) / ry).powi(2)
+                        + ((z as f64 - cz) / rz).powi(2);
+                    if d <= 1.0 {
+                        let li = (x * ny + y) * nz + z;
+                        mask[li] = true;
+                        voxels.push(li);
+                    }
+                }
+            }
+        }
+        Self { dims, mask, voxels }
+    }
+
+    pub fn n_voxels(&self) -> usize {
+        self.voxels.len()
+    }
+
+    /// (x, y, z) coordinates of the i-th in-mask voxel.
+    pub fn coords(&self, i: usize) -> (usize, usize, usize) {
+        let (_, ny, nz) = (self.dims.0, self.dims.1, self.dims.2);
+        let li = self.voxels[i];
+        (li / (ny * nz), (li / nz) % ny, li % nz)
+    }
+}
+
+/// Average voxel time series within each parcel (NiftiLabelsMasker).
+///
+/// `vox`: (n × n_voxels) in grid-voxel order, `labels[i]` = parcel of
+/// voxel i (0-based), returns (n × n_parcels).
+pub fn labels_masker(vox: &Mat, labels: &[u32], n_parcels: usize) -> Mat {
+    assert_eq!(vox.cols(), labels.len());
+    let n = vox.rows();
+    let mut out = Mat::zeros(n, n_parcels);
+    let mut counts = vec![0usize; n_parcels];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    for i in 0..n {
+        let src = vox.row(i);
+        let dst = out.row_mut(i);
+        for (j, &l) in labels.iter().enumerate() {
+            dst[l as usize] += src[j];
+        }
+    }
+    for i in 0..n {
+        let dst = out.row_mut(i);
+        for (p, c) in counts.iter().enumerate() {
+            if *c > 0 {
+                dst[p] /= *c as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Extract a voxel subset (NiftiMasker over an ROI): keep columns where
+/// `roi[i]` is true.
+pub fn roi_masker(vox: &Mat, roi: &[bool]) -> Mat {
+    assert_eq!(vox.cols(), roi.len());
+    let idx: Vec<usize> = roi
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b)
+        .map(|(i, _)| i)
+        .collect();
+    vox.cols_gather(&idx)
+}
+
+/// Full preprocessing of a voxel-space run: confound regression then
+/// per-voxel z-scoring (paper §2.1.4).
+pub fn preprocess_run(vox: &Mat, conf: &Mat) -> Mat {
+    let mut clean = crate::linalg::qr::residualize(conf, vox);
+    clean.zscore_cols();
+    clean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_mask_roughly_ellipsoidal() {
+        let g = BrainGrid::synthetic((12, 14, 10), 1);
+        let total = 12 * 14 * 10;
+        let frac = g.n_voxels() as f64 / total as f64;
+        // Ellipsoid fills ~π/6 ≈ 0.52 of the bounding box at these radii.
+        assert!((0.2..0.6).contains(&frac), "mask fraction {frac}");
+        // Corners excluded.
+        assert!(!g.mask[0]);
+    }
+
+    #[test]
+    fn subject_masks_differ() {
+        let a = BrainGrid::synthetic((12, 14, 10), 1);
+        let b = BrainGrid::synthetic((12, 14, 10), 2);
+        assert_ne!(a.n_voxels(), b.n_voxels());
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = BrainGrid::synthetic((8, 9, 7), 3);
+        for i in [0, g.n_voxels() / 2, g.n_voxels() - 1] {
+            let (x, y, z) = g.coords(i);
+            assert_eq!((x * 9 + y) * 7 + z, g.voxels[i]);
+        }
+    }
+
+    #[test]
+    fn labels_masker_averages() {
+        // 4 voxels, 2 parcels: [0, 0, 1, 1].
+        let vox = Mat::from_vec(2, 4, vec![1.0, 3.0, 10.0, 20.0, 2.0, 4.0, 30.0, 50.0]);
+        let out = labels_masker(&vox, &[0, 0, 1, 1], 2);
+        assert_eq!(out.get(0, 0), 2.0);
+        assert_eq!(out.get(0, 1), 15.0);
+        assert_eq!(out.get(1, 0), 3.0);
+        assert_eq!(out.get(1, 1), 40.0);
+    }
+
+    #[test]
+    fn roi_masker_selects() {
+        let vox = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        let out = roi_masker(&vox, &[false, true, false, true, false]);
+        assert_eq!(out.shape(), (3, 2));
+        assert_eq!(out.get(1, 0), 6.0);
+        assert_eq!(out.get(1, 1), 8.0);
+    }
+
+    #[test]
+    fn preprocess_removes_confounds_and_standardizes() {
+        let mut rng = crate::util::Pcg64::seeded(4);
+        let conf = confounds::motion_24(60, &mut rng);
+        let mut vox = Mat::randn(60, 5, &mut rng);
+        // Inject strong confound leakage.
+        for i in 0..60 {
+            for j in 0..5 {
+                let v = vox.get(i, j) + 5.0 * conf.get(i, j % conf.cols());
+                vox.set(i, j, v);
+            }
+        }
+        let clean = preprocess_run(&vox, &conf);
+        // Residual correlation with each confound column ≈ 0.
+        let ctr = crate::blas::Blas::new(crate::blas::Backend::Naive, 1)
+            .at_b(&conf, &clean);
+        assert!(ctr.frob_norm() / (60.0) < 1e-8);
+        // Unit variance per column.
+        for j in 0..5 {
+            let var: f64 = (0..60).map(|i| clean.get(i, j).powi(2)).sum::<f64>() / 60.0;
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+}

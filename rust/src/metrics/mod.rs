@@ -1,0 +1,182 @@
+//! Result records, CSV emission and aligned-ASCII tables.
+//!
+//! Every benchmark/figure harness produces a [`Figure`]: a titled grid of
+//! rows that is (a) printed as an aligned text table and (b) written as a
+//! CSV under `results/`, so the paper's plots can be regenerated from the
+//! CSVs with any plotting tool.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One reproduced table/figure.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    /// Short id, e.g. "table1", "fig9".
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-text caveats (substitutions, scale notes) printed under the
+    /// table and embedded as CSV comments.
+    pub notes: Vec<String>,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            notes: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Aligned text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {}", self.id, self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// CSV rendering (notes as leading # comments).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "# {} — {}", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "# note: {n}");
+        }
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write `<dir>/<id>.csv`.
+    pub fn write_csv(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("mkdir {}", dir.display()))?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Format a float with sensible precision for tables.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 0.01 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Figure {
+        let mut f = Figure::new("fig0", "sample", &["a", "bb"]);
+        f.row(vec!["1".into(), "x,y".into()]);
+        f.row(vec!["22".into(), "z\"q\"".into()]);
+        f.note("scaled");
+        f
+    }
+
+    #[test]
+    fn render_aligns() {
+        let r = sample().render();
+        assert!(r.contains("== fig0"));
+        assert!(r.contains("| 1  |"));
+        assert!(r.contains("note: scaled"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let c = sample().to_csv();
+        assert!(c.contains("\"x,y\""));
+        assert!(c.contains("\"z\"\"q\"\"\""));
+        assert!(c.starts_with("# fig0"));
+    }
+
+    #[test]
+    fn csv_roundtrip_to_disk() {
+        let dir = std::env::temp_dir().join("fmri-encode-test-metrics");
+        let path = sample().write_csv(&dir).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.contains("a,bb"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.4), "1234");
+        assert_eq!(fnum(12.34), "12.3");
+        assert_eq!(fnum(0.1234), "0.123");
+        assert_eq!(fnum(0.0001234), "1.23e-4");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut f = Figure::new("x", "y", &["a"]);
+        f.row(vec!["1".into(), "2".into()]);
+    }
+}

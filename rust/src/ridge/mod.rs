@@ -1,0 +1,342 @@
+//! Native multi-target ridge regression with cross-validated λ.
+//!
+//! The rust twin of scikit-learn's RidgeCV as analyzed in the paper §2.3.1:
+//! decompose the training design once (eigh of the Gram matrix — same
+//! reuse structure as the SVD of X, DESIGN.md §2), then sweep the whole λ
+//! grid and all brain targets against that one decomposition:
+//!
+//!   K = XᵀX = V E Vᵀ,  C = XᵀY,  Z = VᵀC
+//!   W_λ = V (Z ⊘ (e+λ)),  scores from X_val W_λ
+//!
+//! Per-stage timings are recorded so `perfmodel/` can calibrate the T_M /
+//! T_W complexity terms from real measurements. The Cholesky-per-λ
+//! variant (`fit_naive_per_lambda`) is the paper's O(p³r) strawman,
+//! kept for the complexity-validation bench.
+
+use crate::blas::Blas;
+use crate::cv::{pearson_cols, Split};
+use crate::linalg::{cholesky, eigh::jacobi_eigh, Mat};
+use crate::util::Stopwatch;
+
+/// The paper's λ grid (§2.2.4).
+pub const LAMBDA_GRID: [f64; 11] = [
+    0.1, 1.0, 100.0, 200.0, 300.0, 400.0, 600.0, 800.0, 900.0, 1000.0, 1200.0,
+];
+
+/// Per-stage wall-clock accounting (feeds `perfmodel::Calibration`).
+#[derive(Clone, Debug, Default)]
+pub struct RidgeTimings {
+    /// XᵀX + XᵀY accumulation (the O(p²n + pnt) streaming term).
+    pub gram_secs: f64,
+    /// Jacobi eigendecomposition (the O(p³) decompose-once term).
+    pub eigh_secs: f64,
+    /// Z/A projections + λ sweep + validation scoring (O(p²t + pnt r)).
+    pub sweep_secs: f64,
+    /// Final weights at λ* (O(p²t)).
+    pub solve_secs: f64,
+}
+
+impl RidgeTimings {
+    pub fn total(&self) -> f64 {
+        self.gram_secs + self.eigh_secs + self.sweep_secs + self.solve_secs
+    }
+
+    pub fn add(&mut self, o: &RidgeTimings) {
+        self.gram_secs += o.gram_secs;
+        self.eigh_secs += o.eigh_secs;
+        self.sweep_secs += o.sweep_secs;
+        self.solve_secs += o.solve_secs;
+    }
+}
+
+/// Fitted multi-target ridge model.
+#[derive(Clone, Debug)]
+pub struct RidgeCvFit {
+    /// (p × t) weights at the selected λ, fitted on the full training set.
+    pub weights: Mat,
+    /// Selected λ (shared across targets, as in the paper).
+    pub best_lambda: f64,
+    /// Index of the selected λ in the grid.
+    pub best_idx: usize,
+    /// Mean validation score per λ (averaged over targets and splits).
+    pub mean_scores: Vec<f64>,
+    /// Per-(λ, target) validation scores averaged over splits (r × t).
+    pub scores: Mat,
+    pub timings: RidgeTimings,
+}
+
+/// Eigendecomposition-reusing ridge CV over explicit validation splits.
+///
+/// Mirrors Algorithm 1's inner loop for a single batch of targets.
+pub fn fit_ridge_cv(
+    blas: &Blas,
+    x: &Mat,
+    y: &Mat,
+    lambdas: &[f64],
+    splits: &[Split],
+) -> RidgeCvFit {
+    assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
+    assert!(!lambdas.is_empty() && !splits.is_empty());
+    let t = y.cols();
+    let r = lambdas.len();
+    let mut timings = RidgeTimings::default();
+    let mut scores_acc = Mat::zeros(r, t);
+
+    for split in splits {
+        let xtr = x.rows_gather(&split.train);
+        let ytr = y.rows_gather(&split.train);
+        let xval = x.rows_gather(&split.val);
+        let yval = y.rows_gather(&split.val);
+        let (scores, tim) = sweep_scores(blas, &xtr, &ytr, &xval, &yval, lambdas);
+        timings.add(&tim);
+        scores_acc.add_assign(&scores);
+    }
+    scores_acc.scale(1.0 / splits.len() as f64);
+
+    // Shared λ*: argmax of the target-mean validation score (paper §2.2.4).
+    let mean_scores: Vec<f64> = (0..r)
+        .map(|li| scores_acc.row(li).iter().sum::<f64>() / t as f64)
+        .collect();
+    let best_idx = argmax(&mean_scores);
+    let best_lambda = lambdas[best_idx];
+
+    // Final fit on the full training set at λ*.
+    let sw = Stopwatch::start();
+    let (k, c) = gram(blas, x, y);
+    timings.gram_secs += sw.secs();
+    let sw = Stopwatch::start();
+    let dec = jacobi_eigh(&k, 30, 1e-12);
+    timings.eigh_secs += sw.secs();
+    let sw = Stopwatch::start();
+    let z = blas.at_b(&dec.vectors, &c);
+    let weights = weights_for_lambda(blas, &dec.vectors, &dec.values, &z, best_lambda);
+    timings.solve_secs += sw.secs();
+
+    RidgeCvFit {
+        weights,
+        best_lambda,
+        best_idx,
+        mean_scores,
+        scores: scores_acc,
+        timings,
+    }
+}
+
+/// Validation scores for the whole λ grid on one split (r × t).
+pub fn sweep_scores(
+    blas: &Blas,
+    xtr: &Mat,
+    ytr: &Mat,
+    xval: &Mat,
+    yval: &Mat,
+    lambdas: &[f64],
+) -> (Mat, RidgeTimings) {
+    let t = ytr.cols();
+    let r = lambdas.len();
+    let mut tim = RidgeTimings::default();
+
+    let sw = Stopwatch::start();
+    let (k, c) = gram(blas, xtr, ytr);
+    tim.gram_secs = sw.secs();
+
+    let sw = Stopwatch::start();
+    let dec = jacobi_eigh(&k, 30, 1e-12);
+    tim.eigh_secs = sw.secs();
+
+    let sw = Stopwatch::start();
+    let z = blas.at_b(&dec.vectors, &c); // (p × t)
+    let a = blas.gemm(xval, &dec.vectors); // (nv × p)
+    let mut scores = Mat::zeros(r, t);
+    let mut zs = Mat::zeros(z.rows(), z.cols());
+    for (li, &lam) in lambdas.iter().enumerate() {
+        scale_rows_into(&z, &dec.values, lam, &mut zs);
+        let pred = blas.gemm(&a, &zs); // (nv × t)
+        let rs = pearson_cols(&pred, yval);
+        scores.row_mut(li).copy_from_slice(&rs);
+    }
+    tim.sweep_secs = sw.secs();
+    (scores, tim)
+}
+
+/// (K, C) = (XᵀX, XᵀY) with the symmetric K scrubbed.
+pub fn gram(blas: &Blas, x: &Mat, y: &Mat) -> (Mat, Mat) {
+    (blas.syrk(x), blas.at_b(x, y))
+}
+
+/// W = V (Z ⊘ (e+λ)).
+pub fn weights_for_lambda(blas: &Blas, v: &Mat, e: &[f64], z: &Mat, lam: f64) -> Mat {
+    let mut zs = Mat::zeros(z.rows(), z.cols());
+    scale_rows_into(z, e, lam, &mut zs);
+    blas.gemm(v, &zs)
+}
+
+/// zs[i, :] = z[i, :] / (e[i] + λ).
+fn scale_rows_into(z: &Mat, e: &[f64], lam: f64, zs: &mut Mat) {
+    assert_eq!(z.shape(), zs.shape());
+    assert_eq!(z.rows(), e.len());
+    for i in 0..z.rows() {
+        let d = 1.0 / (e[i] + lam);
+        let src = z.row(i);
+        let dst = zs.row_mut(i);
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o = s * d;
+        }
+    }
+}
+
+/// Naive per-λ refactorization baseline: Cholesky solve of
+/// (XᵀX + λI) W = XᵀY for each λ — the O(p³r) strategy the SVD/eigh
+/// formulation exists to avoid (paper §3.1).
+pub fn fit_naive_per_lambda(blas: &Blas, x: &Mat, y: &Mat, lambdas: &[f64]) -> Vec<Mat> {
+    let (k, c) = gram(blas, x, y);
+    let p = k.rows();
+    lambdas
+        .iter()
+        .map(|&lam| {
+            let mut kl = k.clone();
+            for i in 0..p {
+                let v = kl.get(i, i) + lam;
+                kl.set(i, i, v);
+            }
+            cholesky::solve_spd(&kl, &c).expect("ridge-regularized gram is SPD")
+        })
+        .collect()
+}
+
+/// Prediction: Ŷ = XW.
+pub fn predict(blas: &Blas, x: &Mat, w: &Mat) -> Mat {
+    blas.gemm(x, w)
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+    use crate::cv::kfold;
+    use crate::util::Pcg64;
+
+    fn blas() -> Blas {
+        Blas::new(Backend::MklLike, 1)
+    }
+
+    /// Planted-model data: Y = XW + σ·noise.
+    fn planted(n: usize, p: usize, t: usize, noise: f64, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let mut y = blas().gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += noise * rng.normal();
+        }
+        (x, y, w)
+    }
+
+    #[test]
+    fn eigh_path_matches_cholesky_solve() {
+        let (x, y, _) = planted(60, 12, 5, 0.1, 1);
+        let b = blas();
+        for lam in [0.1, 10.0, 500.0] {
+            let (k, c) = gram(&b, &x, &y);
+            let dec = jacobi_eigh(&k, 30, 1e-13);
+            let z = b.at_b(&dec.vectors, &c);
+            let w1 = weights_for_lambda(&b, &dec.vectors, &dec.values, &z, lam);
+            let w2 = &fit_naive_per_lambda(&b, &x, &y, &[lam])[0];
+            assert!(w1.max_abs_diff(w2) < 1e-8, "lam={lam}");
+        }
+    }
+
+    #[test]
+    fn low_noise_selects_small_lambda_and_recovers() {
+        let (x, y, w) = planted(300, 16, 8, 0.01, 2);
+        let splits = kfold(x.rows(), 3, Some(0));
+        let fit = fit_ridge_cv(&blas(), &x, &y, &LAMBDA_GRID, &splits);
+        assert!(fit.best_idx <= 1, "expected small λ, got {}", fit.best_lambda);
+        assert!(fit.weights.max_abs_diff(&w) < 0.05);
+        assert!(fit.mean_scores[fit.best_idx] > 0.99);
+    }
+
+    #[test]
+    fn heavy_noise_prefers_larger_lambda() {
+        // Planted signal drowned in noise with p ≈ n: the un-regularized
+        // end of the grid overfits, so its validation score must be
+        // clearly below the heavily-regularized end.
+        let (x, y, _) = planted(40, 32, 8, 5.0, 3);
+        let splits = kfold(40, 4, Some(1));
+        let fit = fit_ridge_cv(&blas(), &x, &y, &LAMBDA_GRID, &splits);
+        let first = fit.mean_scores[0]; // λ = 0.1
+        let last = fit.mean_scores[LAMBDA_GRID.len() - 1]; // λ = 1200
+        assert!(last > first, "λ=1200 score {last} <= λ=0.1 score {first}");
+        assert!(fit.best_lambda >= 1.0, "got {}", fit.best_lambda);
+    }
+
+    #[test]
+    fn scores_shape_and_range() {
+        let (x, y, _) = planted(80, 8, 4, 0.5, 4);
+        let splits = kfold(80, 2, Some(2));
+        let fit = fit_ridge_cv(&blas(), &x, &y, &LAMBDA_GRID, &splits);
+        assert_eq!(fit.scores.shape(), (11, 4));
+        for v in fit.scores.data() {
+            assert!((-1.0..=1.0).contains(v));
+        }
+        assert!(fit.timings.total() > 0.0);
+    }
+
+    #[test]
+    fn shrinkage_monotone_in_lambda() {
+        let (x, y, _) = planted(50, 10, 3, 0.1, 5);
+        let b = blas();
+        let ws = fit_naive_per_lambda(&b, &x, &y, &[0.1, 10.0, 1000.0]);
+        let norms: Vec<f64> = ws.iter().map(|w| w.frob_norm()).collect();
+        assert!(norms[0] > norms[1] && norms[1] > norms[2]);
+    }
+
+    #[test]
+    fn multithreaded_fit_identical() {
+        let (x, y, _) = planted(60, 10, 6, 0.2, 6);
+        let splits = kfold(60, 2, Some(3));
+        let f1 = fit_ridge_cv(&Blas::new(Backend::MklLike, 1), &x, &y, &LAMBDA_GRID, &splits);
+        let f4 = fit_ridge_cv(&Blas::new(Backend::MklLike, 4), &x, &y, &LAMBDA_GRID, &splits);
+        assert_eq!(f1.best_idx, f4.best_idx);
+        assert!(f1.weights.max_abs_diff(&f4.weights) < 1e-11);
+    }
+
+    #[test]
+    fn backends_agree_on_fit() {
+        let (x, y, _) = planted(60, 10, 6, 0.2, 7);
+        let splits = kfold(60, 2, Some(4));
+        let fits: Vec<RidgeCvFit> = [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike]
+            .iter()
+            .map(|&bk| fit_ridge_cv(&Blas::new(bk, 1), &x, &y, &LAMBDA_GRID, &splits))
+            .collect();
+        assert_eq!(fits[0].best_idx, fits[1].best_idx);
+        assert_eq!(fits[0].best_idx, fits[2].best_idx);
+        assert!(fits[0].weights.max_abs_diff(&fits[1].weights) < 1e-9);
+        assert!(fits[0].weights.max_abs_diff(&fits[2].weights) < 1e-9);
+    }
+
+    #[test]
+    fn prediction_correlates_on_holdout() {
+        let (x, y, _) = planted(220, 12, 5, 0.3, 8);
+        let outer = crate::cv::train_test_split(220, 0.1, 0);
+        let xtr = x.rows_gather(&outer.train);
+        let ytr = y.rows_gather(&outer.train);
+        let xte = x.rows_gather(&outer.val);
+        let yte = y.rows_gather(&outer.val);
+        let splits = kfold(xtr.rows(), 3, Some(5));
+        let b = blas();
+        let fit = fit_ridge_cv(&b, &xtr, &ytr, &LAMBDA_GRID, &splits);
+        let pred = predict(&b, &xte, &fit.weights);
+        let rs = pearson_cols(&pred, &yte);
+        assert!(rs.iter().all(|&r| r > 0.9), "{rs:?}");
+    }
+}

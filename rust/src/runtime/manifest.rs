@@ -1,0 +1,181 @@
+//! `artifacts/manifest.json` parsing (produced by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled function.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub preset: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A shape preset (mirrors aot.py's PRESETS).
+#[derive(Clone, Copy, Debug)]
+pub struct PresetCfg {
+    pub n_chunk: usize,
+    pub p: usize,
+    pub t_chunk: usize,
+    pub nv: usize,
+    pub r: usize,
+    pub sweeps: usize,
+    pub feat_batch: usize,
+    pub feat_dim: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub flavor: String,
+    pub lambda_grid: Vec<f64>,
+    pub presets: Vec<(String, PresetCfg)>,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        shape: j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<_>>()?,
+        dtype: j.req("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let root = Json::parse(src)?;
+        let lambda_grid = root
+            .req("lambda_grid")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Result<_>>()?;
+        let mut presets = Vec::new();
+        for (name, cfg) in root.req("presets")?.as_obj()? {
+            let g = |k: &str| -> Result<usize> { cfg.req(k)?.as_usize() };
+            presets.push((
+                name.clone(),
+                PresetCfg {
+                    n_chunk: g("n_chunk")?,
+                    p: g("p")?,
+                    t_chunk: g("t_chunk")?,
+                    nv: g("nv")?,
+                    r: g("r")?,
+                    sweeps: g("sweeps")?,
+                    feat_batch: g("feat_batch")?,
+                    feat_dim: g("feat_dim")?,
+                },
+            ));
+        }
+        let mut entries = Vec::new();
+        for e in root.req("entries")?.as_arr()? {
+            entries.push(ArtifactEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                file: e.req("file")?.as_str()?.to_string(),
+                preset: e.req("preset")?.as_str()?.to_string(),
+                inputs: e
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Self {
+            flavor: root
+                .get("flavor")
+                .and_then(|f| f.as_str().ok())
+                .unwrap_or("pallas")
+                .to_string(),
+            lambda_grid,
+            presets,
+            entries,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn preset(&self, name: &str) -> Option<&PresetCfg> {
+        self.presets
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "flavor": "pallas",
+      "lambda_grid": [0.1, 1, 100],
+      "presets": {"small": {"n_chunk": 256, "p": 128, "t_chunk": 256,
+                             "nv": 128, "r": 11, "sweeps": 10,
+                             "feat_batch": 32, "feat_dim": 128}},
+      "entries": [
+        {"name": "gram_small", "file": "gram_small.hlo.txt", "preset": "small",
+         "inputs": [{"shape": [256, 128], "dtype": "float64"},
+                     {"shape": [256, 256], "dtype": "float64"}],
+         "outputs": [{"shape": [128, 128], "dtype": "float64"},
+                      {"shape": [128, 256], "dtype": "float64"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.lambda_grid, vec![0.1, 1.0, 100.0]);
+        let p = m.preset("small").unwrap();
+        assert_eq!(p.p, 128);
+        let e = m.entry("gram_small").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 128]);
+        assert_eq!(e.outputs[1].shape, vec![128, 256]);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !path.exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.lambda_grid.len(), 11);
+        assert!(m.preset("small").is_some());
+        for e in &m.entries {
+            assert!(!e.inputs.is_empty());
+            assert!(!e.outputs.is_empty());
+        }
+    }
+}

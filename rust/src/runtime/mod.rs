@@ -1,0 +1,171 @@
+//! PJRT runtime: load and execute the AOT artifacts from the hot path.
+//!
+//! `make artifacts` (the only place python runs) lowers the L2 graph to
+//! `artifacts/*.hlo.txt` + `manifest.json`; this module is everything the
+//! rust side needs afterwards:
+//!
+//! * [`Manifest`] — parses `manifest.json` (shape presets, entry specs,
+//!   the λ grid);
+//! * [`Runtime`] — a `PjRtClient` with a compiled-executable cache: HLO
+//!   text → `HloModuleProto::from_text_file` → compile once → execute many
+//!   (one compiled executable per model variant, per the AOT design);
+//! * [`XlaRidge`] — the staged Algorithm-1 pipeline over the artifacts
+//!   (gram accumulation over row chunks → eigh → prep → λ-sweep → solve),
+//!   numerically interchangeable with the native `ridge::fit_ridge_cv`
+//!   path (pinned by `rust/tests/runtime_parity.rs`).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod xla_ridge;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::linalg::Mat;
+pub use manifest::{ArtifactEntry, Manifest, PresetCfg, TensorSpec};
+pub use xla_ridge::XlaRidge;
+
+/// PJRT client + compiled-executable cache over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, dir, manifest, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile artifact `{name}`: {e}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; unpacks the output tuple.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        if entry.inputs.len() != inputs.len() {
+            anyhow::bail!(
+                "artifact `{name}` expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute `{name}`: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of `{name}`: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple().map_err(|e| anyhow!("untuple `{name}`: {e}"))?)
+    }
+
+    /// How many artifacts compiled so far (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> Mat conversions (f64 on the solver path, f32 for features).
+// ---------------------------------------------------------------------------
+
+/// Row-major (rows × cols) f64 matrix → literal.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// f64 vector → rank-1 literal.
+pub fn vec_to_literal(v: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Rank-2 literal → Mat (checks the shape).
+pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 2, "expected rank-2, got {dims:?}");
+    let data = lit.to_vec::<f64>()?;
+    Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+/// Rank-1 literal → Vec<f64>.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+/// Rank-3 literal → Vec<Mat> (λ-major sweep outputs).
+pub fn literal_to_mats(lit: &xla::Literal) -> Result<Vec<Mat>> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 3, "expected rank-3, got {dims:?}");
+    let (r, m, n) = (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+    let data = lit.to_vec::<f64>()?;
+    Ok((0..r)
+        .map(|i| Mat::from_vec(m, n, data[i * m * n..(i + 1) * m * n].to_vec()))
+        .collect())
+}
+
+/// Zero-pad a matrix to (rows, cols) — artifacts have fixed shapes; the
+/// pipeline pads the last chunk and slices results back.
+pub fn pad_to(m: &Mat, rows: usize, cols: usize) -> Mat {
+    assert!(rows >= m.rows() && cols >= m.cols());
+    let mut out = Mat::zeros(rows, cols);
+    for i in 0..m.rows() {
+        out.row_mut(i)[..m.cols()].copy_from_slice(m.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_preserves_content() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let p = pad_to(&m, 4, 5);
+        assert_eq!(p.shape(), (4, 5));
+        assert_eq!(p.get(1, 2), 5.0);
+        assert_eq!(p.get(3, 4), 0.0);
+    }
+}

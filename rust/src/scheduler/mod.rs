@@ -1,0 +1,384 @@
+//! Dask-like task-graph scheduler with two executors.
+//!
+//! The paper drives scikit-learn through joblib's Dask backend: a leader
+//! process holds a task graph, dispatches ready tasks to worker nodes, and
+//! tracks completion (§2.3.4). This module reproduces that control plane:
+//!
+//! * [`TaskGraph`] — named tasks, explicit dependencies, per-task cost and
+//!   thread width;
+//! * [`DesExecutor`] — schedules the graph onto the [`cluster`] simulator
+//!   (list scheduling: earliest-free gang slot, releases respect deps);
+//! * [`ThreadExecutor`] — really runs closures on `nodes` worker threads
+//!   (the functional path: actual ridge fits, actual results), used for
+//!   correctness and for single-core calibration runs.
+//!
+//! Invariants (property-tested): every task runs exactly once; no task
+//! starts before all dependencies finish; the DES makespan is bounded
+//! below by the critical path and above by the serial sum.
+
+use std::collections::BinaryHeap;
+
+use crate::cluster::{ClusterSpec, TaskCost};
+
+/// A node in the task graph.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub cost: TaskCost,
+    pub threads: usize,
+}
+
+/// Dependency-annotated task collection.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    pub tasks: Vec<TaskSpec>,
+    /// deps[i] = indices that must finish before task i starts.
+    pub deps: Vec<Vec<usize>>,
+}
+
+impl TaskGraph {
+    pub fn add(&mut self, name: impl Into<String>, cost: TaskCost, threads: usize, deps: &[usize]) -> usize {
+        let id = self.tasks.len();
+        assert!(deps.iter().all(|&d| d < id), "forward dependency");
+        self.tasks.push(TaskSpec { name: name.into(), cost, threads });
+        self.deps.push(deps.to_vec());
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Critical-path length in single-thread-seconds (compute only).
+    pub fn critical_path(&self) -> f64 {
+        let mut dist = vec![0.0f64; self.tasks.len()];
+        for i in 0..self.tasks.len() {
+            let base = self.deps[i]
+                .iter()
+                .map(|&d| dist[d])
+                .fold(0.0, f64::max);
+            dist[i] = base + self.tasks[i].cost.compute_secs;
+        }
+        dist.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Per-task schedule entry produced by the DES executor.
+#[derive(Clone, Debug)]
+pub struct ScheduledTask {
+    pub id: usize,
+    pub node: usize,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// DES schedule result.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub makespan: f64,
+    pub tasks: Vec<ScheduledTask>,
+    pub utilization: f64,
+}
+
+/// List scheduler over the simulated cluster.
+pub struct DesExecutor {
+    pub spec: ClusterSpec,
+}
+
+#[derive(PartialEq)]
+struct Slot {
+    free_at: f64,
+    node: usize,
+}
+impl Eq for Slot {}
+impl Ord for Slot {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .free_at
+            .partial_cmp(&self.free_at)
+            .unwrap()
+            .then(other.node.cmp(&self.node))
+    }
+}
+impl PartialOrd for Slot {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl DesExecutor {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Execute the graph: tasks become ready when deps finish; ready tasks
+    /// are placed on the earliest-free gang slot. Gang slots assume a
+    /// uniform thread width per graph (checked), like `DesCluster`.
+    pub fn run(&self, graph: &TaskGraph) -> Schedule {
+        let n = graph.len();
+        if n == 0 {
+            return Schedule { makespan: 0.0, tasks: vec![], utilization: 0.0 };
+        }
+        // Dask-style: `workers_per_node` concurrent tasks per node, capped
+        // so gangs never oversubscribe cores (see cluster::ClusterSpec).
+        let max_threads = graph
+            .tasks
+            .iter()
+            .map(|t| t.threads.max(1))
+            .max()
+            .unwrap_or(1)
+            .min(self.spec.cores_per_node);
+        let slots_per_node = self
+            .spec
+            .workers_per_node
+            .clamp(1, (self.spec.cores_per_node / max_threads).max(1));
+
+        let mut slots = BinaryHeap::new();
+        for node in 0..self.spec.nodes {
+            for _ in 0..slots_per_node {
+                slots.push(Slot { free_at: 0.0, node });
+            }
+        }
+
+        // NFS contention approximation (see cluster::sim): concurrency =
+        // min(tasks, slots).
+        let total_slots = self.spec.nodes * slots_per_node;
+        let eff_bw = self.spec.nfs_bandwidth / (n.min(total_slots).max(1) as f64);
+
+        // Kahn order with release times.
+        let mut indeg: Vec<usize> = graph.deps.iter().map(|d| d.len()).collect();
+        let mut children: Vec<Vec<usize>> = vec![vec![]; n];
+        for (i, deps) in graph.deps.iter().enumerate() {
+            for &d in deps {
+                children[d].push(i);
+            }
+        }
+        let mut release = vec![0.0f64; n];
+        // Ready min-heap keyed by release time, tie-broken by id (FIFO).
+        let mut ready: BinaryHeap<std::cmp::Reverse<(u64, usize)>> = BinaryHeap::new();
+        let key = |t: f64| (t * 1e9) as u64;
+        for i in 0..n {
+            if indeg[i] == 0 {
+                ready.push(std::cmp::Reverse((key(0.0), i)));
+            }
+        }
+
+        let mut out: Vec<Option<ScheduledTask>> = vec![None; n];
+        let mut dispatched = 0usize;
+        let mut busy = 0.0;
+        while let Some(std::cmp::Reverse((_, i))) = ready.pop() {
+            let slot = slots.pop().unwrap();
+            let t = &graph.tasks[i];
+            let th = t.threads.clamp(1, self.spec.cores_per_node);
+            let dispatch_ready = dispatched as f64 * self.spec.scheduler_overhead;
+            dispatched += 1;
+            let start = slot
+                .free_at
+                .max(release[i])
+                .max(dispatch_ready)
+                + self.spec.dispatch_latency;
+            let dur = t.cost.input_bytes / eff_bw
+                + self.spec.amdahl.time(t.cost.compute_secs, th)
+                + t.cost.output_bytes / eff_bw;
+            let finish = start + dur;
+            busy += dur * th as f64;
+            out[i] = Some(ScheduledTask { id: i, node: slot.node, start, finish });
+            slots.push(Slot { free_at: finish, node: slot.node });
+            for &c in &children[i] {
+                release[c] = release[c].max(finish);
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push(std::cmp::Reverse((key(release[c]), c)));
+                }
+            }
+        }
+
+        let tasks: Vec<ScheduledTask> = out.into_iter().map(|t| t.expect("cycle in task graph")).collect();
+        let makespan = tasks.iter().map(|t| t.finish).fold(0.0, f64::max);
+        let total_cores = (self.spec.nodes * self.spec.cores_per_node) as f64;
+        Schedule {
+            makespan,
+            utilization: if makespan > 0.0 { busy / (makespan * total_cores) } else { 0.0 },
+            tasks,
+        }
+    }
+
+    /// Convenience: run a bag of independent tasks.
+    pub fn run_bag(&self, costs: &[TaskCost], threads: usize) -> Schedule {
+        let mut g = TaskGraph::default();
+        for (i, &c) in costs.iter().enumerate() {
+            g.add(format!("task-{i}"), c, threads, &[]);
+        }
+        self.run(&g)
+    }
+}
+
+/// Real execution of dependency-ordered closures on `nodes` workers.
+///
+/// Each "node" is one OS thread (this container has one core, so this is
+/// the functional path, not a timing path — timings for figures come from
+/// [`DesExecutor`]).
+pub struct ThreadExecutor {
+    pub nodes: usize,
+}
+
+impl ThreadExecutor {
+    pub fn new(nodes: usize) -> Self {
+        Self { nodes: nodes.max(1) }
+    }
+
+    /// Run all jobs (no deps), returning their outputs in order.
+    pub fn run_bag<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        // Work-stealing-free dynamic queue: each worker pulls the next
+        // unclaimed job index.
+        let jobs: Vec<std::sync::Mutex<Option<F>>> =
+            jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
+        let results_mx: Vec<std::sync::Mutex<&mut Option<T>>> =
+            results.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.nodes.min(n.max(1)) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = jobs[i].lock().unwrap().take().unwrap();
+                    let out = job();
+                    **results_mx[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        drop(results_mx);
+        results.into_iter().map(|r| r.expect("job ran")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::AmdahlModel;
+    use crate::util::proptest::{check, int_in};
+    use crate::util::Pcg64;
+
+    fn free_spec(nodes: usize, cores: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes,
+            cores_per_node: cores,
+            workers_per_node: cores,
+            nfs_bandwidth: 1e18,
+            dispatch_latency: 0.0,
+            scheduler_overhead: 0.0,
+            amdahl: AmdahlModel { serial_frac: 0.0, per_thread_overhead: 0.0 },
+        }
+    }
+
+    fn cost(secs: f64) -> TaskCost {
+        TaskCost { compute_secs: secs, input_bytes: 0.0, output_bytes: 0.0 }
+    }
+
+    #[test]
+    fn chain_respects_dependencies() {
+        let mut g = TaskGraph::default();
+        let a = g.add("a", cost(1.0), 1, &[]);
+        let b = g.add("b", cost(2.0), 1, &[a]);
+        let _c = g.add("c", cost(3.0), 1, &[b]);
+        let ex = DesExecutor::new(free_spec(4, 4));
+        let s = ex.run(&g);
+        assert!((s.makespan - 6.0).abs() < 1e-9);
+        // b starts after a finishes.
+        assert!(s.tasks[1].start >= s.tasks[0].finish - 1e-9);
+    }
+
+    #[test]
+    fn diamond_parallelizes_middle() {
+        let mut g = TaskGraph::default();
+        let a = g.add("a", cost(1.0), 1, &[]);
+        let b = g.add("b", cost(5.0), 1, &[a]);
+        let c = g.add("c", cost(5.0), 1, &[a]);
+        let _d = g.add("d", cost(1.0), 1, &[b, c]);
+        let ex = DesExecutor::new(free_spec(2, 1));
+        let s = ex.run(&g);
+        assert!((s.makespan - 7.0).abs() < 1e-9, "{}", s.makespan);
+    }
+
+    #[test]
+    fn makespan_bounds_property() {
+        check(
+            "des-makespan-bounds",
+            |r: &mut Pcg64| {
+                let n = int_in(r, 1, 30);
+                let nodes = int_in(r, 1, 4);
+                let costs: Vec<f64> = (0..n).map(|_| r.uniform() * 5.0 + 0.01).collect();
+                // Random DAG: each task depends on an earlier one with prob ½.
+                let deps: Vec<Option<usize>> = (0..n)
+                    .map(|i| if i > 0 && r.uniform() < 0.5 { Some(r.below(i)) } else { None })
+                    .collect();
+                (nodes, costs, deps)
+            },
+            |(nodes, costs, deps)| {
+                let mut g = TaskGraph::default();
+                for (i, &c) in costs.iter().enumerate() {
+                    let d: Vec<usize> = deps[i].into_iter().collect();
+                    g.add(format!("t{i}"), cost(c), 1, &d);
+                }
+                let ex = DesExecutor::new(free_spec(*nodes, 1));
+                let s = ex.run(&g);
+                let total: f64 = costs.iter().sum();
+                let cp = g.critical_path();
+                // Lower bound: critical path; upper: serial sum (+ε).
+                s.makespan >= cp - 1e-9 && s.makespan <= total + 1e-9
+                    // Dependencies respected.
+                    && g.deps.iter().enumerate().all(|(i, ds)| {
+                        ds.iter().all(|&d| s.tasks[i].start >= s.tasks[d].finish - 1e-9)
+                    })
+            },
+        );
+    }
+
+    #[test]
+    fn every_task_scheduled_exactly_once() {
+        let ex = DesExecutor::new(free_spec(3, 2));
+        let s = ex.run_bag(&vec![cost(1.0); 17], 1);
+        let mut ids: Vec<usize> = s.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_nodes_never_slower() {
+        let costs: Vec<TaskCost> = (0..40).map(|i| cost(0.1 + (i % 7) as f64 * 0.3)).collect();
+        let mut prev = f64::INFINITY;
+        for nodes in [1, 2, 4, 8] {
+            let ex = DesExecutor::new(free_spec(nodes, 1));
+            let s = ex.run_bag(&costs, 1);
+            assert!(s.makespan <= prev + 1e-9, "nodes={nodes}");
+            prev = s.makespan;
+        }
+    }
+
+    #[test]
+    fn thread_executor_runs_everything_in_order() {
+        let ex = ThreadExecutor::new(4);
+        let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
+        let out = ex.run_bag(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_executor_single_node() {
+        let ex = ThreadExecutor::new(1);
+        let out = ex.run_bag(vec![|| 1, || 2, || 3]);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

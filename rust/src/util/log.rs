@@ -1,0 +1,115 @@
+//! Leveled stderr logger with wall-clock offsets.
+//!
+//! `FMRI_ENCODE_LOG` selects the level (`error|warn|info|debug|trace`,
+//! default `info`). Kept allocation-light: formatting happens only when
+//! the level is enabled.
+
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static START_MS: AtomicU64 = AtomicU64::new(0);
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = match std::env::var("FMRI_ENCODE_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    START_MS.store(now_ms(), Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(lvl: Level) {
+    level(); // ensure START_MS init
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = (now_ms().saturating_sub(START_MS.load(Ordering::Relaxed))) as f64
+        / 1000.0;
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info,
+                               module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn,
+                               module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug,
+                               module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,89 @@
+//! Foundation substrates: RNG, JSON, thread pool, logging, timing,
+//! and an in-house property-testing harness.
+//!
+//! This crate builds fully offline against a minimal vendored dependency
+//! set (`xla`, `anyhow`, `thiserror`), so the conveniences that would
+//! normally come from `rand`, `serde_json`, `rayon`, `log` and `proptest`
+//! are implemented here from scratch.
+
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Stopwatch;
+
+/// Round `x` up to the next multiple of `b`.
+pub fn ceil_to(x: usize, b: usize) -> usize {
+    x.div_ceil(b) * b
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(x: usize, b: usize) -> usize {
+    x.div_ceil(b)
+}
+
+/// Human-readable byte size, matching the paper's Table 1 formatting.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else if v >= 100.0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration for log/table output.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.1} h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_to_basics() {
+        assert_eq!(ceil_to(0, 8), 0);
+        assert_eq!(ceil_to(1, 8), 8);
+        assert_eq!(ceil_to(8, 8), 8);
+        assert_eq!(ceil_to(9, 8), 16);
+    }
+
+    #[test]
+    fn human_bytes_matches_paper_style() {
+        assert_eq!(human_bytes(244_000_000), "244 MB");
+        assert_eq!(human_bytes(2_600_000_000), "2.6 GB");
+        assert_eq!(human_bytes(138_000_000_000), "138 GB");
+        assert_eq!(human_bytes(512), "512 B");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert!(human_secs(0.5e-4).contains("µs"));
+        assert!(human_secs(0.05).contains("ms"));
+        assert!(human_secs(3.0).contains("s"));
+        assert!(human_secs(600.0).contains("min"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Timing utilities: stopwatch and repeated-measurement statistics for the
+//! in-house benchmark harness (criterion is not vendored).
+
+use std::time::Instant;
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Summary statistics over repeated timing samples.
+#[derive(Clone, Debug)]
+pub struct TimingStats {
+    pub samples: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { samples }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn median(&self) -> f64 {
+        let n = self.samples.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            self.samples[n / 2]
+        } else {
+            0.5 * (self.samples[n / 2 - 1] + self.samples[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `iters` measured.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    TimingStats::new(samples)
+}
+
+/// Adaptive variant: runs until `min_time` seconds or `max_iters` measured
+/// iterations, whichever comes first (at least one).
+pub fn bench_adaptive<F: FnMut()>(
+    warmup: usize,
+    min_time: f64,
+    max_iters: usize,
+    mut f: F,
+) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let wall = Instant::now();
+    while samples.len() < max_iters.max(1)
+        && (samples.is_empty() || wall.elapsed().as_secs_f64() < min_time)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    TimingStats::new(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = TimingStats::new(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.median(), 2.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_median() {
+        let s = TimingStats::new(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0usize;
+        let stats = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.samples.len(), 5);
+    }
+
+    #[test]
+    fn bench_adaptive_respects_cap() {
+        let stats = bench_adaptive(0, 10.0, 3, || {});
+        assert_eq!(stats.samples.len(), 3);
+    }
+}

@@ -1,0 +1,180 @@
+//! End-to-end coordinator integration: distributed strategies on the
+//! synthetic Friends data, DES scaling sanity, and the full encoding
+//! pipeline through the coordinator.
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::cluster::ClusterSpec;
+use fmri_encode::coordinator::{self, batch_bounds, DistConfig, Strategy};
+use fmri_encode::cv::pearson_cols;
+use fmri_encode::data::catalog::{Resolution, ScaleConfig};
+use fmri_encode::data::friends::{generate, FriendsConfig};
+use fmri_encode::perfmodel::{Calibration, FitShape};
+use fmri_encode::ridge;
+
+fn small_friends() -> FriendsConfig {
+    FriendsConfig {
+        scale: ScaleConfig {
+            n_samples: 240,
+            p_features: 64,
+            t_parcels: 24,
+            mor_n: 100,
+            mor_t: 32,
+            bmor_n: 120,
+            grid: (10, 12, 9),
+            bmor_grid: (10, 12, 9),
+        },
+        p_frame: 16,
+        window: 4,
+        d_latent: 6,
+        tr_per_run: 60,
+        ..FriendsConfig::default()
+    }
+}
+
+#[test]
+fn bmor_pipeline_encodes_brain_data() {
+    // Generate → outer split → B-MOR distributed fit → held-out scoring:
+    // visual targets must be predictable.
+    let ds = generate(&small_friends(), 1, Resolution::Parcels);
+    let outer = fmri_encode::cv::train_test_split(ds.n(), 0.2, 0);
+    let xtr = ds.x.rows_gather(&outer.train);
+    let ytr = ds.y.rows_gather(&outer.train);
+    let xte = ds.x.rows_gather(&outer.val);
+    let yte = ds.y.rows_gather(&outer.val);
+
+    let fit = coordinator::fit(
+        &xtr,
+        &ytr,
+        &DistConfig { strategy: Strategy::Bmor, nodes: 3, ..Default::default() },
+    );
+    assert_eq!(fit.batches, batch_bounds(ds.t(), 3));
+
+    let blas = Blas::new(Backend::MklLike, 1);
+    let rs = pearson_cols(&ridge::predict(&blas, &xte, &fit.weights), &yte);
+    let vis: Vec<f64> = rs
+        .iter()
+        .zip(&ds.is_visual)
+        .filter(|(_, &v)| v)
+        .map(|(r, _)| *r)
+        .collect();
+    let mean_vis = vis.iter().sum::<f64>() / vis.len() as f64;
+    assert!(mean_vis > 0.2, "B-MOR encoding too weak: {mean_vis}");
+}
+
+#[test]
+fn strategies_agree_on_predictions() {
+    // ROI resolution: every target carries signal, so all batches land on
+    // comparable λ* and the strategies stay tightly aligned.
+    let ds = generate(&small_friends(), 2, Resolution::Roi);
+    let base = DistConfig::default();
+    let single = coordinator::fit(
+        &ds.x,
+        &ds.y,
+        &DistConfig { strategy: Strategy::Single, ..base.clone() },
+    );
+    let bmor = coordinator::fit(
+        &ds.x,
+        &ds.y,
+        &DistConfig { strategy: Strategy::Bmor, nodes: 4, ..base.clone() },
+    );
+    let mor = coordinator::fit(
+        &ds.x,
+        &ds.y,
+        &DistConfig { strategy: Strategy::Mor, nodes: 4, ..base },
+    );
+    let blas = Blas::new(Backend::MklLike, 1);
+    let p_single = blas.gemm(&ds.x, &single.weights);
+    // MOR fits a per-target λ (the scikit-learn MultiOutput semantics),
+    // which is intrinsically noisier than the shared-λ fits — its
+    // tight-agreement guarantee is covered by mor_equals_bmor_with_t_nodes
+    // in the coordinator unit tests; here it only needs rough alignment.
+    {
+        let p_mor = blas.gemm(&ds.x, &mor.weights);
+        let rs = pearson_cols(&p_single, &p_mor);
+        let mean = rs.iter().sum::<f64>() / rs.len() as f64;
+        assert!(mean > 0.85, "mor: mean r {mean}");
+    }
+    for (name, fit) in [("bmor", &bmor)] {
+        let p_other = blas.gemm(&ds.x, &fit.weights);
+        let rs = pearson_cols(&p_single, &p_other);
+        // Batches select λ* independently (Algorithm 1 line 13), so noisy
+        // targets may land on a neighbouring grid point: predictions stay
+        // strongly aligned but not identical.
+        // Signal-bearing (visual) targets: strong agreement. Pure-noise
+        // targets may diverge when batches regularize differently — that
+        // is Algorithm 1 behaving as specified, not a bug.
+        let vis: Vec<f64> = rs
+            .iter()
+            .zip(&ds.is_visual)
+            .filter(|(_, &v)| v)
+            .map(|(r, _)| *r)
+            .collect();
+        let mean = vis.iter().sum::<f64>() / vis.len() as f64;
+        let min = vis.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mean > 0.95 && min > 0.8, "{name}: visual mean r {mean}, min r {min}");
+        // Where a batch picked the same λ* as the global fit, weights must
+        // agree to roundoff.
+        for (bi, &(j0, j1)) in fit.batches.iter().enumerate() {
+            if fit.best_lambda_per_batch[bi] == single.best_lambda_per_batch[0] {
+                let wb = fit.weights.cols_slice(j0, j1);
+                let ws = single.weights.cols_slice(j0, j1);
+                assert!(wb.max_abs_diff(&ws) < 1e-10, "{name} batch {bi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn des_reproduces_paper_scaling_shape() {
+    // The three claims of §4.5–4.6, in one place, on the full-scale DES:
+    // (1) MOR ≫ single-node multithreaded RidgeCV;
+    // (2) B-MOR beats 1-thread RidgeCV by ~30× at 8 nodes × 32 threads;
+    // (3) B-MOR monotone in nodes.
+    let cal = Calibration::nominal();
+    let cluster = ClusterSpec::default();
+    let shape = FitShape { n: 2048, p: 512, t: 32_000, r: 11, splits: 3 };
+    let sim = |strategy, nodes, threads| {
+        coordinator::simulate(
+            shape,
+            &DistConfig { strategy, nodes, threads_per_node: threads, ..Default::default() },
+            &cal,
+            &cluster,
+        )
+        .makespan
+    };
+
+    let single1 = sim(Strategy::Single, 1, 1);
+    let single32 = sim(Strategy::Single, 1, 32);
+    let mor = sim(Strategy::Mor, 8, 32);
+    assert!(mor > 50.0 * single32, "MOR {mor} not >> RidgeCV(32t) {single32}");
+
+    let bmor = sim(Strategy::Bmor, 8, 32);
+    let dsu = single1 / bmor;
+    assert!(
+        (15.0..60.0).contains(&dsu),
+        "B-MOR DSU {dsu} outside the paper's ballpark (~33x)"
+    );
+
+    let mut prev = f64::INFINITY;
+    for nodes in [1, 2, 4, 8] {
+        let t = sim(Strategy::Bmor, nodes, 8);
+        assert!(t < prev);
+        prev = t;
+    }
+}
+
+#[test]
+fn roi_resolution_end_to_end() {
+    let ds = generate(&small_friends(), 3, Resolution::Roi);
+    assert!(ds.is_visual.iter().all(|&v| v));
+    let fit = coordinator::fit(
+        &ds.x,
+        &ds.y,
+        &DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() },
+    );
+    assert_eq!(fit.weights.shape(), (ds.p(), ds.t()));
+    // All λ* from the grid.
+    for lam in &fit.best_lambda_per_batch {
+        assert!(ridge::LAMBDA_GRID.contains(lam));
+    }
+}

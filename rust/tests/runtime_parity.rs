@@ -1,0 +1,174 @@
+//! Integration: XLA artifact path vs native rust path, same numbers.
+//!
+//! These tests require `make artifacts` (skipped gracefully otherwise) and
+//! are the authoritative proof that the three implementations of the
+//! numerical spine (pure-jnp ref, Pallas/XLA AOT graph, native rust) agree
+//! — DESIGN.md §5.
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::cv::{kfold, pearson_cols, Split};
+use fmri_encode::linalg::{eigh::jacobi_eigh, Mat};
+use fmri_encode::ridge;
+use fmri_encode::runtime::{Runtime, XlaRidge};
+use fmri_encode::util::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(&x, &w);
+    for v in y.data_mut() {
+        *v += 0.5 * rng.normal();
+    }
+    (x, y)
+}
+
+#[test]
+fn gram_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xr = XlaRidge::new(&rt, "small").unwrap();
+    let cfg = xr.cfg;
+    // Deliberately non-multiple row count to exercise chunk padding.
+    let (x, y) = planted(cfg.n_chunk + 37, cfg.p, cfg.t_chunk, 1);
+    let (k, c) = xr.gram(&x, &y).unwrap();
+    let blas = Blas::new(Backend::MklLike, 1);
+    let (kn, cn) = ridge::gram(&blas, &x, &y);
+    assert!(k.max_abs_diff(&kn) < 1e-8, "K diff {}", k.max_abs_diff(&kn));
+    assert!(c.max_abs_diff(&cn) < 1e-8, "C diff {}", c.max_abs_diff(&cn));
+}
+
+#[test]
+fn eigh_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xr = XlaRidge::new(&rt, "small").unwrap();
+    let p = xr.cfg.p;
+    let mut rng = Pcg64::seeded(2);
+    let xm = Mat::randn(2 * p, p, &mut rng);
+    let k = Blas::new(Backend::MklLike, 1).syrk(&xm);
+    let (e, v) = xr.eigh(&k).unwrap();
+    // Eigenvalues match the native Jacobi (basis may differ in sign/order
+    // of degenerate pairs; values are canonical).
+    let native = jacobi_eigh(&k, 30, 1e-13);
+    for (a, b) in e.iter().zip(&native.values) {
+        assert!((a - b).abs() < 1e-6 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    // And reconstruct K.
+    let err = fmri_encode::linalg::reconstruction_error(&k, &e, &v);
+    assert!(err < 1e-8, "reconstruction error {err}");
+}
+
+#[test]
+fn predict_and_pearson_match_native() {
+    let Some(rt) = runtime() else { return };
+    let xr = XlaRidge::new(&rt, "small").unwrap();
+    let cfg = xr.cfg;
+    let mut rng = Pcg64::seeded(3);
+    let x = Mat::randn(cfg.n_chunk, cfg.p, &mut rng);
+    let w = Mat::randn(cfg.p, cfg.t_chunk, &mut rng);
+    let pred = xr.predict(&x, &w).unwrap();
+    let native = Blas::new(Backend::MklLike, 1).gemm(&x, &w);
+    assert!(pred.max_abs_diff(&native) < 1e-8);
+
+    let y = Mat::randn(cfg.n_chunk, cfg.t_chunk, &mut rng);
+    let rs = xr.pearson(&pred, &y).unwrap();
+    let rn = pearson_cols(&pred, &y);
+    for (a, b) in rs.iter().zip(&rn) {
+        assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn full_cv_fit_matches_native_ridge() {
+    let Some(rt) = runtime() else { return };
+    let xr = XlaRidge::new(&rt, "small").unwrap();
+    let cfg = xr.cfg;
+    let n = cfg.n_chunk + cfg.nv; // awkward on purpose
+    let (x, y) = planted(n, cfg.p, 96, 4); // t < t_chunk exercises col pad
+    let splits: Vec<Split> = kfold(n, 3, Some(0))
+        .into_iter()
+        .map(|mut s| {
+            s.val.truncate(cfg.nv);
+            s
+        })
+        .collect();
+
+    let fit_x = xr.fit_cv(&x, &y, &splits).unwrap();
+    // Native fit over the *same* splits (same truncated validation).
+    let blas = Blas::new(Backend::MklLike, 1);
+    let fit_n = ridge::fit_ridge_cv(&blas, &x, &y, &xr.lambdas.clone(), &splits);
+
+    assert_eq!(fit_x.best_idx, fit_n.best_idx, "λ* disagreement");
+    assert!(
+        fit_x.weights.max_abs_diff(&fit_n.weights) < 1e-6,
+        "weights diff {}",
+        fit_x.weights.max_abs_diff(&fit_n.weights)
+    );
+    for (a, b) in fit_x.mean_scores.iter().zip(&fit_n.mean_scores) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_fit_artifact_matches_staged() {
+    let Some(rt) = runtime() else { return };
+    let xr = XlaRidge::new(&rt, "small").unwrap();
+    let cfg = xr.cfg;
+    // The fused artifact runs gram→eigh→sweep→argmax→solve in ONE XLA
+    // program on exactly (n_chunk, p, t_chunk, nv) shapes.
+    let (x, y) = planted(cfg.n_chunk + cfg.nv, cfg.p, cfg.t_chunk, 5);
+    let xtr = x.rows_slice(0, cfg.n_chunk);
+    let ytr = y.rows_slice(0, cfg.n_chunk);
+    let xval = x.rows_slice(cfg.n_chunk, cfg.n_chunk + cfg.nv);
+    let yval = y.rows_slice(cfg.n_chunk, cfg.n_chunk + cfg.nv);
+
+    let out = rt
+        .run(
+            "fit_fused_small",
+            &[
+                fmri_encode::runtime::mat_to_literal(&xtr).unwrap(),
+                fmri_encode::runtime::mat_to_literal(&ytr).unwrap(),
+                fmri_encode::runtime::mat_to_literal(&xval).unwrap(),
+                fmri_encode::runtime::mat_to_literal(&yval).unwrap(),
+                fmri_encode::runtime::vec_to_literal(&xr.lambdas),
+            ],
+        )
+        .unwrap();
+    let scores = fmri_encode::runtime::literal_to_mat(&out[0]).unwrap();
+    let best = out[1].to_vec::<i32>().unwrap()[0] as usize;
+    let w = fmri_encode::runtime::literal_to_mat(&out[2]).unwrap();
+
+    // Staged path on the identical split. NOTE: the fused artifact fits
+    // its final weights on the *training* rows only (Algorithm 1's inner
+    // loop), while fit_cv refits on all rows — so weights are compared
+    // against a native solve on xtr at the fused-selected λ.
+    let split = Split {
+        train: (0..cfg.n_chunk).collect(),
+        val: (cfg.n_chunk..cfg.n_chunk + cfg.nv).collect(),
+    };
+    let staged = xr.fit_cv(&x, &y, &[split]).unwrap();
+    assert_eq!(best, staged.best_idx);
+    assert!(scores.max_abs_diff(&staged.scores) < 1e-6);
+
+    let blas = Blas::new(Backend::MklLike, 1);
+    let (k, c) = ridge::gram(&blas, &xtr, &ytr);
+    let dec = jacobi_eigh(&k, 30, 1e-13);
+    let z = blas.at_b(&dec.vectors, &c);
+    let w_native = ridge::weights_for_lambda(
+        &blas, &dec.vectors, &dec.values, &z, xr.lambdas[best],
+    );
+    assert!(
+        w.max_abs_diff(&w_native) < 1e-6,
+        "fused vs native-on-train diff {}",
+        w.max_abs_diff(&w_native)
+    );
+}
