@@ -1,14 +1,17 @@
 //! Ridge-path benchmarks + the §3 ablation: decompose-once (eigh) RidgeCV
 //! vs naive per-λ Cholesky refactorization — the O(p²nr) vs O(p³r) gap
-//! that motivates the paper's entire formulation.
+//! that motivates the paper's entire formulation — and the plan/execute
+//! ablation: one shared `DesignPlan` fanned across B-MOR batches vs the
+//! pre-refactor path that refactorizes per batch.
 
 mod common;
 
 use common::{case, header, report};
 use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::coordinator::batch_bounds;
 use fmri_encode::cv::kfold;
 use fmri_encode::linalg::{eigh::jacobi_eigh, Mat};
-use fmri_encode::ridge::{self, LAMBDA_GRID};
+use fmri_encode::ridge::{self, DesignPlan, LAMBDA_GRID};
 use fmri_encode::util::Pcg64;
 
 fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
@@ -33,10 +36,14 @@ fn main() {
             let (k, c) = ridge::gram(&blas, &x, &y);
             let dec = jacobi_eigh(&k, 30, 1e-12);
             let z = blas.at_b(&dec.vectors, &c);
+            // Preallocated λ-sweep buffers: no allocation per λ.
+            let mut zs = Mat::zeros(z.rows(), z.cols());
+            let mut w = Mat::zeros(dec.vectors.rows(), z.cols());
             for &lam in &LAMBDA_GRID {
-                std::hint::black_box(ridge::weights_for_lambda(
-                    &blas, &dec.vectors, &dec.values, &z, lam,
-                ));
+                ridge::weights_for_lambda_into(
+                    &blas, &dec.vectors, &dec.values, &z, lam, &mut zs, &mut w,
+                );
+                std::hint::black_box(&w);
             }
         });
         let s2 = case(&format!("cholesky/λ  n={n} p={p} t={t}"), || {
@@ -58,6 +65,49 @@ fn main() {
         case(&format!("fit_ridge_cv n={n} p={p} t={t}"), || {
             std::hint::black_box(ridge::fit_ridge_cv(&blas, &x, &y, &LAMBDA_GRID, &splits));
         });
+    }
+
+    header("B-MOR: shared DesignPlan vs per-batch refactorization (3-fold, 11 λ)");
+    {
+        let (n, p, t) = (512, 128, 448);
+        let (x, y) = planted(n, p, t, 3);
+        let splits = kfold(n, 3, Some(0));
+        for batches in [1, 2, 4, 8, 16] {
+            let bounds = batch_bounds(t, batches);
+            // Planned: ONE plan (splits+1 eigendecompositions) shared by
+            // every batch; plan build time is included, so the comparison
+            // is end-to-end fair.
+            let sp = case(&format!("planned    b={batches:<2} n={n} p={p} t={t}"), || {
+                let plan = DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits);
+                for &(j0, j1) in &bounds {
+                    std::hint::black_box(ridge::fit_batch_with_plan(
+                        &blas,
+                        &plan,
+                        &y.cols_slice(j0, j1),
+                    ));
+                }
+            });
+            // Unplanned (pre-refactor): every batch refactorizes from
+            // scratch — batches·(splits+1) eigendecompositions.
+            let su = case(&format!("unplanned  b={batches:<2} n={n} p={p} t={t}"), || {
+                for &(j0, j1) in &bounds {
+                    std::hint::black_box(ridge::fit_ridge_cv_unshared(
+                        &blas,
+                        &x,
+                        &y.cols_slice(j0, j1),
+                        &LAMBDA_GRID,
+                        &splits,
+                    ));
+                }
+            });
+            report(
+                "",
+                format!(
+                    "-> shared plan is {:.2}× faster at {batches} batches (speedup grows with batch count)",
+                    su.median() / sp.median()
+                ),
+            );
+        }
     }
 
     header("jacobi eigh");

@@ -78,7 +78,9 @@ impl Blas {
         c
     }
 
-    /// C += A·B into a caller-owned buffer (hot loop avoids allocation).
+    /// C = A·B into a caller-owned buffer, overwriting it (the panel
+    /// kernels zero-fill their slice first) — hot sweep loops reuse one
+    /// allocation across λ values instead of allocating per call.
     pub fn gemm_into(&self, a: &Mat, b: &Mat, c: &mut Mat) {
         assert_eq!(a.cols(), b.rows());
         assert_eq!((a.rows(), b.cols()), c.shape());

@@ -145,6 +145,13 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 cfg.backend.name()
             );
             println!("batches: {:?}", fit.batches);
+            println!(
+                "shared plan: {} eigendecompositions built in {} (reused by {} batch{})",
+                cfg.inner_folds + 1,
+                human_secs(fit.plan_secs),
+                fit.batches.len(),
+                if fit.batches.len() == 1 { "" } else { "es" }
+            );
             println!("λ* per batch: {:?}", fit.best_lambda_per_batch);
             println!(
                 "stage timings: gram {} | eigh {} | sweep {} | solve {}",

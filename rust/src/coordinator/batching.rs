@@ -102,6 +102,49 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_inputs() {
+        // t == 0: nothing to batch, regardless of the worker count.
+        assert!(batch_bounds(0, 0).is_empty());
+        assert!(batch_bounds(0, 1).is_empty());
+        assert!(batch_bounds(0, 64).is_empty());
+        // c == 0: clamps to a single batch owning everything.
+        assert_eq!(batch_bounds(5, 0), vec![(0, 5)]);
+        assert_eq!(batch_bounds(1, 0), vec![(0, 1)]);
+        // c > t: one singleton batch per target, never an empty batch.
+        assert_eq!(batch_bounds(3, 64), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(batch_bounds(1, 5), vec![(0, 1)]);
+        // t == c == 1.
+        assert_eq!(batch_bounds(1, 1), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn coverage_disjoint_nonempty_under_extremes() {
+        // The invariants the coordinator's routing rests on, checked
+        // explicitly at the edges: batches are nonempty, contiguous,
+        // disjoint, ordered, and exactly cover 0..t.
+        for (t, c) in [
+            (1, 0),
+            (1, 1),
+            (2, 1000),
+            (1000, 1000),
+            (997, 13),
+            (13, 997),
+            (64, 65),
+            (65, 64),
+        ] {
+            let b = batch_bounds(t, c);
+            assert_eq!(b.len(), c.clamp(1, t), "t={t} c={c}");
+            let mut next = 0usize;
+            for &(a, z) in &b {
+                assert_eq!(a, next, "gap/overlap at {a} (t={t} c={c})");
+                assert!(z > a, "empty batch ({a},{z}) for t={t} c={c}");
+                next = z;
+            }
+            assert_eq!(next, t, "t={t} c={c} not fully covered");
+        }
+    }
+
+    #[test]
     fn mor_degenerates_to_singletons() {
         let b = batch_bounds(17, 17);
         assert_eq!(b.len(), 17);

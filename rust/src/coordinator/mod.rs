@@ -1,4 +1,4 @@
-//! The coordinator: the paper's system contribution.
+//! The coordinator: the paper's system contribution, in plan/execute form.
 //!
 //! Implements the three parallelization strategies benchmarked in §4 and
 //! orchestrates them over the scheduler/cluster substrates:
@@ -9,24 +9,31 @@
 //!   target, scattered over nodes (Fig. 8; impractical by Eq. 6);
 //! * [`Strategy::Bmor`] — the paper's Batch Multi-Output Regression
 //!   (Algorithm 1): partition targets into c = min(t, nodes) contiguous
-//!   batches, one multithreaded RidgeCV per batch (Figs. 9–10, Eq. 7).
+//!   batches (Figs. 9–10, Eq. 7).
 //!
-//! Each strategy exists twice, sharing one planning function:
-//! * `fit_*` — the **functional path**: really computes weights/scores on
-//!   this machine via `ThreadExecutor` (+ the native or XLA compute path);
-//! * `simulate_*` — the **timing path**: builds the same task bag with
-//!   calibrated costs and runs it on the cluster DES (this container has
-//!   one core; see DESIGN.md §3).
+//! Both paths share the plan/execute decomposition of `ridge::plan`:
+//!
+//! * [`fit`] — the **functional path**: builds ONE shared [`DesignPlan`]
+//!   (s+1 eigendecompositions total, independent of batch count) and fans
+//!   the batches out over [`ThreadExecutor`] against it — each worker
+//!   only does the target-dependent sweep for its batch;
+//! * [`simulate`] — the **timing path**: [`plan_graph`] emits the same
+//!   structure as an explicit [`TaskGraph`] — decompose tasks feeding
+//!   per-batch sweep tasks — priced by the split `perfmodel` cost model
+//!   and scheduled on the cluster DES (this container has one core; see
+//!   DESIGN.md §3).
 
 pub mod batching;
 
 use crate::blas::{Backend, Blas};
-use crate::cluster::{ClusterSpec, TaskCost};
+use crate::cluster::ClusterSpec;
 use crate::cv::kfold;
 use crate::linalg::Mat;
-use crate::perfmodel::{batch_task_cost, Calibration, FitShape};
-use crate::ridge::{self, RidgeTimings};
-use crate::scheduler::{DesExecutor, Schedule, ThreadExecutor};
+use crate::perfmodel::{
+    batch_task_cost, decompose_task_cost, sweep_task_cost, Calibration, FitShape,
+};
+use crate::ridge::{self, DesignPlan, RidgeTimings};
+use crate::scheduler::{DesExecutor, Schedule, TaskGraph, ThreadExecutor};
 use crate::util::Stopwatch;
 
 pub use batching::batch_bounds;
@@ -93,11 +100,19 @@ pub struct DistributedFit {
     pub batches: Vec<(usize, usize)>,
     /// Real wall-clock of the whole fit on this machine.
     pub wall_secs: f64,
-    /// Aggregated per-stage compute timings across workers.
+    /// Wall-clock of building the shared design plan (included in
+    /// `wall_secs`): the decompose-once cost every batch reuses.
+    pub plan_secs: f64,
+    /// Aggregated per-stage compute timings across plan build + workers.
     pub timings: RidgeTimings,
 }
 
 /// Functional path: really fit, using `nodes` worker threads.
+///
+/// Builds one shared [`DesignPlan`] on the leader — exactly
+/// `inner_folds + 1` eigendecompositions regardless of how many batches
+/// the strategy produces — then fans the batches out over the thread
+/// executor; workers only run the target-dependent sweep.
 pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
     let t = y.cols();
     let batches = match cfg.strategy {
@@ -108,18 +123,23 @@ pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
     let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
 
     let sw = Stopwatch::start();
+    // Decompose once, on the leader (Algorithm 1's reuse structure hoisted
+    // out of the batch loop).
+    let leader_blas = Blas::new(cfg.backend, cfg.threads_per_node);
+    let plan = DesignPlan::build(&leader_blas, x, &ridge::LAMBDA_GRID, &splits);
+    let plan_secs = sw.secs();
+
     let exec = ThreadExecutor::new(cfg.nodes);
+    let plan_ref = &plan;
     let jobs: Vec<_> = batches
         .iter()
         .map(|&(j0, j1)| {
             let yb = y.cols_slice(j0, j1);
-            let splits = splits.clone();
             let backend = cfg.backend;
             let threads = cfg.threads_per_node;
-            let xref = x;
             move || {
                 let blas = Blas::new(backend, threads);
-                ridge::fit_ridge_cv(&blas, xref, &yb, &ridge::LAMBDA_GRID, &splits)
+                ridge::fit_batch_with_plan(&blas, plan_ref, &yb)
             }
         })
         .collect();
@@ -130,7 +150,7 @@ pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
     let p = x.cols();
     let mut weights = Mat::zeros(p, t);
     let mut lambdas = Vec::with_capacity(batches.len());
-    let mut timings = RidgeTimings::default();
+    let mut timings = plan.build_timings.clone();
     for (fit, &(j0, j1)) in fits.iter().zip(&batches) {
         for i in 0..p {
             weights.row_mut(i)[j0..j1].copy_from_slice(fit.weights.row(i));
@@ -143,12 +163,14 @@ pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
         best_lambda_per_batch: lambdas,
         batches,
         wall_secs,
+        plan_secs,
         timings,
     }
 }
 
-/// Timing path: simulate the same plan on the cluster DES with calibrated
-/// per-task costs. Returns the schedule (makespan = the figures' y-axis).
+/// Timing path: simulate the strategy's task graph on the cluster DES
+/// with calibrated per-task costs. Returns the schedule (makespan = the
+/// figures' y-axis).
 pub fn simulate(
     shape: FitShape,
     cfg: &DistConfig,
@@ -158,39 +180,71 @@ pub fn simulate(
     let mut spec = cluster.clone();
     spec.nodes = cfg.nodes;
     let exec = DesExecutor::new(spec);
-    let costs = plan_costs(shape, cfg, cal);
-    exec.run_bag(&costs, cfg.threads_per_node)
+    exec.run(&plan_graph(shape, cfg, cal))
 }
 
-/// The task bag each strategy generates (shared by DES + analysis).
-pub fn plan_costs(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> Vec<TaskCost> {
+/// The task graph each strategy generates (shared by DES + analysis).
+///
+/// * `Single` — one self-contained RidgeCV task.
+/// * `Mor` — one self-contained task per target, no dependencies (each
+///   redundantly refactorizes: the t·T_M term of Eq. 6).
+/// * `Bmor` — the planned structure: one decompose task per split plus
+///   the full-train decompose, then one sweep task per batch depending on
+///   ALL decompose tasks. The decompose stage parallelizes across nodes
+///   and is paid once, so the makespan reflects the shared plan instead
+///   of c redundant factorizations.
+pub fn plan_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskGraph {
     let t = shape.t;
+    let th = cfg.threads_per_node;
+    let mut g = TaskGraph::default();
     match cfg.strategy {
         Strategy::Single => {
-            vec![batch_task_cost(cal, cfg.backend, shape, 1)]
+            g.add("ridgecv", batch_task_cost(cal, cfg.backend, shape, 1), th, &[]);
         }
         Strategy::Mor => {
             // One full RidgeCV per target: X broadcast shared by the
             // targets resident on a node (t / nodes of them on average).
             let shared = (t / cfg.nodes.max(1)).max(1);
             let per = FitShape { t: 1, ..shape };
-            (0..t)
-                .map(|_| batch_task_cost(cal, cfg.backend, per, shared))
-                .collect()
+            let cost = batch_task_cost(cal, cfg.backend, per, shared);
+            for j in 0..t {
+                g.add(format!("mor-target-{j}"), cost, th, &[]);
+            }
         }
-        Strategy::Bmor => batch_bounds(t, cfg.nodes)
-            .into_iter()
-            .map(|(j0, j1)| {
+        Strategy::Bmor => {
+            let mut deps = Vec::with_capacity(shape.splits + 1);
+            for si in 0..shape.splits {
+                deps.push(g.add(
+                    format!("decompose-split-{si}"),
+                    decompose_task_cost(cal, cfg.backend, shape, true),
+                    th,
+                    &[],
+                ));
+            }
+            deps.push(g.add(
+                "decompose-full",
+                decompose_task_cost(cal, cfg.backend, shape, false),
+                th,
+                &[],
+            ));
+            for (bi, (j0, j1)) in batch_bounds(t, cfg.nodes).into_iter().enumerate() {
                 let b = FitShape { t: j1 - j0, ..shape };
-                batch_task_cost(cal, cfg.backend, b, 1)
-            })
-            .collect(),
+                g.add(
+                    format!("sweep-batch-{bi}"),
+                    sweep_task_cost(cal, cfg.backend, b),
+                    th,
+                    &deps,
+                );
+            }
+        }
     }
+    g
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::TaskCost;
     use crate::cv::pearson_cols;
     use crate::util::Pcg64;
 
@@ -246,6 +300,7 @@ mod tests {
         let (x, y) = planted(100, 10, 8, 4);
         let bmor = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 4, ..Default::default() });
         assert_eq!(bmor.best_lambda_per_batch.len(), 4);
+        assert!(bmor.plan_secs > 0.0 && bmor.plan_secs <= bmor.wall_secs);
         for lam in &bmor.best_lambda_per_batch {
             assert!(ridge::LAMBDA_GRID.contains(lam));
         }
@@ -283,12 +338,99 @@ mod tests {
     }
 
     #[test]
-    fn plan_costs_counts() {
+    fn plan_graph_shapes() {
         let cal = Calibration::nominal();
         let shape = FitShape { n: 100, p: 32, t: 50, r: 11, splits: 3 };
         let mk = |strategy, nodes| DistConfig { strategy, nodes, ..Default::default() };
-        assert_eq!(plan_costs(shape, &mk(Strategy::Single, 4), &cal).len(), 1);
-        assert_eq!(plan_costs(shape, &mk(Strategy::Mor, 4), &cal).len(), 50);
-        assert_eq!(plan_costs(shape, &mk(Strategy::Bmor, 4), &cal).len(), 4);
+
+        let single = plan_graph(shape, &mk(Strategy::Single, 4), &cal);
+        assert_eq!(single.len(), 1);
+        assert!(single.deps[0].is_empty());
+
+        let mor = plan_graph(shape, &mk(Strategy::Mor, 4), &cal);
+        assert_eq!(mor.len(), 50);
+        assert!(mor.deps.iter().all(|d| d.is_empty()));
+
+        // B-MOR: splits+1 decompose sources, then one sweep per batch
+        // depending on every source.
+        let bmor = plan_graph(shape, &mk(Strategy::Bmor, 4), &cal);
+        assert_eq!(bmor.len(), 3 + 1 + 4);
+        for i in 0..4 {
+            assert!(bmor.deps[i].is_empty(), "decompose task {i} has deps");
+        }
+        for i in 4..8 {
+            assert_eq!(bmor.deps[i], vec![0, 1, 2, 3], "sweep task {i}");
+        }
+    }
+
+    #[test]
+    fn bmor_graph_decompose_before_sweeps() {
+        // DES execution of the real plan graph: no sweep may start before
+        // every decompose task has finished, and the makespan is bounded
+        // below by the graph's critical path.
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 500, p: 64, t: 300, r: 11, splits: 3 };
+        let cfg = DistConfig {
+            strategy: Strategy::Bmor,
+            nodes: 4,
+            threads_per_node: 8,
+            ..Default::default()
+        };
+        let g = plan_graph(shape, &cfg, &cal);
+        let spec = ClusterSpec { nodes: cfg.nodes, ..ClusterSpec::default() };
+        let amdahl = spec.amdahl;
+        let s = DesExecutor::new(spec).run(&g);
+        let ndec = shape.splits + 1;
+        let dec_finish = s.tasks[..ndec]
+            .iter()
+            .map(|t| t.finish)
+            .fold(0.0f64, f64::max);
+        for task in &s.tasks[ndec..] {
+            assert!(
+                task.start >= dec_finish - 1e-9,
+                "sweep {} started at {} before decompose stage finished at {dec_finish}",
+                task.id,
+                task.start
+            );
+        }
+        // Thread-aware lower bound: every task runs `threads_per_node`
+        // wide, so the critical path compresses by at most the Amdahl
+        // speedup (critical_path() itself is single-thread seconds).
+        let cp_lower = g.critical_path() / amdahl.speedup(cfg.threads_per_node);
+        assert!(s.makespan >= cp_lower - 1e-9);
+    }
+
+    #[test]
+    fn shared_plan_cheaper_than_per_batch_decomposition() {
+        // The tentpole claim on the timing path: the planned graph beats
+        // the pre-refactor flat bag (every batch redundantly decomposing)
+        // and the gap is there at every node count.
+        let cal = Calibration::nominal();
+        let cluster = ClusterSpec::default();
+        let shape = FitShape { n: 2000, p: 512, t: 8000, r: 11, splits: 3 };
+        for nodes in [2, 4, 8] {
+            let cfg = DistConfig {
+                strategy: Strategy::Bmor,
+                nodes,
+                threads_per_node: 8,
+                ..Default::default()
+            };
+            let planned = simulate(shape, &cfg, &cal, &cluster).makespan;
+            let mut spec = cluster.clone();
+            spec.nodes = nodes;
+            let costs: Vec<TaskCost> = batch_bounds(shape.t, nodes)
+                .into_iter()
+                .map(|(j0, j1)| {
+                    batch_task_cost(&cal, cfg.backend, FitShape { t: j1 - j0, ..shape }, 1)
+                })
+                .collect();
+            let unplanned = DesExecutor::new(spec)
+                .run_bag(&costs, cfg.threads_per_node)
+                .makespan;
+            assert!(
+                planned < unplanned,
+                "nodes={nodes}: planned {planned} !< per-batch {unplanned}"
+            );
+        }
     }
 }

@@ -97,7 +97,21 @@ pub fn pearson_cols(yhat: &crate::linalg::Mat, y: &crate::linalg::Mat) -> Vec<f6
         let cov = sab - sa * sb / nf;
         let va = saa - sa * sa / nf;
         let vb = sbb - sb * sb / nf;
-        out[j] = cov / ((va * vb).sqrt() + 1e-12);
+        // A (near-)constant column has no defined correlation. Report NaN
+        // explicitly — downstream λ selection skips NaNs — instead of
+        // cov/ε, which turns catastrophic-cancellation noise in cov into
+        // an arbitrarily large bogus score. The threshold is relative to
+        // the column's magnitude so healthy columns are untouched; with
+        // degenerates routed to NaN the denominator needs no absolute ε
+        // (which silently attenuated small-amplitude columns), only a
+        // clamp against the ±ulp excursions of exact correlation.
+        let scale_a = saa.max(sa * sa / nf);
+        let scale_b = sbb.max(sb * sb / nf);
+        if va <= scale_a * 1e-12 || vb <= scale_b * 1e-12 {
+            out[j] = f64::NAN;
+        } else {
+            out[j] = (cov / (va * vb).sqrt()).clamp(-1.0, 1.0);
+        }
     }
     out
 }
@@ -193,5 +207,24 @@ mod tests {
         assert!((r[0] - 1.0).abs() < 1e-9 && (r[1] - 1.0).abs() < 1e-9);
         let r2 = r2_cols(&y, &y);
         assert!((r2[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_column_is_nan_not_garbage() {
+        // Correlation against a constant column is undefined: it must come
+        // back NaN (for the NaN-skipping λ selection to drop), never a
+        // huge cancellation-noise score, and never perturb other columns.
+        let yhat = Mat::from_fn(20, 3, |i, j| (i as f64 + 1.0) * 1.7 + j as f64);
+        let mut y = yhat.clone();
+        for i in 0..20 {
+            y.set(i, 1, 7.25); // nonzero constant: worst cancellation case
+        }
+        let r = pearson_cols(&yhat, &y);
+        assert!((r[0] - 1.0).abs() < 1e-9);
+        assert!(r[1].is_nan(), "constant column gave {}", r[1]);
+        assert!((r[2] - 1.0).abs() < 1e-9);
+        // Constant prediction against varying truth is NaN too.
+        let r_rev = pearson_cols(&y, &yhat);
+        assert!(r_rev[1].is_nan());
     }
 }

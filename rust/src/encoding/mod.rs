@@ -36,19 +36,22 @@ pub struct RSummary {
 impl RSummary {
     pub fn from_rs(rs: &[f64], is_visual: &[bool]) -> Self {
         assert_eq!(rs.len(), is_visual.len());
+        // NaN scores (degenerate/constant targets, see `cv::pearson_cols`)
+        // carry no information: drop them from the summary statistics
+        // instead of poisoning means or panicking the sort.
         let mut vis: Vec<f64> = rs
             .iter()
             .zip(is_visual)
-            .filter(|(_, &v)| v)
+            .filter(|(r, &v)| v && !r.is_nan())
             .map(|(r, _)| *r)
             .collect();
         let other: Vec<f64> = rs
             .iter()
             .zip(is_visual)
-            .filter(|(_, &v)| !v)
+            .filter(|(r, &v)| !v && !r.is_nan())
             .map(|(r, _)| *r)
             .collect();
-        vis.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vis.sort_by(f64::total_cmp);
         let mean = |v: &[f64]| {
             if v.is_empty() {
                 0.0
@@ -59,14 +62,21 @@ impl RSummary {
         Self {
             mean_visual: mean(&vis),
             mean_other: mean(&other),
-            max_r: rs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            // f64::max skips NaN; an all-NaN/empty map falls back to the
+            // same 0.0 sentinel as the other statistics, not -inf.
+            max_r: match rs.iter().cloned().fold(f64::NEG_INFINITY, f64::max) {
+                m if m.is_finite() => m,
+                _ => 0.0,
+            },
             q95_visual: if vis.is_empty() {
                 0.0
             } else {
                 vis[((vis.len() - 1) as f64 * 0.95) as usize]
             },
+            // Same convention as the means: NaN (degenerate) targets are
+            // excluded from the denominator too.
             frac_above_0_2: rs.iter().filter(|&&r| r > 0.2).count() as f64
-                / rs.len().max(1) as f64,
+                / rs.iter().filter(|r| !r.is_nan()).count().max(1) as f64,
         }
     }
 }
@@ -116,24 +126,30 @@ pub fn run_null_encoding(blas: &Blas, ds: &EncodingDataset, opts: EncodeOpts, pe
     run_encoding(blas, &shuffled, opts)
 }
 
-/// Fisher z-average of correlations (stable mean of r values).
+/// Fisher z-average of correlations (stable mean of r values; NaN
+/// entries — degenerate targets — are skipped).
 pub fn fisher_mean(rs: &[f64]) -> f64 {
-    if rs.is_empty() {
+    let finite: Vec<f64> = rs.iter().copied().filter(|r| !r.is_nan()).collect();
+    if finite.is_empty() {
         return 0.0;
     }
-    let z: f64 = rs
+    let z: f64 = finite
         .iter()
         .map(|&r| r.clamp(-0.999999, 0.999999).atanh())
         .sum::<f64>()
-        / rs.len() as f64;
+        / finite.len() as f64;
     z.tanh()
 }
 
 /// Per-parcel r-map projected to the atlas (text-mode "brain map" output
-/// used by the figure harness).
+/// used by the figure harness). NaN scores are dropped before taking
+/// quantiles; an all-NaN map yields zeros.
 pub fn rmap_quantiles(rs: &[f64]) -> [f64; 5] {
-    let mut v: Vec<f64> = rs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = rs.iter().copied().filter(|r| !r.is_nan()).collect();
+    if v.is_empty() {
+        return [0.0; 5];
+    }
+    v.sort_by(f64::total_cmp);
     let q = |f: f64| v[(((v.len() - 1) as f64) * f) as usize];
     [q(0.05), q(0.25), q(0.5), q(0.75), q(0.95)]
 }
@@ -204,6 +220,23 @@ mod tests {
         assert_eq!(s.max_r, 0.9);
         let q = rmap_quantiles(&rs);
         assert!(q[0] <= q[2] && q[2] <= q[4]);
+    }
+
+    #[test]
+    fn summary_skips_nan_scores() {
+        // A degenerate target's NaN score (cv::pearson_cols on a constant
+        // column) must not panic the sort or poison the statistics.
+        let rs = vec![0.1, f64::NAN, 0.5, f64::NAN, 0.9];
+        let vis = vec![true, true, true, false, false];
+        let s = RSummary::from_rs(&rs, &vis);
+        assert!((s.mean_visual - 0.3).abs() < 1e-12);
+        assert!((s.mean_other - 0.9).abs() < 1e-12);
+        assert_eq!(s.max_r, 0.9);
+        assert!(s.q95_visual.is_finite());
+        let q = rmap_quantiles(&rs);
+        assert!(q.iter().all(|x| x.is_finite()));
+        assert!(fisher_mean(&rs).is_finite());
+        assert_eq!(rmap_quantiles(&[f64::NAN]), [0.0; 5]);
     }
 
     #[test]

@@ -10,7 +10,23 @@
 //! eigendecomposition of the Gram matrix K = XᵀX = V E Vᵀ carries the same
 //! decompose-once/reuse-across-λ structure as the SVD of X (DESIGN.md §2).
 
+use std::cell::Cell;
+
 use super::Mat;
+
+thread_local! {
+    static EIGH_CALLS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of Jacobi eigendecompositions performed by *this thread* since
+/// it started. Instrumentation for the decompose-once contract of the
+/// plan/execute ridge path (`ridge::plan`): building a `DesignPlan` costs
+/// exactly `splits + 1` calls, and batch fits against it cost zero —
+/// tests measure deltas of this counter to pin that down. Thread-local so
+/// concurrently running tests cannot race each other's counts.
+pub fn eigh_calls_this_thread() -> usize {
+    EIGH_CALLS.with(|c| c.get())
+}
 
 /// Eigendecomposition result: ascending eigenvalues, matching columns.
 #[derive(Clone, Debug)]
@@ -46,6 +62,7 @@ fn offdiag_norm(a: &Mat) -> f64 {
 /// and keeps all arithmetic unit-stride). The eigenvector accumulator is
 /// stored transposed (rows = vectors) so its update is contiguous too.
 pub fn jacobi_eigh(k: &Mat, max_sweeps: usize, tol: f64) -> Eigh {
+    EIGH_CALLS.with(|c| c.set(c.get() + 1));
     let p = k.rows();
     assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
     let mut a = k.clone();

@@ -14,6 +14,16 @@
 //! BLAS backend, Jacobi eigh), so the simulated figures inherit real
 //! constants — including the real MKL-like/OpenBLAS-like performance gap
 //! that drives Fig. 6.
+//!
+//! Mirroring the plan/execute split of `ridge::plan`, the cost model is
+//! factored into **shared-decomposition** terms
+//! ([`split_decompose_secs`], [`full_decompose_secs`] — target-count
+//! independent, computed once per plan) and **per-batch** terms
+//! ([`batch_sweep_secs`] — linear in the batch's target count), with
+//! `ridge_compute_secs = plan_decompose_secs + batch_sweep_secs` as the
+//! self-contained single-fit total. The coordinator's B-MOR task graph
+//! prices its decompose and sweep tasks with [`decompose_task_cost`] and
+//! [`sweep_task_cost`] respectively.
 
 use crate::blas::{Backend, Blas};
 use crate::cluster::TaskCost;
@@ -131,26 +141,71 @@ pub struct FitShape {
     pub splits: usize,
 }
 
-/// Predicted single-thread compute seconds of one RidgeCV fit over
-/// `shape.t` targets, decomposed like `ridge::RidgeTimings`.
-pub fn ridge_compute_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
-    let FitShape { n, p, t, r, splits } = shape;
+/// Shared-decomposition seconds for ONE validation split: Gram matrix of
+/// the training rows, Jacobi eigendecomposition, and the validation
+/// projection A = X_val·V. Target-count independent — this is the work
+/// the plan/execute refactor computes once and shares across batches.
+pub fn split_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    let FitShape { n, p, splits, .. } = shape;
     let s = splits.max(1) as f64;
-    // Per split: gram + eigh (T_M-ish) at GEMM/eigh throughputs + sweep
-    // (T_W) at GEMM throughput; plus one final fit.
     let gemm_tp = cal.gemm_flops(backend);
     let gram = 2.0 * (p * p) as f64 * n as f64 / gemm_tp;
     let eigh = 12.0 * (p as f64).powi(3) / cal.eigh_flops;
-    let proj = 2.0 * (p * p) as f64 * t as f64 / gemm_tp; // Z = VᵀC
-    // Validation sweep: per λ a (nv×p)(p×t) product with nv ≈ n/splits.
     let nv = (n as f64 / s).max(1.0);
+    let aproj = 2.0 * nv * (p * p) as f64 / gemm_tp;
+    gram + eigh + aproj
+}
+
+/// Shared-decomposition seconds for the full training set (final-fit
+/// factorization: no validation projection).
+pub fn full_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    let FitShape { n, p, .. } = shape;
+    let gemm_tp = cal.gemm_flops(backend);
+    let gram = 2.0 * (p * p) as f64 * n as f64 / gemm_tp;
+    let eigh = 12.0 * (p as f64).powi(3) / cal.eigh_flops;
+    gram + eigh
+}
+
+/// Total shared-plan seconds: one decompose per split + the full-train
+/// decompose (the `s+1` eigendecompositions of `ridge::DesignPlan`).
+pub fn plan_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    let s = shape.splits.max(1) as f64;
+    s * split_decompose_secs(cal, backend, shape)
+        + full_decompose_secs(cal, backend, shape)
+}
+
+/// Target-dependent seconds for a batch of `shape.t` targets against an
+/// already-built plan: per split the C = XtrᵀY gram, the Z = VᵀC
+/// projection and the λ validation sweep, plus the final-fit C,
+/// projection and solve (everything `ridge::fit_batch_with_plan` does).
+pub fn batch_sweep_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    let FitShape { n, p, t, r, splits } = shape;
+    let s = splits.max(1) as f64;
+    let gemm_tp = cal.gemm_flops(backend);
+    let nv = (n as f64 / s).max(1.0);
+    // C = XᵀY: (ntr×p)ᵀ(ntr×t) per split, (n×p)ᵀ(n×t) for the final fit
+    // (lands in RidgeTimings::gram_secs on the functional path).
+    let ntr = (n as f64 - nv).max(1.0);
+    let c_split = 2.0 * ntr * p as f64 * t as f64 / gemm_tp;
+    let c_full = 2.0 * (n * p) as f64 * t as f64 / gemm_tp;
+    let proj = 2.0 * (p * p) as f64 * t as f64 / gemm_tp; // Z = VᵀC
+    // Validation sweep: per λ a (nv×p)(p×t) product.
     let sweep = r as f64 * 2.0 * nv * p as f64 * t as f64 / gemm_tp;
     let solve = 2.0 * (p * p) as f64 * t as f64 / gemm_tp;
-    (s + 1.0) * (gram + eigh) + s * (proj + sweep) + proj + solve
+    s * (c_split + proj + sweep) + c_full + proj + solve
+}
+
+/// Predicted single-thread compute seconds of one self-contained RidgeCV
+/// fit over `shape.t` targets (decompose + sweep), decomposed like
+/// `ridge::RidgeTimings`. Exactly the shared-plan cost plus one batch
+/// sweep — the identity the B-MOR task graph is built on.
+pub fn ridge_compute_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    plan_decompose_secs(cal, backend, shape) + batch_sweep_secs(cal, backend, shape)
 }
 
 /// Task cost (compute + staging bytes) for a worker fitting `t_batch`
-/// targets of a problem whose full design matrix is (n × p).
+/// targets of a problem whose full design matrix is (n × p), decomposing
+/// from scratch (the Single / MOR task shape).
 pub fn batch_task_cost(
     cal: &Calibration,
     backend: Backend,
@@ -166,6 +221,49 @@ pub fn batch_task_cost(
     TaskCost {
         compute_secs: secs,
         input_bytes: y_bytes + x_bytes,
+        output_bytes: w_bytes,
+    }
+}
+
+/// Task cost of one shared decompose task of the B-MOR plan graph: stages
+/// X in, factorizes, ships the factors (V and e, plus A for validation
+/// splits) back for the sweep tasks to pick up.
+pub fn decompose_task_cost(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    with_val_projection: bool,
+) -> TaskCost {
+    let secs = if with_val_projection {
+        split_decompose_secs(cal, backend, shape)
+    } else {
+        full_decompose_secs(cal, backend, shape)
+    };
+    let x_bytes = (shape.n * shape.p * 8) as f64;
+    let nv = (shape.n / shape.splits.max(1)).max(1);
+    let factor_bytes = (shape.p * shape.p * 8 + shape.p * 8) as f64
+        + if with_val_projection { (nv * shape.p * 8) as f64 } else { 0.0 };
+    TaskCost {
+        compute_secs: secs,
+        input_bytes: x_bytes,
+        output_bytes: factor_bytes,
+    }
+}
+
+/// Task cost of one per-batch sweep task against the shared plan: stages
+/// the Y batch, X (for C = XᵀY) and the broadcast factors of every
+/// decompose task, then ships the batch's weights back.
+pub fn sweep_task_cost(cal: &Calibration, backend: Backend, shape: FitShape) -> TaskCost {
+    let secs = batch_sweep_secs(cal, backend, shape);
+    let y_bytes = (shape.n * shape.t * 8) as f64;
+    let x_bytes = (shape.n * shape.p * 8) as f64;
+    let s = shape.splits.max(1);
+    let nv = (shape.n / s).max(1);
+    let plan_bytes = ((s + 1) * shape.p * shape.p * 8 + s * nv * shape.p * 8) as f64;
+    let w_bytes = (shape.p * shape.t * 8) as f64;
+    TaskCost {
+        compute_secs: secs,
+        input_bytes: y_bytes + x_bytes + plan_bytes,
         output_bytes: w_bytes,
     }
 }
@@ -228,6 +326,56 @@ mod tests {
         );
         // Doubling t should grow time, sub-2× (the T_M part is shared).
         assert!(t2 > t1 * 1.2 && t2 < t1 * 2.0, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn decompose_plus_sweep_is_the_full_fit() {
+        // The identity the B-MOR graph is built on: a self-contained fit
+        // costs exactly the shared plan plus one batch sweep.
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 1500, p: 256, t: 4000, r: 11, splits: 3 };
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let total = ridge_compute_secs(&cal, backend, shape);
+            let parts = plan_decompose_secs(&cal, backend, shape)
+                + batch_sweep_secs(&cal, backend, shape);
+            assert!((total - parts).abs() < 1e-12 * total.max(1.0));
+        }
+    }
+
+    #[test]
+    fn decompose_cost_independent_of_targets_sweep_linear() {
+        let cal = Calibration::nominal();
+        let base = FitShape { n: 1000, p: 128, t: 500, r: 11, splits: 3 };
+        let wide = FitShape { t: 5000, ..base };
+        let b = Backend::MklLike;
+        assert_eq!(
+            split_decompose_secs(&cal, b, base),
+            split_decompose_secs(&cal, b, wide)
+        );
+        assert_eq!(
+            full_decompose_secs(&cal, b, base),
+            full_decompose_secs(&cal, b, wide)
+        );
+        let s1 = batch_sweep_secs(&cal, b, base);
+        let s10 = batch_sweep_secs(&cal, b, wide);
+        assert!((s10 / s1 - 10.0).abs() < 1e-9, "sweep not linear in t: {}", s10 / s1);
+    }
+
+    #[test]
+    fn sweep_task_ships_plan_factors() {
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 1000, p: 128, t: 100, r: 11, splits: 3 };
+        let sweep = sweep_task_cost(&cal, Backend::MklLike, shape);
+        let plain = batch_task_cost(&cal, Backend::MklLike, shape, 1);
+        // Same weight output, but the sweep stages the broadcast factors
+        // on top of X + Y, and does strictly less compute.
+        assert_eq!(sweep.output_bytes, plain.output_bytes);
+        assert!(sweep.input_bytes > plain.input_bytes);
+        assert!(sweep.compute_secs < plain.compute_secs);
+        let dec = decompose_task_cost(&cal, Backend::MklLike, shape, true);
+        let dec_full = decompose_task_cost(&cal, Backend::MklLike, shape, false);
+        assert!(dec.output_bytes > dec_full.output_bytes, "A projection ships");
+        assert!(dec.compute_secs > dec_full.compute_secs);
     }
 
     #[test]

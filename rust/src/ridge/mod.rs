@@ -1,22 +1,37 @@
-//! Native multi-target ridge regression with cross-validated λ.
+//! Native multi-target ridge regression with cross-validated λ, split
+//! into a **plan/execute** architecture.
 //!
-//! The rust twin of scikit-learn's RidgeCV as analyzed in the paper §2.3.1:
-//! decompose the training design once (eigh of the Gram matrix — same
-//! reuse structure as the SVD of X, DESIGN.md §2), then sweep the whole λ
-//! grid and all brain targets against that one decomposition:
+//! The rust twin of scikit-learn's RidgeCV as analyzed in the paper
+//! §2.3.1, factored the way Algorithm 1's complexity analysis wants it:
 //!
-//!   K = XᵀX = V E Vᵀ,  C = XᵀY,  Z = VᵀC
-//!   W_λ = V (Z ⊘ (e+λ)),  scores from X_val W_λ
+//! * **plan** ([`DesignPlan`], `ridge::plan`) — everything that depends
+//!   only on the design matrix `X` and the CV splits: per-split Gram
+//!   matrix K = XᵀX = V E Vᵀ (Jacobi eigh) and validation projection
+//!   A = X_val·V, plus the full-train decomposition. Built **once** and
+//!   shared by every target batch.
+//! * **execute** ([`fit_batch_with_plan`]) — the target-dependent sweep
+//!   for one batch Y: C = XᵀY, Z = VᵀC, W_λ = V (Z ⊘ (e+λ)), validation
+//!   scores from A·(Z ⊘ (e+λ)), final weights at λ*.
+//!
+//! [`fit_ridge_cv`] is a thin wrapper (build plan → fit one batch) so
+//! single-batch callers keep the old one-call API; the coordinator builds
+//! one plan and fans B-MOR batches out against it, making the number of
+//! O(p³) eigendecompositions independent of the batch count.
 //!
 //! Per-stage timings are recorded so `perfmodel/` can calibrate the T_M /
 //! T_W complexity terms from real measurements. The Cholesky-per-λ
-//! variant (`fit_naive_per_lambda`) is the paper's O(p³r) strawman,
-//! kept for the complexity-validation bench.
+//! variant (`fit_naive_per_lambda`) is the paper's O(p³r) strawman, and
+//! [`fit_ridge_cv_unshared`] keeps the pre-plan decompose-per-call path
+//! for the planned-vs-unplanned benches and parity tests.
+
+pub mod plan;
 
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
 use crate::linalg::{cholesky, eigh::jacobi_eigh, Mat};
 use crate::util::Stopwatch;
+
+pub use plan::{fit_batch_with_plan, DesignPlan, SplitDesign};
 
 /// The paper's λ grid (§2.2.4).
 pub const LAMBDA_GRID: [f64; 11] = [
@@ -58,7 +73,8 @@ pub struct RidgeCvFit {
     pub best_lambda: f64,
     /// Index of the selected λ in the grid.
     pub best_idx: usize,
-    /// Mean validation score per λ (averaged over targets and splits).
+    /// Mean validation score per λ (averaged over targets and splits,
+    /// skipping non-finite per-target scores).
     pub mean_scores: Vec<f64>,
     /// Per-(λ, target) validation scores averaged over splits (r × t).
     pub scores: Mat,
@@ -67,8 +83,30 @@ pub struct RidgeCvFit {
 
 /// Eigendecomposition-reusing ridge CV over explicit validation splits.
 ///
-/// Mirrors Algorithm 1's inner loop for a single batch of targets.
+/// Thin wrapper over the plan API: builds a [`DesignPlan`] for `x` and
+/// fits all of `y` as one batch. Callers fitting many batches against the
+/// same design should build the plan once and call
+/// [`fit_batch_with_plan`] per batch instead (what `coordinator::fit`
+/// does) — this wrapper pays the full decomposition on every call.
 pub fn fit_ridge_cv(
+    blas: &Blas,
+    x: &Mat,
+    y: &Mat,
+    lambdas: &[f64],
+    splits: &[Split],
+) -> RidgeCvFit {
+    assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
+    let plan = DesignPlan::build(blas, x, lambdas, splits);
+    let mut fit = fit_batch_with_plan(blas, &plan, y);
+    fit.timings.add(&plan.build_timings);
+    fit
+}
+
+/// Pre-plan reference path: decompose the design from scratch inside the
+/// call, once per split (+ once for the final fit). Kept for the
+/// planned-vs-unplanned benches and as the parity oracle for
+/// [`fit_batch_with_plan`]; new callers should use [`fit_ridge_cv`].
+pub fn fit_ridge_cv_unshared(
     blas: &Blas,
     x: &Mat,
     y: &Mat,
@@ -93,11 +131,10 @@ pub fn fit_ridge_cv(
     }
     scores_acc.scale(1.0 / splits.len() as f64);
 
-    // Shared λ*: argmax of the target-mean validation score (paper §2.2.4).
-    let mean_scores: Vec<f64> = (0..r)
-        .map(|li| scores_acc.row(li).iter().sum::<f64>() / t as f64)
-        .collect();
-    let best_idx = argmax(&mean_scores);
+    // Shared λ*: argmax of the target-mean validation score (paper
+    // §2.2.4), NaN-safe like the plan path.
+    let mean_scores: Vec<f64> = (0..r).map(|li| nanmean(scores_acc.row(li))).collect();
+    let best_idx = argmax_finite(&mean_scores);
     let best_lambda = lambdas[best_idx];
 
     // Final fit on the full training set at λ*.
@@ -123,6 +160,10 @@ pub fn fit_ridge_cv(
 }
 
 /// Validation scores for the whole λ grid on one split (r × t).
+///
+/// Used by the unshared path; the plan path hoists the decomposition and
+/// A projection out of the per-batch work entirely. The λ loop reuses two
+/// preallocated buffers — no allocation per λ.
 pub fn sweep_scores(
     blas: &Blas,
     xtr: &Mat,
@@ -148,9 +189,10 @@ pub fn sweep_scores(
     let a = blas.gemm(xval, &dec.vectors); // (nv × p)
     let mut scores = Mat::zeros(r, t);
     let mut zs = Mat::zeros(z.rows(), z.cols());
+    let mut pred = Mat::zeros(a.rows(), t);
     for (li, &lam) in lambdas.iter().enumerate() {
         scale_rows_into(&z, &dec.values, lam, &mut zs);
-        let pred = blas.gemm(&a, &zs); // (nv × t)
+        blas.gemm_into(&a, &zs, &mut pred); // (nv × t), overwritten per λ
         let rs = pearson_cols(&pred, yval);
         scores.row_mut(li).copy_from_slice(&rs);
     }
@@ -166,12 +208,29 @@ pub fn gram(blas: &Blas, x: &Mat, y: &Mat) -> (Mat, Mat) {
 /// W = V (Z ⊘ (e+λ)).
 pub fn weights_for_lambda(blas: &Blas, v: &Mat, e: &[f64], z: &Mat, lam: f64) -> Mat {
     let mut zs = Mat::zeros(z.rows(), z.cols());
-    scale_rows_into(z, e, lam, &mut zs);
-    blas.gemm(v, &zs)
+    let mut w = Mat::zeros(v.rows(), z.cols());
+    weights_for_lambda_into(blas, v, e, z, lam, &mut zs, &mut w);
+    w
+}
+
+/// W = V (Z ⊘ (e+λ)) into caller-owned buffers: `zs` is (p × t) scratch
+/// for the scaled Z, `w` the (p × t) output. Sweep callers preallocate
+/// both once instead of allocating per λ.
+pub fn weights_for_lambda_into(
+    blas: &Blas,
+    v: &Mat,
+    e: &[f64],
+    z: &Mat,
+    lam: f64,
+    zs: &mut Mat,
+    w: &mut Mat,
+) {
+    scale_rows_into(z, e, lam, zs);
+    blas.gemm_into(v, zs, w);
 }
 
 /// zs[i, :] = z[i, :] / (e[i] + λ).
-fn scale_rows_into(z: &Mat, e: &[f64], lam: f64, zs: &mut Mat) {
+pub(crate) fn scale_rows_into(z: &Mat, e: &[f64], lam: f64, zs: &mut Mat) {
     assert_eq!(z.shape(), zs.shape());
     assert_eq!(z.rows(), e.len());
     for i in 0..z.rows() {
@@ -208,14 +267,39 @@ pub fn predict(blas: &Blas, x: &Mat, w: &Mat) -> Mat {
     blas.gemm(x, w)
 }
 
-fn argmax(xs: &[f64]) -> usize {
-    let mut best = 0;
+/// Index of the largest non-NaN value; strict `>` keeps the first of
+/// ties. NaN entries are skipped entirely — under the naive
+/// `if x > xs[best]` scan a leading NaN silently wins, poisoning λ
+/// selection. Falls back to 0 when nothing is comparable.
+pub(crate) fn argmax_finite(xs: &[f64]) -> usize {
+    let mut best: Option<usize> = None;
     for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if x <= xs[b] => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
+}
+
+/// Mean of the non-NaN entries (NaN if none are).
+pub(crate) fn nanmean(xs: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for &x in xs {
+        if !x.is_nan() {
+            sum += x;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        f64::NAN
+    } else {
+        sum / count as f64
+    }
 }
 
 #[cfg(test)]
@@ -338,5 +422,75 @@ mod tests {
         let pred = predict(&b, &xte, &fit.weights);
         let rs = pearson_cols(&pred, &yte);
         assert!(rs.iter().all(|&r| r > 0.9), "{rs:?}");
+    }
+
+    #[test]
+    fn wrapper_matches_unshared_reference() {
+        let (x, y, _) = planted(70, 9, 6, 0.4, 9);
+        let splits = kfold(70, 3, Some(6));
+        let b = blas();
+        let planned = fit_ridge_cv(&b, &x, &y, &LAMBDA_GRID, &splits);
+        let unshared = fit_ridge_cv_unshared(&b, &x, &y, &LAMBDA_GRID, &splits);
+        assert_eq!(planned.best_idx, unshared.best_idx);
+        assert!(planned.weights.max_abs_diff(&unshared.weights) < 1e-10);
+        assert!(planned.scores.max_abs_diff(&unshared.scores) < 1e-10);
+    }
+
+    #[test]
+    fn argmax_skips_nan() {
+        assert_eq!(argmax_finite(&[f64::NAN, 0.2, 0.5, 0.1]), 2);
+        assert_eq!(argmax_finite(&[0.9, f64::NAN, 0.5]), 0);
+        // Under the old `x > xs[best]` scan a leading NaN won by default.
+        assert_eq!(argmax_finite(&[f64::NAN, -1.0]), 1);
+        assert_eq!(argmax_finite(&[f64::NAN, f64::NAN]), 0); // fallback
+        assert_eq!(argmax_finite(&[0.1, 0.3, 0.3]), 1); // first of ties
+        assert!((nanmean(&[1.0, f64::NAN, 3.0]) - 2.0).abs() < 1e-15);
+        assert!(nanmean(&[f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn nan_target_column_does_not_poison_lambda_selection() {
+        // Regression test for the argmax NaN fix: a degenerate target
+        // whose validation scores go NaN (here forced via a NaN sample,
+        // the worst case of the constant-column cancellation path) must
+        // not affect λ selection or the other targets' weights.
+        let (x, y, _) = planted(60, 8, 5, 0.2, 10);
+        let splits = kfold(60, 3, Some(7));
+        let b = blas();
+        let clean = fit_ridge_cv(&b, &x, &y.cols_slice(0, 4), &LAMBDA_GRID, &splits);
+
+        let mut poisoned = y.clone();
+        for i in 0..poisoned.rows() {
+            poisoned.set(i, 4, f64::NAN);
+        }
+        let fit = fit_ridge_cv(&b, &x, &poisoned, &LAMBDA_GRID, &splits);
+        assert_eq!(fit.best_idx, clean.best_idx, "NaN column changed λ*");
+        assert!(fit.best_lambda.is_finite());
+        assert!(fit.mean_scores.iter().all(|s| s.is_finite()));
+        // Clean columns' weights unaffected (C = XᵀY is column-separable).
+        for j in 0..4 {
+            for i in 0..8 {
+                assert!((fit.weights.get(i, j) - clean.weights.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_target_column_keeps_selection_finite() {
+        // A constant voxel column (zero variance): `pearson_cols` reports
+        // its validation scores as NaN, and the NaN-skipping selection
+        // must stay finite and match the fit without that column.
+        let (x, y, _) = planted(60, 8, 4, 0.2, 11);
+        let splits = kfold(60, 3, Some(8));
+        let b = blas();
+        let clean = fit_ridge_cv(&b, &x, &y.cols_slice(0, 3), &LAMBDA_GRID, &splits);
+
+        let mut with_const = y.clone();
+        for i in 0..with_const.rows() {
+            with_const.set(i, 3, 7.25);
+        }
+        let fit = fit_ridge_cv(&b, &x, &with_const, &LAMBDA_GRID, &splits);
+        assert_eq!(fit.best_idx, clean.best_idx);
+        assert!(fit.mean_scores.iter().all(|s| s.is_finite()));
     }
 }

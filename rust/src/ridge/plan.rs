@@ -1,0 +1,287 @@
+//! Plan/execute split of ridge CV: the shared design decomposition.
+//!
+//! The paper's Algorithm 1 partitions brain targets into batches, but the
+//! expensive factorizations — the Gram matrix K = XᵀX and its O(p³)
+//! Jacobi eigendecomposition, once per CV split plus once on the full
+//! training set — depend only on the design matrix `X` and the split
+//! indices, never on which targets a batch owns. [`DesignPlan`] computes
+//! them exactly once; [`fit_batch_with_plan`] then performs only the
+//! target-dependent work per batch:
+//!
+//!   plan  (shared):  per split  K = XtrᵀXtr = V E Vᵀ,  A = X_val·V
+//!                    full train K = XᵀX = V E Vᵀ
+//!   batch (per Y):   C = XtrᵀYtr,  Z = VᵀC,
+//!                    per λ: pred = A (Z ⊘ (e+λ)),  Pearson vs Y_val,
+//!                    final  W = V (Z ⊘ (e+λ*))
+//!
+//! With c batches this drops the decomposition cost from c·(s+1) eigh
+//! calls to s+1 — the decompose-once reuse structure the paper's
+//! complexity analysis (§3, Eq. 7) is built on. The per-λ sweep reuses
+//! one pair of preallocated buffers instead of allocating a fresh
+//! prediction matrix per λ.
+
+use crate::blas::Blas;
+use crate::cv::{pearson_cols, Split};
+use crate::linalg::{eigh::jacobi_eigh, Mat};
+use crate::util::Stopwatch;
+
+use super::{
+    argmax_finite, nanmean, scale_rows_into, weights_for_lambda_into, RidgeCvFit, RidgeTimings,
+};
+
+/// Target-independent factorization of one CV split's training design.
+#[derive(Clone, Debug)]
+pub struct SplitDesign {
+    /// Gathered training rows of X for this split (ntr × p) — kept so the
+    /// per-batch C = XtrᵀYtr needs no re-gather.
+    pub xtr: Mat,
+    /// Row indices (into the full design) used to gather Y training rows.
+    pub train_idx: Vec<usize>,
+    /// Row indices used to gather Y validation rows.
+    pub val_idx: Vec<usize>,
+    /// Eigenvectors V of K = XtrᵀXtr (p × p).
+    pub v: Mat,
+    /// Eigenvalues of K, ascending.
+    pub e: Vec<f64>,
+    /// Validation projection A = X_val · V (nv × p).
+    pub a: Mat,
+}
+
+/// The shared plan: everything a batch fit needs that does not depend on
+/// the targets. Build once, fan all batches out against it.
+#[derive(Clone, Debug)]
+pub struct DesignPlan {
+    /// Owned copy of the full design matrix (n × p), for the final-fit
+    /// C = XᵀY of each batch.
+    pub x: Mat,
+    /// Per-split factorizations.
+    pub splits: Vec<SplitDesign>,
+    /// Full-training-set eigenvectors (p × p).
+    pub v_full: Mat,
+    /// Full-training-set eigenvalues, ascending.
+    pub e_full: Vec<f64>,
+    /// The λ grid every batch sweeps.
+    pub lambdas: Vec<f64>,
+    /// Wall-clock spent building the plan, by stage.
+    pub build_timings: RidgeTimings,
+}
+
+impl DesignPlan {
+    /// Factorize the design once for all batches: per split, the Gram
+    /// matrix, its eigendecomposition and the validation projection; plus
+    /// the full-train decomposition for the final fit. Performs exactly
+    /// `splits.len() + 1` eigendecompositions.
+    pub fn build(blas: &Blas, x: &Mat, lambdas: &[f64], splits: &[Split]) -> DesignPlan {
+        assert!(!lambdas.is_empty(), "empty λ grid");
+        assert!(!splits.is_empty(), "need at least one CV split");
+        let mut tim = RidgeTimings::default();
+        let mut designs = Vec::with_capacity(splits.len());
+        for split in splits {
+            let xtr = x.rows_gather(&split.train);
+            let xval = x.rows_gather(&split.val);
+
+            let sw = Stopwatch::start();
+            let k = blas.syrk(&xtr);
+            tim.gram_secs += sw.secs();
+
+            let sw = Stopwatch::start();
+            let dec = jacobi_eigh(&k, 30, 1e-12);
+            tim.eigh_secs += sw.secs();
+
+            let sw = Stopwatch::start();
+            let a = blas.gemm(&xval, &dec.vectors);
+            tim.sweep_secs += sw.secs();
+
+            designs.push(SplitDesign {
+                xtr,
+                train_idx: split.train.clone(),
+                val_idx: split.val.clone(),
+                v: dec.vectors,
+                e: dec.values,
+                a,
+            });
+        }
+
+        let sw = Stopwatch::start();
+        let k = blas.syrk(x);
+        tim.gram_secs += sw.secs();
+        let sw = Stopwatch::start();
+        let dec = jacobi_eigh(&k, 30, 1e-12);
+        tim.eigh_secs += sw.secs();
+
+        DesignPlan {
+            x: x.clone(),
+            splits: designs,
+            v_full: dec.vectors,
+            e_full: dec.values,
+            lambdas: lambdas.to_vec(),
+            build_timings: tim,
+        }
+    }
+
+    /// Eigendecompositions this plan performed (one per split + full).
+    pub fn decompositions(&self) -> usize {
+        self.splits.len() + 1
+    }
+}
+
+/// Fit one batch of targets against a shared [`DesignPlan`]: only the
+/// O(p·n·t + p²·t + nv·p·t·r) target-dependent work — no Gram matrices,
+/// no eigendecompositions.
+///
+/// `y` holds the batch's target columns over the same rows the plan was
+/// built from. Returned timings cover this call only; add
+/// `plan.build_timings` (once, not per batch) for the full account.
+pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFit {
+    assert_eq!(plan.x.rows(), y.rows(), "plan/Y row mismatch");
+    let t = y.cols();
+    let r = plan.lambdas.len();
+    let p = plan.x.cols();
+    let mut timings = RidgeTimings::default();
+    let mut scores_acc = Mat::zeros(r, t);
+    // One scratch for the λ-scaled Z, reused across splits, λ values and
+    // the final solve (the sweep's only per-λ work writes into it).
+    let mut zs = Mat::zeros(p, t);
+
+    for sd in &plan.splits {
+        let ytr = y.rows_gather(&sd.train_idx);
+        let yval = y.rows_gather(&sd.val_idx);
+
+        let sw = Stopwatch::start();
+        let c = blas.at_b(&sd.xtr, &ytr);
+        timings.gram_secs += sw.secs();
+
+        let sw = Stopwatch::start();
+        let z = blas.at_b(&sd.v, &c);
+        // One prediction buffer per split (fold sizes differ by one row),
+        // overwritten per λ instead of freshly allocated.
+        let mut pred = Mat::zeros(sd.a.rows(), t);
+        for (li, &lam) in plan.lambdas.iter().enumerate() {
+            scale_rows_into(&z, &sd.e, lam, &mut zs);
+            blas.gemm_into(&sd.a, &zs, &mut pred);
+            let rs = pearson_cols(&pred, &yval);
+            for (acc, &rv) in scores_acc.row_mut(li).iter_mut().zip(&rs) {
+                *acc += rv;
+            }
+        }
+        timings.sweep_secs += sw.secs();
+    }
+    scores_acc.scale(1.0 / plan.splits.len() as f64);
+
+    // Shared λ*: argmax of the target-mean validation score, skipping
+    // non-finite entries (a NaN score — e.g. Pearson on a constant voxel
+    // column — must never win or poison selection).
+    let mean_scores: Vec<f64> = (0..r).map(|li| nanmean(scores_acc.row(li))).collect();
+    let best_idx = argmax_finite(&mean_scores);
+    let best_lambda = plan.lambdas[best_idx];
+
+    // Final fit at λ* against the shared full-train decomposition.
+    let sw = Stopwatch::start();
+    let c = blas.at_b(&plan.x, y);
+    timings.gram_secs += sw.secs();
+    let sw = Stopwatch::start();
+    let z = blas.at_b(&plan.v_full, &c);
+    let mut weights = Mat::zeros(p, t);
+    weights_for_lambda_into(
+        blas,
+        &plan.v_full,
+        &plan.e_full,
+        &z,
+        best_lambda,
+        &mut zs,
+        &mut weights,
+    );
+    timings.solve_secs += sw.secs();
+
+    RidgeCvFit {
+        weights,
+        best_lambda,
+        best_idx,
+        mean_scores,
+        scores: scores_acc,
+        timings,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+    use crate::cv::kfold;
+    use crate::ridge::{fit_ridge_cv_unshared, LAMBDA_GRID};
+    use crate::util::Pcg64;
+
+    fn blas() -> Blas {
+        Blas::new(Backend::MklLike, 1)
+    }
+
+    fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let mut y = blas().gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += 0.2 * rng.normal();
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn plan_shapes_and_count() {
+        let (x, _) = planted(60, 8, 4, 1);
+        let splits = kfold(60, 3, Some(0));
+        let b = blas();
+        let plan = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        assert_eq!(plan.decompositions(), 4);
+        assert_eq!(plan.splits.len(), 3);
+        assert_eq!(plan.v_full.shape(), (8, 8));
+        assert_eq!(plan.e_full.len(), 8);
+        for sd in &plan.splits {
+            assert_eq!(sd.v.shape(), (8, 8));
+            assert_eq!(sd.a.shape(), (sd.val_idx.len(), 8));
+            assert_eq!(sd.xtr.rows(), sd.train_idx.len());
+        }
+        assert!(plan.build_timings.total() > 0.0);
+    }
+
+    #[test]
+    fn batch_fit_matches_unshared_path() {
+        // The plan path must reproduce the per-batch decompose-from-scratch
+        // fit to roundoff, for every batch of a partition.
+        let (x, y) = planted(90, 10, 12, 2);
+        let splits = kfold(90, 3, Some(1));
+        let b = blas();
+        let plan = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        for (j0, j1) in [(0, 4), (4, 8), (8, 12), (0, 12)] {
+            let yb = y.cols_slice(j0, j1);
+            let planned = fit_batch_with_plan(&b, &plan, &yb);
+            let unshared = fit_ridge_cv_unshared(&b, &x, &yb, &LAMBDA_GRID, &splits);
+            assert_eq!(planned.best_idx, unshared.best_idx, "batch {j0}..{j1}");
+            assert!(
+                planned.weights.max_abs_diff(&unshared.weights) < 1e-10,
+                "batch {j0}..{j1}: {}",
+                planned.weights.max_abs_diff(&unshared.weights)
+            );
+            assert!(planned.scores.max_abs_diff(&unshared.scores) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn batch_of_one_column_matches_full_fit_column() {
+        // Column j of a full fit equals the 1-target batch fit of column j
+        // when both land on the same λ* (they must here: clean signal).
+        let (x, y) = planted(80, 8, 5, 3);
+        let splits = kfold(80, 2, Some(2));
+        let b = blas();
+        let plan = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        let full = fit_batch_with_plan(&b, &plan, &y);
+        for j in 0..5 {
+            let single = fit_batch_with_plan(&b, &plan, &y.cols_slice(j, j + 1));
+            if single.best_idx == full.best_idx {
+                for i in 0..8 {
+                    assert!((single.weights.get(i, 0) - full.weights.get(i, j)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+}

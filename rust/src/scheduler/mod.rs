@@ -313,6 +313,44 @@ mod tests {
     }
 
     #[test]
+    fn fan_in_graph_waits_for_all_sources() {
+        // The B-MOR plan shape: 4 "decompose" sources of uneven cost
+        // feeding 6 "sweep" sinks that each depend on ALL sources. No sink
+        // may start before the slowest source finishes, every task runs
+        // exactly once, and the makespan is bounded by critical path and
+        // serial sum.
+        let mut g = TaskGraph::default();
+        let srcs: Vec<usize> = (0..4)
+            .map(|i| g.add(format!("decompose-{i}"), cost(1.0 + i as f64 * 0.5), 1, &[]))
+            .collect();
+        for i in 0..6 {
+            g.add(format!("sweep-{i}"), cost(2.0), 1, &srcs);
+        }
+        let ex = DesExecutor::new(free_spec(3, 1));
+        let s = ex.run(&g);
+
+        let src_finish = srcs
+            .iter()
+            .map(|&i| s.tasks[i].finish)
+            .fold(0.0f64, f64::max);
+        for i in 4..10 {
+            assert!(
+                s.tasks[i].start >= src_finish - 1e-9,
+                "sink {i} started at {} before sources finished at {src_finish}",
+                s.tasks[i].start
+            );
+        }
+        let mut ids: Vec<usize> = s.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        // Critical path = slowest source (2.5) + one sink (2.0).
+        assert!((g.critical_path() - 4.5).abs() < 1e-9);
+        let serial: f64 = g.tasks.iter().map(|t| t.cost.compute_secs).sum();
+        assert!(s.makespan >= g.critical_path() - 1e-9);
+        assert!(s.makespan <= serial + 1e-9);
+    }
+
+    #[test]
     fn makespan_bounds_property() {
         check(
             "des-makespan-bounds",

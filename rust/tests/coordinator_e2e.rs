@@ -1,6 +1,7 @@
 //! End-to-end coordinator integration: distributed strategies on the
-//! synthetic Friends data, DES scaling sanity, and the full encoding
-//! pipeline through the coordinator.
+//! synthetic Friends data, DES scaling sanity (on the planned
+//! decompose→sweep task graph), and the full encoding pipeline through
+//! the coordinator.
 
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::cluster::ClusterSpec;
@@ -10,6 +11,7 @@ use fmri_encode::data::catalog::{Resolution, ScaleConfig};
 use fmri_encode::data::friends::{generate, FriendsConfig};
 use fmri_encode::perfmodel::{Calibration, FitShape};
 use fmri_encode::ridge;
+use fmri_encode::scheduler::DesExecutor;
 
 fn small_friends() -> FriendsConfig {
     FriendsConfig {
@@ -161,6 +163,43 @@ fn des_reproduces_paper_scaling_shape() {
         assert!(t < prev);
         prev = t;
     }
+}
+
+#[test]
+fn paper_scale_bmor_graph_is_staged() {
+    // At the paper's whole-brain scale the B-MOR simulation runs a real
+    // dependency graph: splits+1 decompose tasks with no deps, one sweep
+    // per batch depending on all of them; the DES must keep every sweep
+    // after the decompose stage and the makespan above the critical path.
+    let cal = Calibration::nominal();
+    let shape = FitShape { n: 2048, p: 512, t: 32_000, r: 11, splits: 3 };
+    let cfg = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 8,
+        threads_per_node: 32,
+        ..Default::default()
+    };
+    let g = coordinator::plan_graph(shape, &cfg, &cal);
+    let ndec = shape.splits + 1;
+    assert_eq!(g.len(), ndec + 8);
+    for i in 0..ndec {
+        assert!(g.deps[i].is_empty());
+    }
+    for i in ndec..g.len() {
+        assert_eq!(g.deps[i].len(), ndec);
+    }
+
+    let spec = ClusterSpec { nodes: cfg.nodes, ..ClusterSpec::default() };
+    let amdahl = spec.amdahl;
+    let s = DesExecutor::new(spec).run(&g);
+    let dec_finish = s.tasks[..ndec].iter().map(|t| t.finish).fold(0.0f64, f64::max);
+    for task in &s.tasks[ndec..] {
+        assert!(task.start >= dec_finish - 1e-9);
+    }
+    // critical_path() is single-thread seconds; with every task 32 threads
+    // wide the valid lower bound is the Amdahl-compressed critical path.
+    let cp_lower = g.critical_path() / amdahl.speedup(cfg.threads_per_node);
+    assert!(s.makespan >= cp_lower - 1e-9, "{} < {cp_lower}", s.makespan);
 }
 
 #[test]

@@ -1,0 +1,130 @@
+//! Plan/execute contract tests: the shared `DesignPlan` performs exactly
+//! one eigendecomposition per CV split (+1 full-train) no matter how many
+//! batches execute against it, batch fits do none at all, and the planned
+//! coordinator path reproduces the pre-refactor per-batch weights to
+//! roundoff.
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::coordinator::{self, batch_bounds, DistConfig, Strategy};
+use fmri_encode::cv::kfold;
+use fmri_encode::linalg::{eigh_calls_this_thread, Mat};
+use fmri_encode::ridge::{self, DesignPlan, LAMBDA_GRID};
+use fmri_encode::util::Pcg64;
+
+fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(&x, &w);
+    for v in y.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    (x, y)
+}
+
+#[test]
+fn plan_decomposes_once_regardless_of_batch_count() {
+    // The eigh counter is thread-local and this test drives plan + batch
+    // fits on its own thread, so concurrent tests cannot perturb it.
+    let (x, y) = planted(90, 12, 16, 1);
+    let splits = kfold(90, 3, Some(0));
+    let blas = Blas::new(Backend::MklLike, 1);
+
+    let before = eigh_calls_this_thread();
+    let plan = DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits);
+    let after_build = eigh_calls_this_thread();
+    assert_eq!(
+        after_build - before,
+        splits.len() + 1,
+        "plan build must cost exactly splits+1 eigendecompositions"
+    );
+    assert_eq!(plan.decompositions(), splits.len() + 1);
+
+    // Fan out every batch count from 1 to 16: ZERO further
+    // eigendecompositions, total stays splits+1.
+    for batches in [1, 2, 4, 8, 16] {
+        for (j0, j1) in batch_bounds(16, batches) {
+            let yb = y.cols_slice(j0, j1);
+            let _ = ridge::fit_batch_with_plan(&blas, &plan, &yb);
+        }
+        assert_eq!(
+            eigh_calls_this_thread(),
+            after_build,
+            "batch sweep performed an eigendecomposition at {batches} batches"
+        );
+    }
+}
+
+#[test]
+fn coordinator_builds_exactly_one_plan_on_the_leader() {
+    // `coordinator::fit` decomposes on the calling thread (plan build) and
+    // its workers run on spawned threads doing sweep-only work — so the
+    // caller-thread delta is exactly inner_folds+1 regardless of nodes.
+    let (x, y) = planted(100, 10, 12, 2);
+    for nodes in [1, 3, 6] {
+        let cfg = DistConfig {
+            strategy: Strategy::Bmor,
+            nodes,
+            ..Default::default()
+        };
+        let before = eigh_calls_this_thread();
+        let fit = coordinator::fit(&x, &y, &cfg);
+        let delta = eigh_calls_this_thread() - before;
+        assert_eq!(
+            delta,
+            cfg.inner_folds + 1,
+            "nodes={nodes}: leader performed {delta} decompositions"
+        );
+        assert_eq!(fit.batches.len(), nodes.min(12));
+    }
+}
+
+#[test]
+fn planned_bmor_matches_per_batch_reference_weights() {
+    // Acceptance: coordinator::fit(Bmor) must match the pre-refactor path
+    // (each batch decomposing from scratch via fit_ridge_cv_unshared) to
+    // 1e-10, for several batch counts.
+    let (x, y) = planted(120, 12, 18, 3);
+    let blas = Blas::new(Backend::MklLike, 1);
+    for nodes in [1, 2, 4, 6] {
+        let cfg = DistConfig {
+            strategy: Strategy::Bmor,
+            nodes,
+            ..Default::default()
+        };
+        let fit = coordinator::fit(&x, &y, &cfg);
+        let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+        for (bi, &(j0, j1)) in fit.batches.iter().enumerate() {
+            let yb = y.cols_slice(j0, j1);
+            let reference = ridge::fit_ridge_cv_unshared(&blas, &x, &yb, &LAMBDA_GRID, &splits);
+            assert_eq!(
+                fit.best_lambda_per_batch[bi], reference.best_lambda,
+                "nodes={nodes} batch={bi}: λ* diverged"
+            );
+            let wb = fit.weights.cols_slice(j0, j1);
+            let diff = wb.max_abs_diff(&reference.weights);
+            assert!(
+                diff < 1e-10,
+                "nodes={nodes} batch={bi}: weight diff {diff}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrapper_and_plan_reuse_agree_for_mor_batches() {
+    // One-column batches (MOR degenerate case) through the shared plan
+    // equal one-column fits through the thin wrapper.
+    let (x, y) = planted(70, 8, 6, 4);
+    let splits = kfold(70, 2, Some(1));
+    let blas = Blas::new(Backend::MklLike, 1);
+    let plan = DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits);
+    for j in 0..6 {
+        let yj = y.cols_slice(j, j + 1);
+        let a = ridge::fit_batch_with_plan(&blas, &plan, &yj);
+        let b = ridge::fit_ridge_cv(&blas, &x, &yj, &LAMBDA_GRID, &splits);
+        assert_eq!(a.best_idx, b.best_idx, "target {j}");
+        assert!(a.weights.max_abs_diff(&b.weights) < 1e-12, "target {j}");
+    }
+}
