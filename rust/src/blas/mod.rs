@@ -146,13 +146,34 @@ impl Blas {
         k
     }
 
-    /// y = A·x.
+    /// y = A·x. Parallel over row chunks on the pool like every other
+    /// entry point; the per-row kernel follows the backend tier (the
+    /// naive backend keeps the textbook sequential accumulation, the
+    /// tuned tiers use the unrolled dot kernel).
     pub fn gemv(&self, a: &Mat, x: &[f64]) -> Vec<f64> {
-        assert_eq!(a.cols(), x.len());
-        let mut y = vec![0.0; a.rows()];
-        for i in 0..a.rows() {
-            y[i] = dot(a.row(i), x);
-        }
+        assert_eq!(a.cols(), x.len(), "gemv shape mismatch");
+        let m = a.rows();
+        let mut y = vec![0.0; m];
+        // Disjoint row ranges per chunk; the base pointer travels as
+        // usize because raw pointers are not Sync (same pattern as
+        // gemm_into).
+        let ybase = y.as_mut_ptr() as usize;
+        let backend = self.backend;
+        let threads = self.pool.size();
+        self.pool.scope_chunks(m, threads, |s, e, _| {
+            if s == e {
+                return;
+            }
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut((ybase as *mut f64).add(s), e - s)
+            };
+            for (out, i) in rows.iter_mut().zip(s..e) {
+                *out = match backend {
+                    Backend::Naive => a.row(i).iter().zip(x).map(|(av, xv)| av * xv).sum(),
+                    Backend::OpenBlasLike | Backend::MklLike => dot(a.row(i), x),
+                };
+            }
+        });
         y
     }
 }
@@ -282,6 +303,41 @@ mod tests {
         let y = Blas::new(Backend::Naive, 1).gemv(&a, &x);
         assert_eq!(y, vec![0.0 + 4.0 - 3.0, 4.0 + 12.0 - 7.0, 8.0 + 20.0 - 11.0]);
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn gemv_backends_agree_with_reference() {
+        let mut rng = Pcg64::seeded(7);
+        for (m, k) in [(1, 1), (5, 7), (63, 33), (100, 64)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let x: Vec<f64> = rng.normal_vec(k);
+            let want: Vec<f64> = (0..m)
+                .map(|i| a.row(i).iter().zip(&x).map(|(av, xv)| av * xv).sum())
+                .collect();
+            for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+                let got = Blas::new(backend, 1).gemv(&a, &x);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-10, "{backend:?} ({m},{k})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_multithreaded_matches_single() {
+        // The row-chunk split must partition exactly: every row computed
+        // once, bit-identical to the single-thread result (per-row dots
+        // are independent, so the chunking cannot change rounding).
+        let mut rng = Pcg64::seeded(8);
+        let a = Mat::randn(131, 57, &mut rng);
+        let x: Vec<f64> = rng.normal_vec(57);
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let y1 = Blas::new(backend, 1).gemv(&a, &x);
+            for threads in [2, 4, 7] {
+                let yt = Blas::new(backend, threads).gemv(&a, &x);
+                assert_eq!(y1, yt, "{backend:?} threads={threads}");
+            }
+        }
     }
 
     #[test]

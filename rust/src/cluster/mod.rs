@@ -20,7 +20,7 @@
 
 pub mod sim;
 
-pub use sim::{ClusterSpec, DesCluster, SimReport, SimTask, TaskCost};
+pub use sim::{broadcast_share, ClusterSpec, DesCluster, SimReport, SimTask, TaskCost};
 
 /// Thread-scaling model: effective speed-up of one task using `threads`
 /// cores, following Amdahl's law with a per-thread coordination penalty.

@@ -67,6 +67,18 @@ pub struct TaskCost {
     pub output_bytes: f64,
 }
 
+/// Staging bytes one task is charged for a node-level broadcast input.
+///
+/// The DES charges I/O per task, but some inputs — the design matrix X,
+/// the shared plan's (V, e, A) factors — are pulled once per NODE and
+/// reused by every co-resident task. Dividing the broadcast by the number
+/// of tasks sharing the node's copy keeps the per-task accounting while
+/// the summed staging matches one transfer per node (`perfmodel` applies
+/// this to both the X and the plan broadcasts).
+pub fn broadcast_share(bytes: f64, shared_by: usize) -> f64 {
+    bytes / shared_by.max(1) as f64
+}
+
 /// Per-task outcome.
 #[derive(Clone, Copy, Debug)]
 pub struct TaskRecord {
@@ -314,6 +326,14 @@ mod tests {
         let tasks: Vec<SimTask> = (0..16).map(|i| task(i, 1.0, 1)).collect();
         let rep = des.run_bag(&tasks);
         assert!(rep.utilization > 0.0 && rep.utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn broadcast_share_amortizes_per_node_inputs() {
+        assert_eq!(broadcast_share(100.0, 4), 25.0);
+        assert_eq!(broadcast_share(100.0, 1), 100.0);
+        // shared_by is clamped to at least 1.
+        assert_eq!(broadcast_share(100.0, 0), 100.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The coordinator: the paper's system contribution, in plan/execute form.
+//! The coordinator: the paper's system contribution, in plan/execute form
+//! over ONE task graph with TWO executors.
 //!
 //! Implements the three parallelization strategies benchmarked in §4 and
 //! orchestrates them over the scheduler/cluster substrates:
@@ -11,30 +12,47 @@
 //!   (Algorithm 1): partition targets into c = min(t, nodes) contiguous
 //!   batches (Figs. 9–10, Eq. 7).
 //!
-//! Both paths share the plan/execute decomposition of `ridge::plan`:
+//! [`task_graph`] is the single source of truth for a strategy's DAG: it
+//! emits a [`TaskGraph`] whose nodes carry typed [`TaskKind`] payloads
+//! and `perfmodel` costs. For B-MOR that is the planned structure —
+//! `splits + 1` independent decompose tasks (per-split and full-train
+//! factorizations of `ridge::plan`) feeding an assemble barrier that
+//! joins them into the shared [`DesignPlan`], then one target-dependent
+//! sweep task per batch. Both execution paths consume that one graph via
+//! the [`Executor`] abstraction:
 //!
-//! * [`fit`] — the **functional path**: builds ONE shared [`DesignPlan`]
-//!   (s+1 eigendecompositions total, independent of batch count) and fans
-//!   the batches out over [`ThreadExecutor`] against it — each worker
-//!   only does the target-dependent sweep for its batch;
-//! * [`simulate`] — the **timing path**: [`plan_graph`] emits the same
-//!   structure as an explicit [`TaskGraph`] — decompose tasks feeding
-//!   per-batch sweep tasks — priced by the split `perfmodel` cost model
-//!   and scheduled on the cluster DES (this container has one core; see
-//!   DESIGN.md §3).
+//! * [`fit`] — the **functional path**: maps each [`TaskKind`] to a real
+//!   closure over X/Y ([`TaskGraph::map`], which cannot alter names,
+//!   costs or dependency edges) and runs it on [`ThreadExecutor`] —
+//!   decompositions happen in the decompose tasks (still `splits + 1`
+//!   eigendecompositions in total, now parallelizable), sweeps fan out
+//!   against the assembled plan;
+//! * [`simulate`] — the **timing path**: hands the identical nodes to
+//!   [`DesExecutor`], which prices them with the calibrated cost model
+//!   and schedules them on the cluster DES (this container has one core;
+//!   see DESIGN.md §3).
+//!
+//! Because both paths share one emission, the functional fit and the DES
+//! schedule cannot structurally diverge — pinned by the executor-parity
+//! tests.
 
 pub mod batching;
 
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
-use crate::cv::kfold;
+use crate::cv::{kfold, Split};
 use crate::linalg::Mat;
 use crate::perfmodel::{
-    batch_task_cost, decompose_task_cost, sweep_task_cost, Calibration, FitShape,
+    assemble_task_cost, batch_task_cost, decompose_task_cost, sweep_task_cost, Calibration,
+    FitShape,
 };
-use crate::ridge::{self, DesignPlan, RidgeTimings};
-use crate::scheduler::{DesExecutor, Schedule, TaskGraph, ThreadExecutor};
-use crate::util::Stopwatch;
+use crate::ridge::{self, DesignPlan, FullDesign, RidgeCvFit, RidgeTimings, SplitDesign};
+use crate::scheduler::{
+    task_fn, DesExecutor, Executor, Schedule, TaskFn, TaskGraph, ThreadExecutor,
+};
 
 pub use batching::batch_bounds;
 
@@ -89,6 +107,40 @@ impl Default for DistConfig {
     }
 }
 
+/// Typed identity of one node in a strategy's task DAG — the payload the
+/// priced and the executed graph share. [`simulate`] ignores it (costs
+/// suffice); [`fit`] turns each kind into the closure that does the work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Self-contained RidgeCV over target columns [j0, j1): decomposes
+    /// from scratch inside the task (the Single / MOR node — the t·T_M
+    /// redundancy of Eq. 6 when repeated per target).
+    SelfContained { j0: usize, j1: usize },
+    /// Factorize CV split `split` of the shared plan
+    /// (`ridge::factorize_split`).
+    DecomposeSplit { split: usize },
+    /// Factorize the full training design (`ridge::factorize_full`).
+    DecomposeFull,
+    /// Barrier: join every factorization into the shared [`DesignPlan`].
+    Assemble,
+    /// Target-dependent λ sweep of batch `batch` over columns [j0, j1)
+    /// against the assembled plan (`ridge::fit_batch_with_plan`).
+    Sweep { batch: usize, j0: usize, j1: usize },
+}
+
+/// What each functional task yields (the thread executor collects one per
+/// node; dependents receive references).
+pub enum TaskOutput {
+    /// One split's factorization + its stage timings.
+    Split(Box<SplitDesign>, RidgeTimings),
+    /// The full-train factorization + its stage timings.
+    Full(FullDesign, RidgeTimings),
+    /// The assembled shared plan (Arc: every sweep task holds it).
+    Plan(Arc<DesignPlan>),
+    /// A finished batch fit.
+    Fit(Box<RidgeCvFit>),
+}
+
 /// Result of a functional distributed fit.
 #[derive(Clone, Debug)]
 pub struct DistributedFit {
@@ -100,67 +152,256 @@ pub struct DistributedFit {
     pub batches: Vec<(usize, usize)>,
     /// Real wall-clock of the whole fit on this machine.
     pub wall_secs: f64,
-    /// Wall-clock of building the shared design plan (included in
-    /// `wall_secs`): the decompose-once cost every batch reuses.
+    /// Wall-clock from fit start until the shared plan finished
+    /// assembling (B-MOR: the decompose stage; included in `wall_secs`).
+    /// Zero for the self-contained strategies, which build no shared plan.
     pub plan_secs: f64,
     /// Aggregated per-stage compute timings across plan build + workers.
     pub timings: RidgeTimings,
 }
 
-/// Functional path: really fit, using `nodes` worker threads.
-///
-/// Builds one shared [`DesignPlan`] on the leader — exactly
-/// `inner_folds + 1` eigendecompositions regardless of how many batches
-/// the strategy produces — then fans the batches out over the thread
-/// executor; workers only run the target-dependent sweep.
-pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
-    let t = y.cols();
-    let batches = match cfg.strategy {
+/// Target partition per strategy (Algorithm 1 lines 1–3): Single keeps
+/// one batch, MOR one per target, B-MOR min(t, nodes) contiguous ranges.
+pub fn strategy_batches(strategy: Strategy, t: usize, nodes: usize) -> Vec<(usize, usize)> {
+    match strategy {
         Strategy::Single => vec![(0, t)],
         Strategy::Mor => batch_bounds(t, t),
-        Strategy::Bmor => batch_bounds(t, cfg.nodes),
-    };
-    let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
-
-    let sw = Stopwatch::start();
-    // Decompose once, on the leader (Algorithm 1's reuse structure hoisted
-    // out of the batch loop).
-    let leader_blas = Blas::new(cfg.backend, cfg.threads_per_node);
-    let plan = DesignPlan::build(&leader_blas, x, &ridge::LAMBDA_GRID, &splits);
-    let plan_secs = sw.secs();
-
-    let exec = ThreadExecutor::new(cfg.nodes);
-    let plan_ref = &plan;
-    let jobs: Vec<_> = batches
-        .iter()
-        .map(|&(j0, j1)| {
-            let yb = y.cols_slice(j0, j1);
-            let backend = cfg.backend;
-            let threads = cfg.threads_per_node;
-            move || {
-                let blas = Blas::new(backend, threads);
-                ridge::fit_batch_with_plan(&blas, plan_ref, &yb)
-            }
-        })
-        .collect();
-    let fits = exec.run_bag(jobs);
-    let wall_secs = sw.secs();
-
-    // Assemble.
-    let p = x.cols();
-    let mut weights = Mat::zeros(p, t);
-    let mut lambdas = Vec::with_capacity(batches.len());
-    let mut timings = plan.build_timings.clone();
-    for (fit, &(j0, j1)) in fits.iter().zip(&batches) {
-        for i in 0..p {
-            weights.row_mut(i)[j0..j1].copy_from_slice(fit.weights.row(i));
-        }
-        lambdas.push(fit.best_lambda);
-        timings.add(&fit.timings);
+        Strategy::Bmor => batch_bounds(t, nodes),
     }
+}
+
+/// Emit the task DAG a strategy generates — the ONE graph both executors
+/// consume ([`fit`] runs it, [`simulate`] prices it).
+///
+/// * `Single` — one self-contained RidgeCV task.
+/// * `Mor` — one self-contained task per target, no dependencies (each
+///   redundantly refactorizes: the t·T_M term of Eq. 6).
+/// * `Bmor` — the planned structure: one decompose task per split plus
+///   the full-train decompose (all independent — the decompose stage
+///   parallelizes across nodes), an assemble barrier joining them into
+///   the shared plan, then one sweep task per batch depending on the
+///   assembled plan. T_M is paid once, not once per batch (Eq. 7).
+pub fn task_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskGraph<TaskKind> {
+    let t = shape.t;
+    let th = cfg.threads_per_node;
+    let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
+    let mut g: TaskGraph<TaskKind> = TaskGraph::default();
+    match cfg.strategy {
+        Strategy::Single => {
+            for &(j0, j1) in &batches {
+                g.add_task(
+                    "ridgecv",
+                    batch_task_cost(cal, cfg.backend, shape, 1),
+                    th,
+                    &[],
+                    TaskKind::SelfContained { j0, j1 },
+                );
+            }
+        }
+        Strategy::Mor => {
+            // One full RidgeCV per target: X broadcast shared by the
+            // targets resident on a node (t / nodes of them on average).
+            let shared = (t / cfg.nodes.max(1)).max(1);
+            let per = FitShape { t: 1, ..shape };
+            let cost = batch_task_cost(cal, cfg.backend, per, shared);
+            for (j, &(j0, j1)) in batches.iter().enumerate() {
+                g.add_task(
+                    format!("mor-target-{j}"),
+                    cost,
+                    th,
+                    &[],
+                    TaskKind::SelfContained { j0, j1 },
+                );
+            }
+        }
+        Strategy::Bmor => {
+            let mut dec = Vec::with_capacity(shape.splits + 1);
+            for si in 0..shape.splits {
+                dec.push(g.add_task(
+                    format!("decompose-split-{si}"),
+                    decompose_task_cost(cal, cfg.backend, shape, true),
+                    th,
+                    &[],
+                    TaskKind::DecomposeSplit { split: si },
+                ));
+            }
+            dec.push(g.add_task(
+                "decompose-full",
+                decompose_task_cost(cal, cfg.backend, shape, false),
+                th,
+                &[],
+                TaskKind::DecomposeFull,
+            ));
+            let assemble = g.add_task(
+                "assemble-plan",
+                assemble_task_cost(shape),
+                1,
+                &dec,
+                TaskKind::Assemble,
+            );
+            // Per-node broadcast accounting: a node stages one copy of X
+            // and the plan factors, shared by the sweep tasks resident
+            // there. Algorithm 1 caps batches at min(t, nodes), so today
+            // this is one sweep per node (shared = 1) and the per-task
+            // charge coincides with the per-node charge; the parameter
+            // keeps the cost model honest should the partition ever
+            // exceed the node count.
+            let shared = batches.len().div_ceil(cfg.nodes.max(1)).max(1);
+            for (bi, &(j0, j1)) in batches.iter().enumerate() {
+                let b = FitShape { t: j1 - j0, ..shape };
+                g.add_task(
+                    format!("sweep-batch-{bi}"),
+                    sweep_task_cost(cal, cfg.backend, b, shared),
+                    th,
+                    &[assemble],
+                    TaskKind::Sweep { batch: bi, j0, j1 },
+                );
+            }
+        }
+    }
+    g
+}
+
+/// Turn the typed DAG into an executable one: every [`TaskKind`] becomes
+/// a real closure over X/Y. Names, costs and dependency edges are
+/// untouched ([`TaskGraph::map`]), so the executed graph is structurally
+/// identical to the priced one.
+#[allow(clippy::too_many_arguments)]
+fn instantiate<'a>(
+    graph: TaskGraph<TaskKind>,
+    x: &'a Mat,
+    y: &'a Mat,
+    splits: &'a [Split],
+    backend: Backend,
+    threads: usize,
+    lambdas: &'a [f64],
+    started: Instant,
+    plan_elapsed: &'a Mutex<f64>,
+) -> TaskGraph<TaskFn<'a, TaskOutput>> {
+    graph.map(move |kind| match kind {
+        TaskKind::SelfContained { j0, j1 } => {
+            let yb = y.cols_slice(j0, j1);
+            task_fn(move |_: &[&TaskOutput]| {
+                let blas = Blas::new(backend, threads);
+                TaskOutput::Fit(Box::new(ridge::fit_ridge_cv(&blas, x, &yb, lambdas, splits)))
+            })
+        }
+        TaskKind::DecomposeSplit { split } => task_fn(move |_: &[&TaskOutput]| {
+            let blas = Blas::new(backend, threads);
+            let (sd, tim) = ridge::factorize_split(&blas, x, &splits[split]);
+            TaskOutput::Split(Box::new(sd), tim)
+        }),
+        TaskKind::DecomposeFull => task_fn(move |_: &[&TaskOutput]| {
+            let blas = Blas::new(backend, threads);
+            let (full, tim) = ridge::factorize_full(&blas, x);
+            TaskOutput::Full(full, tim)
+        }),
+        TaskKind::Assemble => task_fn(move |deps: &[&TaskOutput]| {
+            let mut tim = RidgeTimings::default();
+            let mut designs: Vec<SplitDesign> = Vec::new();
+            let mut full: Option<FullDesign> = None;
+            for d in deps {
+                match d {
+                    TaskOutput::Split(sd, t) => {
+                        designs.push((**sd).clone());
+                        tim.add(t);
+                    }
+                    TaskOutput::Full(f, t) => {
+                        full = Some(f.clone());
+                        tim.add(t);
+                    }
+                    _ => unreachable!("assemble depends only on decompose tasks"),
+                }
+            }
+            let plan = DesignPlan::assemble(
+                x.clone(),
+                designs,
+                full.expect("missing full-train factorization"),
+                lambdas,
+                tim,
+            );
+            *plan_elapsed.lock().unwrap() = started.elapsed().as_secs_f64();
+            TaskOutput::Plan(Arc::new(plan))
+        }),
+        TaskKind::Sweep { j0, j1, .. } => {
+            let yb = y.cols_slice(j0, j1);
+            task_fn(move |deps: &[&TaskOutput]| {
+                let TaskOutput::Plan(plan) = deps[0] else {
+                    unreachable!("sweep depends on the assemble task")
+                };
+                let blas = Blas::new(backend, threads);
+                TaskOutput::Fit(Box::new(ridge::fit_batch_with_plan(&blas, plan, &yb)))
+            })
+        }
+    })
+}
+
+/// Functional path: really fit, using `nodes` worker threads.
+///
+/// Emits the strategy's task graph ONCE (the same emission [`simulate`]
+/// prices), instantiates each node as a closure and executes it on the
+/// [`ThreadExecutor`]. For B-MOR the `splits + 1` factorizations run as
+/// independent decompose tasks feeding the assemble barrier — still
+/// exactly `inner_folds + 1` eigendecompositions in total regardless of
+/// batch count, now scheduled instead of serialized on the leader.
+pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
+    let t = y.cols();
+    let p = x.cols();
+    let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
+    let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+    let shape = FitShape {
+        n: x.rows(),
+        p,
+        t,
+        r: ridge::LAMBDA_GRID.len(),
+        splits: splits.len(),
+    };
+    // Costs are irrelevant to the functional run; nominal calibration
+    // keeps the emission deterministic and measurement-free.
+    let graph = task_graph(shape, cfg, &Calibration::nominal());
+
+    let started = Instant::now();
+    let plan_elapsed = Mutex::new(0.0f64);
+    let runnable = instantiate(
+        graph,
+        x,
+        y,
+        &splits,
+        cfg.backend,
+        cfg.threads_per_node,
+        &ridge::LAMBDA_GRID,
+        started,
+        &plan_elapsed,
+    );
+    let outs = ThreadExecutor::new(cfg.nodes).execute(runnable);
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    // Collect: batch fits arrive in task-id order, which is batch order.
+    let mut fits: Vec<Box<RidgeCvFit>> = Vec::with_capacity(batches.len());
+    let mut timings = RidgeTimings::default();
+    for out in outs {
+        match out {
+            TaskOutput::Fit(f) => fits.push(f),
+            TaskOutput::Plan(plan) => timings.add(&plan.build_timings),
+            // Factorizations were folded into the plan by assemble.
+            TaskOutput::Split(..) | TaskOutput::Full(..) => {}
+        }
+    }
+    assert_eq!(fits.len(), batches.len(), "one fit per batch");
+
+    let mut weights = Mat::zeros(p, t);
+    let mut best_lambda_per_batch = Vec::with_capacity(batches.len());
+    for (f, &(j0, j1)) in fits.iter().zip(&batches) {
+        for i in 0..p {
+            weights.row_mut(i)[j0..j1].copy_from_slice(f.weights.row(i));
+        }
+        best_lambda_per_batch.push(f.best_lambda);
+        timings.add(&f.timings);
+    }
+    let plan_secs = *plan_elapsed.lock().unwrap();
     DistributedFit {
         weights,
-        best_lambda_per_batch: lambdas,
+        best_lambda_per_batch,
         batches,
         wall_secs,
         plan_secs,
@@ -168,9 +409,9 @@ pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
     }
 }
 
-/// Timing path: simulate the strategy's task graph on the cluster DES
-/// with calibrated per-task costs. Returns the schedule (makespan = the
-/// figures' y-axis).
+/// Timing path: price the strategy's task graph — the same emission
+/// [`fit`] executes — on the cluster DES with calibrated per-task costs.
+/// Returns the schedule (makespan = the figures' y-axis).
 pub fn simulate(
     shape: FitShape,
     cfg: &DistConfig,
@@ -179,66 +420,7 @@ pub fn simulate(
 ) -> Schedule {
     let mut spec = cluster.clone();
     spec.nodes = cfg.nodes;
-    let exec = DesExecutor::new(spec);
-    exec.run(&plan_graph(shape, cfg, cal))
-}
-
-/// The task graph each strategy generates (shared by DES + analysis).
-///
-/// * `Single` — one self-contained RidgeCV task.
-/// * `Mor` — one self-contained task per target, no dependencies (each
-///   redundantly refactorizes: the t·T_M term of Eq. 6).
-/// * `Bmor` — the planned structure: one decompose task per split plus
-///   the full-train decompose, then one sweep task per batch depending on
-///   ALL decompose tasks. The decompose stage parallelizes across nodes
-///   and is paid once, so the makespan reflects the shared plan instead
-///   of c redundant factorizations.
-pub fn plan_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskGraph {
-    let t = shape.t;
-    let th = cfg.threads_per_node;
-    let mut g = TaskGraph::default();
-    match cfg.strategy {
-        Strategy::Single => {
-            g.add("ridgecv", batch_task_cost(cal, cfg.backend, shape, 1), th, &[]);
-        }
-        Strategy::Mor => {
-            // One full RidgeCV per target: X broadcast shared by the
-            // targets resident on a node (t / nodes of them on average).
-            let shared = (t / cfg.nodes.max(1)).max(1);
-            let per = FitShape { t: 1, ..shape };
-            let cost = batch_task_cost(cal, cfg.backend, per, shared);
-            for j in 0..t {
-                g.add(format!("mor-target-{j}"), cost, th, &[]);
-            }
-        }
-        Strategy::Bmor => {
-            let mut deps = Vec::with_capacity(shape.splits + 1);
-            for si in 0..shape.splits {
-                deps.push(g.add(
-                    format!("decompose-split-{si}"),
-                    decompose_task_cost(cal, cfg.backend, shape, true),
-                    th,
-                    &[],
-                ));
-            }
-            deps.push(g.add(
-                "decompose-full",
-                decompose_task_cost(cal, cfg.backend, shape, false),
-                th,
-                &[],
-            ));
-            for (bi, (j0, j1)) in batch_bounds(t, cfg.nodes).into_iter().enumerate() {
-                let b = FitShape { t: j1 - j0, ..shape };
-                g.add(
-                    format!("sweep-batch-{bi}"),
-                    sweep_task_cost(cal, cfg.backend, b),
-                    th,
-                    &deps,
-                );
-            }
-        }
-    }
-    g
+    DesExecutor::new(spec).execute(task_graph(shape, cfg, cal))
 }
 
 #[cfg(test)]
@@ -286,7 +468,9 @@ mod tests {
 
     #[test]
     fn mor_equals_bmor_with_t_nodes() {
-        // With one target per batch the two strategies coincide exactly.
+        // With one target per batch the two strategies coincide exactly:
+        // a self-contained per-target fit factorizes the same design the
+        // shared plan does, so the weights agree to the bit.
         let (x, y) = planted(60, 8, 5, 3);
         let mor = fit(&x, &y, &DistConfig { strategy: Strategy::Mor, nodes: 2, ..Default::default() });
         let bmor = fit(&x, &y, &DistConfig { strategy: Strategy::Bmor, nodes: 5, ..Default::default() });
@@ -338,36 +522,96 @@ mod tests {
     }
 
     #[test]
-    fn plan_graph_shapes() {
+    fn task_graph_shapes() {
         let cal = Calibration::nominal();
         let shape = FitShape { n: 100, p: 32, t: 50, r: 11, splits: 3 };
         let mk = |strategy, nodes| DistConfig { strategy, nodes, ..Default::default() };
 
-        let single = plan_graph(shape, &mk(Strategy::Single, 4), &cal);
+        let single = task_graph(shape, &mk(Strategy::Single, 4), &cal);
         assert_eq!(single.len(), 1);
         assert!(single.deps[0].is_empty());
+        assert_eq!(single.payloads[0], TaskKind::SelfContained { j0: 0, j1: 50 });
 
-        let mor = plan_graph(shape, &mk(Strategy::Mor, 4), &cal);
+        let mor = task_graph(shape, &mk(Strategy::Mor, 4), &cal);
         assert_eq!(mor.len(), 50);
         assert!(mor.deps.iter().all(|d| d.is_empty()));
+        assert_eq!(mor.payloads[7], TaskKind::SelfContained { j0: 7, j1: 8 });
 
-        // B-MOR: splits+1 decompose sources, then one sweep per batch
-        // depending on every source.
-        let bmor = plan_graph(shape, &mk(Strategy::Bmor, 4), &cal);
-        assert_eq!(bmor.len(), 3 + 1 + 4);
+        // B-MOR: splits+1 decompose sources → assemble barrier → one
+        // sweep per batch depending on the assembled plan.
+        let bmor = task_graph(shape, &mk(Strategy::Bmor, 4), &cal);
+        assert_eq!(bmor.len(), 3 + 1 + 1 + 4);
         for i in 0..4 {
             assert!(bmor.deps[i].is_empty(), "decompose task {i} has deps");
         }
-        for i in 4..8 {
-            assert_eq!(bmor.deps[i], vec![0, 1, 2, 3], "sweep task {i}");
+        assert_eq!(bmor.deps[4], vec![0, 1, 2, 3], "assemble gathers every factorization");
+        assert_eq!(bmor.payloads[4], TaskKind::Assemble);
+        for i in 5..9 {
+            assert_eq!(bmor.deps[i], vec![4], "sweep task {i}");
         }
+        assert_eq!(bmor.tasks[4].name, "assemble-plan");
+        assert_eq!(bmor.tasks[5].name, "sweep-batch-0");
+    }
+
+    #[test]
+    fn one_emission_feeds_both_executors() {
+        // Acceptance pin: the DES schedule and the functional fit consume
+        // the same graph-emission code path. The executed (closure) graph
+        // must carry identical task names and dependency edges to the
+        // priced one, the priced sweep payloads must match the functional
+        // batches, and the schedule covers the identical node set.
+        let (x, y) = planted(90, 8, 10, 7);
+        let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 3, ..Default::default() };
+        let cal = Calibration::nominal();
+        let shape = FitShape {
+            n: x.rows(),
+            p: x.cols(),
+            t: y.cols(),
+            r: ridge::LAMBDA_GRID.len(),
+            splits: cfg.inner_folds,
+        };
+        let priced = task_graph(shape, &cfg, &cal);
+
+        let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+        let plan_elapsed = Mutex::new(0.0f64);
+        let executed = instantiate(
+            priced.clone(),
+            &x,
+            &y,
+            &splits,
+            cfg.backend,
+            cfg.threads_per_node,
+            &ridge::LAMBDA_GRID,
+            Instant::now(),
+            &plan_elapsed,
+        );
+        let names = |g: &[crate::scheduler::TaskSpec]| {
+            g.iter().map(|t| t.name.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(names(&priced.tasks), names(&executed.tasks));
+        assert_eq!(priced.deps, executed.deps);
+
+        let fitres = fit(&x, &y, &cfg);
+        let sweep_batches: Vec<(usize, usize)> = priced
+            .payloads
+            .iter()
+            .filter_map(|k| match k {
+                TaskKind::Sweep { j0, j1, .. } => Some((*j0, *j1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sweep_batches, fitres.batches);
+
+        let spec = ClusterSpec { nodes: cfg.nodes, ..ClusterSpec::default() };
+        let s = DesExecutor::new(spec).run(&priced);
+        assert_eq!(s.tasks.len(), priced.len());
     }
 
     #[test]
     fn bmor_graph_decompose_before_sweeps() {
         // DES execution of the real plan graph: no sweep may start before
-        // every decompose task has finished, and the makespan is bounded
-        // below by the graph's critical path.
+        // the assemble barrier (hence every decompose task) has finished,
+        // and the makespan is bounded below by the graph's critical path.
         let cal = Calibration::nominal();
         let shape = FitShape { n: 500, p: 64, t: 300, r: 11, splits: 3 };
         let cfg = DistConfig {
@@ -376,19 +620,21 @@ mod tests {
             threads_per_node: 8,
             ..Default::default()
         };
-        let g = plan_graph(shape, &cfg, &cal);
+        let g = task_graph(shape, &cfg, &cal);
         let spec = ClusterSpec { nodes: cfg.nodes, ..ClusterSpec::default() };
         let amdahl = spec.amdahl;
         let s = DesExecutor::new(spec).run(&g);
         let ndec = shape.splits + 1;
+        let assemble_finish = s.tasks[ndec].finish;
         let dec_finish = s.tasks[..ndec]
             .iter()
             .map(|t| t.finish)
             .fold(0.0f64, f64::max);
-        for task in &s.tasks[ndec..] {
+        assert!(assemble_finish >= dec_finish - 1e-9);
+        for task in &s.tasks[ndec + 1..] {
             assert!(
-                task.start >= dec_finish - 1e-9,
-                "sweep {} started at {} before decompose stage finished at {dec_finish}",
+                task.start >= assemble_finish - 1e-9,
+                "sweep {} started at {} before the plan assembled at {assemble_finish}",
                 task.id,
                 task.start
             );

@@ -370,7 +370,7 @@ pub fn fig9(ctx: &mut FigCtx) -> Figure {
         ]);
     }
     f.note("paper Fig 9: B-MOR scales across nodes AND threads and beats single-node RidgeCV at every thread count");
-    f.note("sim uses the planned task graph: one decompose task per split (+ full train) feeding every batch sweep — T_M is paid once, not once per batch");
+    f.note("sim prices the coordinator's unified task graph: one decompose task per split (+ full train) feeding the assemble barrier, then per-batch sweeps — T_M is paid once, not once per batch, and the functional path executes the identical DAG");
     f
 }
 
@@ -403,7 +403,7 @@ pub fn fig10(ctx: &mut FigCtx) -> Figure {
     f.note(format!(
         "max DSU here = {best:.1}× at 8 nodes × 32 threads (paper: ~30–33×)"
     ));
-    f.note("B-MOR times come from the shared-plan task graph (decompose once per split, sweeps fan out), so high node counts are staging/sweep bound rather than eigh bound");
+    f.note("B-MOR times come from the shared-plan task graph (decompose once per split, assemble, sweeps fan out with the (V, e, A) broadcast charged once per node-resident copy), so high node counts are staging/sweep bound rather than eigh bound");
     f
 }
 

@@ -11,17 +11,21 @@
 //!   synthetic CNeuroMod-Friends data generator, and the benchmark
 //!   harnesses that regenerate every table and figure of the paper.
 //!
-//! The ridge layer is organized as **plan/execute**: `ridge::DesignPlan`
-//! factorizes the design once — per CV split, the Gram matrix
-//! K = XᵀX = V E Vᵀ and the validation projection A = X_val·V, plus the
-//! full-train decomposition — and `ridge::fit_batch_with_plan` runs only
-//! the target-dependent λ sweep for a batch against that shared plan. The
-//! coordinator builds one plan per distributed fit and fans B-MOR batches
-//! out over the thread executor (functional path), and emits the same
-//! decompose→sweep structure as an explicit `scheduler::TaskGraph` priced
-//! by `perfmodel`'s split cost model for the cluster DES (timing path):
-//! the O(p³) eigendecomposition count is `splits + 1`, independent of the
-//! batch count.
+//! The ridge layer is organized as **plan/execute** over ONE executable
+//! task graph: `ridge::DesignPlan` factorizes the design once — per CV
+//! split, the Gram matrix K = XᵀX = V E Vᵀ and the validation projection
+//! A = X_val·V (`ridge::factorize_split`), plus the full-train
+//! decomposition (`ridge::factorize_full`) — and
+//! `ridge::fit_batch_with_plan` runs only the target-dependent λ sweep
+//! for a batch against that shared plan. `coordinator::task_graph` emits
+//! each strategy's DAG exactly once as a `scheduler::TaskGraph` with
+//! typed payloads (B-MOR: parallel decompose tasks → assemble barrier →
+//! per-batch sweeps) and both engines consume it through the
+//! `scheduler::Executor` abstraction: `ThreadExecutor` runs the closures
+//! for real (functional path), `DesExecutor` prices the identical nodes
+//! with `perfmodel` costs on the cluster DES (timing path). The O(p³)
+//! eigendecomposition count is `splits + 1`, independent of the batch
+//! count, and the two paths cannot structurally diverge.
 //! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph
 //!   (gram, Jacobi eigendecomposition, multi-lambda ridge sweep, Pearson
 //!   scoring, VGG16-surrogate feature extractor), AOT-lowered to HLO text.

@@ -11,12 +11,15 @@
 //! decompose-once/reuse-across-λ structure as the SVD of X (DESIGN.md §2).
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::Mat;
 
 thread_local! {
     static EIGH_CALLS: Cell<usize> = const { Cell::new(0) };
 }
+
+static EIGH_CALLS_TOTAL: AtomicUsize = AtomicUsize::new(0);
 
 /// Number of Jacobi eigendecompositions performed by *this thread* since
 /// it started. Instrumentation for the decompose-once contract of the
@@ -26,6 +29,17 @@ thread_local! {
 /// concurrently running tests cannot race each other's counts.
 pub fn eigh_calls_this_thread() -> usize {
     EIGH_CALLS.with(|c| c.get())
+}
+
+/// Process-wide count of Jacobi eigendecompositions. The companion of
+/// [`eigh_calls_this_thread`] for contracts that span worker threads:
+/// the coordinator's B-MOR decompose stage runs its `splits + 1`
+/// factorizations as parallel graph tasks, so only a global counter can
+/// pin the total. Tests measuring deltas of this counter must serialize
+/// against other eigh-calling tests in the same process (see
+/// tests/plan_parity.rs).
+pub fn eigh_calls_total() -> usize {
+    EIGH_CALLS_TOTAL.load(Ordering::SeqCst)
 }
 
 /// Eigendecomposition result: ascending eigenvalues, matching columns.
@@ -63,6 +77,7 @@ fn offdiag_norm(a: &Mat) -> f64 {
 /// stored transposed (rows = vectors) so its update is contiguous too.
 pub fn jacobi_eigh(k: &Mat, max_sweeps: usize, tol: f64) -> Eigh {
     EIGH_CALLS.with(|c| c.set(c.get() + 1));
+    EIGH_CALLS_TOTAL.fetch_add(1, Ordering::SeqCst);
     let p = k.rows();
     assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
     let mut a = k.clone();

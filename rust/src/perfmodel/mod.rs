@@ -22,11 +22,13 @@
 //! ([`batch_sweep_secs`] — linear in the batch's target count), with
 //! `ridge_compute_secs = plan_decompose_secs + batch_sweep_secs` as the
 //! self-contained single-fit total. The coordinator's B-MOR task graph
-//! prices its decompose and sweep tasks with [`decompose_task_cost`] and
-//! [`sweep_task_cost`] respectively.
+//! prices its nodes with [`decompose_task_cost`], [`assemble_task_cost`]
+//! (the plan-gather barrier) and [`sweep_task_cost`]; node-level
+//! broadcasts — X and the plan's (V, e, A) factors — are amortized over
+//! the tasks co-resident on a node via [`crate::cluster::broadcast_share`].
 
 use crate::blas::{Backend, Blas};
-use crate::cluster::TaskCost;
+use crate::cluster::{broadcast_share, TaskCost};
 use crate::linalg::{eigh::jacobi_eigh, Mat};
 use crate::util::{timer, Pcg64};
 
@@ -216,12 +218,34 @@ pub fn batch_task_cost(
     // Staging: the Y batch always ships; X is broadcast once per node and
     // amortized over the tasks that share it.
     let y_bytes = (shape.n * shape.t * 8) as f64;
-    let x_bytes = (shape.n * shape.p * 8) as f64 / x_shared_by.max(1) as f64;
+    let x_bytes = broadcast_share((shape.n * shape.p * 8) as f64, x_shared_by);
     let w_bytes = (shape.p * shape.t * 8) as f64;
     TaskCost {
         compute_secs: secs,
         input_bytes: y_bytes + x_bytes,
         output_bytes: w_bytes,
+    }
+}
+
+/// Serialized bytes of the shared plan's factors: per split an
+/// eigenvector matrix V, eigenvalues e and the validation projection A,
+/// plus the full-train (V, e) — what the decompose stage hands the sweep
+/// stage.
+pub fn plan_bytes(shape: FitShape) -> f64 {
+    let s = shape.splits.max(1);
+    let nv = (shape.n / s).max(1);
+    ((s + 1) * (shape.p * shape.p + shape.p) * 8 + s * nv * shape.p * 8) as f64
+}
+
+/// Task cost of the B-MOR plan-assembly barrier: the leader gathers every
+/// decompose task's factors into the shared plan. Negligible compute and
+/// no further output here — the (V, e, A) broadcast to the sweep nodes is
+/// charged on the sweep side, amortized per node like the X broadcast.
+pub fn assemble_task_cost(shape: FitShape) -> TaskCost {
+    TaskCost {
+        compute_secs: 0.0,
+        input_bytes: plan_bytes(shape),
+        output_bytes: 0.0,
     }
 }
 
@@ -251,19 +275,27 @@ pub fn decompose_task_cost(
 }
 
 /// Task cost of one per-batch sweep task against the shared plan: stages
-/// the Y batch, X (for C = XᵀY) and the broadcast factors of every
-/// decompose task, then ships the batch's weights back.
-pub fn sweep_task_cost(cal: &Calibration, backend: Backend, shape: FitShape) -> TaskCost {
+/// the Y batch, X (for C = XᵀY) and the broadcast (V, e, A) factors of
+/// every decompose task, then ships the batch's weights back.
+///
+/// X and the plan factors are per-NODE broadcasts: a node pulls one copy
+/// and the `plan_shared_by` sweep tasks resident there reuse it — the
+/// same amortization `batch_task_cost` applies to X. Y and the weights
+/// are task-private and always ship in full.
+pub fn sweep_task_cost(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    plan_shared_by: usize,
+) -> TaskCost {
     let secs = batch_sweep_secs(cal, backend, shape);
     let y_bytes = (shape.n * shape.t * 8) as f64;
-    let x_bytes = (shape.n * shape.p * 8) as f64;
-    let s = shape.splits.max(1);
-    let nv = (shape.n / s).max(1);
-    let plan_bytes = ((s + 1) * shape.p * shape.p * 8 + s * nv * shape.p * 8) as f64;
+    let x_bytes = broadcast_share((shape.n * shape.p * 8) as f64, plan_shared_by);
+    let factor_bytes = broadcast_share(plan_bytes(shape), plan_shared_by);
     let w_bytes = (shape.p * shape.t * 8) as f64;
     TaskCost {
         compute_secs: secs,
-        input_bytes: y_bytes + x_bytes + plan_bytes,
+        input_bytes: y_bytes + x_bytes + factor_bytes,
         output_bytes: w_bytes,
     }
 }
@@ -365,7 +397,7 @@ mod tests {
     fn sweep_task_ships_plan_factors() {
         let cal = Calibration::nominal();
         let shape = FitShape { n: 1000, p: 128, t: 100, r: 11, splits: 3 };
-        let sweep = sweep_task_cost(&cal, Backend::MklLike, shape);
+        let sweep = sweep_task_cost(&cal, Backend::MklLike, shape, 1);
         let plain = batch_task_cost(&cal, Backend::MklLike, shape, 1);
         // Same weight output, but the sweep stages the broadcast factors
         // on top of X + Y, and does strictly less compute.
@@ -376,6 +408,37 @@ mod tests {
         let dec_full = decompose_task_cost(&cal, Backend::MklLike, shape, false);
         assert!(dec.output_bytes > dec_full.output_bytes, "A projection ships");
         assert!(dec.compute_secs > dec_full.compute_secs);
+    }
+
+    #[test]
+    fn sweep_task_amortizes_plan_broadcast_per_node() {
+        // The (V, e, A) factors and X are node-level broadcasts: with k
+        // co-resident sweep tasks each is charged 1/k of the staging,
+        // while the task-private Y/W bytes and the compute stay fixed.
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 1000, p: 128, t: 100, r: 11, splits: 3 };
+        let solo = sweep_task_cost(&cal, Backend::MklLike, shape, 1);
+        let shared4 = sweep_task_cost(&cal, Backend::MklLike, shape, 4);
+        assert!(shared4.input_bytes < solo.input_bytes);
+        assert_eq!(shared4.output_bytes, solo.output_bytes);
+        assert_eq!(shared4.compute_secs, solo.compute_secs);
+        let y_bytes = (shape.n * shape.t * 8) as f64;
+        let broadcast = (shape.n * shape.p * 8) as f64 + plan_bytes(shape);
+        assert!((solo.input_bytes - (y_bytes + broadcast)).abs() < 1e-6);
+        assert!((shared4.input_bytes - (y_bytes + broadcast / 4.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn assemble_task_gathers_factors_only() {
+        let shape = FitShape { n: 1000, p: 128, t: 100, r: 11, splits: 3 };
+        let asm = assemble_task_cost(shape);
+        assert_eq!(asm.compute_secs, 0.0);
+        assert_eq!(asm.output_bytes, 0.0);
+        assert_eq!(asm.input_bytes, plan_bytes(shape));
+        // Factor bytes: (s+1) V matrices + eigenvalue vectors, s A
+        // projections over n/s validation rows.
+        let want = (4 * (128 * 128 + 128) * 8 + 3 * 333 * 128 * 8) as f64;
+        assert_eq!(plan_bytes(shape), want);
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   only on the design matrix `X` and the CV splits: per-split Gram
 //!   matrix K = XᵀX = V E Vᵀ (Jacobi eigh) and validation projection
 //!   A = X_val·V, plus the full-train decomposition. Built **once** and
-//!   shared by every target batch.
+//!   shared by every target batch. The build is itself decomposable:
+//!   [`factorize_split`] / [`factorize_full`] are independent units (the
+//!   coordinator runs them as parallel decompose tasks of its B-MOR task
+//!   graph) joined by [`DesignPlan::assemble`]; [`DesignPlan::build`] is
+//!   the serial composition of the same pieces.
 //! * **execute** ([`fit_batch_with_plan`]) — the target-dependent sweep
 //!   for one batch Y: C = XᵀY, Z = VᵀC, W_λ = V (Z ⊘ (e+λ)), validation
 //!   scores from A·(Z ⊘ (e+λ)), final weights at λ*.
@@ -31,7 +35,9 @@ use crate::cv::{pearson_cols, Split};
 use crate::linalg::{cholesky, eigh::jacobi_eigh, Mat};
 use crate::util::Stopwatch;
 
-pub use plan::{fit_batch_with_plan, DesignPlan, SplitDesign};
+pub use plan::{
+    factorize_full, factorize_split, fit_batch_with_plan, DesignPlan, FullDesign, SplitDesign,
+};
 
 /// The paper's λ grid (§2.2.4).
 pub const LAMBDA_GRID: [f64; 11] = [

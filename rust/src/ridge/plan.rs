@@ -47,6 +47,62 @@ pub struct SplitDesign {
     pub a: Mat,
 }
 
+/// Target-independent factorization of the FULL training design (the
+/// final-fit factors; no validation projection).
+#[derive(Clone, Debug)]
+pub struct FullDesign {
+    /// Eigenvectors V of K = XᵀX (p × p).
+    pub v: Mat,
+    /// Eigenvalues of K, ascending.
+    pub e: Vec<f64>,
+}
+
+/// Factorize ONE CV split's training design: gather the training and
+/// validation rows, form the Gram matrix, eigendecompose it (exactly one
+/// `jacobi_eigh` call) and project the validation rows. This is one
+/// decompose task of the coordinator's B-MOR graph; [`DesignPlan::build`]
+/// runs it serially per split for single-batch callers.
+pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, RidgeTimings) {
+    let mut tim = RidgeTimings::default();
+    let xtr = x.rows_gather(&split.train);
+    let xval = x.rows_gather(&split.val);
+
+    let sw = Stopwatch::start();
+    let k = blas.syrk(&xtr);
+    tim.gram_secs += sw.secs();
+
+    let sw = Stopwatch::start();
+    let dec = jacobi_eigh(&k, 30, 1e-12);
+    tim.eigh_secs += sw.secs();
+
+    let sw = Stopwatch::start();
+    let a = blas.gemm(&xval, &dec.vectors);
+    tim.sweep_secs += sw.secs();
+
+    let sd = SplitDesign {
+        xtr,
+        train_idx: split.train.clone(),
+        val_idx: split.val.clone(),
+        v: dec.vectors,
+        e: dec.values,
+        a,
+    };
+    (sd, tim)
+}
+
+/// Factorize the full training design (one `jacobi_eigh` call) — the
+/// `decompose-full` task of the coordinator's B-MOR graph.
+pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
+    let mut tim = RidgeTimings::default();
+    let sw = Stopwatch::start();
+    let k = blas.syrk(x);
+    tim.gram_secs += sw.secs();
+    let sw = Stopwatch::start();
+    let dec = jacobi_eigh(&k, 30, 1e-12);
+    tim.eigh_secs += sw.secs();
+    (FullDesign { v: dec.vectors, e: dec.values }, tim)
+}
+
 /// The shared plan: everything a batch fit needs that does not depend on
 /// the targets. Build once, fan all batches out against it.
 #[derive(Clone, Debug)]
@@ -70,52 +126,44 @@ impl DesignPlan {
     /// Factorize the design once for all batches: per split, the Gram
     /// matrix, its eigendecomposition and the validation projection; plus
     /// the full-train decomposition for the final fit. Performs exactly
-    /// `splits.len() + 1` eigendecompositions.
+    /// `splits.len() + 1` eigendecompositions, serially on the calling
+    /// thread; the coordinator instead runs [`factorize_split`] /
+    /// [`factorize_full`] as independent graph tasks and joins them with
+    /// [`DesignPlan::assemble`] — same code path per factorization, so
+    /// the two builds are bit-identical.
     pub fn build(blas: &Blas, x: &Mat, lambdas: &[f64], splits: &[Split]) -> DesignPlan {
-        assert!(!lambdas.is_empty(), "empty λ grid");
-        assert!(!splits.is_empty(), "need at least one CV split");
         let mut tim = RidgeTimings::default();
         let mut designs = Vec::with_capacity(splits.len());
         for split in splits {
-            let xtr = x.rows_gather(&split.train);
-            let xval = x.rows_gather(&split.val);
-
-            let sw = Stopwatch::start();
-            let k = blas.syrk(&xtr);
-            tim.gram_secs += sw.secs();
-
-            let sw = Stopwatch::start();
-            let dec = jacobi_eigh(&k, 30, 1e-12);
-            tim.eigh_secs += sw.secs();
-
-            let sw = Stopwatch::start();
-            let a = blas.gemm(&xval, &dec.vectors);
-            tim.sweep_secs += sw.secs();
-
-            designs.push(SplitDesign {
-                xtr,
-                train_idx: split.train.clone(),
-                val_idx: split.val.clone(),
-                v: dec.vectors,
-                e: dec.values,
-                a,
-            });
+            let (sd, t) = factorize_split(blas, x, split);
+            tim.add(&t);
+            designs.push(sd);
         }
+        let (full, t) = factorize_full(blas, x);
+        tim.add(&t);
+        DesignPlan::assemble(x.clone(), designs, full, lambdas, tim)
+    }
 
-        let sw = Stopwatch::start();
-        let k = blas.syrk(x);
-        tim.gram_secs += sw.secs();
-        let sw = Stopwatch::start();
-        let dec = jacobi_eigh(&k, 30, 1e-12);
-        tim.eigh_secs += sw.secs();
-
+    /// Join independently produced factorizations into the shared plan —
+    /// the barrier task of the coordinator's decompose stage. `splits`
+    /// must be ordered by split index; `build_timings` is the summed
+    /// factorization accounting.
+    pub fn assemble(
+        x: Mat,
+        splits: Vec<SplitDesign>,
+        full: FullDesign,
+        lambdas: &[f64],
+        build_timings: RidgeTimings,
+    ) -> DesignPlan {
+        assert!(!lambdas.is_empty(), "empty λ grid");
+        assert!(!splits.is_empty(), "need at least one CV split");
         DesignPlan {
-            x: x.clone(),
-            splits: designs,
-            v_full: dec.vectors,
-            e_full: dec.values,
+            x,
+            splits,
+            v_full: full.v,
+            e_full: full.e,
             lambdas: lambdas.to_vec(),
-            build_timings: tim,
+            build_timings,
         }
     }
 
@@ -242,6 +290,42 @@ mod tests {
             assert_eq!(sd.xtr.rows(), sd.train_idx.len());
         }
         assert!(plan.build_timings.total() > 0.0);
+    }
+
+    #[test]
+    fn assembled_plan_matches_serial_build() {
+        // The coordinator's parallel decompose stage runs factorize_split /
+        // factorize_full as graph tasks and joins them with assemble; that
+        // must be bit-identical to the serial build (same code path per
+        // factorization, so any divergence is a structural bug).
+        let (x, _) = planted(60, 8, 4, 5);
+        let splits = kfold(60, 3, Some(3));
+        let b = blas();
+        let serial = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+
+        let mut tim = RidgeTimings::default();
+        let mut sds = Vec::new();
+        for s in &splits {
+            let (sd, t) = factorize_split(&b, &x, s);
+            tim.add(&t);
+            sds.push(sd);
+        }
+        let (full, t) = factorize_full(&b, &x);
+        tim.add(&t);
+        let joined = DesignPlan::assemble(x.clone(), sds, full, &LAMBDA_GRID, tim);
+
+        assert_eq!(serial.e_full, joined.e_full);
+        assert_eq!(serial.v_full.max_abs_diff(&joined.v_full), 0.0);
+        assert_eq!(serial.splits.len(), joined.splits.len());
+        for (a, c) in serial.splits.iter().zip(&joined.splits) {
+            assert_eq!(a.train_idx, c.train_idx);
+            assert_eq!(a.val_idx, c.val_idx);
+            assert_eq!(a.e, c.e);
+            assert_eq!(a.v.max_abs_diff(&c.v), 0.0);
+            assert_eq!(a.a.max_abs_diff(&c.a), 0.0);
+            assert_eq!(a.xtr.max_abs_diff(&c.xtr), 0.0);
+        }
+        assert!(joined.build_timings.total() > 0.0);
     }
 
     #[test]

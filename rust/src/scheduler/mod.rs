@@ -1,26 +1,37 @@
-//! Dask-like task-graph scheduler with two executors.
+//! Dask-like task-graph scheduler: ONE graph, TWO executors.
 //!
 //! The paper drives scikit-learn through joblib's Dask backend: a leader
 //! process holds a task graph, dispatches ready tasks to worker nodes, and
-//! tracks completion (§2.3.4). This module reproduces that control plane:
+//! tracks completion (§2.3.4). This module reproduces that control plane
+//! as a single executable structure:
 //!
 //! * [`TaskGraph`] — named tasks, explicit dependencies, per-task cost and
-//!   thread width;
-//! * [`DesExecutor`] — schedules the graph onto the [`cluster`] simulator
-//!   (list scheduling: earliest-free gang slot, releases respect deps);
-//! * [`ThreadExecutor`] — really runs closures on `nodes` worker threads
-//!   (the functional path: actual ridge fits, actual results), used for
-//!   correctness and for single-core calibration runs.
+//!   thread width, plus a typed payload per task (a strategy descriptor,
+//!   a closure, or `()`);
+//! * [`Executor`] — the common abstraction both engines sit behind: an
+//!   executor consumes a graph and produces its kind of result;
+//! * [`ThreadExecutor`] — really runs closure payloads on `nodes` worker
+//!   threads, respecting dependencies and feeding each task its
+//!   dependencies' outputs (the functional path: actual ridge fits);
+//! * [`DesExecutor`] — prices the *identical* nodes with their
+//!   [`TaskCost`]s and schedules them onto the [`crate::cluster`]
+//!   simulator (list scheduling: earliest-free gang slot, releases
+//!   respect deps) — the timing path behind the scaling figures.
+//!
+//! Because both executors consume the same [`TaskGraph`], the functional
+//! and simulated paths cannot structurally diverge: the coordinator emits
+//! the decompose→assemble→sweep DAG once and hands it to either engine.
 //!
 //! Invariants (property-tested): every task runs exactly once; no task
 //! starts before all dependencies finish; the DES makespan is bounded
 //! below by the critical path and above by the serial sum.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::cluster::{ClusterSpec, TaskCost};
 
-/// A node in the task graph.
+/// Execution-relevant description of a node (what the DES prices).
 #[derive(Clone, Debug)]
 pub struct TaskSpec {
     pub name: String,
@@ -28,20 +39,43 @@ pub struct TaskSpec {
     pub threads: usize,
 }
 
-/// Dependency-annotated task collection.
-#[derive(Clone, Debug, Default)]
-pub struct TaskGraph {
+/// Dependency-annotated task collection with a typed payload per task.
+///
+/// The payload is what distinguishes a *priceable* graph (descriptor
+/// payloads, e.g. `coordinator::TaskKind`) from an *executable* one
+/// (closure payloads, [`TaskFn`]); [`TaskGraph::map`] converts between
+/// them without touching names, costs or dependency edges.
+#[derive(Clone, Debug)]
+pub struct TaskGraph<P = ()> {
     pub tasks: Vec<TaskSpec>,
     /// deps[i] = indices that must finish before task i starts.
     pub deps: Vec<Vec<usize>>,
+    /// payloads[i] = typed payload of task i (same length as `tasks`).
+    pub payloads: Vec<P>,
 }
 
-impl TaskGraph {
-    pub fn add(&mut self, name: impl Into<String>, cost: TaskCost, threads: usize, deps: &[usize]) -> usize {
+impl<P> Default for TaskGraph<P> {
+    fn default() -> Self {
+        Self { tasks: Vec::new(), deps: Vec::new(), payloads: Vec::new() }
+    }
+}
+
+impl<P> TaskGraph<P> {
+    /// Add a task with an explicit payload. Dependencies must point at
+    /// already-added tasks, which makes every graph a DAG by construction.
+    pub fn add_task(
+        &mut self,
+        name: impl Into<String>,
+        cost: TaskCost,
+        threads: usize,
+        deps: &[usize],
+        payload: P,
+    ) -> usize {
         let id = self.tasks.len();
         assert!(deps.iter().all(|&d| d < id), "forward dependency");
         self.tasks.push(TaskSpec { name: name.into(), cost, threads });
         self.deps.push(deps.to_vec());
+        self.payloads.push(payload);
         id
     }
 
@@ -51,6 +85,18 @@ impl TaskGraph {
 
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
+    }
+
+    /// Convert the payloads, preserving every name, cost and dependency
+    /// edge — the bridge from a strategy's typed DAG to an executable
+    /// closure graph. Structure-preservation is what the executor-parity
+    /// contract rests on, so it is pinned by tests.
+    pub fn map<Q>(self, mut f: impl FnMut(P) -> Q) -> TaskGraph<Q> {
+        TaskGraph {
+            tasks: self.tasks,
+            deps: self.deps,
+            payloads: self.payloads.into_iter().map(|p| f(p)).collect(),
+        }
     }
 
     /// Critical-path length in single-thread-seconds (compute only).
@@ -65,6 +111,40 @@ impl TaskGraph {
         }
         dist.iter().cloned().fold(0.0, f64::max)
     }
+}
+
+impl<P: Default> TaskGraph<P> {
+    /// Add a task with the default payload (cost-only graphs).
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        cost: TaskCost,
+        threads: usize,
+        deps: &[usize],
+    ) -> usize {
+        self.add_task(name, cost, threads, deps, P::default())
+    }
+}
+
+/// Executable payload: consumes the outputs of the task's dependencies
+/// (in `deps[i]` order) and returns this task's output.
+pub type TaskFn<'env, T> = Box<dyn FnOnce(&[&T]) -> T + Send + 'env>;
+
+/// Coerce a closure into a [`TaskFn`] (helps inference pick the
+/// higher-ranked argument lifetimes when boxing inline).
+pub fn task_fn<'env, T, F>(f: F) -> TaskFn<'env, T>
+where
+    F: FnOnce(&[&T]) -> T + Send + 'env,
+{
+    Box::new(f)
+}
+
+/// The common abstraction over both engines: an executor consumes a task
+/// graph and produces its kind of result — real per-task outputs for
+/// [`ThreadExecutor`], a priced [`Schedule`] for [`DesExecutor`].
+pub trait Executor<P> {
+    type Output;
+    fn execute(&self, graph: TaskGraph<P>) -> Self::Output;
 }
 
 /// Per-task schedule entry produced by the DES executor.
@@ -84,7 +164,8 @@ pub struct Schedule {
     pub utilization: f64,
 }
 
-/// List scheduler over the simulated cluster.
+/// List scheduler over the simulated cluster. Payload-agnostic: it prices
+/// the same nodes the thread executor runs, using only their [`TaskSpec`].
 pub struct DesExecutor {
     pub spec: ClusterSpec,
 }
@@ -116,9 +197,11 @@ impl DesExecutor {
     }
 
     /// Execute the graph: tasks become ready when deps finish; ready tasks
-    /// are placed on the earliest-free gang slot. Gang slots assume a
-    /// uniform thread width per graph (checked), like `DesCluster`.
-    pub fn run(&self, graph: &TaskGraph) -> Schedule {
+    /// are placed on the earliest-free gang slot. Gang slots are sized by
+    /// the WIDEST task in the graph (like `DesCluster`); a narrower task
+    /// (e.g. the 1-thread assemble barrier) still occupies one whole slot
+    /// but is only accounted busy on its own thread count.
+    pub fn run<P>(&self, graph: &TaskGraph<P>) -> Schedule {
         let n = graph.len();
         if n == 0 {
             return Schedule { makespan: 0.0, tasks: vec![], utilization: 0.0 };
@@ -209,11 +292,19 @@ impl DesExecutor {
 
     /// Convenience: run a bag of independent tasks.
     pub fn run_bag(&self, costs: &[TaskCost], threads: usize) -> Schedule {
-        let mut g = TaskGraph::default();
+        let mut g: TaskGraph = TaskGraph::default();
         for (i, &c) in costs.iter().enumerate() {
             g.add(format!("task-{i}"), c, threads, &[]);
         }
         self.run(&g)
+    }
+}
+
+impl<P> Executor<P> for DesExecutor {
+    type Output = Schedule;
+
+    fn execute(&self, graph: TaskGraph<P>) -> Schedule {
+        self.run(&graph)
     }
 }
 
@@ -226,49 +317,183 @@ pub struct ThreadExecutor {
     pub nodes: usize,
 }
 
+/// Shared scheduling state of one [`ThreadExecutor::run_graph`] call.
+struct RunState<F> {
+    ready: VecDeque<usize>,
+    payloads: Vec<Option<F>>,
+    indeg: Vec<usize>,
+    completed: usize,
+    total: usize,
+    aborted: bool,
+}
+
+/// Drop guard: if a task payload panics, flip the abort flag and wake
+/// every worker so siblings exit instead of waiting forever on a
+/// completion that will never come (`thread::scope` then re-raises the
+/// original panic after joining).
+struct AbortOnPanic<'a, F> {
+    state: &'a Mutex<RunState<F>>,
+    cv: &'a Condvar,
+}
+
+impl<F> Drop for AbortOnPanic<'_, F> {
+    fn drop(&mut self) {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.aborted = true;
+        self.cv.notify_all();
+    }
+}
+
 impl ThreadExecutor {
     pub fn new(nodes: usize) -> Self {
         Self { nodes: nodes.max(1) }
     }
 
-    /// Run all jobs (no deps), returning their outputs in order.
-    pub fn run_bag<T, F>(&self, jobs: Vec<F>) -> Vec<T>
-    where
-        T: Send,
-        F: FnOnce() -> T + Send,
-    {
-        let n = jobs.len();
-        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        // Work-stealing-free dynamic queue: each worker pulls the next
-        // unclaimed job index.
-        let jobs: Vec<std::sync::Mutex<Option<F>>> =
-            jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
-        let results_mx: Vec<std::sync::Mutex<&mut Option<T>>> =
-            results.iter_mut().map(std::sync::Mutex::new).collect();
-        std::thread::scope(|s| {
-            for _ in 0..self.nodes.min(n.max(1)) {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n {
-                        break;
+    /// Run an executable graph: each task's closure receives its
+    /// dependencies' outputs (in `deps[i]` order) and its own output is
+    /// collected at index i of the returned vector. Tasks only start once
+    /// every dependency has finished; independent tasks run concurrently
+    /// on up to `nodes` worker threads.
+    pub fn run_graph<'env, T: Send + Sync>(&self, graph: TaskGraph<TaskFn<'env, T>>) -> Vec<T> {
+        let n = graph.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let TaskGraph { tasks: _, deps, payloads } = graph;
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg: Vec<usize> = vec![0; n];
+        for (i, ds) in deps.iter().enumerate() {
+            indeg[i] = ds.len();
+            for &d in ds {
+                assert!(d < n, "dependency out of range");
+                children[d].push(i);
+            }
+        }
+        let ready: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        // Acyclicity pre-check (the public fields allow hand-built
+        // graphs): with a cycle, workers would wait forever on a
+        // dependency that can never finish.
+        {
+            let mut indeg2 = indeg.clone();
+            let mut stack: Vec<usize> = ready.iter().copied().collect();
+            let mut seen = 0usize;
+            while let Some(i) = stack.pop() {
+                seen += 1;
+                for &c in &children[i] {
+                    indeg2[c] -= 1;
+                    if indeg2[c] == 0 {
+                        stack.push(c);
                     }
-                    let job = jobs[i].lock().unwrap().take().unwrap();
-                    let out = job();
-                    **results_mx[i].lock().unwrap() = Some(out);
+                }
+            }
+            assert_eq!(seen, n, "cycle in task graph");
+        }
+
+        // One write-once slot per task: a completed output is immutable,
+        // so dependents can safely read `&T` across threads.
+        let outputs: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+        let state = Mutex::new(RunState {
+            ready,
+            payloads: payloads.into_iter().map(Some).collect(),
+            indeg,
+            completed: 0,
+            total: n,
+            aborted: false,
+        });
+        let cv = Condvar::new();
+        let deps_ref = &deps;
+        let children_ref = &children;
+        let outputs_ref = &outputs;
+        let state_ref = &state;
+        let cv_ref = &cv;
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.nodes.min(n) {
+                scope.spawn(|| loop {
+                    let (i, job) = {
+                        let mut st = state_ref.lock().unwrap();
+                        loop {
+                            if st.aborted || st.completed == st.total {
+                                return;
+                            }
+                            if let Some(i) = st.ready.pop_front() {
+                                let job = st.payloads[i].take().expect("payload already taken");
+                                break (i, job);
+                            }
+                            st = cv_ref.wait(st).unwrap();
+                        }
+                    };
+                    let guard = AbortOnPanic { state: state_ref, cv: cv_ref };
+                    // Dependencies finished before this task became ready,
+                    // so their outputs are present (mutex ordering makes
+                    // the writes visible).
+                    let dep_out: Vec<&T> = deps_ref[i]
+                        .iter()
+                        .map(|&d| outputs_ref[d].get().expect("dependency output missing"))
+                        .collect();
+                    let out = job(&dep_out);
+                    assert!(outputs_ref[i].set(out).is_ok(), "task ran twice");
+                    std::mem::forget(guard);
+                    let mut st = state_ref.lock().unwrap();
+                    st.completed += 1;
+                    for &c in &children_ref[i] {
+                        st.indeg[c] -= 1;
+                        if st.indeg[c] == 0 {
+                            st.ready.push_back(c);
+                        }
+                    }
+                    cv_ref.notify_all();
                 });
             }
         });
-        drop(results_mx);
-        results.into_iter().map(|r| r.expect("job ran")).collect()
+
+        let st = state.into_inner().unwrap();
+        assert_eq!(st.completed, n, "task graph run incomplete");
+        outputs
+            .into_iter()
+            .map(|o| o.into_inner().expect("task produced no output"))
+            .collect()
+    }
+
+    /// Run a bag of independent jobs, returning their outputs in order
+    /// (the degenerate dependency-free graph).
+    pub fn run_bag<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + Sync,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let mut g: TaskGraph<TaskFn<'env, T>> = TaskGraph::default();
+        for (i, job) in jobs.into_iter().enumerate() {
+            g.add_task(
+                format!("task-{i}"),
+                TaskCost::default(),
+                1,
+                &[],
+                task_fn(move |_: &[&T]| job()),
+            );
+        }
+        self.run_graph(g)
+    }
+}
+
+impl<'env, T: Send + Sync> Executor<TaskFn<'env, T>> for ThreadExecutor {
+    type Output = Vec<T>;
+
+    fn execute(&self, graph: TaskGraph<TaskFn<'env, T>>) -> Vec<T> {
+        self.run_graph(graph)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
     use super::*;
     use crate::cluster::AmdahlModel;
-    use crate::util::proptest::{check, int_in};
+    use crate::util::proptest::{check, int_in, random_dag};
     use crate::util::Pcg64;
 
     fn free_spec(nodes: usize, cores: usize) -> ClusterSpec {
@@ -289,7 +514,7 @@ mod tests {
 
     #[test]
     fn chain_respects_dependencies() {
-        let mut g = TaskGraph::default();
+        let mut g: TaskGraph = TaskGraph::default();
         let a = g.add("a", cost(1.0), 1, &[]);
         let b = g.add("b", cost(2.0), 1, &[a]);
         let _c = g.add("c", cost(3.0), 1, &[b]);
@@ -302,7 +527,7 @@ mod tests {
 
     #[test]
     fn diamond_parallelizes_middle() {
-        let mut g = TaskGraph::default();
+        let mut g: TaskGraph = TaskGraph::default();
         let a = g.add("a", cost(1.0), 1, &[]);
         let b = g.add("b", cost(5.0), 1, &[a]);
         let c = g.add("c", cost(5.0), 1, &[a]);
@@ -319,7 +544,7 @@ mod tests {
         // may start before the slowest source finishes, every task runs
         // exactly once, and the makespan is bounded by critical path and
         // serial sum.
-        let mut g = TaskGraph::default();
+        let mut g: TaskGraph = TaskGraph::default();
         let srcs: Vec<usize> = (0..4)
             .map(|i| g.add(format!("decompose-{i}"), cost(1.0 + i as f64 * 0.5), 1, &[]))
             .collect();
@@ -358,17 +583,13 @@ mod tests {
                 let n = int_in(r, 1, 30);
                 let nodes = int_in(r, 1, 4);
                 let costs: Vec<f64> = (0..n).map(|_| r.uniform() * 5.0 + 0.01).collect();
-                // Random DAG: each task depends on an earlier one with prob ½.
-                let deps: Vec<Option<usize>> = (0..n)
-                    .map(|i| if i > 0 && r.uniform() < 0.5 { Some(r.below(i)) } else { None })
-                    .collect();
+                let deps = random_dag(r, n, 0.25);
                 (nodes, costs, deps)
             },
             |(nodes, costs, deps)| {
-                let mut g = TaskGraph::default();
+                let mut g: TaskGraph = TaskGraph::default();
                 for (i, &c) in costs.iter().enumerate() {
-                    let d: Vec<usize> = deps[i].into_iter().collect();
-                    g.add(format!("t{i}"), cost(c), 1, &d);
+                    g.add(format!("t{i}"), cost(c), 1, &deps[i]);
                 }
                 let ex = DesExecutor::new(free_spec(*nodes, 1));
                 let s = ex.run(&g);
@@ -406,6 +627,27 @@ mod tests {
     }
 
     #[test]
+    fn map_preserves_names_costs_and_deps() {
+        // The bridge the coordinator relies on: converting descriptor
+        // payloads to closures must not touch the priceable structure.
+        let mut g: TaskGraph<&'static str> = TaskGraph::default();
+        let a = g.add_task("a", cost(1.0), 2, &[], "first");
+        let b = g.add_task("b", cost(2.0), 4, &[a], "second");
+        g.add_task("c", cost(3.0), 1, &[a, b], "third");
+        let names: Vec<String> = g.tasks.iter().map(|t| t.name.clone()).collect();
+        let threads: Vec<usize> = g.tasks.iter().map(|t| t.threads).collect();
+        let costs: Vec<f64> = g.tasks.iter().map(|t| t.cost.compute_secs).collect();
+        let deps = g.deps.clone();
+
+        let mapped = g.map(|p| p.len());
+        assert_eq!(mapped.payloads, vec![5, 6, 5]);
+        assert_eq!(names, mapped.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>());
+        assert_eq!(threads, mapped.tasks.iter().map(|t| t.threads).collect::<Vec<_>>());
+        assert_eq!(costs, mapped.tasks.iter().map(|t| t.cost.compute_secs).collect::<Vec<_>>());
+        assert_eq!(deps, mapped.deps);
+    }
+
+    #[test]
     fn thread_executor_runs_everything_in_order() {
         let ex = ThreadExecutor::new(4);
         let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
@@ -418,5 +660,110 @@ mod tests {
         let ex = ThreadExecutor::new(1);
         let out = ex.run_bag(vec![|| 1, || 2, || 3]);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn thread_executor_feeds_dependency_outputs() {
+        // Diamond: d sees the outputs of b and c, which each saw a's.
+        // Rebuilt per node count (closure payloads are FnOnce).
+        for nodes in [1, 2, 4] {
+            let mut g: TaskGraph<TaskFn<i64>> = TaskGraph::default();
+            let a = g.add_task("a", cost(0.0), 1, &[], task_fn(|_: &[&i64]| 7));
+            let b = g.add_task("b", cost(0.0), 1, &[a], task_fn(|d: &[&i64]| d[0] * 2));
+            let c = g.add_task("c", cost(0.0), 1, &[a], task_fn(|d: &[&i64]| d[0] + 1));
+            g.add_task("d", cost(0.0), 1, &[b, c], task_fn(|d: &[&i64]| d[0] + d[1]));
+            let out = ThreadExecutor::new(nodes).run_graph(g);
+            assert_eq!(out, vec![7, 14, 8, 22], "nodes={nodes}");
+        }
+    }
+
+    #[test]
+    fn thread_executor_graph_runs_each_task_once_respecting_deps() {
+        // Property (executor parity, functional side): over random DAGs,
+        // every task runs exactly once, and no task starts before every
+        // dependency has finished (checked via a global event sequence).
+        check(
+            "thread-executor-dag",
+            |r: &mut Pcg64| {
+                let n = int_in(r, 1, 24);
+                let workers = int_in(r, 1, 4);
+                (workers, random_dag(r, n, 0.3))
+            },
+            |(workers, deps)| {
+                let n = deps.len();
+                let runs: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let start_seq: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let end_seq: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let clock = AtomicUsize::new(0);
+
+                let mut g: TaskGraph<TaskFn<usize>> = TaskGraph::default();
+                for (i, ds) in deps.iter().enumerate() {
+                    let runs = &runs;
+                    let start_seq = &start_seq;
+                    let end_seq = &end_seq;
+                    let clock = &clock;
+                    g.add_task(
+                        format!("t{i}"),
+                        cost(0.0),
+                        1,
+                        ds,
+                        task_fn(move |dep_out: &[&usize]| {
+                            start_seq[i].store(clock.fetch_add(1, Ordering::SeqCst) + 1, Ordering::SeqCst);
+                            runs[i].fetch_add(1, Ordering::SeqCst);
+                            // Output = topological level (checked below).
+                            let level = dep_out.iter().map(|&&l| l).max().unwrap_or(0) + 1;
+                            end_seq[i].store(clock.fetch_add(1, Ordering::SeqCst) + 1, Ordering::SeqCst);
+                            level
+                        }),
+                    );
+                }
+                let out = ThreadExecutor::new(*workers).run_graph(g);
+
+                // Expected levels, computed serially.
+                let mut want = vec![0usize; n];
+                for i in 0..n {
+                    want[i] = deps[i].iter().map(|&d| want[d]).max().unwrap_or(0) + 1;
+                }
+                out == want
+                    && runs.iter().all(|r| r.load(Ordering::SeqCst) == 1)
+                    && deps.iter().enumerate().all(|(i, ds)| {
+                        ds.iter().all(|&d| {
+                            start_seq[i].load(Ordering::SeqCst) > end_seq[d].load(Ordering::SeqCst)
+                        })
+                    })
+            },
+        );
+    }
+
+    #[test]
+    fn executor_trait_unifies_both_engines() {
+        // The same emission code path feeds both executors: build the
+        // graph once as descriptors, map it to closures for the thread
+        // executor, price the descriptor copy on the DES.
+        let mut g: TaskGraph<u32> = TaskGraph::default();
+        let a = g.add_task("src", cost(1.0), 1, &[], 3);
+        g.add_task("sink", cost(2.0), 1, &[a], 4);
+
+        let priced: Schedule = DesExecutor::new(free_spec(2, 1)).execute(g.clone());
+        assert_eq!(priced.tasks.len(), 2);
+        assert!((priced.makespan - 3.0).abs() < 1e-9);
+
+        let runnable = g.map(|seed| task_fn(move |d: &[&u32]| seed + d.iter().map(|&&v| v).sum::<u32>()));
+        let outs = ThreadExecutor::new(2).execute(runnable);
+        assert_eq!(outs, vec![3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle in task graph")]
+    fn hand_built_cycle_is_rejected() {
+        let g: TaskGraph<TaskFn<u32>> = TaskGraph {
+            tasks: vec![
+                TaskSpec { name: "a".into(), cost: cost(0.0), threads: 1 },
+                TaskSpec { name: "b".into(), cost: cost(0.0), threads: 1 },
+            ],
+            deps: vec![vec![1], vec![0]],
+            payloads: vec![task_fn(|_: &[&u32]| 0), task_fn(|_: &[&u32]| 0)],
+        };
+        ThreadExecutor::new(2).run_graph(g);
     }
 }

@@ -118,6 +118,17 @@ pub fn normal_vec_in(rng: &mut Pcg64, nlo: usize, nhi: usize) -> Vec<f64> {
     rng.normal_vec(n)
 }
 
+/// Random DAG over `n` tasks: deps[i] ⊆ {0..i}, each earlier task chosen
+/// independently with probability `edge_prob`. Forward-only edges make
+/// the result acyclic by construction — the generator behind the
+/// executor-parity properties (every task runs once, dependencies are
+/// respected, DES makespan within [critical path, serial sum]).
+pub fn random_dag(rng: &mut Pcg64, n: usize, edge_prob: f64) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| (0..i).filter(|_| rng.uniform() < edge_prob).collect())
+        .collect()
+}
+
 /// Shrinker for a usize: halve toward `lo`.
 pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
     let mut out = Vec::new();
@@ -160,6 +171,24 @@ mod tests {
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
         // The minimal counterexample is exactly 10.
         assert!(msg.contains("shrunk:   10"), "{msg}");
+    }
+
+    #[test]
+    fn random_dag_is_forward_only() {
+        let mut r = Pcg64::seeded(11);
+        for _ in 0..20 {
+            let n = int_in(&mut r, 0, 30);
+            let dag = random_dag(&mut r, n, 0.4);
+            assert_eq!(dag.len(), n);
+            for (i, deps) in dag.iter().enumerate() {
+                assert!(deps.iter().all(|&d| d < i), "backward edge at {i}");
+            }
+        }
+        // Edge probability extremes.
+        let empty = random_dag(&mut r, 10, 0.0);
+        assert!(empty.iter().all(|d| d.is_empty()));
+        let full = random_dag(&mut r, 10, 1.0);
+        assert!(full.iter().enumerate().all(|(i, d)| d.len() == i));
     }
 
     #[test]

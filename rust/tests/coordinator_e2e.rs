@@ -168,9 +168,10 @@ fn des_reproduces_paper_scaling_shape() {
 #[test]
 fn paper_scale_bmor_graph_is_staged() {
     // At the paper's whole-brain scale the B-MOR simulation runs a real
-    // dependency graph: splits+1 decompose tasks with no deps, one sweep
-    // per batch depending on all of them; the DES must keep every sweep
-    // after the decompose stage and the makespan above the critical path.
+    // dependency graph: splits+1 decompose tasks with no deps, an
+    // assemble barrier gathering all of them, one sweep per batch
+    // depending on the assembled plan; the DES must keep every sweep
+    // after the barrier and the makespan above the critical path.
     let cal = Calibration::nominal();
     let shape = FitShape { n: 2048, p: 512, t: 32_000, r: 11, splits: 3 };
     let cfg = DistConfig {
@@ -179,22 +180,25 @@ fn paper_scale_bmor_graph_is_staged() {
         threads_per_node: 32,
         ..Default::default()
     };
-    let g = coordinator::plan_graph(shape, &cfg, &cal);
+    let g = coordinator::task_graph(shape, &cfg, &cal);
     let ndec = shape.splits + 1;
-    assert_eq!(g.len(), ndec + 8);
+    assert_eq!(g.len(), ndec + 1 + 8);
     for i in 0..ndec {
         assert!(g.deps[i].is_empty());
     }
-    for i in ndec..g.len() {
-        assert_eq!(g.deps[i].len(), ndec);
+    assert_eq!(g.deps[ndec].len(), ndec, "assemble gathers every factorization");
+    for i in ndec + 1..g.len() {
+        assert_eq!(g.deps[i], vec![ndec], "sweep {i} depends on the assembled plan");
     }
 
     let spec = ClusterSpec { nodes: cfg.nodes, ..ClusterSpec::default() };
     let amdahl = spec.amdahl;
     let s = DesExecutor::new(spec).run(&g);
+    let assemble_finish = s.tasks[ndec].finish;
     let dec_finish = s.tasks[..ndec].iter().map(|t| t.finish).fold(0.0f64, f64::max);
-    for task in &s.tasks[ndec..] {
-        assert!(task.start >= dec_finish - 1e-9);
+    assert!(assemble_finish >= dec_finish - 1e-9);
+    for task in &s.tasks[ndec + 1..] {
+        assert!(task.start >= assemble_finish - 1e-9);
     }
     // critical_path() is single-thread seconds; with every task 32 threads
     // wide the valid lower bound is the Amdahl-compressed critical path.
