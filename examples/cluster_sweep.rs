@@ -7,7 +7,8 @@
 //! ```
 
 use fmri_encode::cluster::ClusterSpec;
-use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::coordinator::Strategy;
+use fmri_encode::engine::{Engine, SimRequest};
 use fmri_encode::perfmodel::{calibrate, FitShape};
 use fmri_encode::ridge::LAMBDA_GRID;
 use fmri_encode::util::human_secs;
@@ -21,7 +22,9 @@ fn main() {
         cal.gemm_flops_openblas / 1e9,
         cal.eigh_flops / 1e9
     );
-    let cluster = ClusterSpec::default();
+    // Session engine: this machine's measured calibration prices every
+    // request below.
+    let engine = Engine::with_calibration(cal, ClusterSpec::default());
 
     // Whole-brain (B-MOR) truncation shape at repro scale.
     let shape = FitShape { n: 2048, p: 512, t: 32_000, r: LAMBDA_GRID.len(), splits: 3 };
@@ -30,40 +33,27 @@ fn main() {
         shape.n, shape.p, shape.t, shape.r, shape.splits
     );
 
-    let single1 = coordinator::simulate(
-        shape,
-        &DistConfig { strategy: Strategy::Single, nodes: 1, threads_per_node: 1, ..Default::default() },
-        &cal,
-        &cluster,
-    )
-    .makespan;
+    let sim = |strategy, nodes, threads| {
+        engine
+            .simulate(
+                &SimRequest::new(shape)
+                    .strategy(strategy)
+                    .nodes(nodes)
+                    .threads_per_node(threads),
+            )
+            .expect("valid simulation request")
+            .makespan
+    };
+    let single1 = sim(Strategy::Single, 1, 1);
     println!("single-node RidgeCV, 1 thread:  {:>10}", human_secs(single1));
-    let single32 = coordinator::simulate(
-        shape,
-        &DistConfig { strategy: Strategy::Single, nodes: 1, threads_per_node: 32, ..Default::default() },
-        &cal,
-        &cluster,
-    )
-    .makespan;
+    let single32 = sim(Strategy::Single, 1, 32);
     println!("single-node RidgeCV, 32 threads:{:>10}\n", human_secs(single32));
 
     println!("{:>6} {:>8} | {:>12} {:>8} | {:>12} {:>8}", "nodes", "threads", "B-MOR", "DSU", "MOR", "vs 1×32");
     for nodes in [1, 2, 4, 8] {
         for threads in [1, 8, 32] {
-            let bmor = coordinator::simulate(
-                shape,
-                &DistConfig { strategy: Strategy::Bmor, nodes, threads_per_node: threads, ..Default::default() },
-                &cal,
-                &cluster,
-            )
-            .makespan;
-            let mor = coordinator::simulate(
-                shape,
-                &DistConfig { strategy: Strategy::Mor, nodes, threads_per_node: threads, ..Default::default() },
-                &cal,
-                &cluster,
-            )
-            .makespan;
+            let bmor = sim(Strategy::Bmor, nodes, threads);
+            let mor = sim(Strategy::Mor, nodes, threads);
             println!(
                 "{:>6} {:>8} | {:>12} {:>7.1}× | {:>12} {:>7.0}×",
                 nodes,

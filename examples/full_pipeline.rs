@@ -20,10 +20,11 @@
 use anyhow::Result;
 
 use fmri_encode::blas::{Backend, Blas};
-use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::coordinator::Strategy;
 use fmri_encode::cv::{kfold, pearson_cols, train_test_split};
 use fmri_encode::data::friends::window_features;
 use fmri_encode::encoding::RSummary;
+use fmri_encode::engine::{Engine, FitRequest};
 use fmri_encode::hrf;
 use fmri_encode::linalg::Mat;
 use fmri_encode::masker::{atlas::Atlas, BrainGrid};
@@ -165,16 +166,20 @@ fn main() -> Result<()> {
     let ytr = y.rows_gather(&outer.train);
     let xte = x.rows_gather(&outer.val);
     let yte = y.rows_gather(&outer.val);
-    let cfg = DistConfig {
-        strategy: Strategy::Bmor,
-        nodes: 4,
-        threads_per_node: 1,
-        backend: Backend::MklLike,
-        inner_folds: 2,
-        seed: 0,
-    };
+    // Session engine: every fit below goes through one typed entry
+    // point; bad requests surface as EngineError instead of panics.
+    fn bmor_request<'a>(x: &'a Mat, y: &'a Mat) -> FitRequest<'a> {
+        FitRequest::new(x, y)
+            .strategy(Strategy::Bmor)
+            .nodes(4)
+            .threads_per_node(1)
+            .backend(Backend::MklLike)
+            .folds(2)
+            .seed(0)
+    }
+    let engine = Engine::new();
     let sw = Stopwatch::start();
-    let fit = coordinator::fit(&xtr, &ytr, &cfg);
+    let fit = engine.fit(&bmor_request(&xtr, &ytr))?;
     println!(
         "[4] B-MOR fit: {} batches in {} (gram {} | eigh {} | sweep {} | solve {})",
         fit.batches.len(),
@@ -193,7 +198,8 @@ fn main() -> Result<()> {
     let summary = RSummary::from_rs(&rs, &is_visual);
     // Null: break the stimulus↔brain pairing.
     let perm = Pcg64::seeded(7).permutation(xtr.rows());
-    let fit_null = coordinator::fit(&xtr.rows_gather(&perm), &ytr, &cfg);
+    let x_null = xtr.rows_gather(&perm);
+    let fit_null = engine.fit(&bmor_request(&x_null, &ytr))?;
     let pred_null = ridge::predict(&blas, &xte, &fit_null.weights);
     let null = RSummary::from_rs(&pearson_cols(&pred_null, &yte), &is_visual);
     println!(

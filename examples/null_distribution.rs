@@ -5,20 +5,21 @@
 //! cargo run --release --example null_distribution
 //! ```
 
-use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::config::{Args, ExperimentConfig};
 use fmri_encode::data::catalog::Resolution;
 use fmri_encode::data::friends::generate;
-use fmri_encode::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+use fmri_encode::engine::{EncodeRequest, Engine};
+use fmri_encode::util::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(&["null".into(), "--quick".into()])?;
     let exp = ExperimentConfig::from_args(&args)?;
-    let blas = Blas::new(Backend::MklLike, 1);
     let ds = generate(&exp.friends, 1, Resolution::Parcels);
 
+    // One session engine for the matched run and every permutation null.
+    let engine = Engine::new();
     println!("== Fig 5 reproduction: matched vs shuffled encoding (sub-01) ==");
-    let real = run_encoding(&blas, &ds, EncodeOpts::default());
+    let real = engine.encode(&EncodeRequest::new(&ds))?;
     println!(
         "matched   : visual mean r = {:+.4}, q95 = {:+.4}, max = {:+.4}",
         real.summary.mean_visual, real.summary.q95_visual, real.summary.max_r
@@ -26,7 +27,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut null_means = Vec::new();
     for seed in 0..5u64 {
-        let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 1000 + seed);
+        // Break the stimulus↔brain pairing, then run the identical
+        // pipeline through the same engine.
+        let mut shuffled = ds.clone();
+        shuffled.x = ds.x.rows_gather(&Pcg64::seeded(1000 + seed).permutation(ds.n()));
+        let null = engine.encode(&EncodeRequest::new(&shuffled))?;
+        // Each permutation is a fresh design that will never repeat —
+        // drop its plan instead of accumulating one cache entry (plus a
+        // resident copy of the shuffled X) per null.
+        engine.clear_plan_cache();
         println!(
             "shuffled#{seed}: visual mean r = {:+.4}, q95 = {:+.4}, max = {:+.4}",
             null.summary.mean_visual, null.summary.q95_visual, null.summary.max_r

@@ -1,7 +1,7 @@
 //! Quickstart: generate a small synthetic Friends subject, fit the
-//! brain-encoding ridge with the B-MOR coordinator, and print the paper's
-//! headline quality numbers (Fig. 4/5-style) — all native, no artifacts
-//! needed. Runs in well under a minute.
+//! brain-encoding ridge through the `engine::Engine` session API, and
+//! print the paper's headline quality numbers (Fig. 4/5-style) — all
+//! native, no artifacts needed. Runs in well under a minute.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -9,10 +9,11 @@
 
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::config::{Args, ExperimentConfig};
-use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::coordinator::Strategy;
 use fmri_encode::data::catalog::Resolution;
 use fmri_encode::data::friends::generate;
-use fmri_encode::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+use fmri_encode::encoding::{run_null_encoding, EncodeOpts};
+use fmri_encode::engine::{EncodeRequest, Engine, FitRequest};
 use fmri_encode::util::{human_secs, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
@@ -28,15 +29,15 @@ fn main() -> anyhow::Result<()> {
         ds.n(), ds.p(), ds.n(), ds.t(), human_secs(sw.secs())
     );
 
-    // 1. Distributed fit: B-MOR across 4 (simulated) nodes.
-    let cfg = DistConfig {
-        strategy: Strategy::Bmor,
-        nodes: 4,
-        threads_per_node: 1,
-        backend: Backend::MklLike,
-        ..Default::default()
-    };
-    let fit = coordinator::fit(&ds.x, &ds.y, &cfg);
+    // One long-lived engine serves every request below; requests are
+    // builder-style and return Result instead of panicking on bad input.
+    let engine = Engine::new();
+
+    // 1. Distributed fit: B-MOR across 4 (simulated) nodes. Cold — the
+    //    design is decomposed (inner folds + 1 eigendecompositions) and
+    //    the shared plan lands in the engine's cache.
+    let req = FitRequest::new(&ds.x, &ds.y).strategy(Strategy::Bmor).nodes(4);
+    let fit = engine.fit(&req)?;
     println!(
         "\nB-MOR fit over {} batches in {}: λ* per batch = {:?}",
         fit.batches.len(),
@@ -44,10 +45,26 @@ fn main() -> anyhow::Result<()> {
         fit.best_lambda_per_batch
     );
 
-    // 2. Encoding quality + the null control (the paper's Figs. 4–5).
-    let blas = Blas::new(Backend::MklLike, 1);
-    let real = run_encoding(&blas, &ds, EncodeOpts::default());
-    let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 99);
+    // 2. Refit against the SAME design (the serving scenario): the plan
+    //    cache makes it warm — zero new eigendecompositions, sweeps only,
+    //    bit-identical weights.
+    let refit = engine.fit(&req)?;
+    assert!(refit.plan_reused, "second fit should hit the plan cache");
+    assert_eq!(fit.weights.max_abs_diff(&refit.weights), 0.0);
+    println!(
+        "warm refit in {} ({} cached plan, 0 eigendecompositions)",
+        human_secs(refit.wall_secs),
+        engine.cached_plans()
+    );
+
+    // 3. Encoding quality + the null control (the paper's Figs. 4–5).
+    let real = engine.encode(&EncodeRequest::new(&ds))?;
+    let null = run_null_encoding(
+        &Blas::new(Backend::MklLike, 1),
+        &ds,
+        EncodeOpts::default(),
+        99,
+    );
     println!("\nheld-out Pearson r (visual / other / max):");
     println!(
         "  matched stimuli:  {:.3} / {:.3} / {:.3}",

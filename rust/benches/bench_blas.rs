@@ -17,7 +17,7 @@ fn main() {
         let flops = 2.0 * (m * k * n) as f64;
         for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
             let blas = Blas::new(backend, 1);
-            let stats = case(&format!("gemm {m}x{k}x{n} {}", backend.name()), || {
+            let stats = case(&format!("gemm {m}x{k}x{n} {}", backend), || {
                 std::hint::black_box(blas.gemm(&a, &b));
             });
             println!(
@@ -32,10 +32,10 @@ fn main() {
     let y = Mat::randn(1024, 444, &mut rng);
     for backend in [Backend::OpenBlasLike, Backend::MklLike] {
         let blas = Blas::new(backend, 1);
-        case(&format!("syrk 1024x256 {}", backend.name()), || {
+        case(&format!("syrk 1024x256 {}", backend), || {
             std::hint::black_box(blas.syrk(&x));
         });
-        case(&format!("at_b 1024x256x444 {}", backend.name()), || {
+        case(&format!("at_b 1024x256x444 {}", backend), || {
             std::hint::black_box(blas.at_b(&x, &y));
         });
     }

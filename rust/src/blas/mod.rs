@@ -26,7 +26,11 @@ use crate::linalg::Mat;
 use crate::util::pool::ThreadPool;
 
 /// Which GEMM implementation to use (the Fig. 6 x-axis).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Parses case-insensitively from the CLI spellings (`naive`,
+/// `openblas`/`openblas-like`, `mkl`/`mkl-like`) via [`std::str::FromStr`]
+/// and prints its canonical name via [`std::fmt::Display`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Textbook triple loop (correctness oracle / lower bound).
     Naive,
@@ -36,21 +40,42 @@ pub enum Backend {
     MklLike,
 }
 
-impl Backend {
-    pub fn name(&self) -> &'static str {
-        match self {
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
             Backend::Naive => "naive",
             Backend::OpenBlasLike => "openblas-like",
             Backend::MklLike => "mkl-like",
-        }
+        })
     }
+}
 
-    pub fn parse(s: &str) -> Option<Backend> {
-        match s {
-            "naive" => Some(Backend::Naive),
-            "openblas" | "openblas-like" => Some(Backend::OpenBlasLike),
-            "mkl" | "mkl-like" => Some(Backend::MklLike),
-            _ => None,
+/// Error of [`Backend::from_str`](std::str::FromStr): the unrecognized
+/// input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseBackendError(pub String);
+
+impl std::fmt::Display for ParseBackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown backend `{}` (expected naive|openblas|openblas-like|mkl|mkl-like)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseBackendError {}
+
+impl std::str::FromStr for Backend {
+    type Err = ParseBackendError;
+
+    fn from_str(s: &str) -> Result<Backend, ParseBackendError> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(Backend::Naive),
+            "openblas" | "openblas-like" => Ok(Backend::OpenBlasLike),
+            "mkl" | "mkl-like" => Ok(Backend::MklLike),
+            _ => Err(ParseBackendError(s.to_string())),
         }
     }
 }

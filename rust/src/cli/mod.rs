@@ -18,10 +18,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::blas::Blas;
 use crate::config::{Args, ExperimentConfig};
-use crate::coordinator::{self, DistConfig};
+use crate::coordinator::DistConfig;
 use crate::cv::kfold;
 use crate::data::friends::generate;
-use crate::encoding::{run_encoding, EncodeOpts};
+use crate::engine::{EncodeRequest, Engine, FitRequest};
 use crate::figures::{generate_figure, FigCtx};
 use crate::metrics::fnum;
 use crate::perfmodel::{calibrate, flops};
@@ -134,15 +134,21 @@ fn cmd_fit(args: &Args) -> Result<()> {
 
     match args.str_or("path", "native") {
         "native" => {
+            // One session engine for the whole command: bad input
+            // surfaces as a typed EngineError instead of a panic, and
+            // any follow-up request against a design decomposed here
+            // (the fit keys on the full X, the encode on its outer
+            // training rows — two distinct plans) would be served warm.
+            let engine = Engine::new();
             let sw = Stopwatch::start();
-            let fit = coordinator::fit(&ds.x, &ds.y, &cfg);
+            let fit = engine.fit(&FitRequest::new(&ds.x, &ds.y).config(&cfg))?;
             println!(
                 "fit done in {} — strategy={} nodes={} threads={} backend={}",
                 human_secs(sw.secs()),
-                cfg.strategy.name(),
+                cfg.strategy,
                 cfg.nodes,
                 cfg.threads_per_node,
-                cfg.backend.name()
+                cfg.backend
             );
             println!("batches: {:?}", fit.batches);
             println!(
@@ -161,14 +167,18 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 human_secs(fit.timings.solve_secs)
             );
             // Report encoding quality too (one single-node run).
-            let blas = Blas::new(cfg.backend, cfg.threads_per_node);
-            let enc = run_encoding(&blas, &ds, EncodeOpts::default());
+            let enc = engine.encode(
+                &EncodeRequest::new(&ds)
+                    .backend(cfg.backend)
+                    .threads(cfg.threads_per_node),
+            )?;
             println!(
                 "held-out r: visual mean {} | other mean {} | max {}",
                 fnum(enc.summary.mean_visual),
                 fnum(enc.summary.mean_other),
                 fnum(enc.summary.max_r)
             );
+            println!("plan cache: {} design plan(s) resident", engine.cached_plans());
         }
         "xla" => {
             let dir = args.str_or("artifacts", "artifacts");

@@ -77,14 +77,19 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
+    /// `--backend`, parsed case-insensitively via [`Backend`]'s `FromStr`.
     pub fn backend(&self) -> Result<Backend> {
-        let s = self.str_or("backend", "mkl");
-        Backend::parse(s).ok_or_else(|| anyhow!("unknown backend `{s}` (naive|openblas|mkl)"))
+        self.str_or("backend", "mkl")
+            .parse()
+            .map_err(|e| anyhow!("{e}"))
     }
 
+    /// `--strategy`, parsed case-insensitively via [`Strategy`]'s
+    /// `FromStr`.
     pub fn strategy(&self) -> Result<Strategy> {
-        let s = self.str_or("strategy", "bmor");
-        Strategy::parse(s).ok_or_else(|| anyhow!("unknown strategy `{s}` (ridgecv|mor|bmor)"))
+        self.str_or("strategy", "bmor")
+            .parse()
+            .map_err(|e| anyhow!("{e}"))
     }
 
     pub fn resolution(&self) -> Result<Resolution> {
@@ -181,6 +186,23 @@ mod tests {
         assert!(a.backend().is_ok()); // default
         let b = Args::parse(&argv("fit --backend wat")).unwrap();
         assert!(b.backend().is_err());
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_displays_roundtrip() {
+        let a = Args::parse(&argv("fit --backend MKL-Like --strategy B-MOR")).unwrap();
+        assert_eq!(a.backend().unwrap(), Backend::MklLike);
+        assert_eq!(a.strategy().unwrap(), Strategy::Bmor);
+        // Display prints the canonical spelling, which FromStr accepts.
+        for b in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+        }
+        for s in [Strategy::Single, Strategy::Mor, Strategy::Bmor] {
+            assert_eq!(s.to_string().parse::<Strategy>().unwrap(), s);
+        }
+        let err = Args::parse(&argv("fit --strategy wat")).unwrap();
+        let msg = err.strategy().unwrap_err().to_string();
+        assert!(msg.contains("wat") && msg.contains("bmor"), "{msg}");
     }
 
     #[test]

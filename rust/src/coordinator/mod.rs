@@ -19,44 +19,56 @@
 //! factorizations of `ridge::plan`) feeding an assemble barrier that
 //! joins them into the shared [`DesignPlan`], then one target-dependent
 //! sweep task per batch. Both execution paths consume that one graph via
-//! the [`Executor`] abstraction:
+//! the [`crate::scheduler::Executor`] abstraction:
 //!
 //! * [`fit`] — the **functional path**: maps each [`TaskKind`] to a real
 //!   closure over X/Y ([`TaskGraph::map`], which cannot alter names,
-//!   costs or dependency edges) and runs it on [`ThreadExecutor`] —
-//!   decompositions happen in the decompose tasks (still `splits + 1`
-//!   eigendecompositions in total, now parallelizable), sweeps fan out
-//!   against the assembled plan;
+//!   costs or dependency edges) and runs it on
+//!   [`crate::scheduler::ThreadExecutor`] — decompositions happen in the
+//!   decompose tasks (still `splits + 1` eigendecompositions in total,
+//!   now parallelizable), sweeps fan out against the assembled plan;
 //! * [`simulate`] — the **timing path**: hands the identical nodes to
-//!   [`DesExecutor`], which prices them with the calibrated cost model
-//!   and schedules them on the cluster DES (this container has one core;
-//!   see DESIGN.md §3).
+//!   [`crate::scheduler::DesExecutor`], which prices them with the
+//!   calibrated cost model and schedules them on the cluster DES (this
+//!   container has one core; see DESIGN.md §3).
 //!
 //! Because both paths share one emission, the functional fit and the DES
 //! schedule cannot structurally diverge — pinned by the executor-parity
 //! tests.
+//!
+//! Session layer: [`fit`] and [`simulate`] are thin compatibility
+//! wrappers over [`crate::engine::Engine`], the typed entry point that
+//! owns the calibration, cluster spec and the keyed plan cache. This
+//! module keeps the graph *emission* ([`task_graph`]) and
+//! *instantiation*; the engine owns validation, execution and plan
+//! reuse across requests.
 
 pub mod batching;
 
+use std::fmt;
+use std::str::FromStr;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
-use crate::cv::{kfold, Split};
+use crate::cv::Split;
+use crate::engine::{Engine, FitRequest, SimRequest};
 use crate::linalg::Mat;
 use crate::perfmodel::{
     assemble_task_cost, batch_task_cost, decompose_task_cost, sweep_task_cost, Calibration,
     FitShape,
 };
 use crate::ridge::{self, DesignPlan, FullDesign, RidgeCvFit, RidgeTimings, SplitDesign};
-use crate::scheduler::{
-    task_fn, DesExecutor, Executor, Schedule, TaskFn, TaskGraph, ThreadExecutor,
-};
+use crate::scheduler::{task_fn, Schedule, TaskFn, TaskGraph};
 
 pub use batching::batch_bounds;
 
 /// Which parallelization strategy to run.
+///
+/// Parses case-insensitively from the CLI spellings (`ridgecv`/`single`,
+/// `mor`, `bmor`/`b-mor`) via [`FromStr`] and prints its canonical name
+/// via [`fmt::Display`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
     Single,
@@ -64,21 +76,41 @@ pub enum Strategy {
     Bmor,
 }
 
-impl Strategy {
-    pub fn name(&self) -> &'static str {
-        match self {
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
             Strategy::Single => "ridgecv",
             Strategy::Mor => "mor",
             Strategy::Bmor => "bmor",
-        }
+        })
     }
+}
 
-    pub fn parse(s: &str) -> Option<Strategy> {
-        match s {
-            "ridgecv" | "single" => Some(Strategy::Single),
-            "mor" => Some(Strategy::Mor),
-            "bmor" | "b-mor" => Some(Strategy::Bmor),
-            _ => None,
+/// Error of [`Strategy::from_str`]: the unrecognized input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseStrategyError(pub String);
+
+impl fmt::Display for ParseStrategyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown strategy `{}` (expected ridgecv|single|mor|bmor|b-mor)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseStrategyError {}
+
+impl FromStr for Strategy {
+    type Err = ParseStrategyError;
+
+    fn from_str(s: &str) -> Result<Strategy, ParseStrategyError> {
+        match s.to_ascii_lowercase().as_str() {
+            "ridgecv" | "single" => Ok(Strategy::Single),
+            "mor" => Ok(Strategy::Mor),
+            "bmor" | "b-mor" => Ok(Strategy::Bmor),
+            _ => Err(ParseStrategyError(s.to_string())),
         }
     }
 }
@@ -129,13 +161,16 @@ pub enum TaskKind {
 }
 
 /// What each functional task yields (the thread executor collects one per
-/// node; dependents receive references).
+/// node; dependents receive references). Factorizations travel as `Arc`s
+/// so the assemble barrier joins them into the shared [`DesignPlan`] by
+/// reference — no matrix is copied out of an output slot.
 pub enum TaskOutput {
     /// One split's factorization + its stage timings.
-    Split(Box<SplitDesign>, RidgeTimings),
+    Split(Arc<SplitDesign>, RidgeTimings),
     /// The full-train factorization + its stage timings.
     Full(FullDesign, RidgeTimings),
-    /// The assembled shared plan (Arc: every sweep task holds it).
+    /// The assembled shared plan (Arc: every sweep task holds it, and the
+    /// engine's plan cache retains it across fits).
     Plan(Arc<DesignPlan>),
     /// A finished batch fit.
     Fit(Box<RidgeCvFit>),
@@ -154,8 +189,12 @@ pub struct DistributedFit {
     pub wall_secs: f64,
     /// Wall-clock from fit start until the shared plan finished
     /// assembling (B-MOR: the decompose stage; included in `wall_secs`).
-    /// Zero for the self-contained strategies, which build no shared plan.
+    /// Zero for the self-contained strategies, which build no shared
+    /// plan, and for warm engine fits, which found it already built.
     pub plan_secs: f64,
+    /// True when the fit was served from the engine's plan cache (warm
+    /// path: zero eigendecompositions were performed).
+    pub plan_reused: bool,
     /// Aggregated per-stage compute timings across plan build + workers.
     pub timings: RidgeTimings,
 }
@@ -265,9 +304,10 @@ pub fn task_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskG
 /// Turn the typed DAG into an executable one: every [`TaskKind`] becomes
 /// a real closure over X/Y. Names, costs and dependency edges are
 /// untouched ([`TaskGraph::map`]), so the executed graph is structurally
-/// identical to the priced one.
+/// identical to the priced one. Crate-internal: `engine::Engine::fit` is
+/// the executing caller.
 #[allow(clippy::too_many_arguments)]
-fn instantiate<'a>(
+pub(crate) fn instantiate<'a>(
     graph: TaskGraph<TaskKind>,
     x: &'a Mat,
     y: &'a Mat,
@@ -278,6 +318,14 @@ fn instantiate<'a>(
     started: Instant,
     plan_elapsed: &'a Mutex<f64>,
 ) -> TaskGraph<TaskFn<'a, TaskOutput>> {
+    // The assembled plan shares X behind an Arc instead of owning a
+    // private clone; materialize that Arc once, only when the graph has
+    // an assemble barrier (the self-contained strategies never need it).
+    let x_shared = graph
+        .payloads
+        .iter()
+        .any(|k| matches!(k, TaskKind::Assemble))
+        .then(|| Arc::new(x.clone()));
     graph.map(move |kind| match kind {
         TaskKind::SelfContained { j0, j1 } => {
             let yb = y.cols_slice(j0, j1);
@@ -289,40 +337,45 @@ fn instantiate<'a>(
         TaskKind::DecomposeSplit { split } => task_fn(move |_: &[&TaskOutput]| {
             let blas = Blas::new(backend, threads);
             let (sd, tim) = ridge::factorize_split(&blas, x, &splits[split]);
-            TaskOutput::Split(Box::new(sd), tim)
+            TaskOutput::Split(Arc::new(sd), tim)
         }),
         TaskKind::DecomposeFull => task_fn(move |_: &[&TaskOutput]| {
             let blas = Blas::new(backend, threads);
             let (full, tim) = ridge::factorize_full(&blas, x);
             TaskOutput::Full(full, tim)
         }),
-        TaskKind::Assemble => task_fn(move |deps: &[&TaskOutput]| {
-            let mut tim = RidgeTimings::default();
-            let mut designs: Vec<SplitDesign> = Vec::new();
-            let mut full: Option<FullDesign> = None;
-            for d in deps {
-                match d {
-                    TaskOutput::Split(sd, t) => {
-                        designs.push((**sd).clone());
-                        tim.add(t);
+        TaskKind::Assemble => {
+            let x_shared = x_shared.clone().expect("assemble task without shared X");
+            task_fn(move |deps: &[&TaskOutput]| {
+                let mut tim = RidgeTimings::default();
+                // Arc clones only: assembly shares the factorizations
+                // sitting in the decompose tasks' output slots.
+                let mut designs: Vec<Arc<SplitDesign>> = Vec::new();
+                let mut full: Option<FullDesign> = None;
+                for d in deps {
+                    match d {
+                        TaskOutput::Split(sd, t) => {
+                            designs.push(Arc::clone(sd));
+                            tim.add(t);
+                        }
+                        TaskOutput::Full(f, t) => {
+                            full = Some(f.clone());
+                            tim.add(t);
+                        }
+                        _ => unreachable!("assemble depends only on decompose tasks"),
                     }
-                    TaskOutput::Full(f, t) => {
-                        full = Some(f.clone());
-                        tim.add(t);
-                    }
-                    _ => unreachable!("assemble depends only on decompose tasks"),
                 }
-            }
-            let plan = DesignPlan::assemble(
-                x.clone(),
-                designs,
-                full.expect("missing full-train factorization"),
-                lambdas,
-                tim,
-            );
-            *plan_elapsed.lock().unwrap() = started.elapsed().as_secs_f64();
-            TaskOutput::Plan(Arc::new(plan))
-        }),
+                let plan = DesignPlan::assemble(
+                    x_shared,
+                    designs,
+                    full.expect("missing full-train factorization"),
+                    lambdas,
+                    tim,
+                );
+                *plan_elapsed.lock().unwrap() = started.elapsed().as_secs_f64();
+                TaskOutput::Plan(Arc::new(plan))
+            })
+        }
         TaskKind::Sweep { j0, j1, .. } => {
             let yb = y.cols_slice(j0, j1);
             task_fn(move |deps: &[&TaskOutput]| {
@@ -338,96 +391,43 @@ fn instantiate<'a>(
 
 /// Functional path: really fit, using `nodes` worker threads.
 ///
-/// Emits the strategy's task graph ONCE (the same emission [`simulate`]
-/// prices), instantiates each node as a closure and executes it on the
-/// [`ThreadExecutor`]. For B-MOR the `splits + 1` factorizations run as
-/// independent decompose tasks feeding the assemble barrier — still
-/// exactly `inner_folds + 1` eigendecompositions in total regardless of
-/// batch count, now scheduled instead of serialized on the leader.
+/// Compatibility wrapper over [`Engine::fit`] with a fresh single-request
+/// engine — every call is a cold fit (the strategy's task graph is
+/// emitted once, instantiated as closures and executed; B-MOR's
+/// `splits + 1` factorizations run as independent decompose tasks feeding
+/// the assemble barrier). Callers that fit the same design repeatedly
+/// should hold an [`Engine`] instead: its plan cache makes the repeats
+/// warm (zero eigendecompositions). Panics on invalid input, as the
+/// pre-engine API did; [`Engine::fit`] returns the typed error.
 pub fn fit(x: &Mat, y: &Mat, cfg: &DistConfig) -> DistributedFit {
-    let t = y.cols();
-    let p = x.cols();
-    let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
-    let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
-    let shape = FitShape {
-        n: x.rows(),
-        p,
-        t,
-        r: ridge::LAMBDA_GRID.len(),
-        splits: splits.len(),
-    };
-    // Costs are irrelevant to the functional run; nominal calibration
-    // keeps the emission deterministic and measurement-free.
-    let graph = task_graph(shape, cfg, &Calibration::nominal());
-
-    let started = Instant::now();
-    let plan_elapsed = Mutex::new(0.0f64);
-    let runnable = instantiate(
-        graph,
-        x,
-        y,
-        &splits,
-        cfg.backend,
-        cfg.threads_per_node,
-        &ridge::LAMBDA_GRID,
-        started,
-        &plan_elapsed,
-    );
-    let outs = ThreadExecutor::new(cfg.nodes).execute(runnable);
-    let wall_secs = started.elapsed().as_secs_f64();
-
-    // Collect: batch fits arrive in task-id order, which is batch order.
-    let mut fits: Vec<Box<RidgeCvFit>> = Vec::with_capacity(batches.len());
-    let mut timings = RidgeTimings::default();
-    for out in outs {
-        match out {
-            TaskOutput::Fit(f) => fits.push(f),
-            TaskOutput::Plan(plan) => timings.add(&plan.build_timings),
-            // Factorizations were folded into the plan by assemble.
-            TaskOutput::Split(..) | TaskOutput::Full(..) => {}
-        }
-    }
-    assert_eq!(fits.len(), batches.len(), "one fit per batch");
-
-    let mut weights = Mat::zeros(p, t);
-    let mut best_lambda_per_batch = Vec::with_capacity(batches.len());
-    for (f, &(j0, j1)) in fits.iter().zip(&batches) {
-        for i in 0..p {
-            weights.row_mut(i)[j0..j1].copy_from_slice(f.weights.row(i));
-        }
-        best_lambda_per_batch.push(f.best_lambda);
-        timings.add(&f.timings);
-    }
-    let plan_secs = *plan_elapsed.lock().unwrap();
-    DistributedFit {
-        weights,
-        best_lambda_per_batch,
-        batches,
-        wall_secs,
-        plan_secs,
-        timings,
-    }
+    Engine::new()
+        .fit(&FitRequest::new(x, y).config(cfg))
+        .expect("coordinator::fit: invalid request (use engine::Engine for typed errors)")
 }
 
 /// Timing path: price the strategy's task graph — the same emission
 /// [`fit`] executes — on the cluster DES with calibrated per-task costs.
 /// Returns the schedule (makespan = the figures' y-axis).
+///
+/// Compatibility wrapper over [`Engine::simulate`]; panics on invalid
+/// input where the engine returns the typed error.
 pub fn simulate(
     shape: FitShape,
     cfg: &DistConfig,
     cal: &Calibration,
     cluster: &ClusterSpec,
 ) -> Schedule {
-    let mut spec = cluster.clone();
-    spec.nodes = cfg.nodes;
-    DesExecutor::new(spec).execute(task_graph(shape, cfg, cal))
+    Engine::with_calibration(*cal, cluster.clone())
+        .simulate(&SimRequest::new(shape).config(cfg))
+        .expect("coordinator::simulate: invalid request (use engine::Engine for typed errors)")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::TaskCost;
-    use crate::cv::pearson_cols;
+    use crate::cv::{kfold, pearson_cols};
+    use crate::scheduler::DesExecutor;
     use crate::util::Pcg64;
 
     fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {

@@ -7,9 +7,9 @@
 //! null (Fig. 5).
 
 use crate::blas::Blas;
-use crate::cv::{self, kfold, pearson_cols};
 use crate::data::{EncodingDataset, Resolution};
-use crate::ridge::{self, RidgeCvFit};
+use crate::engine::{EncodeRequest, Engine};
+use crate::ridge::RidgeCvFit;
 use crate::util::Pcg64;
 
 /// Result of a full encoding experiment on one dataset.
@@ -96,25 +96,23 @@ impl Default for EncodeOpts {
 }
 
 /// Run the full encoding experiment on a dataset with the native path.
+///
+/// Compatibility wrapper over [`Engine::encode`] with a fresh
+/// single-request engine — every call decomposes the training design
+/// from scratch. Callers that encode against the same design repeatedly
+/// (several resolutions of one subject, permutation nulls over a fixed
+/// stimulus) should hold an [`Engine`] and issue [`EncodeRequest`]s so
+/// the plan cache absorbs the repeats. Panics on invalid options, as the
+/// pre-engine API did; [`Engine::encode`] returns the typed error.
 pub fn run_encoding(blas: &Blas, ds: &EncodingDataset, opts: EncodeOpts) -> EncodingResult {
-    let outer = cv::train_test_split(ds.n(), opts.test_frac, opts.seed);
-    let xtr = ds.x.rows_gather(&outer.train);
-    let ytr = ds.y.rows_gather(&outer.train);
-    let xte = ds.x.rows_gather(&outer.val);
-    let yte = ds.y.rows_gather(&outer.val);
-
-    let splits = kfold(xtr.rows(), opts.inner_folds, Some(opts.seed));
-    let fit = ridge::fit_ridge_cv(blas, &xtr, &ytr, &ridge::LAMBDA_GRID, &splits);
-    let pred = ridge::predict(blas, &xte, &fit.weights);
-    let test_r = pearson_cols(&pred, &yte);
-    let summary = RSummary::from_rs(&test_r, &ds.is_visual);
-    EncodingResult {
-        fit,
-        test_r,
-        summary,
-        subject: ds.subject,
-        resolution: ds.resolution,
-    }
+    Engine::new()
+        .encode(
+            &EncodeRequest::new(ds)
+                .opts(opts)
+                .backend(blas.backend)
+                .threads(blas.threads()),
+        )
+        .expect("run_encoding: invalid options (use engine::Engine for typed errors)")
 }
 
 /// The Fig. 5 null: shuffle the time correspondence between features and

@@ -1,0 +1,929 @@
+//! The long-lived engine: ONE typed entry point over the whole crate.
+//!
+//! The paper's cost model (§3, Eq. 6–7) says the O(p³) design
+//! decomposition — not the target sweep — dominates ridge-CV training,
+//! and that sharing its factors across target batches is what makes
+//! B-MOR practical. [`Engine`] extends that sharing across *requests*:
+//! it owns the calibration, the cluster spec and a keyed **plan cache**
+//! of [`Arc<DesignPlan>`]s, so a second fit against the same design
+//! (same X, CV splits and λ grid — the serving scenario, where models
+//! are refit for new target sets against a fixed stimulus design) skips
+//! every eigendecomposition and goes straight to
+//! [`ridge::fit_batch_with_plan`].
+//!
+//! The API is builder-style requests that validate into typed errors
+//! instead of panicking:
+//!
+//! * [`FitRequest`] → [`Engine::fit`] — a functional distributed fit
+//!   (the graph emission and execution live in [`crate::coordinator`];
+//!   the engine adds validation and plan reuse);
+//! * [`SimRequest`] → [`Engine::simulate`] — price the same emission on
+//!   the cluster DES with the engine's calibration;
+//! * [`EncodeRequest`] → [`Engine::encode`] — the full encoding
+//!   experiment (outer split, inner-CV ridge through the plan cache,
+//!   held-out scoring).
+//!
+//! `coordinator::fit`, `coordinator::simulate` and
+//! `encoding::run_encoding` are thin compatibility wrappers over a
+//! fresh single-request engine; anything that issues more than one
+//! request against the same design should hold an `Engine` instead.
+//!
+//! Cache discipline: only plan-backed strategies consult the cache
+//! ([`Strategy::Bmor`]). The self-contained strategies exist to
+//! reproduce the paper's baselines — MOR's per-target refactorization
+//! redundancy (Eq. 6) and the single-node RidgeCV reference — and
+//! serving them from a shared plan would falsify exactly the cost they
+//! measure. A warm B-MOR fit is pinned (tests/engine_api.rs) to perform
+//! **zero** eigendecompositions and return weights bit-identical to the
+//! cold path.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::blas::{Backend, Blas};
+use crate::cluster::ClusterSpec;
+use crate::coordinator::{
+    instantiate, strategy_batches, task_graph, DistConfig, DistributedFit, Strategy, TaskOutput,
+};
+use crate::cv::{self, kfold, pearson_cols, Split};
+use crate::data::friends::EncodingDataset;
+use crate::encoding::{EncodeOpts, EncodingResult, RSummary};
+use crate::linalg::Mat;
+use crate::perfmodel::{Calibration, FitShape};
+use crate::ridge::{self, DesignPlan, RidgeCvFit, RidgeTimings};
+use crate::scheduler::{DesExecutor, Executor, Schedule, ThreadExecutor};
+
+/// Typed failure of an engine request. Every constructor that used to
+/// panic on bad input (dimension mismatches, empty grids, zero nodes)
+/// reports here instead, so a serving loop can reject a request without
+/// unwinding the process.
+///
+/// `PartialEq` only (no `Eq`): [`EngineError::InvalidTestFraction`]
+/// carries the offending `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// X and Y disagree on the number of samples (rows).
+    DimensionMismatch { x_rows: usize, y_rows: usize },
+    /// Y has no target columns.
+    EmptyTargets,
+    /// X has no rows or no columns.
+    EmptyDesign { rows: usize, cols: usize },
+    /// Inner-CV fold count outside `2 ..= samples` (zero included).
+    InvalidFolds { folds: usize, samples: usize },
+    /// A cluster of zero nodes cannot run anything.
+    ZeroNodes,
+    /// A node with zero threads cannot run anything.
+    ZeroThreads,
+    /// The λ grid is empty.
+    EmptyLambdaGrid,
+    /// Outer test fraction outside (0, 1).
+    InvalidTestFraction { test_frac: f64 },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::DimensionMismatch { x_rows, y_rows } => write!(
+                f,
+                "design/target row mismatch: X has {x_rows} samples, Y has {y_rows}"
+            ),
+            EngineError::EmptyTargets => write!(f, "empty target set: Y has no columns"),
+            EngineError::EmptyDesign { rows, cols } => {
+                write!(f, "empty design matrix: X is {rows} × {cols}")
+            }
+            EngineError::InvalidFolds { folds, samples } => write!(
+                f,
+                "invalid inner-CV folds: need 2 <= folds <= samples, got {folds} over {samples} samples"
+            ),
+            EngineError::ZeroNodes => write!(f, "nodes must be >= 1"),
+            EngineError::ZeroThreads => write!(f, "threads per node must be >= 1"),
+            EngineError::EmptyLambdaGrid => write!(f, "empty λ grid"),
+            EngineError::InvalidTestFraction { test_frac } => {
+                write!(f, "test fraction must be in (0, 1), got {test_frac}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+// ---------------------------------------------------------------------------
+// Plan cache key
+// ---------------------------------------------------------------------------
+
+/// Identity of a shared design decomposition: fingerprints of the design
+/// matrix contents, the CV split index sets and the λ grid, plus the
+/// compute configuration (backend and thread width) that factorized it —
+/// the backends use different accumulation orders, so factors from one
+/// are not bit-identical to another's and must not be served across
+/// them. Two requests with equal keys would build bit-identical
+/// [`DesignPlan`]s, so the cached plan can serve both. 64-bit FNV-1a
+/// over the exact f64 bit patterns — hashing is O(n·p), negligible
+/// against the O(p³) decomposition it saves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    design: u64,
+    splits: u64,
+    lambdas: u64,
+    backend: Backend,
+    threads: usize,
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl PlanKey {
+    fn new(
+        x: &Mat,
+        splits: &[Split],
+        lambdas: &[f64],
+        backend: Backend,
+        threads: usize,
+    ) -> PlanKey {
+        let mut hd = Fnv::new();
+        hd.u64(x.rows() as u64);
+        hd.u64(x.cols() as u64);
+        for v in x.data() {
+            hd.u64(v.to_bits());
+        }
+        let mut hs = Fnv::new();
+        hs.u64(splits.len() as u64);
+        for s in splits {
+            hs.u64(s.train.len() as u64);
+            for &i in &s.train {
+                hs.u64(i as u64);
+            }
+            hs.u64(s.val.len() as u64);
+            for &i in &s.val {
+                hs.u64(i as u64);
+            }
+        }
+        let mut hl = Fnv::new();
+        hl.u64(lambdas.len() as u64);
+        for v in lambdas {
+            hl.u64(v.to_bits());
+        }
+        PlanKey {
+            design: hd.finish(),
+            splits: hs.finish(),
+            lambdas: hl.finish(),
+            backend,
+            threads,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Builder for a functional distributed fit ([`Engine::fit`]).
+///
+/// Defaults mirror [`DistConfig::default`]: B-MOR on one node, one
+/// thread, MKL-like backend, 3 inner folds, seed 0, the paper's λ grid.
+#[derive(Clone, Debug)]
+pub struct FitRequest<'a> {
+    x: &'a Mat,
+    y: &'a Mat,
+    strategy: Strategy,
+    nodes: usize,
+    threads_per_node: usize,
+    backend: Backend,
+    folds: usize,
+    seed: u64,
+    lambdas: Vec<f64>,
+}
+
+impl<'a> FitRequest<'a> {
+    pub fn new(x: &'a Mat, y: &'a Mat) -> Self {
+        let d = DistConfig::default();
+        Self {
+            x,
+            y,
+            strategy: d.strategy,
+            nodes: d.nodes,
+            threads_per_node: d.threads_per_node,
+            backend: d.backend,
+            folds: d.inner_folds,
+            seed: d.seed,
+            lambdas: ridge::LAMBDA_GRID.to_vec(),
+        }
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn threads_per_node(mut self, threads: usize) -> Self {
+        self.threads_per_node = threads;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn folds(mut self, folds: usize) -> Self {
+        self.folds = folds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lambdas(mut self, lambdas: &[f64]) -> Self {
+        self.lambdas = lambdas.to_vec();
+        self
+    }
+
+    /// Adopt every knob of a legacy [`DistConfig`] at once (what the
+    /// `coordinator::fit` compatibility wrapper uses).
+    pub fn config(mut self, cfg: &DistConfig) -> Self {
+        self.strategy = cfg.strategy;
+        self.nodes = cfg.nodes;
+        self.threads_per_node = cfg.threads_per_node;
+        self.backend = cfg.backend;
+        self.folds = cfg.inner_folds;
+        self.seed = cfg.seed;
+        self
+    }
+
+    fn dist_config(&self) -> DistConfig {
+        DistConfig {
+            strategy: self.strategy,
+            nodes: self.nodes,
+            threads_per_node: self.threads_per_node,
+            backend: self.backend,
+            inner_folds: self.folds,
+            seed: self.seed,
+        }
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        if self.x.rows() == 0 || self.x.cols() == 0 {
+            return Err(EngineError::EmptyDesign { rows: self.x.rows(), cols: self.x.cols() });
+        }
+        if self.x.rows() != self.y.rows() {
+            return Err(EngineError::DimensionMismatch {
+                x_rows: self.x.rows(),
+                y_rows: self.y.rows(),
+            });
+        }
+        if self.y.cols() == 0 {
+            return Err(EngineError::EmptyTargets);
+        }
+        if self.folds < 2 || self.folds > self.x.rows() {
+            return Err(EngineError::InvalidFolds { folds: self.folds, samples: self.x.rows() });
+        }
+        if self.nodes == 0 {
+            return Err(EngineError::ZeroNodes);
+        }
+        if self.threads_per_node == 0 {
+            return Err(EngineError::ZeroThreads);
+        }
+        if self.lambdas.is_empty() {
+            return Err(EngineError::EmptyLambdaGrid);
+        }
+        Ok(())
+    }
+}
+
+/// Builder for a DES pricing run ([`Engine::simulate`]): the same
+/// strategy knobs as [`FitRequest`], but over an abstract [`FitShape`]
+/// instead of concrete matrices.
+#[derive(Clone, Copy, Debug)]
+pub struct SimRequest {
+    shape: FitShape,
+    strategy: Strategy,
+    nodes: usize,
+    threads_per_node: usize,
+    backend: Backend,
+}
+
+impl SimRequest {
+    pub fn new(shape: FitShape) -> Self {
+        let d = DistConfig::default();
+        Self {
+            shape,
+            strategy: d.strategy,
+            nodes: d.nodes,
+            threads_per_node: d.threads_per_node,
+            backend: d.backend,
+        }
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn threads_per_node(mut self, threads: usize) -> Self {
+        self.threads_per_node = threads;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Adopt every knob of a legacy [`DistConfig`] at once.
+    pub fn config(mut self, cfg: &DistConfig) -> Self {
+        self.strategy = cfg.strategy;
+        self.nodes = cfg.nodes;
+        self.threads_per_node = cfg.threads_per_node;
+        self.backend = cfg.backend;
+        self
+    }
+
+    fn dist_config(&self) -> DistConfig {
+        DistConfig {
+            strategy: self.strategy,
+            nodes: self.nodes,
+            threads_per_node: self.threads_per_node,
+            backend: self.backend,
+            inner_folds: self.shape.splits,
+            seed: 0,
+        }
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        if self.shape.n == 0 || self.shape.p == 0 {
+            return Err(EngineError::EmptyDesign { rows: self.shape.n, cols: self.shape.p });
+        }
+        if self.shape.t == 0 {
+            return Err(EngineError::EmptyTargets);
+        }
+        if self.shape.r == 0 {
+            return Err(EngineError::EmptyLambdaGrid);
+        }
+        if self.shape.splits < 2 || self.shape.splits > self.shape.n {
+            return Err(EngineError::InvalidFolds {
+                folds: self.shape.splits,
+                samples: self.shape.n,
+            });
+        }
+        if self.nodes == 0 {
+            return Err(EngineError::ZeroNodes);
+        }
+        if self.threads_per_node == 0 {
+            return Err(EngineError::ZeroThreads);
+        }
+        Ok(())
+    }
+}
+
+/// Builder for a full encoding experiment ([`Engine::encode`]): outer
+/// train/test split, inner-CV ridge through the plan cache, held-out
+/// Pearson scoring. Defaults mirror [`EncodeOpts::default`] on one
+/// MKL-like thread.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeRequest<'a> {
+    dataset: &'a EncodingDataset,
+    test_frac: f64,
+    folds: usize,
+    seed: u64,
+    backend: Backend,
+    threads: usize,
+}
+
+impl<'a> EncodeRequest<'a> {
+    pub fn new(dataset: &'a EncodingDataset) -> Self {
+        let o = EncodeOpts::default();
+        Self {
+            dataset,
+            test_frac: o.test_frac,
+            folds: o.inner_folds,
+            seed: o.seed,
+            backend: Backend::MklLike,
+            threads: 1,
+        }
+    }
+
+    pub fn test_frac(mut self, test_frac: f64) -> Self {
+        self.test_frac = test_frac;
+        self
+    }
+
+    pub fn folds(mut self, folds: usize) -> Self {
+        self.folds = folds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Adopt a legacy [`EncodeOpts`] bundle at once.
+    pub fn opts(mut self, opts: EncodeOpts) -> Self {
+        self.test_frac = opts.test_frac;
+        self.folds = opts.inner_folds;
+        self.seed = opts.seed;
+        self
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        let (n, p, t) = (self.dataset.n(), self.dataset.p(), self.dataset.t());
+        if n == 0 || p == 0 {
+            return Err(EngineError::EmptyDesign { rows: n, cols: p });
+        }
+        if t == 0 {
+            return Err(EngineError::EmptyTargets);
+        }
+        if !(self.test_frac > 0.0 && self.test_frac < 1.0) {
+            return Err(EngineError::InvalidTestFraction { test_frac: self.test_frac });
+        }
+        // A single sample cannot be split into train + test at all; no
+        // fold count would be valid. The folds-vs-training-rows check
+        // lives in [`Engine::encode`], against the actual outer split
+        // rather than a re-derivation of its arithmetic.
+        if n < 2 {
+            return Err(EngineError::InvalidFolds { folds: self.folds, samples: n });
+        }
+        if self.threads == 0 {
+            return Err(EngineError::ZeroThreads);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Long-lived session over the ridge system: BLAS backends are selected
+/// per request, but the calibration, the cluster spec and — crucially —
+/// the decomposed design plans persist across requests.
+///
+/// Thread-safe: the cache sits behind a mutex held only for lookups and
+/// inserts (never while computing), and cached plans are [`Arc`]s, so
+/// concurrent warm fits share one set of factors.
+pub struct Engine {
+    cal: Calibration,
+    cluster: ClusterSpec,
+    plans: Mutex<HashMap<PlanKey, Arc<DesignPlan>>>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+impl Engine {
+    /// Engine with the nominal calibration and default cluster spec —
+    /// right for functional fits and encoding; [`Engine::simulate`]
+    /// callers that want *this machine's* throughput should use
+    /// [`Engine::with_calibration`] with a measured [`Calibration`].
+    pub fn new() -> Self {
+        Engine::with_calibration(Calibration::nominal(), ClusterSpec::default())
+    }
+
+    pub fn with_calibration(cal: Calibration, cluster: ClusterSpec) -> Self {
+        Engine { cal, cluster, plans: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn calibration(&self) -> &Calibration {
+        &self.cal
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    /// Number of design plans currently resident in the cache.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// Drop every cached plan (frees the shared factor memory once no
+    /// in-flight fit holds an `Arc` to it).
+    pub fn clear_plan_cache(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+
+    fn lookup(&self, key: &PlanKey) -> Option<Arc<DesignPlan>> {
+        self.plans.lock().unwrap().get(key).cloned()
+    }
+
+    fn store(&self, key: PlanKey, plan: Arc<DesignPlan>) {
+        self.plans.lock().unwrap().insert(key, plan);
+    }
+
+    /// Functional distributed fit. Plan-backed strategies (B-MOR) check
+    /// the cache first: a warm hit skips the decompose stage entirely —
+    /// zero eigendecompositions, sweeps fan straight out against the
+    /// shared [`Arc<DesignPlan>`] — and is bit-identical to the cold
+    /// path (both run [`ridge::fit_batch_with_plan`] on the same
+    /// factors). A cold fit executes the coordinator's full
+    /// decompose→assemble→sweep graph and caches the assembled plan.
+    pub fn fit(&self, req: &FitRequest) -> Result<DistributedFit, EngineError> {
+        req.validate()?;
+        let cfg = req.dist_config();
+        let splits = kfold(req.x.rows(), cfg.inner_folds, Some(cfg.seed));
+        if cfg.strategy == Strategy::Bmor {
+            let key = PlanKey::new(
+                req.x,
+                &splits,
+                &req.lambdas,
+                cfg.backend,
+                cfg.threads_per_node,
+            );
+            if let Some(plan) = self.lookup(&key) {
+                return Ok(warm_fit(&plan, req.y, &cfg));
+            }
+            let (fit, plan) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas);
+            if let Some(plan) = plan {
+                self.store(key, plan);
+            }
+            Ok(fit)
+        } else {
+            let (fit, _) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas);
+            Ok(fit)
+        }
+    }
+
+    /// Price a strategy's task graph — the same emission [`Engine::fit`]
+    /// executes — on the cluster DES with this engine's calibration.
+    pub fn simulate(&self, req: &SimRequest) -> Result<Schedule, EngineError> {
+        req.validate()?;
+        let mut spec = self.cluster.clone();
+        spec.nodes = req.nodes;
+        let cfg = req.dist_config();
+        Ok(DesExecutor::new(spec).execute(task_graph(req.shape, &cfg, &self.cal)))
+    }
+
+    /// Full encoding experiment (the paper's Fig. 1 pipeline): outer
+    /// train/test split, inner-CV ridge fit — through the plan cache, so
+    /// repeat encodes against the same training design (e.g. the same
+    /// subject at another resolution) pay zero eigendecompositions —
+    /// prediction and per-target held-out Pearson r.
+    pub fn encode(&self, req: &EncodeRequest) -> Result<EncodingResult, EngineError> {
+        req.validate()?;
+        let ds = req.dataset;
+        let outer = cv::train_test_split(ds.n(), req.test_frac, req.seed);
+        // Inner-CV folds are checked against the REAL outer training-row
+        // count, so this cannot drift from the splitter's rounding.
+        if req.folds < 2 || req.folds > outer.train.len() {
+            return Err(EngineError::InvalidFolds {
+                folds: req.folds,
+                samples: outer.train.len(),
+            });
+        }
+        let xtr = ds.x.rows_gather(&outer.train);
+        let ytr = ds.y.rows_gather(&outer.train);
+        let xte = ds.x.rows_gather(&outer.val);
+        let yte = ds.y.rows_gather(&outer.val);
+
+        let splits = kfold(xtr.rows(), req.folds, Some(req.seed));
+        let blas = Blas::new(req.backend, req.threads);
+        let key = PlanKey::new(&xtr, &splits, &ridge::LAMBDA_GRID, req.backend, req.threads);
+        let (plan, fresh) = match self.lookup(&key) {
+            Some(plan) => (plan, false),
+            None => {
+                let plan = Arc::new(DesignPlan::build(&blas, &xtr, &ridge::LAMBDA_GRID, &splits));
+                self.store(key, Arc::clone(&plan));
+                (plan, true)
+            }
+        };
+        let mut fit = ridge::fit_batch_with_plan(&blas, &plan, &ytr);
+        if fresh {
+            // Same accounting as the one-shot `ridge::fit_ridge_cv`; a
+            // warm encode reports only the target-dependent work it did.
+            fit.timings.add(&plan.build_timings);
+        }
+        let pred = ridge::predict(&blas, &xte, &fit.weights);
+        let test_r = pearson_cols(&pred, &yte);
+        let summary = RSummary::from_rs(&test_r, &ds.is_visual);
+        Ok(EncodingResult {
+            fit,
+            test_r,
+            summary,
+            subject: ds.subject,
+            resolution: ds.resolution,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fit execution (cold: the coordinator's graph; warm: sweeps only)
+// ---------------------------------------------------------------------------
+
+/// Assemble per-batch fits into the full weight matrix (shared by the
+/// cold and warm paths, so they cannot diverge in collection order).
+fn collect_fits(
+    p: usize,
+    t: usize,
+    fits: Vec<Box<RidgeCvFit>>,
+    batches: Vec<(usize, usize)>,
+    timings: RidgeTimings,
+    wall_secs: f64,
+    plan_secs: f64,
+    plan_reused: bool,
+) -> DistributedFit {
+    assert_eq!(fits.len(), batches.len(), "one fit per batch");
+    let mut weights = Mat::zeros(p, t);
+    let mut best_lambda_per_batch = Vec::with_capacity(batches.len());
+    let mut timings = timings;
+    for (f, &(j0, j1)) in fits.iter().zip(&batches) {
+        for i in 0..p {
+            weights.row_mut(i)[j0..j1].copy_from_slice(f.weights.row(i));
+        }
+        best_lambda_per_batch.push(f.best_lambda);
+        timings.add(&f.timings);
+    }
+    DistributedFit {
+        weights,
+        best_lambda_per_batch,
+        batches,
+        wall_secs,
+        plan_secs,
+        plan_reused,
+        timings,
+    }
+}
+
+/// Cold path: emit the strategy's task graph ONCE (the same emission
+/// [`Engine::simulate`] prices), instantiate each node as a closure and
+/// execute it on the [`ThreadExecutor`]. For B-MOR the `splits + 1`
+/// factorizations run as independent decompose tasks feeding the
+/// assemble barrier; the assembled [`Arc<DesignPlan>`] is returned for
+/// the engine to cache (`None` for the self-contained strategies).
+fn cold_fit(
+    x: &Mat,
+    y: &Mat,
+    cfg: &DistConfig,
+    splits: &[Split],
+    lambdas: &[f64],
+) -> (DistributedFit, Option<Arc<DesignPlan>>) {
+    let t = y.cols();
+    let p = x.cols();
+    let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
+    let shape = FitShape {
+        n: x.rows(),
+        p,
+        t,
+        r: lambdas.len(),
+        splits: splits.len(),
+    };
+    // Costs are irrelevant to the functional run; nominal calibration
+    // keeps the emission deterministic and measurement-free.
+    let graph = task_graph(shape, cfg, &Calibration::nominal());
+
+    let started = Instant::now();
+    let plan_elapsed = Mutex::new(0.0f64);
+    let runnable = instantiate(
+        graph,
+        x,
+        y,
+        splits,
+        cfg.backend,
+        cfg.threads_per_node,
+        lambdas,
+        started,
+        &plan_elapsed,
+    );
+    let outs = ThreadExecutor::new(cfg.nodes).execute(runnable);
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    // Collect: batch fits arrive in task-id order, which is batch order.
+    let mut fits: Vec<Box<RidgeCvFit>> = Vec::with_capacity(batches.len());
+    let mut timings = RidgeTimings::default();
+    let mut plan_arc: Option<Arc<DesignPlan>> = None;
+    for out in outs {
+        match out {
+            TaskOutput::Fit(f) => fits.push(f),
+            TaskOutput::Plan(plan) => {
+                timings.add(&plan.build_timings);
+                plan_arc = Some(plan);
+            }
+            // Factorizations were folded into the plan by assemble.
+            TaskOutput::Split(..) | TaskOutput::Full(..) => {}
+        }
+    }
+    let plan_secs = *plan_elapsed.lock().unwrap();
+    let fit = collect_fits(p, t, fits, batches, timings, wall_secs, plan_secs, false);
+    (fit, plan_arc)
+}
+
+/// Warm path: the design's factors are already resident, so the graph
+/// degenerates to its sweep stage — one [`ridge::fit_batch_with_plan`]
+/// task per batch against the shared plan, fanned over `nodes` workers.
+/// No decompose tasks, no assemble barrier, zero eigendecompositions;
+/// `plan_secs` is 0 and `plan_reused` is set.
+fn warm_fit(plan: &Arc<DesignPlan>, y: &Mat, cfg: &DistConfig) -> DistributedFit {
+    let t = y.cols();
+    let p = plan.x.cols();
+    let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
+    let backend = cfg.backend;
+    let threads = cfg.threads_per_node;
+    let started = Instant::now();
+    let jobs: Vec<_> = batches
+        .iter()
+        .map(|&(j0, j1)| {
+            let yb = y.cols_slice(j0, j1);
+            let plan = Arc::clone(plan);
+            move || {
+                let blas = Blas::new(backend, threads);
+                Box::new(ridge::fit_batch_with_plan(&blas, &plan, &yb))
+            }
+        })
+        .collect();
+    let fits = ThreadExecutor::new(cfg.nodes).run_bag(jobs);
+    let wall_secs = started.elapsed().as_secs_f64();
+    collect_fits(p, t, fits, batches, RidgeTimings::default(), wall_secs, 0.0, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let blas = Blas::new(Backend::MklLike, 1);
+        let mut y = blas.gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += 0.3 * rng.normal();
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn request_defaults_match_dist_config() {
+        let (x, y) = planted(40, 6, 4, 1);
+        let req = FitRequest::new(&x, &y);
+        let d = DistConfig::default();
+        let cfg = req.dist_config();
+        assert_eq!(cfg.strategy, d.strategy);
+        assert_eq!(cfg.nodes, d.nodes);
+        assert_eq!(cfg.threads_per_node, d.threads_per_node);
+        assert_eq!(cfg.backend, d.backend);
+        assert_eq!(cfg.inner_folds, d.inner_folds);
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(req.lambdas, ridge::LAMBDA_GRID.to_vec());
+    }
+
+    #[test]
+    fn validation_rejects_bad_requests() {
+        let (x, y) = planted(40, 6, 4, 2);
+        let (x2, _) = planted(30, 6, 4, 3);
+        let empty_y = Mat::zeros(40, 0);
+        let e = Engine::new();
+        assert_eq!(
+            e.fit(&FitRequest::new(&x2, &y)).unwrap_err(),
+            EngineError::DimensionMismatch { x_rows: 30, y_rows: 40 }
+        );
+        assert_eq!(
+            e.fit(&FitRequest::new(&x, &empty_y)).unwrap_err(),
+            EngineError::EmptyTargets
+        );
+        assert_eq!(
+            e.fit(&FitRequest::new(&x, &y).folds(0)).unwrap_err(),
+            EngineError::InvalidFolds { folds: 0, samples: 40 }
+        );
+        assert_eq!(
+            e.fit(&FitRequest::new(&x, &y).nodes(0)).unwrap_err(),
+            EngineError::ZeroNodes
+        );
+        assert_eq!(
+            e.fit(&FitRequest::new(&x, &y).threads_per_node(0)).unwrap_err(),
+            EngineError::ZeroThreads
+        );
+        assert_eq!(
+            e.fit(&FitRequest::new(&x, &y).lambdas(&[])).unwrap_err(),
+            EngineError::EmptyLambdaGrid
+        );
+        // Errors render a human-readable message.
+        let msg = EngineError::DimensionMismatch { x_rows: 30, y_rows: 40 }.to_string();
+        assert!(msg.contains("30") && msg.contains("40"), "{msg}");
+    }
+
+    #[test]
+    fn plan_key_separates_designs_splits_grids_and_compute() {
+        let (x, _) = planted(50, 8, 4, 4);
+        let (x2, _) = planted(50, 8, 4, 5);
+        let s1 = kfold(50, 3, Some(0));
+        let s2 = kfold(50, 3, Some(1));
+        let l1 = [0.1, 1.0];
+        let l2 = [0.1, 2.0];
+        let mk = Backend::MklLike;
+        let base = PlanKey::new(&x, &s1, &l1, mk, 1);
+        assert_eq!(base, PlanKey::new(&x, &s1, &l1, mk, 1), "key must be deterministic");
+        assert_ne!(base, PlanKey::new(&x2, &s1, &l1, mk, 1), "different design, same key");
+        assert_ne!(base, PlanKey::new(&x, &s2, &l1, mk, 1), "different splits, same key");
+        assert_ne!(base, PlanKey::new(&x, &s1, &l2, mk, 1), "different λ grid, same key");
+        // Factors are not bit-portable across backends or thread widths:
+        // the compute configuration is part of the identity.
+        assert_ne!(base, PlanKey::new(&x, &s1, &l1, Backend::Naive, 1));
+        assert_ne!(base, PlanKey::new(&x, &s1, &l1, mk, 4));
+    }
+
+    #[test]
+    fn warm_fit_is_bit_identical_and_caches_one_plan() {
+        let (x, y) = planted(80, 10, 8, 6);
+        let engine = Engine::new();
+        let req = FitRequest::new(&x, &y).strategy(Strategy::Bmor).nodes(4);
+        let cold = engine.fit(&req).unwrap();
+        assert!(!cold.plan_reused);
+        assert!(cold.plan_secs > 0.0);
+        assert_eq!(engine.cached_plans(), 1);
+
+        let warm = engine.fit(&req).unwrap();
+        assert!(warm.plan_reused);
+        assert_eq!(warm.plan_secs, 0.0);
+        assert_eq!(engine.cached_plans(), 1, "warm fit must not grow the cache");
+        assert_eq!(cold.weights.max_abs_diff(&warm.weights), 0.0, "warm fit diverged");
+        assert_eq!(cold.best_lambda_per_batch, warm.best_lambda_per_batch);
+        assert_eq!(cold.batches, warm.batches);
+
+        // Different Y against the same design: still warm, still valid.
+        let (_, y2) = planted(80, 10, 8, 7);
+        let warm2 = engine
+            .fit(&FitRequest::new(&x, &y2).strategy(Strategy::Bmor).nodes(2))
+            .unwrap();
+        assert!(warm2.plan_reused);
+        assert_eq!(warm2.batches.len(), 2);
+
+        engine.clear_plan_cache();
+        assert_eq!(engine.cached_plans(), 0);
+    }
+
+    #[test]
+    fn self_contained_strategies_bypass_the_cache() {
+        let (x, y) = planted(60, 8, 5, 8);
+        let engine = Engine::new();
+        let single = engine
+            .fit(&FitRequest::new(&x, &y).strategy(Strategy::Single))
+            .unwrap();
+        assert_eq!(engine.cached_plans(), 0, "baseline strategies must stay cold");
+        assert!(!single.plan_reused);
+        let mor = engine.fit(&FitRequest::new(&x, &y).strategy(Strategy::Mor).nodes(5)).unwrap();
+        assert_eq!(engine.cached_plans(), 0);
+        assert_eq!(mor.batches.len(), 5);
+    }
+
+    #[test]
+    fn simulate_validates_and_prices() {
+        let engine = Engine::new();
+        let shape = FitShape { n: 1000, p: 128, t: 2000, r: 11, splits: 3 };
+        let s = engine
+            .simulate(&SimRequest::new(shape).strategy(Strategy::Bmor).nodes(4).threads_per_node(8))
+            .unwrap();
+        assert!(s.makespan > 0.0);
+        assert_eq!(
+            engine.simulate(&SimRequest::new(shape).nodes(0)).unwrap_err(),
+            EngineError::ZeroNodes
+        );
+        let degenerate = FitShape { t: 0, ..shape };
+        assert_eq!(
+            engine.simulate(&SimRequest::new(degenerate)).unwrap_err(),
+            EngineError::EmptyTargets
+        );
+    }
+}

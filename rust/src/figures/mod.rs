@@ -14,34 +14,54 @@ use anyhow::{bail, Result};
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{self, DistConfig, Strategy};
+use crate::coordinator::{DistConfig, Strategy};
 use crate::data::catalog::{self, Resolution};
 use crate::data::friends::{generate, EncodingDataset};
-use crate::encoding::{run_encoding, run_null_encoding, EncodeOpts};
+use crate::encoding::{run_null_encoding, EncodeOpts, EncodingResult};
+use crate::engine::{EncodeRequest, Engine, SimRequest};
 use crate::masker::BrainGrid;
 use crate::metrics::{fnum, Figure};
 use crate::perfmodel::{calibrate, Calibration, FitShape};
 use crate::ridge;
 use crate::util::{human_bytes, Stopwatch};
 
-/// Shared context: experiment config, machine calibration, cluster spec,
-/// and a dataset cache (several figures reuse the same subjects).
+/// Shared context: experiment config, machine calibration, a dataset
+/// cache (several figures reuse the same subjects) and the session
+/// [`Engine`] every figure issues its requests through — the engine owns
+/// the cluster spec, and e.g. the parcels and ROI encodes of one subject
+/// share a single design decomposition via its plan cache.
 pub struct FigCtx {
     pub exp: ExperimentConfig,
     pub cal: Calibration,
-    pub cluster: ClusterSpec,
+    pub engine: Engine,
     cache: HashMap<(usize, &'static str), EncodingDataset>,
 }
 
 impl FigCtx {
     pub fn new(exp: ExperimentConfig) -> Self {
         let cal = calibrate(exp.quick);
-        Self { exp, cal, cluster: ClusterSpec::default(), cache: HashMap::new() }
+        Self::with_calibration(exp, cal)
     }
 
     /// With an externally supplied calibration (reproducible tests).
     pub fn with_calibration(exp: ExperimentConfig, cal: Calibration) -> Self {
-        Self { exp, cal, cluster: ClusterSpec::default(), cache: HashMap::new() }
+        let engine = Engine::with_calibration(cal, ClusterSpec::default());
+        Self { exp, cal, engine, cache: HashMap::new() }
+    }
+
+    /// Price a strategy on the cluster DES through the session engine.
+    fn simulate(&self, shape: FitShape, cfg: &DistConfig) -> f64 {
+        self.engine
+            .simulate(&SimRequest::new(shape).config(cfg))
+            .expect("figure simulation request is valid")
+            .makespan
+    }
+
+    /// Run an encoding experiment through the session engine.
+    fn encode(&self, ds: &EncodingDataset) -> EncodingResult {
+        self.engine
+            .encode(&EncodeRequest::new(ds))
+            .expect("figure encode request is valid")
     }
 
     fn dataset(&mut self, subject: usize, res: Resolution) -> &EncodingDataset {
@@ -146,12 +166,13 @@ pub fn fig4(ctx: &mut FigCtx) -> Figure {
         &["subject", "resolution", "mean r (visual)", "mean r (other)",
           "q95 r (visual)", "max r", "frac r>0.2", "λ*"],
     );
-    let blas = Blas::new(Backend::MklLike, 1);
     let subjects = ctx.exp.subjects;
     for subject in 1..=subjects {
         for res in [Resolution::Parcels, Resolution::Roi] {
             let ds = ctx.dataset(subject, res).clone();
-            let r = run_encoding(&blas, &ds, EncodeOpts::default());
+            // Session engine: the ROI encode reuses the parcels encode's
+            // design plan (same subject → same X, splits and λ grid).
+            let r = ctx.encode(&ds);
             f.row(vec![
                 format!("sub-0{subject}"),
                 res.name().into(),
@@ -178,10 +199,14 @@ pub fn fig5(ctx: &mut FigCtx) -> Figure {
         "Encoding vs null distribution (shuffled stimulus/brain pairing), sub-01",
         &["condition", "mean r (visual)", "q95 r (visual)", "max r"],
     );
-    let blas = Blas::new(Backend::MklLike, 1);
     let ds = ctx.dataset(1, Resolution::Parcels).clone();
-    let real = run_encoding(&blas, &ds, EncodeOpts::default());
-    let null = run_null_encoding(&blas, &ds, EncodeOpts::default(), 1234);
+    let real = ctx.encode(&ds);
+    let null = run_null_encoding(
+        &Blas::new(Backend::MklLike, 1),
+        &ds,
+        EncodeOpts::default(),
+        1234,
+    );
     for (name, r) in [("matched (a)", real), ("shuffled (b)", null)] {
         f.row(vec![
             name.into(),
@@ -240,7 +265,7 @@ pub fn fig6(ctx: &mut FigCtx) -> Figure {
             f.row(vec![
                 res.name().into(),
                 format!("sub-0{subject}"),
-                backend.name().into(),
+                backend.to_string(),
                 th.to_string(),
                 fnum(curve[i]),
                 if th == 1 { format!("measured ({:.2}s)", t1) } else { "amdahl-model".into() },
@@ -266,7 +291,7 @@ pub fn fig7(ctx: &mut FigCtx) -> Figure {
             f.row(vec![
                 res.name().into(),
                 format!("sub-0{subject}"),
-                backend.name().into(),
+                backend.to_string(),
                 th.to_string(),
                 fnum(curve[0] / curve[i]),
             ]);
@@ -294,27 +319,26 @@ pub fn fig8(ctx: &mut FigCtx) -> Figure {
         n: sc.mor_n, p: sc.p_features, t: sc.mor_t,
         r: ridge::LAMBDA_GRID.len(), splits: 3,
     };
-    let cal = ctx.cal;
     // Baseline: single-node multithreaded RidgeCV (the "~1 s" the paper
     // contrasts MOR's ~1000 s against).
     let base_cfg = DistConfig {
         strategy: Strategy::Single, nodes: 1, threads_per_node: 32,
         ..Default::default()
     };
-    let base = coordinator::simulate(shape, &base_cfg, &cal, &ctx.cluster).makespan;
+    let base = ctx.simulate(shape, &base_cfg);
     for nodes in NODES_AXIS {
         for threads in [1, 8, 32] {
             let cfg = DistConfig {
                 strategy: Strategy::Mor, nodes, threads_per_node: threads,
                 ..Default::default()
             };
-            let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+            let s = ctx.simulate(shape, &cfg);
             f.row(vec![
                 nodes.to_string(),
                 threads.to_string(),
                 "mor".into(),
-                fnum(s.makespan),
-                format!("{:.0}×", s.makespan / base),
+                fnum(s),
+                format!("{:.0}×", s / base),
             ]);
         }
     }
@@ -345,16 +369,15 @@ pub fn fig9(ctx: &mut FigCtx) -> Figure {
         &["nodes", "threads", "strategy", "sim time (s)"],
     );
     let shape = bmor_shape(ctx);
-    let cal = ctx.cal;
     for nodes in NODES_AXIS {
         for threads in THREADS_AXIS {
             let cfg = DistConfig {
                 strategy: Strategy::Bmor, nodes, threads_per_node: threads,
                 ..Default::default()
             };
-            let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+            let s = ctx.simulate(shape, &cfg);
             f.row(vec![
-                nodes.to_string(), threads.to_string(), "bmor".into(), fnum(s.makespan),
+                nodes.to_string(), threads.to_string(), "bmor".into(), fnum(s),
             ]);
         }
     }
@@ -364,9 +387,9 @@ pub fn fig9(ctx: &mut FigCtx) -> Figure {
             strategy: Strategy::Single, nodes: 1, threads_per_node: threads,
             ..Default::default()
         };
-        let s = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster);
+        let s = ctx.simulate(shape, &cfg);
         f.row(vec![
-            "1".into(), threads.to_string(), "ridgecv".into(), fnum(s.makespan),
+            "1".into(), threads.to_string(), "ridgecv".into(), fnum(s),
         ]);
     }
     f.note("paper Fig 9: B-MOR scales across nodes AND threads and beats single-node RidgeCV at every thread count");
@@ -381,12 +404,11 @@ pub fn fig10(ctx: &mut FigCtx) -> Figure {
         &["nodes", "threads", "DSU"],
     );
     let shape = bmor_shape(ctx);
-    let cal = ctx.cal;
     let ref_cfg = DistConfig {
         strategy: Strategy::Single, nodes: 1, threads_per_node: 1,
         ..Default::default()
     };
-    let t_ref = coordinator::simulate(shape, &ref_cfg, &cal, &ctx.cluster).makespan;
+    let t_ref = ctx.simulate(shape, &ref_cfg);
     let mut best = 0.0f64;
     for nodes in NODES_AXIS {
         for threads in THREADS_AXIS {
@@ -394,7 +416,7 @@ pub fn fig10(ctx: &mut FigCtx) -> Figure {
                 strategy: Strategy::Bmor, nodes, threads_per_node: threads,
                 ..Default::default()
             };
-            let t = coordinator::simulate(shape, &cfg, &cal, &ctx.cluster).makespan;
+            let t = ctx.simulate(shape, &cfg);
             let dsu = t_ref / t;
             best = best.max(dsu);
             f.row(vec![nodes.to_string(), threads.to_string(), fnum(dsu)]);

@@ -70,7 +70,7 @@ fn ln_gamma(x: f64) -> f64 {
 }
 
 /// Causal FIR convolution of each column of `x` with kernel `h`:
-/// out[i, j] = Σ_k h[k] · x[i-k, j]   (zero-padded history).
+/// `out[i, j] = Σ_k h[k] · x[i-k, j]`   (zero-padded history).
 pub fn convolve_cols(x: &crate::linalg::Mat, h: &[f64]) -> crate::linalg::Mat {
     let (n, t) = x.shape();
     let mut out = crate::linalg::Mat::zeros(n, t);

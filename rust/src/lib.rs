@@ -26,6 +26,17 @@
 //! with `perfmodel` costs on the cluster DES (timing path). The O(p³)
 //! eigendecomposition count is `splits + 1`, independent of the batch
 //! count, and the two paths cannot structurally diverge.
+//!
+//! The public entry point is `engine::Engine`, the long-lived session
+//! over all of the above: builder-style `FitRequest` / `SimRequest` /
+//! `EncodeRequest` values validate into typed `EngineError`s instead of
+//! panicking, and an `Arc`-keyed **plan cache** makes a repeat fit
+//! against the same design (same X, CV splits, λ grid) skip every
+//! eigendecomposition — the factors are shared, not recomputed, which is
+//! the serving scenario the paper's cost model (Eq. 6–7) prices as
+//! nearly free. `coordinator::fit` / `coordinator::simulate` and
+//! `encoding::run_encoding` remain as thin single-request compatibility
+//! wrappers.
 //! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph
 //!   (gram, Jacobi eigendecomposition, multi-lambda ridge sweep, Pearson
 //!   scoring, VGG16-surrogate feature extractor), AOT-lowered to HLO text.
@@ -49,6 +60,7 @@ pub mod encoding;
 pub mod cluster;
 pub mod scheduler;
 pub mod coordinator;
+pub mod engine;
 pub mod perfmodel;
 pub mod runtime;
 pub mod metrics;

@@ -15,12 +15,12 @@ use crate::util::Pcg64;
 /// A parcellation of a grid's in-mask voxels.
 #[derive(Clone, Debug)]
 pub struct Atlas {
-    /// labels[i] = parcel id of in-mask voxel i (0-based, dense).
+    /// `labels[i]` = parcel id of in-mask voxel i (0-based, dense).
     pub labels: Vec<u32>,
     pub n_parcels: usize,
     /// Parcel centroids in voxel coordinates.
     pub centroids: Vec<(f64, f64, f64)>,
-    /// network[parcel] = level-7 network id (0-based).
+    /// `network[parcel]` = level-7 network id (0-based).
     pub network: Vec<u32>,
     pub n_networks: usize,
     /// Which network is designated "visual" (posterior-most centroid).

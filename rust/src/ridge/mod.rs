@@ -20,7 +20,11 @@
 //! [`fit_ridge_cv`] is a thin wrapper (build plan → fit one batch) so
 //! single-batch callers keep the old one-call API; the coordinator builds
 //! one plan and fans B-MOR batches out against it, making the number of
-//! O(p³) eigendecompositions independent of the batch count.
+//! O(p³) eigendecompositions independent of the batch count. The plan
+//! shares its design matrix and per-split factors behind `Arc`s, so
+//! `engine::Engine`'s cache can hold an assembled plan across requests
+//! and serve warm fits — same X, splits and λ grid — with zero new
+//! decompositions.
 //!
 //! Per-stage timings are recorded so `perfmodel/` can calibrate the T_M /
 //! T_W complexity terms from real measurements. The Cholesky-per-λ

@@ -20,6 +20,8 @@
 //! one pair of preallocated buffers instead of allocating a fresh
 //! prediction matrix per λ.
 
+use std::sync::Arc;
+
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
 use crate::linalg::{eigh::jacobi_eigh, Mat};
@@ -105,13 +107,22 @@ pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
 
 /// The shared plan: everything a batch fit needs that does not depend on
 /// the targets. Build once, fan all batches out against it.
+///
+/// The design matrix and the per-split factorizations are held behind
+/// `Arc`s: assembling a plan from independently produced factorizations
+/// (the coordinator's barrier task, the engine's cache) shares them
+/// instead of deep-copying — the plan no longer owns a private clone of
+/// X, and a cached `Arc<DesignPlan>` can serve any number of concurrent
+/// warm fits without duplicating the factors.
 #[derive(Clone, Debug)]
 pub struct DesignPlan {
-    /// Owned copy of the full design matrix (n × p), for the final-fit
-    /// C = XᵀY of each batch.
-    pub x: Mat,
-    /// Per-split factorizations.
-    pub splits: Vec<SplitDesign>,
+    /// The full design matrix (n × p), for the final-fit C = XᵀY of each
+    /// batch. Shared, not owned: cloning the plan or caching it does not
+    /// copy X.
+    pub x: Arc<Mat>,
+    /// Per-split factorizations (shared with the decompose tasks that
+    /// produced them — assembly is pointer-swaps, not matrix copies).
+    pub splits: Vec<Arc<SplitDesign>>,
     /// Full-training-set eigenvectors (p × p).
     pub v_full: Mat,
     /// Full-training-set eigenvalues, ascending.
@@ -137,20 +148,21 @@ impl DesignPlan {
         for split in splits {
             let (sd, t) = factorize_split(blas, x, split);
             tim.add(&t);
-            designs.push(sd);
+            designs.push(Arc::new(sd));
         }
         let (full, t) = factorize_full(blas, x);
         tim.add(&t);
-        DesignPlan::assemble(x.clone(), designs, full, lambdas, tim)
+        DesignPlan::assemble(Arc::new(x.clone()), designs, full, lambdas, tim)
     }
 
     /// Join independently produced factorizations into the shared plan —
     /// the barrier task of the coordinator's decompose stage. `splits`
     /// must be ordered by split index; `build_timings` is the summed
-    /// factorization accounting.
+    /// factorization accounting. Takes `Arc`s, so joining is reference
+    /// sharing: no factorization or design matrix is copied.
     pub fn assemble(
-        x: Mat,
-        splits: Vec<SplitDesign>,
+        x: Arc<Mat>,
+        splits: Vec<Arc<SplitDesign>>,
         full: FullDesign,
         lambdas: &[f64],
         build_timings: RidgeTimings,
@@ -308,11 +320,11 @@ mod tests {
         for s in &splits {
             let (sd, t) = factorize_split(&b, &x, s);
             tim.add(&t);
-            sds.push(sd);
+            sds.push(Arc::new(sd));
         }
         let (full, t) = factorize_full(&b, &x);
         tim.add(&t);
-        let joined = DesignPlan::assemble(x.clone(), sds, full, &LAMBDA_GRID, tim);
+        let joined = DesignPlan::assemble(Arc::new(x.clone()), sds, full, &LAMBDA_GRID, tim);
 
         assert_eq!(serial.e_full, joined.e_full);
         assert_eq!(serial.v_full.max_abs_diff(&joined.v_full), 0.0);

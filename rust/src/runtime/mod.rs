@@ -128,12 +128,12 @@ pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
     Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data))
 }
 
-/// Rank-1 literal → Vec<f64>.
+/// Rank-1 literal → `Vec<f64>`.
 pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
     Ok(lit.to_vec::<f64>()?)
 }
 
-/// Rank-3 literal → Vec<Mat> (λ-major sweep outputs).
+/// Rank-3 literal → `Vec<Mat>` (λ-major sweep outputs).
 pub fn literal_to_mats(lit: &xla::Literal) -> Result<Vec<Mat>> {
     let shape = lit.array_shape()?;
     let dims = shape.dims();

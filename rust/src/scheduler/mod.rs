@@ -48,9 +48,9 @@ pub struct TaskSpec {
 #[derive(Clone, Debug)]
 pub struct TaskGraph<P = ()> {
     pub tasks: Vec<TaskSpec>,
-    /// deps[i] = indices that must finish before task i starts.
+    /// `deps[i]` = indices that must finish before task i starts.
     pub deps: Vec<Vec<usize>>,
-    /// payloads[i] = typed payload of task i (same length as `tasks`).
+    /// `payloads[i]` = typed payload of task i (same length as `tasks`).
     pub payloads: Vec<P>,
 }
 

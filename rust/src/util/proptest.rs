@@ -118,7 +118,7 @@ pub fn normal_vec_in(rng: &mut Pcg64, nlo: usize, nhi: usize) -> Vec<f64> {
     rng.normal_vec(n)
 }
 
-/// Random DAG over `n` tasks: deps[i] ⊆ {0..i}, each earlier task chosen
+/// Random DAG over `n` tasks: `deps[i] ⊆ {0..i}`, each earlier task chosen
 /// independently with probability `edge_prob`. Forward-only edges make
 /// the result acyclic by construction — the generator behind the
 /// executor-parity properties (every task runs once, dependencies are

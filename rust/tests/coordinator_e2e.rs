@@ -79,9 +79,15 @@ fn strategies_agree_on_predictions() {
         &ds.y,
         &DistConfig { strategy: Strategy::Bmor, nodes: 4, ..base.clone() },
     );
+    // MOR is deliberately redundant — one self-contained RidgeCV per
+    // target, i.e. ~t extra small eigendecompositions on the full ROI
+    // array for no additional coverage (per-target fits are independent,
+    // so every kept column is identical either way). Truncate the ROI
+    // targets for this strategy to keep CI off the t·T_M bill.
+    let mor_t = 12.min(ds.t());
     let mor = coordinator::fit(
         &ds.x,
-        &ds.y,
+        &ds.y.cols_slice(0, mor_t),
         &DistConfig { strategy: Strategy::Mor, nodes: 4, ..base },
     );
     let blas = Blas::new(Backend::MklLike, 1);
@@ -91,8 +97,9 @@ fn strategies_agree_on_predictions() {
     // tight-agreement guarantee is covered by mor_equals_bmor_with_t_nodes
     // in the coordinator unit tests; here it only needs rough alignment.
     {
+        assert_eq!(mor.batches.len(), mor_t, "one MOR batch per kept target");
         let p_mor = blas.gemm(&ds.x, &mor.weights);
-        let rs = pearson_cols(&p_single, &p_mor);
+        let rs = pearson_cols(&p_single.cols_slice(0, mor_t), &p_mor);
         let mean = rs.iter().sum::<f64>() / rs.len() as f64;
         assert!(mean > 0.85, "mor: mean r {mean}");
     }

@@ -1,0 +1,295 @@
+//! Engine session-API contract tests: typed error paths (no panics) and
+//! the plan cache's serving guarantee — a second fit against the same
+//! design performs ZERO eigendecompositions (process-wide counter) and
+//! returns weights bit-identical to the cold path, which itself is
+//! bit-identical to the legacy `coordinator::fit`.
+//!
+//! Counting discipline (same as tests/plan_parity.rs): warm/cold fits
+//! run their factorizations on worker threads, so contracts use the
+//! process-wide counter, and every eigh-counting test in this binary
+//! grabs `EIGH_LOCK` so concurrently scheduled tests cannot perturb the
+//! global deltas (other test binaries are separate processes).
+
+use std::sync::{Mutex, MutexGuard};
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::coordinator::{self, DistConfig, Strategy};
+use fmri_encode::engine::{EncodeRequest, Engine, EngineError, FitRequest, SimRequest};
+use fmri_encode::linalg::{eigh_calls_total, Mat};
+use fmri_encode::perfmodel::FitShape;
+use fmri_encode::util::Pcg64;
+
+static EIGH_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize_eigh_counting() -> MutexGuard<'static, ()> {
+    EIGH_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(&x, &w);
+    for v in y.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    (x, y)
+}
+
+/// Fresh targets over an EXISTING design (same X, different Y).
+fn planted_y(x: &Mat, t: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seeded(seed);
+    let w = Mat::randn(x.cols(), t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(x, &w);
+    for v in y.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    y
+}
+
+#[test]
+fn fit_error_paths_are_typed_not_panics() {
+    let engine = Engine::new();
+    let (x, y) = planted(50, 8, 6, 1);
+
+    // Dimension-mismatched X/Y.
+    let (x_short, _) = planted(40, 8, 6, 2);
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x_short, &y)).unwrap_err(),
+        EngineError::DimensionMismatch { x_rows: 40, y_rows: 50 }
+    );
+
+    // Empty target set.
+    let y_empty = Mat::zeros(50, 0);
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x, &y_empty)).unwrap_err(),
+        EngineError::EmptyTargets
+    );
+
+    // Zero folds (and one fold — kfold needs >= 2).
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x, &y).folds(0)).unwrap_err(),
+        EngineError::InvalidFolds { folds: 0, samples: 50 }
+    );
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x, &y).folds(1)).unwrap_err(),
+        EngineError::InvalidFolds { folds: 1, samples: 50 }
+    );
+    // More folds than samples.
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x, &y).folds(51)).unwrap_err(),
+        EngineError::InvalidFolds { folds: 51, samples: 50 }
+    );
+
+    // nodes = 0.
+    assert_eq!(
+        engine.fit(&FitRequest::new(&x, &y).nodes(0)).unwrap_err(),
+        EngineError::ZeroNodes
+    );
+
+    // Nothing was computed for any rejected request.
+    assert_eq!(engine.cached_plans(), 0);
+}
+
+#[test]
+fn simulate_and_encode_error_paths_are_typed() {
+    let engine = Engine::new();
+    let shape = FitShape { n: 1000, p: 128, t: 2000, r: 11, splits: 3 };
+    assert_eq!(
+        engine.simulate(&SimRequest::new(shape).nodes(0)).unwrap_err(),
+        EngineError::ZeroNodes
+    );
+    assert_eq!(
+        engine
+            .simulate(&SimRequest::new(FitShape { t: 0, ..shape }))
+            .unwrap_err(),
+        EngineError::EmptyTargets
+    );
+
+    // Encode validation: zero folds and a degenerate test fraction.
+    use fmri_encode::data::catalog::ScaleConfig;
+    use fmri_encode::data::friends::{generate, FriendsConfig};
+    let cfg = FriendsConfig {
+        scale: ScaleConfig {
+            n_samples: 120,
+            p_features: 32,
+            t_parcels: 12,
+            mor_n: 60,
+            mor_t: 16,
+            bmor_n: 60,
+            grid: (8, 8, 8),
+            bmor_grid: (8, 8, 8),
+        },
+        p_frame: 8,
+        window: 4,
+        d_latent: 4,
+        tr_per_run: 40,
+        ..FriendsConfig::default()
+    };
+    let ds = generate(&cfg, 1, fmri_encode::data::Resolution::Parcels);
+    assert!(matches!(
+        engine.encode(&EncodeRequest::new(&ds).folds(0)).unwrap_err(),
+        EngineError::InvalidFolds { folds: 0, .. }
+    ));
+    assert_eq!(
+        engine
+            .encode(&EncodeRequest::new(&ds).test_frac(1.5))
+            .unwrap_err(),
+        EngineError::InvalidTestFraction { test_frac: 1.5 }
+    );
+
+    // A single-sample dataset cannot be outer-split: typed error, not a
+    // clamp panic inside validation.
+    let tiny = fmri_encode::data::friends::EncodingDataset {
+        x: Mat::zeros(1, 3),
+        y: Mat::zeros(1, 2),
+        runs: vec![0],
+        is_visual: vec![true, false],
+        subject: 1,
+        resolution: fmri_encode::data::Resolution::Parcels,
+    };
+    assert!(matches!(
+        engine.encode(&EncodeRequest::new(&tiny)).unwrap_err(),
+        EngineError::InvalidFolds { samples: 1, .. }
+    ));
+}
+
+#[test]
+fn warm_fit_zero_eigh_and_bit_identical_to_cold_coordinator_fit() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(100, 12, 16, 3);
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 4, ..Default::default() };
+
+    // Legacy cold path — the reference the warm fit must reproduce.
+    let reference = coordinator::fit(&x, &y, &cfg);
+
+    let engine = Engine::new();
+    let req = FitRequest::new(&x, &y).config(&cfg);
+    let before_cold = eigh_calls_total();
+    let cold = engine.fit(&req).unwrap();
+    assert_eq!(
+        eigh_calls_total() - before_cold,
+        cfg.inner_folds + 1,
+        "cold engine fit must pay exactly splits+1 eigendecompositions"
+    );
+    assert!(!cold.plan_reused);
+    assert_eq!(engine.cached_plans(), 1);
+    assert_eq!(cold.weights.max_abs_diff(&reference.weights), 0.0);
+
+    // Warm fit, same X/splits/λ-grid and same Y: ZERO eigendecompositions
+    // and bit-identical output.
+    let before_warm = eigh_calls_total();
+    let warm = engine.fit(&req).unwrap();
+    assert_eq!(
+        eigh_calls_total() - before_warm,
+        0,
+        "warm fit performed an eigendecomposition"
+    );
+    assert!(warm.plan_reused);
+    assert_eq!(warm.plan_secs, 0.0);
+    assert_eq!(warm.weights.max_abs_diff(&cold.weights), 0.0);
+    assert_eq!(warm.weights.max_abs_diff(&reference.weights), 0.0);
+    assert_eq!(warm.best_lambda_per_batch, reference.best_lambda_per_batch);
+    assert_eq!(warm.batches, reference.batches);
+
+    // Different Y over the SAME design (the serving scenario): still
+    // zero eigendecompositions, and the result matches a cold fit of
+    // that Y bit for bit.
+    let y2 = planted_y(&x, 16, 4);
+    let before_y2 = eigh_calls_total();
+    let warm_y2 = engine
+        .fit(&FitRequest::new(&x, &y2).config(&cfg))
+        .unwrap();
+    assert_eq!(eigh_calls_total() - before_y2, 0, "new-Y warm fit decomposed");
+    assert!(warm_y2.plan_reused);
+    let reference_y2 = coordinator::fit(&x, &y2, &cfg);
+    assert_eq!(warm_y2.weights.max_abs_diff(&reference_y2.weights), 0.0);
+    assert_eq!(
+        warm_y2.best_lambda_per_batch,
+        reference_y2.best_lambda_per_batch
+    );
+    assert_eq!(engine.cached_plans(), 1, "same design must not grow the cache");
+}
+
+#[test]
+fn different_design_splits_or_grid_misses_the_cache() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(80, 10, 8, 5);
+    let engine = Engine::new();
+    let base = FitRequest::new(&x, &y).strategy(Strategy::Bmor).nodes(2);
+    engine.fit(&base).unwrap();
+    assert_eq!(engine.cached_plans(), 1);
+
+    // Different fold count → different splits → new plan.
+    engine.fit(&base.clone().folds(4)).unwrap();
+    assert_eq!(engine.cached_plans(), 2);
+
+    // Different split seed → new plan.
+    engine.fit(&base.clone().seed(9)).unwrap();
+    assert_eq!(engine.cached_plans(), 3);
+
+    // Different λ grid → new plan.
+    engine.fit(&base.clone().lambdas(&[1.0, 10.0])).unwrap();
+    assert_eq!(engine.cached_plans(), 4);
+
+    // Different design matrix → new plan.
+    let (x2, y2) = planted(80, 10, 8, 6);
+    engine.fit(&FitRequest::new(&x2, &y2).strategy(Strategy::Bmor).nodes(2)).unwrap();
+    assert_eq!(engine.cached_plans(), 5);
+}
+
+#[test]
+fn encode_reuses_the_plan_across_target_resolutions() {
+    let _guard = serialize_eigh_counting();
+    // Two datasets over the SAME stimulus design (same X, different
+    // target arrays — the parcels-vs-ROI situation of Fig. 4): the
+    // second encode must be served from the cached plan.
+    use fmri_encode::data::catalog::ScaleConfig;
+    use fmri_encode::data::friends::{generate, FriendsConfig};
+    let cfg = FriendsConfig {
+        scale: ScaleConfig {
+            n_samples: 160,
+            p_features: 48,
+            t_parcels: 16,
+            mor_n: 60,
+            mor_t: 16,
+            bmor_n: 60,
+            grid: (8, 8, 8),
+            bmor_grid: (8, 8, 8),
+        },
+        p_frame: 12,
+        window: 4,
+        d_latent: 4,
+        tr_per_run: 40,
+        ..FriendsConfig::default()
+    };
+    let parcels = generate(&cfg, 1, fmri_encode::data::Resolution::Parcels);
+    let roi = generate(&cfg, 1, fmri_encode::data::Resolution::Roi);
+    assert_eq!(parcels.x.max_abs_diff(&roi.x), 0.0, "resolutions share the design");
+
+    let engine = Engine::new();
+    let first = engine.encode(&EncodeRequest::new(&parcels)).unwrap();
+    assert_eq!(engine.cached_plans(), 1);
+    let before = eigh_calls_total();
+    let second = engine.encode(&EncodeRequest::new(&roi)).unwrap();
+    assert_eq!(eigh_calls_total() - before, 0, "second encode decomposed");
+    assert_eq!(engine.cached_plans(), 1);
+
+    // Both results are real fits over their own targets.
+    assert_eq!(first.test_r.len(), parcels.t());
+    assert_eq!(second.test_r.len(), roi.t());
+    assert!(first.fit.best_lambda.is_finite());
+    assert!(second.fit.best_lambda.is_finite());
+
+    // And the warm encode matches the legacy single-shot path bit for bit.
+    let blas = Blas::new(Backend::MklLike, 1);
+    let legacy = fmri_encode::encoding::run_encoding(
+        &blas,
+        &roi,
+        fmri_encode::encoding::EncodeOpts::default(),
+    );
+    assert_eq!(second.fit.weights.max_abs_diff(&legacy.fit.weights), 0.0);
+    assert_eq!(second.fit.best_idx, legacy.fit.best_idx);
+}
