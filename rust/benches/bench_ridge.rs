@@ -1,8 +1,15 @@
 //! Ridge-path benchmarks + the §3 ablation: decompose-once (eigh) RidgeCV
 //! vs naive per-λ Cholesky refactorization — the O(p²nr) vs O(p³r) gap
-//! that motivates the paper's entire formulation — and the plan/execute
+//! that motivates the paper's entire formulation — the plan/execute
 //! ablation: one shared `DesignPlan` fanned across B-MOR batches vs the
-//! pre-refactor path that refactorizes per batch.
+//! pre-refactor path that refactorizes per batch — and the **serving
+//! benchmark**: cold vs warm vs evicted fits against the engine's
+//! size-budgeted plan cache, emitted as machine-readable
+//! `BENCH_ridge.json` (CI uploads it per commit to seed the perf
+//! trajectory).
+//!
+//! Env knobs: `BENCH_RIDGE_QUICK=1` shrinks shapes/loops for CI;
+//! `BENCH_RIDGE_JSON=path` overrides the artifact path.
 
 mod common;
 
@@ -11,9 +18,10 @@ use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::coordinator::{batch_bounds, Strategy};
 use fmri_encode::cv::kfold;
 use fmri_encode::engine::{Engine, FitRequest};
+use fmri_encode::jobj;
 use fmri_encode::linalg::{eigh::jacobi_eigh, Mat};
 use fmri_encode::ridge::{self, DesignPlan, LAMBDA_GRID};
-use fmri_encode::util::Pcg64;
+use fmri_encode::util::{human_bytes, Pcg64};
 
 fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
     let mut rng = Pcg64::seeded(seed);
@@ -29,9 +37,15 @@ fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
 
 fn main() {
     let blas = Blas::new(Backend::MklLike, 1);
+    let quick = std::env::var("BENCH_RIDGE_QUICK").is_ok();
 
     header("ablation: decompose-once vs per-λ refactorization (11 λ values)");
-    for (n, p, t) in [(512, 128, 256), (1024, 256, 444)] {
+    let ablation_shapes: &[(usize, usize, usize)] = if quick {
+        &[(256, 64, 128)]
+    } else {
+        &[(512, 128, 256), (1024, 256, 444)]
+    };
+    for &(n, p, t) in ablation_shapes {
         let (x, y) = planted(n, p, t, 1);
         let s1 = case(&format!("eigh-reuse  n={n} p={p} t={t}"), || {
             let (k, c) = ridge::gram(&blas, &x, &y);
@@ -60,7 +74,12 @@ fn main() {
     }
 
     header("full RidgeCV (3-fold, 11 λ)");
-    for (n, p, t) in [(512, 128, 444), (1024, 256, 444)] {
+    let cv_shapes: &[(usize, usize, usize)] = if quick {
+        &[(256, 64, 222)]
+    } else {
+        &[(512, 128, 444), (1024, 256, 444)]
+    };
+    for &(n, p, t) in cv_shapes {
         let (x, y) = planted(n, p, t, 2);
         let splits = kfold(n, 3, Some(0));
         case(&format!("fit_ridge_cv n={n} p={p} t={t}"), || {
@@ -70,10 +89,11 @@ fn main() {
 
     header("B-MOR: shared DesignPlan vs per-batch refactorization (3-fold, 11 λ)");
     {
-        let (n, p, t) = (512, 128, 448);
+        let (n, p, t) = if quick { (256, 64, 224) } else { (512, 128, 448) };
         let (x, y) = planted(n, p, t, 3);
         let splits = kfold(n, 3, Some(0));
-        for batches in [1, 2, 4, 8, 16] {
+        let batch_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+        for &batches in batch_counts {
             let bounds = batch_bounds(t, batches);
             // Planned: ONE plan (splits+1 eigendecompositions) shared by
             // every batch; plan build time is included, so the comparison
@@ -111,34 +131,94 @@ fn main() {
         }
     }
 
-    header("engine plan cache: cold fit (decompose + sweep) vs warm refit (sweep only)");
+    header("serving: cold vs warm vs evicted against the size-budgeted plan cache");
     {
-        let (n, p, t) = (512, 128, 448);
-        let (x, y) = planted(n, p, t, 4);
-        let req = FitRequest::new(&x, &y).strategy(Strategy::Bmor).nodes(4);
+        let (n, p, t) = if quick { (256, 64, 224) } else { (512, 128, 448) };
+        let (xa, ya) = planted(n, p, t, 4);
+        let (xb, yb) = planted(n, p, t, 5);
+        let req_a = FitRequest::new(&xa, &ya).strategy(Strategy::Bmor).nodes(4);
+        let req_b = FitRequest::new(&xb, &yb).strategy(Strategy::Bmor).nodes(4);
+
         // Cold: a fresh engine per iteration pays the splits+1
         // eigendecompositions every time (the pre-engine serving cost).
-        let sc = case(&format!("cold  n={n} p={p} t={t}"), || {
-            std::hint::black_box(Engine::new().fit(&req).unwrap());
+        let s_cold = case(&format!("cold     n={n} p={p} t={t}"), || {
+            std::hint::black_box(Engine::new().fit(&req_a).unwrap());
         });
+
         // Warm: one session engine; after the first fit every iteration
         // hits the plan cache — zero eigendecompositions.
         let engine = Engine::new();
-        let _ = engine.fit(&req).unwrap();
-        let sw = case(&format!("warm  n={n} p={p} t={t}"), || {
-            std::hint::black_box(engine.fit(&req).unwrap());
+        let _ = engine.fit(&req_a).unwrap();
+        let s_warm = case(&format!("warm     n={n} p={p} t={t}"), || {
+            std::hint::black_box(engine.fit(&req_a).unwrap());
         });
+        let one_plan = engine.cache_stats().resident_bytes;
+
+        // Evicted: a budget holding exactly ONE plan while the session
+        // alternates two designs — every fit finds its plan evicted and
+        // re-colds. The worst-case serving pattern a too-small budget
+        // produces; it should track the cold cost, not the warm one.
+        let evict_engine = Engine::new().with_cache_budget(one_plan + one_plan / 2);
+        let _ = evict_engine.fit(&req_a).unwrap();
+        let mut flip = false;
+        let s_evicted = case(&format!("evicted  n={n} p={p} t={t}"), || {
+            flip = !flip;
+            let req = if flip { &req_b } else { &req_a };
+            std::hint::black_box(evict_engine.fit(req).unwrap());
+        });
+        let stats = evict_engine.cache_stats();
         report(
             "",
             format!(
-                "-> warm refit is {:.2}× faster (the serving scenario: Eq. 7 with T_M already paid)",
-                sc.median() / sw.median()
+                "-> warm refit is {:.2}× faster than cold (Eq. 7 with T_M already paid); evicted ≈ cold ({:.2}×)",
+                s_cold.median() / s_warm.median(),
+                s_evicted.median() / s_cold.median()
             ),
         );
+        report(
+            "",
+            format!(
+                "-> eviction churn: {} miss(es), {} eviction(s), resident {} of {} budget",
+                stats.misses,
+                stats.evictions,
+                human_bytes(stats.resident_bytes as u64),
+                human_bytes(stats.budget_bytes as u64)
+            ),
+        );
+
+        // Machine-readable serving summary — CI uploads this per commit.
+        let json = jobj! {
+            "bench" => "bench_ridge.serving",
+            "quick" => quick,
+            "shape" => jobj! {
+                "n" => n,
+                "p" => p,
+                "t" => t,
+                "folds" => 3usize,
+                "lambdas" => LAMBDA_GRID.len(),
+            },
+            "cold_secs" => s_cold.median(),
+            "warm_secs" => s_warm.median(),
+            "evicted_secs" => s_evicted.median(),
+            "warm_speedup" => s_cold.median() / s_warm.median(),
+            "plan_resident_bytes" => one_plan,
+            "evicted_cache" => jobj! {
+                "hits" => stats.hits as usize,
+                "misses" => stats.misses as usize,
+                "coalesced" => stats.coalesced as usize,
+                "evictions" => stats.evictions as usize,
+                "resident_bytes" => stats.resident_bytes,
+                "budget_bytes" => stats.budget_bytes,
+            },
+        };
+        let out = std::env::var("BENCH_RIDGE_JSON").unwrap_or_else(|_| "BENCH_ridge.json".into());
+        std::fs::write(&out, json.to_string_pretty()).expect("write BENCH_ridge.json");
+        println!("\nwrote {out}");
     }
 
     header("jacobi eigh");
-    for p in [128, 256] {
+    let eigh_sizes: &[usize] = if quick { &[64, 128] } else { &[128, 256] };
+    for &p in eigh_sizes {
         let mut rng = Pcg64::seeded(3);
         let x = Mat::randn(2 * p, p, &mut rng);
         let k = blas.syrk(&x);

@@ -26,7 +26,7 @@ use crate::figures::{generate_figure, FigCtx};
 use crate::metrics::fnum;
 use crate::perfmodel::{calibrate, flops};
 use crate::ridge;
-use crate::util::{human_secs, Stopwatch};
+use crate::util::{human_bytes, human_secs, Stopwatch};
 
 const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|calibrate|validate> [--help]
   tables   --table 1|2|all [--out DIR] [--quick]
@@ -178,7 +178,29 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 fnum(enc.summary.mean_other),
                 fnum(enc.summary.max_r)
             );
-            println!("plan cache: {} design plan(s) resident", engine.cached_plans());
+            // Serving-cache observability: residency vs budget plus the
+            // session's hit/miss/eviction counters (the fit and the
+            // encode key two distinct plans — full X vs its outer
+            // training rows — so a fresh session shows 2 misses).
+            let cs = engine.cache_stats();
+            println!(
+                "plan cache: {} plan(s) resident, {} of {} budget — {} hit(s), {} miss(es), {} coalesced, {} eviction(s)",
+                cs.entries.len(),
+                human_bytes(cs.resident_bytes as u64),
+                human_bytes(cs.budget_bytes as u64),
+                cs.hits,
+                cs.misses,
+                cs.coalesced,
+                cs.evictions
+            );
+            for e in &cs.entries {
+                println!(
+                    "  plan {:016x}: {} resident (last touch #{})",
+                    e.key,
+                    human_bytes(e.bytes as u64),
+                    e.last_touch
+                );
+            }
         }
         "xla" => {
             let dir = args.str_or("artifacts", "artifacts");

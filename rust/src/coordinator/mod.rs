@@ -306,6 +306,12 @@ pub fn task_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskG
 /// untouched ([`TaskGraph::map`]), so the executed graph is structurally
 /// identical to the priced one. Crate-internal: `engine::Engine::fit` is
 /// the executing caller.
+///
+/// `on_plan` fires from inside the assemble task the moment the shared
+/// plan exists — before any sweep has run. The engine uses it to publish
+/// the plan to its cache mid-execution, so single-flight waiters parked
+/// on the same design unblock after the decompositions rather than
+/// after the winner's entire fit.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn instantiate<'a>(
     graph: TaskGraph<TaskKind>,
@@ -317,6 +323,7 @@ pub(crate) fn instantiate<'a>(
     lambdas: &'a [f64],
     started: Instant,
     plan_elapsed: &'a Mutex<f64>,
+    on_plan: Option<&'a (dyn Fn(&Arc<DesignPlan>) + Sync)>,
 ) -> TaskGraph<TaskFn<'a, TaskOutput>> {
     // The assembled plan shares X behind an Arc instead of owning a
     // private clone; materialize that Arc once, only when the graph has
@@ -365,15 +372,18 @@ pub(crate) fn instantiate<'a>(
                         _ => unreachable!("assemble depends only on decompose tasks"),
                     }
                 }
-                let plan = DesignPlan::assemble(
+                let plan = Arc::new(DesignPlan::assemble(
                     x_shared,
                     designs,
                     full.expect("missing full-train factorization"),
                     lambdas,
                     tim,
-                );
+                ));
                 *plan_elapsed.lock().unwrap() = started.elapsed().as_secs_f64();
-                TaskOutput::Plan(Arc::new(plan))
+                if let Some(publish) = on_plan {
+                    publish(&plan);
+                }
+                TaskOutput::Plan(plan)
             })
         }
         TaskKind::Sweep { j0, j1, .. } => {
@@ -584,6 +594,7 @@ mod tests {
             &ridge::LAMBDA_GRID,
             Instant::now(),
             &plan_elapsed,
+            None,
         );
         let names = |g: &[crate::scheduler::TaskSpec]| {
             g.iter().map(|t| t.name.clone()).collect::<Vec<_>>()

@@ -1,0 +1,533 @@
+//! Serving-grade plan cache: a size-budgeted LRU over
+//! [`Arc<DesignPlan>`]s with real memory accounting and single-flight
+//! cold builds.
+//!
+//! At whole-brain scale (p ≈ 6728 features, V/e/A factors per CV split)
+//! the resident plans — not the in-flight batch work — are the dominant
+//! memory consumer of a long-lived engine, so the cache is bounded by
+//! **bytes**, not entry count, and the accounting is
+//! [`DesignPlan::resident_bytes`]: the actual Arc-backed allocation of
+//! every factor (per-split V, e, A with the true uneven kfold validation
+//! sizes, the gathered training rows, and the shared X charged once) —
+//! not the `perfmodel::plan_bytes` idealization, which models only the
+//! factors the decompose stage ships to the sweep stage.
+//!
+//! Policy, in one paragraph: every access stamps a monotone tick
+//! (per-key *last touch*). An insert that pushes the resident total over
+//! the budget evicts least-recently-touched entries — never the entry
+//! being inserted, so a single plan larger than the whole budget still
+//! serves warm fits until the next insert displaces it. Eviction drops
+//! the cache's `Arc` only: in-flight fits holding a clone keep the
+//! factors alive until they finish, and the accounting tracks
+//! *cache-resident* bytes, not process-resident bytes. Cold builds are
+//! **single-flight**: the first miss on a key claims a build slot, and a
+//! concurrent identical request parks on a condvar and is served the
+//! finished plan instead of paying its own `splits + 1`
+//! eigendecompositions and racing the insert. If the builder unwinds
+//! without fulfilling (a panic mid-decomposition), the slot is released
+//! and one parked waiter promotes itself to builder — no deadlock, no
+//! poisoned session.
+//!
+//! Every lock acquisition recovers from poisoning via
+//! [`PoisonError::into_inner`]: the map and counters are mutated only at
+//! consistent boundaries (no invariant spans an unlock), so a panic on
+//! one request must not brick every subsequent request of the session.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+use crate::blas::Backend;
+use crate::cv::Split;
+use crate::linalg::Mat;
+use crate::ridge::DesignPlan;
+
+/// Default cache budget: 8 GiB — generous (a handful of whole-brain
+/// 3-fold plans at the paper's p ≈ 6728) but finite, so a serving
+/// session that cycles through many designs cannot grow without bound.
+pub const DEFAULT_CACHE_BUDGET: usize = 8 << 30;
+
+/// Lock a mutex, recovering from poisoning. The cache state is only ever
+/// mutated at consistent boundaries (insert/evict/touch complete under
+/// one guard), so the data behind a poisoned lock is still valid; a
+/// panicking request must not turn every later request into a panic.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Key
+// ---------------------------------------------------------------------------
+
+/// Identity of a shared design decomposition: fingerprints of the design
+/// matrix contents, the CV split index sets and the λ grid, plus the
+/// compute configuration (backend and thread width) that factorized it —
+/// the backends use different accumulation orders, so factors from one
+/// are not bit-identical to another's and must not be served across
+/// them. Two requests with equal keys would build bit-identical
+/// [`DesignPlan`]s, so the cached plan can serve both. 64-bit FNV-1a
+/// over the exact f64 bit patterns — hashing is O(n·p), negligible
+/// against the O(p³) decomposition it saves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct PlanKey {
+    pub(crate) design: u64,
+    pub(crate) splits: u64,
+    pub(crate) lambdas: u64,
+    pub(crate) backend: Backend,
+    pub(crate) threads: usize,
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl PlanKey {
+    pub(crate) fn new(
+        x: &Mat,
+        splits: &[Split],
+        lambdas: &[f64],
+        backend: Backend,
+        threads: usize,
+    ) -> PlanKey {
+        let mut hd = Fnv::new();
+        hd.u64(x.rows() as u64);
+        hd.u64(x.cols() as u64);
+        for v in x.data() {
+            hd.u64(v.to_bits());
+        }
+        let mut hs = Fnv::new();
+        hs.u64(splits.len() as u64);
+        for s in splits {
+            hs.u64(s.train.len() as u64);
+            for &i in &s.train {
+                hs.u64(i as u64);
+            }
+            hs.u64(s.val.len() as u64);
+            for &i in &s.val {
+                hs.u64(i as u64);
+            }
+        }
+        let mut hl = Fnv::new();
+        hl.u64(lambdas.len() as u64);
+        for v in lambdas {
+            hl.u64(v.to_bits());
+        }
+        PlanKey {
+            design: hd.finish(),
+            splits: hs.finish(),
+            lambdas: hl.finish(),
+            backend,
+            threads,
+        }
+    }
+
+    /// One opaque u64 naming this key in observability output
+    /// ([`CacheEntryStats::key`]) — an FNV fold of all five components.
+    fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(self.design);
+        h.u64(self.splits);
+        h.u64(self.lambdas);
+        h.u64(self.backend as u64);
+        h.u64(self.threads as u64);
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Observability snapshot of the plan cache (see
+/// [`Engine::cache_stats`](crate::engine::Engine::cache_stats)).
+/// Counters are monotone over the engine's lifetime; the byte gauges and
+/// the per-entry list describe the current residency.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Warm lookups served from a resident plan (includes coalesced
+    /// waiters that were handed a plan another request just built).
+    pub hits: u64,
+    /// Lookups that claimed a cold build (one per decomposition paid).
+    pub misses: u64,
+    /// Requests that parked behind an identical in-flight cold build
+    /// instead of decomposing again (each is also counted in `hits`).
+    pub coalesced: u64,
+    /// Entries removed by the byte-budget LRU policy (manual
+    /// `clear_plan_cache` calls are not evictions).
+    pub evictions: u64,
+    /// Bytes currently charged against the budget (sum of resident
+    /// plans' [`DesignPlan::resident_bytes`]; Arcs retained by in-flight
+    /// fits after an eviction are not counted — they are not the
+    /// cache's).
+    pub resident_bytes: usize,
+    /// The configured byte budget.
+    pub budget_bytes: usize,
+    /// One row per resident plan, most recently touched first.
+    pub entries: Vec<CacheEntryStats>,
+}
+
+/// Per-plan residency row of [`CacheStats`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheEntryStats {
+    /// Opaque fingerprint of the plan's cache key.
+    pub key: u64,
+    /// Real resident footprint ([`DesignPlan::resident_bytes`]).
+    pub bytes: usize,
+    /// Monotone access stamp: larger = touched more recently. Stamped on
+    /// insert and on every warm hit (a hit refreshes LRU order).
+    pub last_touch: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Cache
+// ---------------------------------------------------------------------------
+
+struct Entry {
+    plan: Arc<DesignPlan>,
+    bytes: usize,
+    last_touch: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    map: HashMap<PlanKey, Entry>,
+    /// Keys with a cold build in flight (single-flight claims).
+    building: HashSet<PlanKey>,
+    tick: u64,
+    resident: usize,
+    hits: u64,
+    misses: u64,
+    coalesced: u64,
+    evictions: u64,
+}
+
+/// The engine's plan cache (see the module docs for the policy).
+pub(crate) struct PlanCache {
+    state: Mutex<CacheState>,
+    cv: Condvar,
+    budget: usize,
+}
+
+/// Outcome of a cache lookup: either a resident plan to run warm
+/// against, or a claimed build slot the caller must resolve.
+pub(crate) enum Lease<'a> {
+    /// Plan is resident (or was just built by a racing request): run the
+    /// warm path.
+    Hit(Arc<DesignPlan>),
+    /// This caller owns the cold build for its key. Call
+    /// [`BuildGuard::fulfill`] with the assembled plan; dropping the
+    /// guard unfulfilled (panic, or a strategy that yields no plan)
+    /// releases the claim so parked waiters can retry.
+    Build(BuildGuard<'a>),
+}
+
+impl PlanCache {
+    pub(crate) fn new(budget: usize) -> Self {
+        PlanCache { state: Mutex::new(CacheState::default()), cv: Condvar::new(), budget }
+    }
+
+    pub(crate) fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Change the byte budget (construction-time knob; does not evict
+    /// retroactively — the next insert enforces the new budget).
+    pub(crate) fn set_budget(&mut self, budget: usize) {
+        self.budget = budget;
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        lock_recover(&self.state).map.len()
+    }
+
+    /// Drop every resident plan. Frees the shared factor memory once no
+    /// in-flight fit holds an `Arc`; not counted as evictions.
+    pub(crate) fn clear(&self) {
+        let mut st = lock_recover(&self.state);
+        st.map.clear();
+        st.resident = 0;
+    }
+
+    /// Look up `key`, claiming the cold build on a miss. Blocks if an
+    /// identical cold build is already in flight, then returns its plan
+    /// as a hit (single-flight coalescing).
+    pub(crate) fn lease(&self, key: PlanKey) -> Lease<'_> {
+        let mut st = lock_recover(&self.state);
+        let mut waited = false;
+        loop {
+            if let Some(e) = st.map.get_mut(&key) {
+                let plan = Arc::clone(&e.plan);
+                st.tick += 1;
+                let tick = st.tick;
+                // Borrow again after the tick bump (split borrows).
+                st.map.get_mut(&key).expect("entry just seen").last_touch = tick;
+                st.hits += 1;
+                return Lease::Hit(plan);
+            }
+            if !st.building.contains(&key) {
+                st.building.insert(key);
+                st.misses += 1;
+                return Lease::Build(BuildGuard { cache: self, key, fulfilled: false });
+            }
+            if !waited {
+                st.coalesced += 1;
+                waited = true;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Insert a finished plan under `key`, then evict least-recently
+    /// touched entries (never `key` itself) until the resident total is
+    /// back under budget. Runs under the caller's guard so the claim
+    /// release and the insert are one atomic step — a waiter can never
+    /// observe "not building, not resident" for a build that succeeded.
+    fn insert_locked(&self, st: &mut CacheState, key: PlanKey, plan: Arc<DesignPlan>) {
+        let bytes = plan.resident_bytes();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(old) = st.map.insert(key, Entry { plan, bytes, last_touch: tick }) {
+            // Same key rebuilt concurrently with a clear(): replacement,
+            // not an eviction.
+            st.resident -= old.bytes;
+        }
+        st.resident += bytes;
+        while st.resident > self.budget {
+            let victim = st
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(v) => {
+                    let e = st.map.remove(&v).expect("victim just seen");
+                    st.resident -= e.bytes;
+                    st.evictions += 1;
+                }
+                // Only the fresh insert remains: an oversized plan is
+                // kept (serving beats strict budget adherence) until the
+                // next insert displaces it.
+                None => break,
+            }
+        }
+    }
+
+    pub(crate) fn stats(&self) -> CacheStats {
+        let st = lock_recover(&self.state);
+        let mut entries: Vec<CacheEntryStats> = st
+            .map
+            .iter()
+            .map(|(k, e)| CacheEntryStats {
+                key: k.fingerprint(),
+                bytes: e.bytes,
+                last_touch: e.last_touch,
+            })
+            .collect();
+        entries.sort_by(|a, b| b.last_touch.cmp(&a.last_touch));
+        CacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            coalesced: st.coalesced,
+            evictions: st.evictions,
+            resident_bytes: st.resident,
+            budget_bytes: self.budget,
+            entries,
+        }
+    }
+
+    /// Test hook: panic while holding the state lock, poisoning it.
+    #[cfg(test)]
+    fn poison_for_test(&self) {
+        let _guard = self.state.lock().unwrap();
+        panic!("deliberate poison");
+    }
+}
+
+/// Claim on a cold build (see [`Lease::Build`]). Fulfilling publishes
+/// the plan and wakes coalesced waiters; dropping without fulfilling
+/// (including on unwind) releases the claim so a waiter can rebuild.
+pub(crate) struct BuildGuard<'a> {
+    cache: &'a PlanCache,
+    key: PlanKey,
+    fulfilled: bool,
+}
+
+impl BuildGuard<'_> {
+    pub(crate) fn fulfill(mut self, plan: &Arc<DesignPlan>) {
+        self.fulfilled = true;
+        {
+            let mut st = lock_recover(&self.cache.state);
+            st.building.remove(&self.key);
+            self.cache.insert_locked(&mut st, self.key, Arc::clone(plan));
+        }
+        self.cache.cv.notify_all();
+    }
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if self.fulfilled {
+            return;
+        }
+        let mut st = lock_recover(&self.cache.state);
+        st.building.remove(&self.key);
+        drop(st);
+        self.cache.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Blas;
+    use crate::cv::kfold;
+    use crate::ridge::{self, LAMBDA_GRID};
+    use crate::util::Pcg64;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn small_plan(seed: u64) -> Arc<DesignPlan> {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(30, 4, &mut rng);
+        let splits = kfold(30, 3, Some(seed));
+        let blas = Blas::new(Backend::MklLike, 1);
+        Arc::new(DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits))
+    }
+
+    fn key(i: u64) -> PlanKey {
+        PlanKey { design: i, splits: 0, lambdas: 0, backend: Backend::MklLike, threads: 1 }
+    }
+
+    fn claim_and_fulfill(cache: &PlanCache, k: PlanKey, plan: &Arc<DesignPlan>) {
+        match cache.lease(k) {
+            Lease::Build(g) => g.fulfill(plan),
+            Lease::Hit(_) => panic!("expected a cold miss"),
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_touched_never_the_insert() {
+        let a = small_plan(1);
+        let one = a.resident_bytes();
+        let cache = PlanCache::new(2 * one + one / 2);
+        claim_and_fulfill(&cache, key(1), &a);
+        claim_and_fulfill(&cache, key(2), &small_plan(2));
+        assert_eq!(cache.len(), 2);
+        // Touch key 1 so key 2 is LRU.
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_)));
+        claim_and_fulfill(&cache, key(3), &small_plan(3));
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_)), "refreshed entry evicted");
+        assert!(matches!(cache.lease(key(3)), Lease::Hit(_)), "fresh insert evicted");
+        match cache.lease(key(2)) {
+            Lease::Build(_) => {} // claim released on guard drop
+            Lease::Hit(_) => panic!("LRU entry survived over-budget insert"),
+        }
+    }
+
+    #[test]
+    fn oversized_plan_is_kept_until_displaced() {
+        let a = small_plan(4);
+        let cache = PlanCache::new(a.resident_bytes() / 2);
+        claim_and_fulfill(&cache, key(1), &a);
+        assert_eq!(cache.len(), 1, "sole oversized plan must stay resident");
+        assert_eq!(cache.stats().evictions, 0);
+        claim_and_fulfill(&cache, key(2), &small_plan(5));
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "next insert displaces the oversized plan");
+        assert_eq!(st.entries.len(), 1);
+    }
+
+    #[test]
+    fn eviction_keeps_outstanding_arcs_usable() {
+        // Budget enforcement under Arc retention: an in-flight fit's clone
+        // of an evicted plan stays fully usable, while the cache stops
+        // charging the bytes.
+        let a = small_plan(6);
+        let one = a.resident_bytes();
+        let cache = PlanCache::new(one + one / 2);
+        claim_and_fulfill(&cache, key(1), &a);
+        let held = match cache.lease(key(1)) {
+            Lease::Hit(p) => p,
+            Lease::Build(_) => panic!("expected hit"),
+        };
+        claim_and_fulfill(&cache, key(2), &small_plan(7)); // evicts key 1
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        // Only the surviving plan is charged — the evicted plan's bytes
+        // left the budget the moment its Arc left the map, even though
+        // `held` keeps the allocation alive.
+        assert_eq!(st.resident_bytes, st.entries[0].bytes);
+        // The retained Arc still serves a fit, bit-identical to before.
+        let blas = Blas::new(Backend::MklLike, 1);
+        let mut rng = Pcg64::seeded(8);
+        let y = Mat::randn(30, 3, &mut rng);
+        let before = ridge::fit_batch_with_plan(&blas, &a, &y);
+        let after = ridge::fit_batch_with_plan(&blas, &held, &y);
+        assert_eq!(before.weights.max_abs_diff(&after.weights), 0.0);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_bricking() {
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        claim_and_fulfill(&cache, key(1), &small_plan(9));
+        let poison = catch_unwind(AssertUnwindSafe(|| cache.poison_for_test()));
+        assert!(poison.is_err(), "poison hook must panic");
+        // Every entry point still works on the poisoned mutex.
+        assert_eq!(cache.len(), 1);
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_)));
+        claim_and_fulfill(&cache, key(2), &small_plan(10));
+        let st = cache.stats();
+        assert_eq!(st.entries.len(), 2);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 2);
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn dropped_unfulfilled_guard_releases_the_claim() {
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        match cache.lease(key(1)) {
+            Lease::Build(g) => drop(g),
+            Lease::Hit(_) => panic!("expected miss"),
+        }
+        // The key is claimable again (no deadlock, no stale claim).
+        match cache.lease(key(1)) {
+            Lease::Build(g) => g.fulfill(&small_plan(11)),
+            Lease::Hit(_) => panic!("stale hit"),
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn stats_order_entries_most_recent_first() {
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        claim_and_fulfill(&cache, key(1), &small_plan(12));
+        claim_and_fulfill(&cache, key(2), &small_plan(13));
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_)));
+        let st = cache.stats();
+        assert_eq!(st.entries.len(), 2);
+        assert!(st.entries[0].last_touch > st.entries[1].last_touch);
+        assert_eq!(st.resident_bytes, st.entries.iter().map(|e| e.bytes).sum::<usize>());
+        assert_eq!(st.budget_bytes, DEFAULT_CACHE_BUDGET);
+    }
+}

@@ -36,11 +36,34 @@
 //! measure. A warm B-MOR fit is pinned (tests/engine_api.rs) to perform
 //! **zero** eigendecompositions and return weights bit-identical to the
 //! cold path.
+//!
+//! The cache is **serving-grade** (`engine::cache`): bounded by a byte
+//! budget ([`Engine::with_cache_budget`], default
+//! [`DEFAULT_CACHE_BUDGET`]) with LRU eviction, accounted in the real
+//! Arc-backed footprint of each plan ([`DesignPlan::resident_bytes`] —
+//! true uneven kfold validation sizes, X charged once), observable
+//! through [`Engine::cache_stats`] (hits / misses / coalesced /
+//! evictions / resident bytes / per-key last-touch), and
+//! **single-flight**: two concurrent identical cold fits coalesce on one
+//! decomposition — the loser parks and is served the winner's plan
+//! instead of paying its own `splits + 1` eigendecompositions and racing
+//! the insert. The winner publishes the plan from inside the assemble
+//! barrier, so waiters resume as soon as the factors exist, not after
+//! the winner's sweeps. Every internal lock recovers from poisoning
+//! (`PoisonError::into_inner`), so one panicking request cannot brick
+//! the session. An evicted plan's memory survives as long as any
+//! in-flight fit holds its `Arc`; the budget governs *cache-resident*
+//! bytes only.
 
-use std::collections::HashMap;
+mod cache;
+
 use std::fmt;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+pub use cache::{CacheEntryStats, CacheStats, DEFAULT_CACHE_BUDGET};
+
+use cache::{lock_recover, Lease, PlanCache, PlanKey};
 
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
@@ -108,88 +131,6 @@ impl fmt::Display for EngineError {
 }
 
 impl std::error::Error for EngineError {}
-
-// ---------------------------------------------------------------------------
-// Plan cache key
-// ---------------------------------------------------------------------------
-
-/// Identity of a shared design decomposition: fingerprints of the design
-/// matrix contents, the CV split index sets and the λ grid, plus the
-/// compute configuration (backend and thread width) that factorized it —
-/// the backends use different accumulation orders, so factors from one
-/// are not bit-identical to another's and must not be served across
-/// them. Two requests with equal keys would build bit-identical
-/// [`DesignPlan`]s, so the cached plan can serve both. 64-bit FNV-1a
-/// over the exact f64 bit patterns — hashing is O(n·p), negligible
-/// against the O(p³) decomposition it saves.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-struct PlanKey {
-    design: u64,
-    splits: u64,
-    lambdas: u64,
-    backend: Backend,
-    threads: usize,
-}
-
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn u64(&mut self, v: u64) {
-        for b in v.to_le_bytes() {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
-        }
-    }
-
-    fn finish(self) -> u64 {
-        self.0
-    }
-}
-
-impl PlanKey {
-    fn new(
-        x: &Mat,
-        splits: &[Split],
-        lambdas: &[f64],
-        backend: Backend,
-        threads: usize,
-    ) -> PlanKey {
-        let mut hd = Fnv::new();
-        hd.u64(x.rows() as u64);
-        hd.u64(x.cols() as u64);
-        for v in x.data() {
-            hd.u64(v.to_bits());
-        }
-        let mut hs = Fnv::new();
-        hs.u64(splits.len() as u64);
-        for s in splits {
-            hs.u64(s.train.len() as u64);
-            for &i in &s.train {
-                hs.u64(i as u64);
-            }
-            hs.u64(s.val.len() as u64);
-            for &i in &s.val {
-                hs.u64(i as u64);
-            }
-        }
-        let mut hl = Fnv::new();
-        hl.u64(lambdas.len() as u64);
-        for v in lambdas {
-            hl.u64(v.to_bits());
-        }
-        PlanKey {
-            design: hd.finish(),
-            splits: hs.finish(),
-            lambdas: hl.finish(),
-            backend,
-            threads,
-        }
-    }
-}
 
 // ---------------------------------------------------------------------------
 // Requests
@@ -496,15 +437,18 @@ impl<'a> EncodeRequest<'a> {
 
 /// Long-lived session over the ridge system: BLAS backends are selected
 /// per request, but the calibration, the cluster spec and — crucially —
-/// the decomposed design plans persist across requests.
+/// the decomposed design plans persist across requests, behind a
+/// size-budgeted LRU cache (see the module docs and `engine::cache`).
 ///
-/// Thread-safe: the cache sits behind a mutex held only for lookups and
-/// inserts (never while computing), and cached plans are [`Arc`]s, so
-/// concurrent warm fits share one set of factors.
+/// Thread-safe: the cache sits behind a poison-recovering mutex held
+/// only for lookups, inserts and evictions (never while computing), and
+/// cached plans are [`Arc`]s, so concurrent warm fits share one set of
+/// factors. Concurrent identical *cold* fits are single-flight: one
+/// decomposes, the rest park and reuse its plan.
 pub struct Engine {
     cal: Calibration,
     cluster: ClusterSpec,
-    plans: Mutex<HashMap<PlanKey, Arc<DesignPlan>>>,
+    plans: PlanCache,
 }
 
 impl Default for Engine {
@@ -523,7 +467,16 @@ impl Engine {
     }
 
     pub fn with_calibration(cal: Calibration, cluster: ClusterSpec) -> Self {
-        Engine { cal, cluster, plans: Mutex::new(HashMap::new()) }
+        Engine { cal, cluster, plans: PlanCache::new(DEFAULT_CACHE_BUDGET) }
+    }
+
+    /// Set the plan-cache byte budget (builder-style, construction-time).
+    /// Inserting a plan that pushes the cache's resident total —
+    /// measured by [`DesignPlan::resident_bytes`] — over this budget
+    /// evicts least-recently-used plans; see [`Engine::cache_stats`].
+    pub fn with_cache_budget(mut self, bytes: usize) -> Self {
+        self.plans.set_budget(bytes);
+        self
     }
 
     pub fn calibration(&self) -> &Calibration {
@@ -536,21 +489,26 @@ impl Engine {
 
     /// Number of design plans currently resident in the cache.
     pub fn cached_plans(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        self.plans.len()
+    }
+
+    /// The plan cache's configured byte budget.
+    pub fn cache_budget(&self) -> usize {
+        self.plans.budget()
+    }
+
+    /// Observability snapshot of the plan cache: monotone hit / miss /
+    /// coalesced / eviction counters, current resident bytes vs budget,
+    /// and a per-plan residency list (bytes + last-touch stamp), most
+    /// recently used first.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.plans.stats()
     }
 
     /// Drop every cached plan (frees the shared factor memory once no
-    /// in-flight fit holds an `Arc` to it).
+    /// in-flight fit holds an `Arc` to it). Not counted as evictions.
     pub fn clear_plan_cache(&self) {
-        self.plans.lock().unwrap().clear();
-    }
-
-    fn lookup(&self, key: &PlanKey) -> Option<Arc<DesignPlan>> {
-        self.plans.lock().unwrap().get(key).cloned()
-    }
-
-    fn store(&self, key: PlanKey, plan: Arc<DesignPlan>) {
-        self.plans.lock().unwrap().insert(key, plan);
+        self.plans.clear();
     }
 
     /// Functional distributed fit. Plan-backed strategies (B-MOR) check
@@ -559,7 +517,9 @@ impl Engine {
     /// shared [`Arc<DesignPlan>`] — and is bit-identical to the cold
     /// path (both run [`ridge::fit_batch_with_plan`] on the same
     /// factors). A cold fit executes the coordinator's full
-    /// decompose→assemble→sweep graph and caches the assembled plan.
+    /// decompose→assemble→sweep graph and publishes the assembled plan
+    /// to the cache (evicting LRU plans if over budget); an identical
+    /// request arriving mid-build parks and is served that plan.
     pub fn fit(&self, req: &FitRequest) -> Result<DistributedFit, EngineError> {
         req.validate()?;
         let cfg = req.dist_config();
@@ -572,16 +532,27 @@ impl Engine {
                 cfg.backend,
                 cfg.threads_per_node,
             );
-            if let Some(plan) = self.lookup(&key) {
-                return Ok(warm_fit(&plan, req.y, &cfg));
+            match self.plans.lease(key) {
+                Lease::Hit(plan) => Ok(warm_fit(&plan, req.y, &cfg)),
+                Lease::Build(guard) => {
+                    // Publish from inside the assemble barrier: waiters
+                    // parked on this key unblock as soon as the factors
+                    // exist, while this fit's sweeps are still running.
+                    // If the build unwinds before assembling, `pending`
+                    // drops the unfulfilled guard and releases the claim.
+                    let pending = Mutex::new(Some(guard));
+                    let publish = |plan: &Arc<DesignPlan>| {
+                        if let Some(g) = lock_recover(&pending).take() {
+                            g.fulfill(plan);
+                        }
+                    };
+                    let (fit, _plan) =
+                        cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas, Some(&publish));
+                    Ok(fit)
+                }
             }
-            let (fit, plan) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas);
-            if let Some(plan) = plan {
-                self.store(key, plan);
-            }
-            Ok(fit)
         } else {
-            let (fit, _) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas);
+            let (fit, _) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas, None);
             Ok(fit)
         }
     }
@@ -621,11 +592,11 @@ impl Engine {
         let splits = kfold(xtr.rows(), req.folds, Some(req.seed));
         let blas = Blas::new(req.backend, req.threads);
         let key = PlanKey::new(&xtr, &splits, &ridge::LAMBDA_GRID, req.backend, req.threads);
-        let (plan, fresh) = match self.lookup(&key) {
-            Some(plan) => (plan, false),
-            None => {
+        let (plan, fresh) = match self.plans.lease(key) {
+            Lease::Hit(plan) => (plan, false),
+            Lease::Build(guard) => {
                 let plan = Arc::new(DesignPlan::build(&blas, &xtr, &ridge::LAMBDA_GRID, &splits));
-                self.store(key, Arc::clone(&plan));
+                guard.fulfill(&plan);
                 (plan, true)
             }
         };
@@ -690,14 +661,19 @@ fn collect_fits(
 /// [`Engine::simulate`] prices), instantiate each node as a closure and
 /// execute it on the [`ThreadExecutor`]. For B-MOR the `splits + 1`
 /// factorizations run as independent decompose tasks feeding the
-/// assemble barrier; the assembled [`Arc<DesignPlan>`] is returned for
-/// the engine to cache (`None` for the self-contained strategies).
+/// assemble barrier; `on_plan` fires from inside that barrier — as soon
+/// as the plan exists, before the sweeps — so the engine can publish it
+/// to the cache while this fit is still running (single-flight waiters
+/// unblock after the decompositions, not after the whole fit). The
+/// assembled [`Arc<DesignPlan>`] is also returned (`None` for the
+/// self-contained strategies, whose graphs have no assemble barrier).
 fn cold_fit(
     x: &Mat,
     y: &Mat,
     cfg: &DistConfig,
     splits: &[Split],
     lambdas: &[f64],
+    on_plan: Option<&(dyn Fn(&Arc<DesignPlan>) + Sync)>,
 ) -> (DistributedFit, Option<Arc<DesignPlan>>) {
     let t = y.cols();
     let p = x.cols();
@@ -725,6 +701,7 @@ fn cold_fit(
         lambdas,
         started,
         &plan_elapsed,
+        on_plan,
     );
     let outs = ThreadExecutor::new(cfg.nodes).execute(runnable);
     let wall_secs = started.elapsed().as_secs_f64();
@@ -744,7 +721,7 @@ fn cold_fit(
             TaskOutput::Split(..) | TaskOutput::Full(..) => {}
         }
     }
-    let plan_secs = *plan_elapsed.lock().unwrap();
+    let plan_secs = *lock_recover(&plan_elapsed);
     let fit = collect_fits(p, t, fits, batches, timings, wall_secs, plan_secs, false);
     (fit, plan_arc)
 }

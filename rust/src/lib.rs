@@ -34,7 +34,15 @@
 //! against the same design (same X, CV splits, λ grid) skip every
 //! eigendecomposition — the factors are shared, not recomputed, which is
 //! the serving scenario the paper's cost model (Eq. 6–7) prices as
-//! nearly free. `coordinator::fit` / `coordinator::simulate` and
+//! nearly free. The cache is serving-grade: bounded by a byte budget
+//! (`Engine::with_cache_budget`, LRU eviction) whose accounting is the
+//! plans' *real* Arc-backed footprint (`DesignPlan::resident_bytes` —
+//! uneven kfold fold sizes and all), observable via
+//! `Engine::cache_stats`, and single-flight — concurrent identical cold
+//! fits coalesce on one decomposition. Cross-split λ-selection scores
+//! are accumulated NaN-aware per (λ, target) cell, so one zero-variance
+//! validation column on one split cannot poison selection for the rest.
+//! `coordinator::fit` / `coordinator::simulate` and
 //! `encoding::run_encoding` remain as thin single-request compatibility
 //! wrappers.
 //! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph

@@ -94,6 +94,14 @@ impl Mat {
         self.data
     }
 
+    /// Heap bytes held by this matrix's element storage — the real
+    /// memory-accounting unit for plan-cache budgeting (the `Vec` is
+    /// allocated exactly at `rows · cols`, never over-reserved).
+    #[inline]
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness on big matrices.

@@ -231,10 +231,19 @@ pub fn batch_task_cost(
 /// eigenvector matrix V, eigenvalues e and the validation projection A,
 /// plus the full-train (V, e) — what the decompose stage hands the sweep
 /// stage.
+///
+/// kfold validation folds are uneven when `s ∤ n`, but they partition
+/// the n samples, so the per-split A row counts sum to exactly `n` —
+/// the A term is `n·p` doubles, not `s·⌊n/s⌋·p` (the old idealization
+/// undercharged the DES broadcast by up to `(s−1)·p` doubles). This is
+/// pinned against the real allocation,
+/// [`crate::ridge::DesignPlan::factor_bytes`], by a test; note the
+/// *cache* accounting uses [`crate::ridge::DesignPlan::resident_bytes`]
+/// instead, which additionally counts X and the per-split Xtr gathers a
+/// resident plan pins.
 pub fn plan_bytes(shape: FitShape) -> f64 {
     let s = shape.splits.max(1);
-    let nv = (shape.n / s).max(1);
-    ((s + 1) * (shape.p * shape.p + shape.p) * 8 + s * nv * shape.p * 8) as f64
+    ((s + 1) * (shape.p * shape.p + shape.p) * 8 + shape.n * shape.p * 8) as f64
 }
 
 /// Task cost of the B-MOR plan-assembly barrier: the leader gathers every
@@ -435,10 +444,37 @@ mod tests {
         assert_eq!(asm.compute_secs, 0.0);
         assert_eq!(asm.output_bytes, 0.0);
         assert_eq!(asm.input_bytes, plan_bytes(shape));
-        // Factor bytes: (s+1) V matrices + eigenvalue vectors, s A
-        // projections over n/s validation rows.
-        let want = (4 * (128 * 128 + 128) * 8 + 3 * 333 * 128 * 8) as f64;
+        // Factor bytes: (s+1) V matrices + eigenvalue vectors, and the A
+        // projections' validation rows sum to exactly n across splits.
+        let want = (4 * (128 * 128 + 128) * 8 + 1000 * 128 * 8) as f64;
         assert_eq!(plan_bytes(shape), want);
+    }
+
+    #[test]
+    fn plan_bytes_matches_real_factor_allocation() {
+        // The model must agree with the plan's actual Arc-backed factor
+        // shapes, including uneven kfold folds: n = 100, s = 3 gives
+        // validation sizes (34, 33, 33), which the old n/s idealization
+        // rounded down to 33 each.
+        use crate::cv::kfold;
+        use crate::ridge::{DesignPlan, LAMBDA_GRID};
+        let mut rng = Pcg64::seeded(42);
+        for (n, s) in [(100usize, 3usize), (60, 4), (90, 3)] {
+            let p = 6;
+            let x = Mat::randn(n, p, &mut rng);
+            let splits = kfold(n, s, Some(1));
+            let blas = Blas::new(Backend::MklLike, 1);
+            let plan = DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits);
+            let shape = FitShape { n, p, t: 1, r: LAMBDA_GRID.len(), splits: s };
+            assert_eq!(
+                plan_bytes(shape),
+                plan.factor_bytes() as f64,
+                "n={n} s={s}: model disagrees with the real factor bytes"
+            );
+            // Cache accounting is strictly larger: it also pins X and
+            // the gathered per-split training rows.
+            assert!((plan.resident_bytes() as f64) > plan_bytes(shape));
+        }
     }
 
     #[test]

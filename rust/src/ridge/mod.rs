@@ -87,6 +87,9 @@ pub struct RidgeCvFit {
     /// skipping non-finite per-target scores).
     pub mean_scores: Vec<f64>,
     /// Per-(λ, target) validation scores averaged over splits (r × t).
+    /// The average is NaN-aware per cell: a split whose score is NaN
+    /// (zero-variance validation column) is skipped and the remaining
+    /// splits' mean reported; a cell is NaN only if *every* split was.
     pub scores: Mat,
     pub timings: RidgeTimings,
 }
@@ -128,7 +131,10 @@ pub fn fit_ridge_cv_unshared(
     let t = y.cols();
     let r = lambdas.len();
     let mut timings = RidgeTimings::default();
-    let mut scores_acc = Mat::zeros(r, t);
+    // NaN-aware per-cell accumulation: one zero-variance validation
+    // column on one split must not NaN that (λ, target) cell for the
+    // whole fit (see [`ScoreAccumulator`]).
+    let mut acc = ScoreAccumulator::new(r, t);
 
     for split in splits {
         let xtr = x.rows_gather(&split.train);
@@ -137,9 +143,9 @@ pub fn fit_ridge_cv_unshared(
         let yval = y.rows_gather(&split.val);
         let (scores, tim) = sweep_scores(blas, &xtr, &ytr, &xval, &yval, lambdas);
         timings.add(&tim);
-        scores_acc.add_assign(&scores);
+        acc.add_scores(&scores);
     }
-    scores_acc.scale(1.0 / splits.len() as f64);
+    let scores_acc = acc.into_mean();
 
     // Shared λ*: argmax of the target-mean validation score (paper
     // §2.2.4), NaN-safe like the plan path.
@@ -275,6 +281,75 @@ pub fn fit_naive_per_lambda(blas: &Blas, x: &Mat, y: &Mat, lambdas: &[f64]) -> V
 /// Prediction: Ŷ = XW.
 pub fn predict(blas: &Blas, x: &Mat, w: &Mat) -> Mat {
     blas.gemm(x, w)
+}
+
+/// NaN-aware cross-split accumulator for the (r × t) validation-score
+/// matrix.
+///
+/// Both CV paths ([`fit_ridge_cv_unshared`] and [`fit_batch_with_plan`])
+/// average per-split scores per (λ, target) cell. A raw
+/// sum-then-`scale(1/s)` lets a single split where a validation target
+/// column has zero variance (Pearson → NaN — real fMRI parcels produce
+/// these) turn that cell NaN across *all* splits, silently discarding
+/// the finite evidence of the other splits from λ selection. This
+/// accumulator keeps a per-cell finite-count alongside the sum and
+/// divides each cell by its own count: the NaN split is skipped, the
+/// finite splits still vote. A cell with no finite split stays NaN (and
+/// is then skipped by [`nanmean`] / [`argmax_finite`] downstream).
+///
+/// Bit-compatibility: when no NaN occurs the count is `s` everywhere and
+/// each cell is `sum * (1.0 / s)` — the exact multiply the old
+/// `scale(1.0 / s)` performed, in the same accumulation order, so
+/// NaN-free fits are bit-identical to the pre-fix path.
+pub(crate) struct ScoreAccumulator {
+    sum: Mat,
+    /// Per-cell count of finite contributions, row-major like `sum`.
+    finite: Vec<u32>,
+}
+
+impl ScoreAccumulator {
+    pub(crate) fn new(r: usize, t: usize) -> Self {
+        ScoreAccumulator { sum: Mat::zeros(r, t), finite: vec![0; r * t] }
+    }
+
+    /// Fold one split's scores for λ row `li` into the accumulator.
+    pub(crate) fn add_row(&mut self, li: usize, rs: &[f64]) {
+        let t = self.sum.cols();
+        assert_eq!(rs.len(), t, "score row width mismatch");
+        let row = self.sum.row_mut(li);
+        let counts = &mut self.finite[li * t..(li + 1) * t];
+        for ((acc, cnt), &rv) in row.iter_mut().zip(counts.iter_mut()).zip(rs) {
+            if !rv.is_nan() {
+                *acc += rv;
+                *cnt += 1;
+            }
+        }
+    }
+
+    /// Fold one split's full (r × t) score matrix into the accumulator.
+    pub(crate) fn add_scores(&mut self, scores: &Mat) {
+        assert_eq!(scores.shape(), self.sum.shape());
+        for li in 0..scores.rows() {
+            self.add_row(li, scores.row(li));
+        }
+    }
+
+    /// Per-cell mean over the finite contributions (NaN where none).
+    pub(crate) fn into_mean(mut self) -> Mat {
+        let t = self.sum.cols();
+        for li in 0..self.sum.rows() {
+            let row = self.sum.row_mut(li);
+            let counts = &self.finite[li * t..(li + 1) * t];
+            for (acc, &cnt) in row.iter_mut().zip(counts) {
+                *acc = if cnt == 0 {
+                    f64::NAN
+                } else {
+                    *acc * (1.0 / cnt as f64)
+                };
+            }
+        }
+        self.sum
+    }
 }
 
 /// Index of the largest non-NaN value; strict `>` keeps the first of
@@ -482,6 +557,111 @@ mod tests {
             for i in 0..8 {
                 assert!((fit.weights.get(i, j) - clean.weights.get(i, j)).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn score_accumulator_matches_scale_when_no_nans_and_skips_nans() {
+        let mut acc = ScoreAccumulator::new(2, 2);
+        acc.add_row(0, &[0.25, 0.5]);
+        acc.add_row(0, &[0.75, 0.25]);
+        acc.add_row(1, &[0.5, f64::NAN]);
+        acc.add_row(1, &[0.25, 0.125]);
+        let m = acc.into_mean();
+        // Fully-finite cells: exactly sum * (1.0 / s) — the multiply the
+        // old scale(1.0 / s) performed, so NaN-free fits stay bit-equal.
+        assert_eq!(m.get(0, 0), (0.25 + 0.75) * (1.0 / 2.0));
+        assert_eq!(m.get(0, 1), (0.5 + 0.25) * (1.0 / 2.0));
+        assert_eq!(m.get(1, 0), (0.5 + 0.25) * (1.0 / 2.0));
+        // NaN split skipped: the finite split's value survives alone.
+        assert_eq!(m.get(1, 1), 0.125);
+        // All-NaN cell stays NaN (then skipped downstream by nanmean).
+        let mut acc = ScoreAccumulator::new(1, 1);
+        acc.add_row(0, &[f64::NAN]);
+        assert!(acc.into_mean().get(0, 0).is_nan());
+    }
+
+    #[test]
+    fn one_nan_split_does_not_poison_cross_split_scores() {
+        // Regression for the cross-split NaN-poisoning bug: one target
+        // constant on ONE split's validation rows (zero variance there →
+        // Pearson NaN on that split only). The old sum-then-scale(1/s)
+        // accumulator turned that (λ, target) cell NaN across all splits
+        // in both CV paths, silently ejecting the target's finite
+        // evidence from λ selection; the NaN-aware per-cell mean keeps
+        // the finite splits voting.
+        let (x, y, _) = planted(60, 8, 5, 12);
+        let splits = kfold(60, 3, Some(9));
+        let b = blas();
+        let mut yp = y.clone();
+        for &i in &splits[0].val {
+            yp.set(i, 0, 3.5);
+        }
+
+        // NaN-free oracle: per-split sweeps accumulated by hand with
+        // per-cell finite counts, then the same nanmean/argmax selection.
+        let r = LAMBDA_GRID.len();
+        let t = yp.cols();
+        let mut sum = Mat::zeros(r, t);
+        let mut cnt = vec![0u32; r * t];
+        for split in &splits {
+            let (scores, _) = sweep_scores(
+                &b,
+                &x.rows_gather(&split.train),
+                &yp.rows_gather(&split.train),
+                &x.rows_gather(&split.val),
+                &yp.rows_gather(&split.val),
+                &LAMBDA_GRID,
+            );
+            for li in 0..r {
+                for j in 0..t {
+                    let v = scores.get(li, j);
+                    if !v.is_nan() {
+                        sum.set(li, j, sum.get(li, j) + v);
+                        cnt[li * t + j] += 1;
+                    }
+                }
+            }
+        }
+        // The poisoned split really went NaN, or this test checks nothing.
+        assert!(
+            cnt.iter().any(|&c| (c as usize) < splits.len()),
+            "constant validation column failed to produce a NaN split"
+        );
+        let oracle_mean: Vec<f64> = (0..r)
+            .map(|li| {
+                let cells: Vec<f64> = (0..t)
+                    .map(|j| {
+                        let c = cnt[li * t + j];
+                        if c == 0 {
+                            f64::NAN
+                        } else {
+                            sum.get(li, j) * (1.0 / c as f64)
+                        }
+                    })
+                    .collect();
+                nanmean(&cells)
+            })
+            .collect();
+        let oracle_best = argmax_finite(&oracle_mean);
+
+        // Both the plan path (fit_ridge_cv → fit_batch_with_plan) and
+        // the unshared path must survive the NaN split.
+        for fit in [
+            fit_ridge_cv(&b, &x, &yp, &LAMBDA_GRID, &splits),
+            fit_ridge_cv_unshared(&b, &x, &yp, &LAMBDA_GRID, &splits),
+        ] {
+            for li in 0..r {
+                assert!(
+                    fit.scores.get(li, 0).is_finite(),
+                    "λ row {li}: one NaN split poisoned the cross-split mean"
+                );
+            }
+            assert_eq!(
+                fit.best_idx, oracle_best,
+                "λ selection diverged from the NaN-free oracle"
+            );
+            assert!(fit.mean_scores.iter().all(|s| s.is_finite()));
         }
     }
 

@@ -29,6 +29,7 @@ use crate::util::Stopwatch;
 
 use super::{
     argmax_finite, nanmean, scale_rows_into, weights_for_lambda_into, RidgeCvFit, RidgeTimings,
+    ScoreAccumulator,
 };
 
 /// Target-independent factorization of one CV split's training design.
@@ -47,6 +48,23 @@ pub struct SplitDesign {
     pub e: Vec<f64>,
     /// Validation projection A = X_val · V (nv × p).
     pub a: Mat,
+}
+
+impl SplitDesign {
+    /// Bytes of the shared factors this split contributes to a resident
+    /// plan: V, e and A — A with this split's *true* validation row
+    /// count (kfold folds are uneven when `s ∤ n`).
+    pub fn factor_bytes(&self) -> usize {
+        self.v.resident_bytes() + self.e.len() * 8 + self.a.resident_bytes()
+    }
+
+    /// Full heap footprint of this split: the factors plus the gathered
+    /// training rows and the train/val index vectors.
+    pub fn resident_bytes(&self) -> usize {
+        self.factor_bytes()
+            + self.xtr.resident_bytes()
+            + (self.train_idx.len() + self.val_idx.len()) * std::mem::size_of::<usize>()
+    }
 }
 
 /// Target-independent factorization of the FULL training design (the
@@ -183,6 +201,36 @@ impl DesignPlan {
     pub fn decompositions(&self) -> usize {
         self.splits.len() + 1
     }
+
+    /// Bytes of the shared factors only — per split (V, e, A) plus the
+    /// full-train (V, e). This is exactly the quantity
+    /// `perfmodel::plan_bytes` models (the decompose stage's shipment to
+    /// the sweep stage), with the true uneven per-split validation
+    /// sizes; a test pins the two against each other.
+    pub fn factor_bytes(&self) -> usize {
+        self.v_full.resident_bytes()
+            + self.e_full.len() * 8
+            + self.splits.iter().map(|sd| sd.factor_bytes()).sum::<usize>()
+    }
+
+    /// Real heap footprint of a resident plan — the engine cache's
+    /// budgeting unit. Counts every Arc-backed allocation the plan keeps
+    /// alive: the shared design matrix X **charged once** (it is one
+    /// `Arc<Mat>`, however many plans or fits reference it is not this
+    /// plan's concern — the cache holds at most one plan per design
+    /// fingerprint), each split's factors *and* its gathered training
+    /// rows + index vectors, the full-train factors, and the λ grid.
+    /// Strictly larger than [`DesignPlan::factor_bytes`]: a resident
+    /// plan pins X and the per-split Xtr gathers too, which is exactly
+    /// why `perfmodel::plan_bytes` must not be used for cache
+    /// accounting.
+    pub fn resident_bytes(&self) -> usize {
+        self.x.resident_bytes()
+            + self.v_full.resident_bytes()
+            + self.e_full.len() * 8
+            + self.lambdas.len() * 8
+            + self.splits.iter().map(|sd| sd.resident_bytes()).sum::<usize>()
+    }
 }
 
 /// Fit one batch of targets against a shared [`DesignPlan`]: only the
@@ -198,7 +246,10 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
     let r = plan.lambdas.len();
     let p = plan.x.cols();
     let mut timings = RidgeTimings::default();
-    let mut scores_acc = Mat::zeros(r, t);
+    // NaN-aware per-cell accumulation across splits (see
+    // [`ScoreAccumulator`]): a zero-variance validation column on one
+    // split must not poison that (λ, target) cell for the whole fit.
+    let mut acc = ScoreAccumulator::new(r, t);
     // One scratch for the λ-scaled Z, reused across splits, λ values and
     // the final solve (the sweep's only per-λ work writes into it).
     let mut zs = Mat::zeros(p, t);
@@ -220,13 +271,11 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
             scale_rows_into(&z, &sd.e, lam, &mut zs);
             blas.gemm_into(&sd.a, &zs, &mut pred);
             let rs = pearson_cols(&pred, &yval);
-            for (acc, &rv) in scores_acc.row_mut(li).iter_mut().zip(&rs) {
-                *acc += rv;
-            }
+            acc.add_row(li, &rs);
         }
         timings.sweep_secs += sw.secs();
     }
-    scores_acc.scale(1.0 / plan.splits.len() as f64);
+    let scores_acc = acc.into_mean();
 
     // Shared λ*: argmax of the target-mean validation score, skipping
     // non-finite entries (a NaN score — e.g. Pearson on a constant voxel
@@ -302,6 +351,34 @@ mod tests {
             assert_eq!(sd.xtr.rows(), sd.train_idx.len());
         }
         assert!(plan.build_timings.total() > 0.0);
+    }
+
+    #[test]
+    fn resident_bytes_counts_real_allocations_with_uneven_folds() {
+        // n = 100, s = 3 → uneven kfold validation sizes (34, 33, 33)
+        // that still sum to exactly n.
+        let (x, _) = planted(100, 8, 4, 7);
+        let splits = kfold(100, 3, Some(4));
+        let b = blas();
+        let plan = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        let sizes: Vec<usize> = plan.splits.iter().map(|sd| sd.val_idx.len()).collect();
+        assert_eq!(sizes, vec![34, 33, 33]);
+
+        // Factors: (s+1) V matrices + eigenvalue vectors, per-split A
+        // over the TRUE fold sizes (Σ nv = n).
+        let p = 8usize;
+        let want_factors = 4 * (p * p + p) * 8 + 100 * p * 8;
+        assert_eq!(plan.factor_bytes(), want_factors);
+
+        // Residency additionally pins X (charged once), each split's
+        // gathered Xtr and index vectors, and the λ grid.
+        let mut want = want_factors + 100 * p * 8 + LAMBDA_GRID.len() * 8;
+        for sd in &plan.splits {
+            want += sd.train_idx.len() * p * 8
+                + (sd.train_idx.len() + sd.val_idx.len()) * std::mem::size_of::<usize>();
+        }
+        assert_eq!(plan.resident_bytes(), want);
+        assert!(plan.resident_bytes() > plan.factor_bytes());
     }
 
     #[test]

@@ -10,13 +10,17 @@
 //! grabs `EIGH_LOCK` so concurrently scheduled tests cannot perturb the
 //! global deltas (other test binaries are separate processes).
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Barrier, Mutex, MutexGuard};
 
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::coordinator::{self, DistConfig, Strategy};
-use fmri_encode::engine::{EncodeRequest, Engine, EngineError, FitRequest, SimRequest};
+use fmri_encode::cv::kfold;
+use fmri_encode::engine::{
+    DEFAULT_CACHE_BUDGET, EncodeRequest, Engine, EngineError, FitRequest, SimRequest,
+};
 use fmri_encode::linalg::{eigh_calls_total, Mat};
 use fmri_encode::perfmodel::FitShape;
+use fmri_encode::ridge::{DesignPlan, LAMBDA_GRID};
 use fmri_encode::util::Pcg64;
 
 static EIGH_LOCK: Mutex<()> = Mutex::new(());
@@ -47,6 +51,16 @@ fn planted_y(x: &Mat, t: usize, seed: u64) -> Mat {
         *v += 0.3 * rng.normal();
     }
     y
+}
+
+/// Resident footprint of the plan a B-MOR fit over `x` builds (same
+/// kfold seed/folds as the engine uses) — sizes cache budgets exactly.
+/// NOTE: pays `folds + 1` eigendecompositions itself, so eigh-counting
+/// tests must call it *before* snapshotting the counter.
+fn plan_bytes_for(x: &Mat, folds: usize, seed: u64) -> usize {
+    let splits = kfold(x.rows(), folds, Some(seed));
+    let blas = Blas::new(Backend::MklLike, 1);
+    DesignPlan::build(&blas, x, &LAMBDA_GRID, &splits).resident_bytes()
 }
 
 #[test]
@@ -292,4 +306,166 @@ fn encode_reuses_the_plan_across_target_resolutions() {
     );
     assert_eq!(second.fit.weights.max_abs_diff(&legacy.fit.weights), 0.0);
     assert_eq!(second.fit.best_idx, legacy.fit.best_idx);
+}
+
+// ---------------------------------------------------------------------------
+// Serving-grade cache: budgeted LRU eviction, stats, single-flight
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eviction_and_re_cold_fit_are_bit_identical_with_one_eviction() {
+    // The acceptance scenario: cold fit → warm fit → budget-exceeded
+    // eviction → re-cold fit. All fits of the same request bit-identical,
+    // cache stats report exactly 1 eviction at the eviction point, and
+    // the eigh counter confirms decompositions ran only on cold paths.
+    let _guard = serialize_eigh_counting();
+    let (xa, ya) = planted(80, 10, 8, 40);
+    let (xb, yb) = planted(80, 10, 8, 41);
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    let one = plan_bytes_for(&xa, cfg.inner_folds, cfg.seed);
+    // Room for one plan, not two (A and B share shapes, so equal bytes).
+    let engine = Engine::new().with_cache_budget(one + one / 2);
+    assert_eq!(engine.cache_budget(), one + one / 2);
+    let req_a = FitRequest::new(&xa, &ya).config(&cfg);
+    let req_b = FitRequest::new(&xb, &yb).config(&cfg);
+    let s1 = cfg.inner_folds + 1;
+
+    let before = eigh_calls_total();
+    let cold = engine.fit(&req_a).unwrap();
+    assert_eq!(eigh_calls_total() - before, s1, "cold fit must decompose");
+    let warm = engine.fit(&req_a).unwrap();
+    assert_eq!(eigh_calls_total() - before, s1, "warm fit must not decompose");
+
+    // Cold fit of a second design: the insert exceeds the budget and
+    // evicts the (LRU, and only other) plan A.
+    let fit_b = engine.fit(&req_b).unwrap();
+    assert_eq!(eigh_calls_total() - before, 2 * s1);
+    let st = engine.cache_stats();
+    assert_eq!(st.evictions, 1, "budget-exceeded insert must evict exactly once");
+    assert_eq!(st.hits, 1);
+    assert_eq!(st.misses, 2);
+    assert_eq!(engine.cached_plans(), 1);
+    assert!(st.resident_bytes <= engine.cache_budget());
+
+    // A was evicted: fitting it again is cold (decomposes), and the
+    // result is still bit-identical to the first cold fit.
+    let recold = engine.fit(&req_a).unwrap();
+    assert_eq!(
+        eigh_calls_total() - before,
+        3 * s1,
+        "decompositions must run only on the three cold paths"
+    );
+    assert!(!cold.plan_reused && warm.plan_reused && !recold.plan_reused);
+    assert_eq!(cold.weights.max_abs_diff(&warm.weights), 0.0);
+    assert_eq!(cold.weights.max_abs_diff(&recold.weights), 0.0);
+    assert_eq!(cold.best_lambda_per_batch, recold.best_lambda_per_batch);
+    assert_eq!(cold.batches, recold.batches);
+    assert!(fit_b.best_lambda_per_batch.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn warm_hit_refreshes_lru_order() {
+    let _guard = serialize_eigh_counting();
+    let (xa, ya) = planted(70, 9, 6, 50);
+    let (xb, yb) = planted(70, 9, 6, 51);
+    let (xc, yc) = planted(70, 9, 6, 52);
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    let one = plan_bytes_for(&xa, cfg.inner_folds, cfg.seed);
+    // Room for two plans, not three.
+    let engine = Engine::new().with_cache_budget(2 * one + one / 2);
+    let req_a = FitRequest::new(&xa, &ya).config(&cfg);
+    let req_b = FitRequest::new(&xb, &yb).config(&cfg);
+    let req_c = FitRequest::new(&xc, &yc).config(&cfg);
+
+    engine.fit(&req_a).unwrap();
+    engine.fit(&req_b).unwrap();
+    // Warm-hit A: B becomes least-recently-touched...
+    engine.fit(&req_a).unwrap();
+    // ... so C's over-budget insert evicts B, not A.
+    engine.fit(&req_c).unwrap();
+    assert_eq!(engine.cache_stats().evictions, 1);
+    assert_eq!(engine.cached_plans(), 2);
+
+    let before = eigh_calls_total();
+    let wa = engine.fit(&req_a).unwrap();
+    assert!(wa.plan_reused, "refreshed entry must have survived");
+    assert_eq!(eigh_calls_total() - before, 0);
+    let rb = engine.fit(&req_b).unwrap();
+    assert!(!rb.plan_reused, "LRU entry must have been evicted");
+    assert_eq!(eigh_calls_total() - before, cfg.inner_folds + 1);
+}
+
+#[test]
+fn racing_identical_cold_fits_coalesce_on_one_decomposition() {
+    // Single-flight: two concurrent identical cold fits must share ONE
+    // plan build — splits + 1 eigendecompositions total, not 2·(s+1) —
+    // and return bit-identical results.
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(90, 10, 8, 60);
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    let engine = Engine::new();
+    let barrier = Barrier::new(2);
+    let before = eigh_calls_total();
+    let (fa, fb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| {
+            barrier.wait();
+            engine.fit(&FitRequest::new(&x, &y).config(&cfg)).unwrap()
+        });
+        let hb = s.spawn(|| {
+            barrier.wait();
+            engine.fit(&FitRequest::new(&x, &y).config(&cfg)).unwrap()
+        });
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(
+        eigh_calls_total() - before,
+        cfg.inner_folds + 1,
+        "racing cold fits must coalesce on one decomposition"
+    );
+    assert_eq!(engine.cached_plans(), 1);
+    assert_eq!(fa.weights.max_abs_diff(&fb.weights), 0.0);
+    assert_eq!(fa.best_lambda_per_batch, fb.best_lambda_per_batch);
+    let st = engine.cache_stats();
+    assert_eq!(st.misses, 1, "only one request may claim the cold build");
+    assert_eq!(st.hits, 1, "the coalesced request is served as a hit");
+}
+
+#[test]
+fn cache_stats_expose_real_residency_and_counters() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(60, 8, 5, 70);
+    let engine = Engine::new();
+    let st0 = engine.cache_stats();
+    assert_eq!((st0.hits, st0.misses, st0.evictions, st0.coalesced), (0, 0, 0, 0));
+    assert_eq!(st0.resident_bytes, 0);
+    assert!(st0.entries.is_empty());
+    assert_eq!(st0.budget_bytes, DEFAULT_CACHE_BUDGET);
+
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    let req = FitRequest::new(&x, &y).config(&cfg);
+    engine.fit(&req).unwrap();
+    let st1 = engine.cache_stats();
+    assert_eq!(st1.misses, 1);
+    assert_eq!(st1.entries.len(), 1);
+    // Real memory accounting: the charge is the plan's actual resident
+    // footprint (factors with true fold sizes + X + Xtr gathers), not
+    // the perfmodel idealization.
+    let expected = plan_bytes_for(&x, cfg.inner_folds, cfg.seed);
+    assert_eq!(st1.resident_bytes, expected);
+    assert_eq!(st1.entries[0].bytes, expected);
+
+    engine.fit(&req).unwrap();
+    let st2 = engine.cache_stats();
+    assert_eq!(st2.hits, 1);
+    assert!(
+        st2.entries[0].last_touch > st1.entries[0].last_touch,
+        "warm hit must refresh the last-touch stamp"
+    );
+
+    engine.clear_plan_cache();
+    let st3 = engine.cache_stats();
+    assert_eq!(st3.resident_bytes, 0);
+    assert!(st3.entries.is_empty());
+    assert_eq!(st3.evictions, 0, "manual clear is not an eviction");
+    assert_eq!((st3.hits, st3.misses), (1, 1), "counters are monotone across clears");
 }
