@@ -1,42 +1,119 @@
 //! Microbenchmarks of the native BLAS substrate (feeds the perf pass and
-//! the Fig. 6 calibration): GEMM per backend over ridge-shaped products.
+//! the Fig. 6 calibration): GEMM per backend over ridge-shaped products,
+//! the triangular `syrk` against the old `at_b`-based Gram, and the
+//! serial vs round-robin-parallel Jacobi eigh — emitted as
+//! machine-readable `BENCH_blas.json` (CI uploads it per commit alongside
+//! `BENCH_ridge.json` to seed the kernel perf trajectory).
+//!
+//! Env knobs: `BENCH_BLAS_QUICK=1` shrinks shapes/loops for CI;
+//! `BENCH_BLAS_JSON=path` overrides the artifact path.
 
 mod common;
 
-use common::{case, header};
+use common::{case, header, report};
+use fmri_encode::blas::micro::active_isa;
 use fmri_encode::blas::{Backend, Blas};
-use fmri_encode::linalg::Mat;
+use fmri_encode::jobj;
+use fmri_encode::linalg::{jacobi_eigh, jacobi_eigh_parallel, Mat};
+use fmri_encode::util::json::Json;
+use fmri_encode::util::pool::ThreadPool;
 use fmri_encode::util::Pcg64;
 
 fn main() {
+    let quick = std::env::var("BENCH_BLAS_QUICK").is_ok();
     let mut rng = Pcg64::seeded(0);
+    println!("microkernel ISA: {:?}", active_isa());
+
     header("GEMM backends, single thread (GFLOP/s in name order: naive/openblas/mkl)");
-    for (m, k, n) in [(128, 128, 128), (256, 256, 256), (400, 512, 444), (512, 512, 1024)] {
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(128, 128, 128), (256, 256, 256)]
+    } else {
+        &[(128, 128, 128), (256, 256, 256), (400, 512, 444), (512, 512, 1024)]
+    };
+    let mut gemm_entries: Vec<Json> = Vec::new();
+    for &(m, k, n) in gemm_shapes {
         let a = Mat::randn(m, k, &mut rng);
         let b = Mat::randn(k, n, &mut rng);
         let flops = 2.0 * (m * k * n) as f64;
         for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
             let blas = Blas::new(backend, 1);
-            let stats = case(&format!("gemm {m}x{k}x{n} {}", backend), || {
+            let stats = case(&format!("gemm {m}x{k}x{n} {backend}"), || {
                 std::hint::black_box(blas.gemm(&a, &b));
             });
-            println!(
-                "{:<52} -> {:.2} GFLOP/s",
-                "", flops / stats.median() / 1e9
-            );
+            let gflops = flops / stats.median() / 1e9;
+            report("", format!("-> {gflops:.2} GFLOP/s"));
+            gemm_entries.push(jobj! {
+                "m" => m, "k" => k, "n" => n,
+                "backend" => backend.to_string(),
+                "median_secs" => stats.median(),
+                "gflops" => gflops,
+            });
         }
     }
 
-    header("syrk / at_b (the gram path)");
-    let x = Mat::randn(1024, 256, &mut rng);
-    let y = Mat::randn(1024, 444, &mut rng);
-    for backend in [Backend::OpenBlasLike, Backend::MklLike] {
-        let blas = Blas::new(backend, 1);
-        case(&format!("syrk 1024x256 {}", backend), || {
-            std::hint::black_box(blas.syrk(&x));
+    header("gram: triangular syrk vs the old at_b-based full product");
+    // Acceptance gate: syrk must beat the full Aᵀ·A Gram at p ≥ 512
+    // (roughly half the FLOPs; the crossover is far below this).
+    let gram_shapes: &[(usize, usize)] =
+        if quick { &[(768, 512)] } else { &[(768, 512), (1024, 768)] };
+    let mut syrk_entries: Vec<Json> = Vec::new();
+    for &(n, p) in gram_shapes {
+        let x = Mat::randn(n, p, &mut rng);
+        for backend in [Backend::OpenBlasLike, Backend::MklLike] {
+            let blas = Blas::new(backend, 1);
+            let s_syrk = case(&format!("syrk  n={n} p={p} {backend}"), || {
+                std::hint::black_box(blas.syrk(&x));
+            });
+            let s_atb = case(&format!("at_b  n={n} p={p} {backend}"), || {
+                std::hint::black_box(blas.at_b(&x, &x));
+            });
+            let speedup = s_atb.median() / s_syrk.median();
+            report("", format!("-> syrk is {speedup:.2}× the full-product gram"));
+            syrk_entries.push(jobj! {
+                "n" => n, "p" => p,
+                "backend" => backend.to_string(),
+                "syrk_secs" => s_syrk.median(),
+                "at_b_secs" => s_atb.median(),
+                "speedup" => speedup,
+            });
+        }
+    }
+
+    header("jacobi eigh: serial cyclic vs round-robin parallel (4 threads)");
+    // Acceptance gate: parallel beats serial at p ≥ 256 with ≥ 4 workers.
+    let threads = 4usize;
+    let pool = ThreadPool::new(threads);
+    let eigh_sizes: &[usize] = if quick { &[256] } else { &[256, 384] };
+    let mut eigh_entries: Vec<Json> = Vec::new();
+    for &p in eigh_sizes {
+        let x = Mat::randn(2 * p, p, &mut rng);
+        let k = Blas::new(Backend::MklLike, 1).syrk(&x);
+        let s_serial = case(&format!("eigh serial   p={p}"), || {
+            std::hint::black_box(jacobi_eigh(&k, 30, 1e-12));
         });
-        case(&format!("at_b 1024x256x444 {}", backend), || {
-            std::hint::black_box(blas.at_b(&x, &y));
+        let s_par = case(&format!("eigh parallel p={p} threads={threads}"), || {
+            std::hint::black_box(jacobi_eigh_parallel(&k, 30, 1e-12, &pool));
+        });
+        let speedup = s_serial.median() / s_par.median();
+        report("", format!("-> parallel ordering is {speedup:.2}× serial"));
+        eigh_entries.push(jobj! {
+            "p" => p,
+            "threads" => threads,
+            "serial_secs" => s_serial.median(),
+            "parallel_secs" => s_par.median(),
+            "speedup" => speedup,
         });
     }
+
+    let json = jobj! {
+        "bench" => "bench_blas",
+        "quick" => quick,
+        "isa" => format!("{:?}", active_isa()),
+        "gemm" => gemm_entries,
+        "syrk_vs_at_b" => syrk_entries,
+        "eigh_serial_vs_parallel" => eigh_entries,
+    };
+    let out = std::env::var("BENCH_BLAS_JSON").unwrap_or_else(|_| "BENCH_blas.json".into());
+    std::fs::write(&out, json.to_string_pretty()).expect("write BENCH_blas.json");
+    println!("\nwrote {out}");
 }

@@ -6,6 +6,13 @@
 //! pool. Keeping the kernels single-threaded and panel-scoped means the
 //! thread-scaling curves of Fig. 6/7 measure *scheduling*, with per-core
 //! arithmetic identical across thread counts.
+//!
+//! The Aᵀ·B path is expressed as a rectangular *block* primitive
+//! ([`at_b_block`]) rather than a full-width panel so the triangular
+//! `syrk` can reuse it tile-by-tile with an `upper_only` mask. Per-element
+//! accumulation order depends only on the fixed KC-blocking of the k
+//! dimension, never on block origin or thread chunk boundaries, so
+//! results are bit-stable across thread counts.
 
 use crate::linalg::Mat;
 
@@ -44,7 +51,9 @@ fn naive_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
 }
 
 /// OpenBLAS-like: cache-blocked i-k-j ordering. B rows stream unit-stride,
-/// C row stays hot; no explicit packing.
+/// C row stays hot; no explicit packing. The axpy body runs for every k —
+/// no data-dependent skip — so measured FLOP rates are input-independent
+/// (sparse inputs no longer inflate the Fig. 6/7 backend curves).
 fn blocked_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
     let kdim = a.cols();
     let n = b.cols();
@@ -58,9 +67,6 @@ fn blocked_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
                 let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
                 for kk in k0..k1 {
                     let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
                     let brow = &b.row(kk)[j0..j1];
                     let cdst = &mut crow[j0..j1];
                     for (c, &bv) in cdst.iter_mut().zip(brow) {
@@ -102,36 +108,100 @@ fn packed_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
 
 /// Aᵀ·B panel: rows `s..e` of C correspond to *columns* of A.
 pub fn at_b_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
-    let n = b.cols();
+    at_b_block(backend, a, b, s, e, 0, b.cols(), crows, b.cols(), false);
+}
+
+/// Compute the rectangular block `C[r0..r1, c0..c1]` of `C = Aᵀ·B` into
+/// `out`: row `p` of the block lands at `out[(p - r0) * ldo ..]` with
+/// column `j` at offset `j - c0`. The target region is zeroed first.
+///
+/// With `upper_only`, only entries with global column ≥ global row are
+/// guaranteed correct (the triangular `syrk` mirrors the rest); strictly
+/// sub-diagonal work is skipped at block and strip granularity and
+/// per-row in the streaming/naive arms.
+#[allow(clippy::too_many_arguments)]
+pub fn at_b_block(
+    backend: Backend,
+    a: &Mat,
+    b: &Mat,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f64],
+    ldo: usize,
+    upper_only: bool,
+) {
     let nrows = a.rows();
+    let width = c1 - c0;
+    for r in 0..(r1 - r0) {
+        out[r * ldo..r * ldo + width].fill(0.0);
+    }
     match backend {
         Backend::Naive => {
-            for p in s..e {
-                let crow = &mut crows[(p - s) * n..(p - s + 1) * n];
-                for j in 0..n {
+            for p in r0..r1 {
+                let jstart = if upper_only { c0.max(p) } else { c0 };
+                let crow = &mut out[(p - r0) * ldo..][..width];
+                for j in jstart..c1 {
                     let mut acc = 0.0;
                     for i in 0..nrows {
                         acc += a.get(i, p) * b.get(i, j);
                     }
-                    crow[j] = acc;
+                    crow[j - c0] = acc;
                 }
             }
         }
-        _ => {
+        Backend::OpenBlasLike => {
             // Stream over rows of A and B once; rank-1 update of the C
-            // panel: C[p, :] += A[i, p] * B[i, :]. Unit-stride on both B
+            // block: C[p, :] += A[i, p] * B[i, :]. Unit-stride on both B
             // and C; A column access is strided but touched once per row.
-            crows.fill(0.0);
+            // No zero-value skip: the update runs for every (i, p) so the
+            // FLOP rate is input-independent and NaNs propagate.
             for i in 0..nrows {
-                let brow = b.row(i);
                 let arow = a.row(i);
-                for p in s..e {
-                    let av = arow[p];
-                    if av == 0.0 {
+                let brow = b.row(i);
+                for p in r0..r1 {
+                    let jstart = if upper_only { c0.max(p) } else { c0 };
+                    if jstart >= c1 {
                         continue;
                     }
-                    let crow = &mut crows[(p - s) * n..(p - s + 1) * n];
-                    super::axpy(av, brow, crow);
+                    let av = arow[p];
+                    let crow =
+                        &mut out[(p - r0) * ldo + (jstart - c0)..][..c1 - jstart];
+                    super::axpy(av, &brow[jstart..c1], crow);
+                }
+            }
+        }
+        Backend::MklLike => {
+            // Packed path: Aᵀ strips via `pack_at` feed the same 4×8
+            // microkernel as GEMM, giving the Gram computation full SIMD
+            // width instead of the rank-1 streaming loop.
+            let mut apack = vec![0.0f64; MC * KC];
+            let mut bpack = vec![0.0f64; KC * NC];
+            for k0 in (0..nrows).step_by(KC) {
+                let kb = (k0 + KC).min(nrows) - k0;
+                for j0 in (c0..c1).step_by(NC) {
+                    let jb = (j0 + NC).min(c1) - j0;
+                    micro::pack_b(b, k0, kb, j0, jb, &mut bpack);
+                    for i0 in (r0..r1).step_by(MC) {
+                        let ib = (i0 + MC).min(r1) - i0;
+                        if upper_only && j0 + jb <= i0 {
+                            continue; // block entirely sub-diagonal
+                        }
+                        micro::pack_at(a, i0, ib, k0, kb, &mut apack);
+                        micro::kernel_block_masked(
+                            &apack,
+                            &bpack,
+                            ib,
+                            jb,
+                            kb,
+                            out,
+                            i0 - r0,
+                            j0 - c0,
+                            ldo,
+                            upper_only.then_some((i0, j0)),
+                        );
+                    }
                 }
             }
         }
@@ -187,6 +257,52 @@ mod tests {
             let mut want = Mat::zeros(m, n);
             naive_panel(&a, &b, 0, m, want.data_mut());
             assert!(got.max_abs_diff(&want) < 1e-9, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn at_b_block_matches_full_product() {
+        let mut rng = Pcg64::seeded(12);
+        let a = Mat::randn(31, 17, &mut rng);
+        let b = Mat::randn(31, 13, &mut rng);
+        let at = a.transpose();
+        let mut want = Mat::zeros(17, 13);
+        gemm_panel(Backend::Naive, &at, &b, 0, 17, want.data_mut());
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            // A sub-block with offsets on both axes, wider ldo than width.
+            let (r0, r1, c0, c1, ldo) = (3, 12, 2, 11, 16);
+            let mut out = vec![f64::NAN; (r1 - r0) * ldo];
+            at_b_block(backend, &a, &b, r0, r1, c0, c1, &mut out, ldo, false);
+            for p in r0..r1 {
+                for j in c0..c1 {
+                    let got = out[(p - r0) * ldo + (j - c0)];
+                    assert!(
+                        (got - want.get(p, j)).abs() < 1e-10,
+                        "{backend:?} ({p},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn at_b_block_upper_only_covers_upper_triangle() {
+        let mut rng = Pcg64::seeded(13);
+        let x = Mat::randn(40, 21, &mut rng);
+        let xt = x.transpose();
+        let mut want = Mat::zeros(21, 21);
+        gemm_panel(Backend::Naive, &xt, &x, 0, 21, want.data_mut());
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let mut out = vec![0.0; 21 * 21];
+            at_b_block(backend, &x, &x, 0, 21, 0, 21, &mut out, 21, true);
+            for i in 0..21 {
+                for j in i..21 {
+                    assert!(
+                        (out[i * 21 + j] - want.get(i, j)).abs() < 1e-10,
+                        "{backend:?} ({i},{j})"
+                    );
+                }
+            }
         }
     }
 }

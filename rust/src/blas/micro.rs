@@ -3,12 +3,26 @@
 //! Layout convention follows BLIS/GotoBLAS:
 //! * `pack_a` stores A blocks as column-major MR-row strips: for each strip
 //!   of MR rows, all K values are contiguous per k (MR values per k).
+//! * `pack_at` does the same for Aᵀ blocks (strips are *columns* of A) —
+//!   the packing the AᵀB path feeds the same microkernel with.
 //! * `pack_b` stores B blocks as row-major NR-column strips: for each strip
 //!   of NR columns, all K rows contiguous per k (NR values per k).
-//! * `kernel_4x8` then reads MR=4 A values + NR=8 B values per k iteration
-//!   and keeps a 4×8 accumulator entirely in registers — the compiler
-//!   autovectorizes the 8-wide rows to AVX (verified via cargo asm during
-//!   the perf pass; see EXPERIMENTS.md §Perf).
+//! * the microkernel reads MR=4 A values + NR=8 B values per k iteration
+//!   and keeps a 4×8 accumulator entirely in registers.
+//!
+//! The microkernel is explicitly vectorized: on x86_64 with AVX2+FMA
+//! (detected at runtime, cached in a `OnceLock`) the inner loop is
+//! `std::arch` intrinsics — 8 ymm accumulators (4 rows × 2 half-rows),
+//! one broadcast per A value, two fused multiply-adds per row per k. The
+//! scalar kernel remains as the portable fallback and the parity oracle;
+//! `FMRI_ENCODE_FORCE_SCALAR=1` pins the dispatch to it (CI runs the
+//! suite both ways). Both kernels accumulate each output element in the
+//! same k order, so panel results are independent of how the caller
+//! splits panels across threads; FMA contraction means the AVX2 kernel's
+//! roundoff differs from the scalar kernel's by O(kb·ε) per element —
+//! the documented tolerance of the SIMD/scalar parity tests.
+
+use std::sync::OnceLock;
 
 use crate::linalg::Mat;
 
@@ -16,6 +30,37 @@ use super::gemm::{KC, MC, NC};
 
 pub const MR: usize = 4;
 pub const NR: usize = 8;
+
+/// Which microkernel implementation the dispatcher selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar kernel (auto-vectorizable, exact parity oracle).
+    Scalar,
+    /// Explicit AVX2 + FMA intrinsics (x86_64, runtime-detected).
+    Avx2Fma,
+}
+
+/// The ISA every microkernel call dispatches to, decided once per
+/// process: `FMRI_ENCODE_FORCE_SCALAR` (any value) pins the scalar
+/// kernel; otherwise x86_64 hosts with AVX2 and FMA get the intrinsics
+/// kernel and everything else falls back to scalar.
+pub fn active_isa() -> KernelIsa {
+    static ISA: OnceLock<KernelIsa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        if std::env::var_os("FMRI_ENCODE_FORCE_SCALAR").is_some() {
+            return KernelIsa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return KernelIsa::Avx2Fma;
+            }
+        }
+        KernelIsa::Scalar
+    })
+}
 
 /// Pack an (ib × kb) block of A starting at (i0, k0) into MR-strips.
 pub fn pack_a(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f64]) {
@@ -26,6 +71,26 @@ pub fn pack_a(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f6
         for k in 0..kb {
             for r in 0..MR {
                 out[o] = if r < mrows { a.get(i0 + is + r, k0 + k) } else { 0.0 };
+                o += 1;
+            }
+        }
+    }
+}
+
+/// Pack an (ib × kb) block of Aᵀ into MR-strips: strip rows are *columns*
+/// `i0..i0+ib` of A, the k dimension runs over A's rows `k0..k0+kb`.
+/// Feeding this to the same microkernel as [`pack_a`] gives the packed
+/// AᵀB path its full SIMD width — reads stream A row-by-row, so the
+/// strided column access is paid once here, not per k-iteration.
+pub fn pack_at(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f64]) {
+    debug_assert!(ib <= MC && kb <= KC);
+    let mut o = 0;
+    for is in (0..ib).step_by(MR) {
+        let mrows = (is + MR).min(ib) - is;
+        for k in 0..kb {
+            let arow = a.row(k0 + k);
+            for r in 0..MR {
+                out[o] = if r < mrows { arow[i0 + is + r] } else { 0.0 };
                 o += 1;
             }
         }
@@ -63,14 +128,45 @@ pub fn kernel_block(
     cj0: usize,
     ldc: usize,
 ) {
+    kernel_block_masked(apack, bpack, ib, jb, kb, crows, ci0, cj0, ldc, None);
+}
+
+/// [`kernel_block`] with an optional symmetric-output mask: when `diag`
+/// carries the block's global (row, col) offsets, MR×NR strip pairs that
+/// lie entirely below the diagonal are skipped — their outputs belong to
+/// the lower triangle, which the triangular `syrk` mirrors from the upper
+/// triangle instead of computing. Strips straddling the diagonal are
+/// computed in full (their sub-diagonal lanes are overwritten by the
+/// mirror), so the waste is at most one strip per row band.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_block_masked(
+    apack: &[f64],
+    bpack: &[f64],
+    ib: usize,
+    jb: usize,
+    kb: usize,
+    crows: &mut [f64],
+    ci0: usize,
+    cj0: usize,
+    ldc: usize,
+    diag: Option<(usize, usize)>,
+) {
+    let isa = active_isa();
     for (ai, is) in (0..ib).step_by(MR).enumerate() {
         let mrows = (is + MR).min(ib) - is;
         let astrip = &apack[ai * kb * MR..][..kb * MR];
         for (bi, js) in (0..jb).step_by(NR).enumerate() {
+            if let Some((grow, gcol)) = diag {
+                // Strip's last column still left of the strip's first row:
+                // entirely sub-diagonal, mirrored later, skip the FLOPs.
+                if gcol + js + NR <= grow + is {
+                    continue;
+                }
+            }
             let ncols = (js + NR).min(jb) - js;
             let bstrip = &bpack[bi * kb * NR..][..kb * NR];
             let mut acc = [[0.0f64; NR]; MR];
-            kernel_4x8(astrip, bstrip, kb, &mut acc);
+            kernel_4x8_with(isa, astrip, bstrip, kb, &mut acc);
             // Scatter accumulator into C (masking partial edges).
             for r in 0..mrows {
                 let crow = &mut crows
@@ -83,21 +179,43 @@ pub fn kernel_block(
     }
 }
 
-/// The register tile: MR A values × 8 B values per k, fully unrolled.
-///
-/// Bounds checks are hoisted out of the k loop via raw pointers (verified
-/// ~1.9× over the safe slice version in EXPERIMENTS.md §Perf); the 4×8
-/// accumulator lives in registers (8 ymm on AVX2) and the 8-lane rows
-/// autovectorize.
-#[inline]
-fn kernel_4x8(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [[f64; NR]; MR]) {
+/// The register tile with explicit ISA selection: computes the 4×8
+/// product of an MR-strip and an NR-strip over `kb` and adds it into
+/// `acc`. Public so parity tests can pin the scalar and AVX2 kernels
+/// against each other regardless of what [`active_isa`] detected.
+pub fn kernel_4x8_with(
+    isa: KernelIsa,
+    astrip: &[f64],
+    bstrip: &[f64],
+    kb: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
     assert!(astrip.len() >= kb * MR);
     assert!(bstrip.len() >= kb * NR);
+    match isa {
+        KernelIsa::Scalar => kernel_4x8_scalar(astrip, bstrip, kb, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only produced by `active_isa` after runtime
+        // detection; tests constructing it directly run on the same CI
+        // x86_64 hosts the dispatcher already qualified. The length
+        // asserts above guarantee every vector load is in-bounds (packed
+        // strips are zero-padded to full MR/NR width).
+        KernelIsa::Avx2Fma => unsafe { kernel_4x8_avx2(astrip, bstrip, kb, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2Fma => kernel_4x8_scalar(astrip, bstrip, kb, acc),
+    }
+}
+
+/// Portable scalar register tile: MR A values × 8 B values per k, fully
+/// unrolled. Bounds checks are hoisted out of the k loop via raw
+/// pointers; the 4×8 accumulator lives in registers and the 8-lane rows
+/// autovectorize on targets with any vector ISA.
+#[inline]
+fn kernel_4x8_scalar(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [[f64; NR]; MR]) {
+    debug_assert!(astrip.len() >= kb * MR);
+    debug_assert!(bstrip.len() >= kb * NR);
     let mut ap = astrip.as_ptr();
     let mut bp = bstrip.as_ptr();
-    // Local accumulators so the compiler keeps them in registers
-    // (4 rows × 8 f64 lanes = 8 ymm accumulators on AVX2; MR=6 was tried
-    // and measured no faster — see EXPERIMENTS.md §Perf).
     let mut c = [[0f64; NR]; MR];
     unsafe {
         for _ in 0..kb {
@@ -119,6 +237,59 @@ fn kernel_4x8(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [[f64; NR]; M
     }
 }
 
+/// AVX2+FMA register tile: 8 ymm accumulators (4 rows × 2 four-lane
+/// half-rows), one `broadcast_sd` per A value and two `fmadd` per row per
+/// k — the f64 throughput shape the autovectorizer was not reaching.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, and that
+/// `astrip.len() >= kb*MR` and `bstrip.len() >= kb*NR` (packed strips are
+/// always full width, zero-padded at the edges, so the unmasked 4-lane
+/// loads stay in-bounds).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kernel_4x8_avx2(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [[f64; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    let mut c00 = _mm256_setzero_pd();
+    let mut c01 = _mm256_setzero_pd();
+    let mut c10 = _mm256_setzero_pd();
+    let mut c11 = _mm256_setzero_pd();
+    let mut c20 = _mm256_setzero_pd();
+    let mut c21 = _mm256_setzero_pd();
+    let mut c30 = _mm256_setzero_pd();
+    let mut c31 = _mm256_setzero_pd();
+    for _ in 0..kb {
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        let a0 = _mm256_broadcast_sd(&*ap);
+        c00 = _mm256_fmadd_pd(a0, b0, c00);
+        c01 = _mm256_fmadd_pd(a0, b1, c01);
+        let a1 = _mm256_broadcast_sd(&*ap.add(1));
+        c10 = _mm256_fmadd_pd(a1, b0, c10);
+        c11 = _mm256_fmadd_pd(a1, b1, c11);
+        let a2 = _mm256_broadcast_sd(&*ap.add(2));
+        c20 = _mm256_fmadd_pd(a2, b0, c20);
+        c21 = _mm256_fmadd_pd(a2, b1, c21);
+        let a3 = _mm256_broadcast_sd(&*ap.add(3));
+        c30 = _mm256_fmadd_pd(a3, b0, c30);
+        c31 = _mm256_fmadd_pd(a3, b1, c31);
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+    // Spill: load-add-store each [f64; 8] accumulator row (contiguous).
+    let spill = |row: &mut [f64; NR], lo: __m256d, hi: __m256d| {
+        let p = row.as_mut_ptr();
+        _mm256_storeu_pd(p, _mm256_add_pd(_mm256_loadu_pd(p), lo));
+        _mm256_storeu_pd(p.add(4), _mm256_add_pd(_mm256_loadu_pd(p.add(4)), hi));
+    };
+    spill(&mut acc[0], c00, c01);
+    spill(&mut acc[1], c10, c11);
+    spill(&mut acc[2], c20, c21);
+    spill(&mut acc[3], c30, c31);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +305,19 @@ mod tests {
         assert_eq!(&out[4..8], &[1.0, 11.0, 21.0, 31.0]); // k=1
         // Second strip: row 4 + zero padding.
         assert_eq!(&out[12..16], &[40.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_at_is_pack_a_of_the_transpose() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Mat::randn(9, 7, &mut rng);
+        let at = a.transpose();
+        let (i0, ib, k0, kb) = (1, 5, 2, 6);
+        let mut via_at = vec![0.0; 8 * kb];
+        let mut via_t = vec![0.0; 8 * kb];
+        pack_at(&a, i0, ib, k0, kb, &mut via_at);
+        pack_a(&at, i0, ib, k0, kb, &mut via_t);
+        assert_eq!(via_at, via_t);
     }
 
     #[test]
@@ -164,6 +348,24 @@ mod tests {
                 let want: f64 = (0..kb).map(|k| a.get(i, k) * b.get(k, j)).sum();
                 assert!((c[i * jb + j] - want).abs() < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_env_pins_dispatch() {
+        // `active_isa` caches its answer per process; this test can only
+        // assert consistency with the environment the process was started
+        // in (CI runs the whole suite once normally and once with
+        // FMRI_ENCODE_FORCE_SCALAR=1 to cover both arms).
+        if std::env::var_os("FMRI_ENCODE_FORCE_SCALAR").is_some() {
+            assert_eq!(active_isa(), KernelIsa::Scalar);
+        }
+        #[cfg(target_arch = "x86_64")]
+        if std::env::var_os("FMRI_ENCODE_FORCE_SCALAR").is_none()
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            assert_eq!(active_isa(), KernelIsa::Avx2Fma);
         }
     }
 }

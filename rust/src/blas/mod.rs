@@ -156,19 +156,83 @@ impl Blas {
         c
     }
 
-    /// K = XᵀX exploiting symmetry (compute upper triangle, mirror).
+    /// Tile size of the triangular [`Blas::syrk`]: upper-triangle work is
+    /// enumerated as SB×SB output tiles so the pool can balance them.
+    pub const SYRK_TILE: usize = 128;
+
+    /// K = XᵀX exploiting symmetry: only the ⌈p/SB⌉·(⌈p/SB⌉+1)/2 upper
+    /// tiles are computed — diagonal tiles with a sub-diagonal strip mask,
+    /// off-diagonal tiles via the packed rectangular block kernel — then
+    /// the upper triangle is mirrored once, serially. Roughly half the
+    /// FLOPs of the old `at_b(x, x)` Gram and exactly symmetric by
+    /// construction (mirror copy, not triangle averaging).
+    ///
+    /// Tiles are distributed across the pool, but each output element's
+    /// accumulation order depends only on its tile origin and the fixed
+    /// k-blocking, so the result is bit-stable across thread counts.
     pub fn syrk(&self, x: &Mat) -> Mat {
+        const SB: usize = Blas::SYRK_TILE;
         let p = x.cols();
-        let mut k = self.at_b(x, x);
-        // Symmetrize to scrub accumulation-order asymmetry.
+        let mut k = Mat::zeros(p, p);
+        let nb = p.div_ceil(SB);
+        let tiles: Vec<(usize, usize)> = (0..nb)
+            .flat_map(|bi| (bi..nb).map(move |bj| (bi, bj)))
+            .collect();
+        let kbase = k.data_mut().as_mut_ptr() as usize;
+        let backend = self.backend;
+        let threads = self.pool.size();
+        self.pool.scope_chunks(tiles.len(), threads, |s, e, _| {
+            // Per-chunk scratch tile, reused across this chunk's tiles.
+            let mut buf = vec![0.0f64; SB * SB];
+            for &(bi, bj) in &tiles[s..e] {
+                let (r0, r1) = (bi * SB, ((bi + 1) * SB).min(p));
+                let (c0, c1) = (bj * SB, ((bj + 1) * SB).min(p));
+                let cb = c1 - c0;
+                gemm::at_b_block(
+                    backend,
+                    x,
+                    x,
+                    r0,
+                    r1,
+                    c0,
+                    c1,
+                    &mut buf,
+                    cb,
+                    bi == bj,
+                );
+                // Scatter into K. Tiles are disjoint output regions, so
+                // the raw writes are sound (pointer travels as usize —
+                // same pattern as gemm_into).
+                for i in r0..r1 {
+                    let jstart = if bi == bj { i } else { c0 };
+                    let src = &buf[(i - r0) * cb + (jstart - c0)..][..c1 - jstart];
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (kbase as *mut f64).add(i * p + jstart),
+                            c1 - jstart,
+                        )
+                    };
+                    dst.copy_from_slice(src);
+                }
+            }
+        });
+        // Mirror upper → lower (exact symmetry by copy).
         for i in 0..p {
             for j in (i + 1)..p {
-                let v = 0.5 * (k.get(i, j) + k.get(j, i));
-                k.set(i, j, v);
+                let v = k.get(i, j);
                 k.set(j, i, v);
             }
         }
         k
+    }
+
+    /// Eigendecomposition of a symmetric matrix on this context's pool:
+    /// dispatches between the serial cyclic-Jacobi sweep and the
+    /// round-robin parallel ordering (see `linalg::jacobi_eigh_auto`) —
+    /// small problems and single-thread pools stay on the serial path,
+    /// so existing small-p results are bit-identical.
+    pub fn eigh(&self, k: &Mat, max_sweeps: usize, tol: f64) -> crate::linalg::Eigh {
+        crate::linalg::jacobi_eigh_auto(k, max_sweeps, tol, &self.pool)
     }
 
     /// y = A·x. Parallel over row chunks on the pool like every other
@@ -306,6 +370,49 @@ mod tests {
         for i in 0..24 {
             for j in 0..24 {
                 assert_eq!(k.get(i, j), k.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_handles_sizes_across_tile_boundary() {
+        // p below, straddling, and above SYRK_TILE so diagonal-tile
+        // masking, off-diagonal tiles, and ragged edges are all hit.
+        let mut rng = Pcg64::seeded(15);
+        for p in [1, 5, Blas::SYRK_TILE - 1, Blas::SYRK_TILE + 3, 2 * Blas::SYRK_TILE + 7] {
+            let x = Mat::randn(40, p, &mut rng);
+            let want = naive_gemm(&x.transpose(), &x);
+            for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+                let k = Blas::new(backend, 3).syrk(&x);
+                assert!(
+                    k.max_abs_diff(&want) < 1e-9,
+                    "{backend:?} p={p} diff {}",
+                    k.max_abs_diff(&want)
+                );
+                for i in 0..p {
+                    for j in 0..p {
+                        assert_eq!(k.get(i, j), k.get(j, i), "{backend:?} p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_bit_stable_across_thread_counts() {
+        // Per-element accumulation order depends only on tile origin and
+        // k-blocking — never on how tiles land on threads.
+        let mut rng = Pcg64::seeded(16);
+        let x = Mat::randn(70, Blas::SYRK_TILE + 9, &mut rng);
+        for backend in [Backend::OpenBlasLike, Backend::MklLike] {
+            let k1 = Blas::new(backend, 1).syrk(&x);
+            for threads in [2, 3, 5] {
+                let kt = Blas::new(backend, threads).syrk(&x);
+                assert_eq!(
+                    k1.max_abs_diff(&kt),
+                    0.0,
+                    "{backend:?} threads={threads}"
+                );
             }
         }
     }

@@ -45,6 +45,21 @@
 //! `coordinator::fit` / `coordinator::simulate` and
 //! `encoding::run_encoding` remain as thin single-request compatibility
 //! wrappers.
+//!
+//! The kernel layer underneath is explicit about its fast paths. The
+//! MKL-like GEMM tier runs a 4×8 register microkernel (`blas::micro`)
+//! that dispatches once per process between an AVX2+FMA implementation
+//! and a portable scalar one: runtime feature detection on x86_64,
+//! scalar everywhere else, and `FMRI_ENCODE_FORCE_SCALAR=1` pins the
+//! scalar kernel for A/B testing (`blas::micro::active_isa`). Gram
+//! matrices are built by a true triangular `Blas::syrk` — upper tiles
+//! only, mirrored once — at half the FLOPs of the general Aᵀ·B product,
+//! and eigendecompositions go through `Blas::eigh`, which size-dispatches
+//! between the serial cyclic Jacobi sweep and a round-robin *parallel
+//! ordering* on the worker pool above
+//! `linalg::PARALLEL_EIGH_MIN_P` columns. All three fast paths are
+//! deterministic: results are bit-identical across thread counts, and
+//! parity/bit-stability contracts live in `tests/kernel_parity.rs`.
 //! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph
 //!   (gram, Jacobi eigendecomposition, multi-lambda ridge sweep, Pearson
 //!   scoring, VGG16-surrogate feature extractor), AOT-lowered to HLO text.

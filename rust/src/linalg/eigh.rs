@@ -1,10 +1,20 @@
 //! Cyclic Jacobi eigendecomposition for symmetric matrices.
 //!
-//! The rust twin of `python/compile/jacobi.py` (which uses the
-//! parallel-ordering variant for HLO-friendliness); here the classic
-//! cyclic-by-row sweep with direct O(p) rotation application is faster on
-//! a CPU. Converges quadratically; sweeps stop when the off-diagonal
-//! Frobenius mass drops below `tol · ‖K‖_F`.
+//! Two sweep orderings share one rotation kernel:
+//!
+//! * [`jacobi_eigh`] — the classic serial cyclic-by-row sweep with direct
+//!   O(p) rotation application, fastest for the small Grams that dominate
+//!   test workloads.
+//! * [`jacobi_eigh_parallel`] — the round-robin *parallel ordering* (the
+//!   same schedule as `python/compile/jacobi.py`): each of the p−1 rounds
+//!   of a sweep rotates ⌊p/2⌋ disjoint index pairs, so the row/column
+//!   updates of a whole round execute concurrently on the `util::pool`
+//!   worker pool with one barrier per round.
+//!
+//! [`jacobi_eigh_auto`] dispatches between them on problem size
+//! ([`PARALLEL_EIGH_MIN_P`]) and pool width; `Blas::eigh` is the
+//! production entry point. Convergence is quadratic either way; sweeps
+//! stop when the off-diagonal Frobenius mass drops below `tol · ‖K‖_F`.
 //!
 //! This is the `svd()` of the paper's Algorithm 1: for ridge, the
 //! eigendecomposition of the Gram matrix K = XᵀX = V E Vᵀ carries the same
@@ -12,6 +22,8 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::pool::ThreadPool;
 
 use super::Mat;
 
@@ -103,13 +115,209 @@ pub fn jacobi_eigh(k: &Mat, max_sweeps: usize, tol: f64) -> Eigh {
         }
     }
 
-    // Extract and sort ascending.
+    sort_and_gather(&a, vt, sweeps_used)
+}
+
+/// Extract the diagonal, sort ascending, gather matching eigenvectors.
+/// `total_cmp` keeps the sort total even when a non-finite diagonal entry
+/// survives (NaN sorts last) — a NaN-contaminated input degrades to NaN
+/// eigenvalues instead of panicking mid-sort.
+fn sort_and_gather(a: &Mat, vt: Mat, sweeps_used: usize) -> Eigh {
+    let p = a.rows();
     let mut idx: Vec<usize> = (0..p).collect();
     let diag: Vec<f64> = (0..p).map(|i| a.get(i, i)).collect();
-    idx.sort_by(|&x, &y| diag[x].partial_cmp(&diag[y]).unwrap());
+    idx.sort_by(|&x, &y| diag[x].total_cmp(&diag[y]));
     let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
     let vectors = vt.rows_gather(&idx).transpose();
     Eigh { values, vectors, sweeps_used }
+}
+
+/// Smallest matrix order routed to [`jacobi_eigh_parallel`] by
+/// [`jacobi_eigh_auto`]. Below this, per-round barrier overhead
+/// (p−1 pool barriers per sweep) outweighs the parallel rotation work;
+/// the serial path also keeps small-p results bit-identical to earlier
+/// releases.
+pub const PARALLEL_EIGH_MIN_P: usize = 128;
+
+/// Size-dispatched Jacobi eigendecomposition: the round-robin parallel
+/// ordering on `pool` when the problem is big enough (p ≥
+/// [`PARALLEL_EIGH_MIN_P`]) and the pool has ≥ 2 workers, the serial
+/// cyclic sweep otherwise. Exactly one eigh-counter increment either way.
+pub fn jacobi_eigh_auto(k: &Mat, max_sweeps: usize, tol: f64, pool: &ThreadPool) -> Eigh {
+    if k.rows() >= PARALLEL_EIGH_MIN_P && pool.size() >= 2 {
+        jacobi_eigh_parallel(k, max_sweeps, tol, pool)
+    } else {
+        jacobi_eigh(k, max_sweeps, tol)
+    }
+}
+
+/// View row `r` of a `p`-wide row-major buffer whose base pointer travels
+/// as `usize` into the pool closure (raw pointers are not Sync).
+///
+/// # Safety
+/// `base` must point at a live `[f64]` buffer of at least `(r+1)*p`
+/// elements, and the caller must hold exclusive access to row `r` for the
+/// returned lifetime (the round's task-ownership discipline).
+unsafe fn row_unchecked<'a>(base: usize, r: usize, p: usize) -> &'a mut [f64] {
+    std::slice::from_raw_parts_mut((base as *mut f64).add(r * p), p)
+}
+
+/// One round's unit of parallel work: the task owns row `i` (and row `j`
+/// when the round paired it with a real partner) of both A and Vᵀ, and is
+/// the only task touching those rows. `rot` indexes into the round's
+/// rotation list when the pair's pivot cleared the threshold.
+struct RoundTask {
+    i: usize,
+    j: Option<usize>,
+    rot: Option<usize>,
+}
+
+/// The round-robin rotation schedule (circle method, the same ordering as
+/// `python/compile/jacobi.py`): `m` players (m even), m−1 rounds, each
+/// round pairing all m indices into m/2 disjoint pairs. Player 0 stays
+/// fixed; the rest rotate one slot per round. Every unordered pair occurs
+/// exactly once per sweep.
+fn round_robin_rounds(m: usize) -> Vec<Vec<(usize, usize)>> {
+    debug_assert_eq!(m % 2, 0);
+    let mut arr: Vec<usize> = (0..m).collect();
+    let half = m / 2;
+    let mut rounds = Vec::with_capacity(m.saturating_sub(1));
+    for _ in 0..m.saturating_sub(1) {
+        let mut pairs = Vec::with_capacity(half);
+        for i in 0..half {
+            let (a, b) = (arr[i], arr[m - 1 - i]);
+            pairs.push((a.min(b), a.max(b)));
+        }
+        rounds.push(pairs);
+        // Rotate: keep arr[0] fixed, move the last element to slot 1.
+        let last = arr.pop().expect("m >= 2");
+        arr.insert(1, last);
+    }
+    rounds
+}
+
+/// Jacobi eigendecomposition with the round-robin parallel ordering.
+///
+/// Each sweep runs p−1 (or p for odd p) rounds; a round's ⌊p/2⌋ pivot
+/// pairs are disjoint, so the congruence A ← JᵀAJ with J the product of
+/// the round's (commuting) rotations parallelizes: rotation angles are
+/// computed serially from the round-start matrix (O(p) work), then one
+/// pool barrier executes the round as row-owning tasks. A task owns its
+/// pair's two rows of A and Vᵀ exclusively — it row-mixes them (the Jᵀ
+/// half, plus the eigenvector accumulation), then applies *all* the
+/// round's column rotations to its owned rows (the J half; column pairs
+/// are disjoint so per-row order is immaterial), then zeroes its pivot.
+/// Rows whose pair was threshold-skipped (and the odd-p bye row) become
+/// rot-less tasks that still receive the column rotations. Every row is
+/// owned by exactly one task, so writes are disjoint and the result is
+/// deterministic across pool sizes. A is re-symmetrized once per sweep to
+/// scrub row/column roundoff drift.
+///
+/// Same convergence contract as [`jacobi_eigh`]; counted once against the
+/// eigh counters on the *calling* thread at entry.
+pub fn jacobi_eigh_parallel(k: &Mat, max_sweeps: usize, tol: f64, pool: &ThreadPool) -> Eigh {
+    EIGH_CALLS.with(|c| c.set(c.get() + 1));
+    EIGH_CALLS_TOTAL.fetch_add(1, Ordering::SeqCst);
+    let p = k.rows();
+    assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
+    let mut a = k.clone();
+    let mut vt = Mat::eye(p);
+    let norm = a.frob_norm().max(1e-300);
+    // Odd p: pad with a dummy index p; pairs containing it are byes.
+    let rounds = round_robin_rounds(p + p % 2);
+
+    let mut sweeps_used = max_sweeps;
+    for sweep in 0..max_sweeps {
+        if offdiag_norm(&a) <= tol * norm {
+            sweeps_used = sweep;
+            break;
+        }
+        let thresh = (tol * norm / p as f64).max(1e-300);
+        for round in &rounds {
+            // Phase 1 (serial, O(p)): rotation angles from the
+            // round-start matrix, plus the row-ownership task list.
+            let mut rots: Vec<(usize, usize, f64, f64)> = Vec::new();
+            let mut tasks: Vec<RoundTask> = Vec::new();
+            for &(i, j) in round {
+                if j >= p {
+                    tasks.push(RoundTask { i, j: None, rot: None });
+                    continue;
+                }
+                let aij = a.get(i, j);
+                if aij.abs() < thresh {
+                    tasks.push(RoundTask { i, j: Some(j), rot: None });
+                    continue;
+                }
+                let aii = a.get(i, i);
+                let ajj = a.get(j, j);
+                let tau = (ajj - aii) / (2.0 * aij);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                tasks.push(RoundTask { i, j: Some(j), rot: Some(rots.len()) });
+                rots.push((i, j, c, t * c));
+            }
+            if rots.is_empty() {
+                continue;
+            }
+            // Phase 2 (one barrier): execute the round. Base pointers
+            // travel as usize (raw pointers are not Sync); every task's
+            // reads and writes stay inside its owned rows, which
+            // partition 0..p, so the aliasing is sound.
+            let abase = a.data_mut().as_mut_ptr() as usize;
+            let vbase = vt.data_mut().as_mut_ptr() as usize;
+            let rots = &rots;
+            let tasks = &tasks;
+            pool.scope_chunks(tasks.len(), pool.size(), |ts, te, _| {
+                for task in &tasks[ts..te] {
+                    if let Some(ri) = task.rot {
+                        let (i, j, c, s) = rots[ri];
+                        // Row mix (Jᵀ·A): (rᵢ, rⱼ) ← (c·rᵢ − s·rⱼ,
+                        // s·rᵢ + c·rⱼ); same mix accumulates Vᵀ.
+                        for base in [abase, vbase] {
+                            // SAFETY: this task is the sole owner of
+                            // rows i and j this round.
+                            let bi = unsafe { row_unchecked(base, i, p) };
+                            let bj = unsafe { row_unchecked(base, j, p) };
+                            for l in 0..p {
+                                let (x, y) = (bi[l], bj[l]);
+                                bi[l] = c * x - s * y;
+                                bj[l] = s * x + c * y;
+                            }
+                        }
+                    }
+                    // Column mix (·J) on every owned row of A, applying
+                    // all the round's rotations (disjoint column pairs).
+                    for r in [Some(task.i), task.j].into_iter().flatten() {
+                        // SAFETY: row r is owned by this task.
+                        let arow = unsafe { row_unchecked(abase, r, p) };
+                        for &(ci, cj, c, s) in rots.iter() {
+                            let (x, y) = (arow[ci], arow[cj]);
+                            arow[ci] = c * x - s * y;
+                            arow[cj] = s * x + c * y;
+                        }
+                    }
+                    if let Some(ri) = task.rot {
+                        let (i, j, ..) = rots[ri];
+                        // SAFETY: owned rows; zero the annihilated pivot.
+                        unsafe {
+                            row_unchecked(abase, i, p)[j] = 0.0;
+                            row_unchecked(abase, j, p)[i] = 0.0;
+                        }
+                    }
+                }
+            });
+        }
+        // Scrub row/column application-order roundoff once per sweep so
+        // the rotation angles keep reading a symmetric matrix.
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let v = 0.5 * (a.get(i, j) + a.get(j, i));
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+    }
+    sort_and_gather(&a, vt, sweeps_used)
 }
 
 /// One symmetric Jacobi rotation zeroing A[i,j] (i < j), O(p) contiguous.
@@ -296,5 +504,93 @@ mod tests {
         for (got, want) in d.values.iter().zip(want) {
             assert!((got - want).abs() < 1e-9, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn nan_input_degrades_without_panicking() {
+        // A NaN-contaminated Gram must produce NaN eigenvalues, not a
+        // panic in the eigenvalue sort (regression: the sort used
+        // partial_cmp().unwrap()).
+        let mut k = spd(6, 42);
+        k.set(2, 4, f64::NAN);
+        k.set(4, 2, f64::NAN);
+        let d = jacobi_eigh(&k, 3, 1e-13);
+        assert_eq!(d.values.len(), 6);
+        assert!(d.values.iter().any(|v| v.is_nan()));
+        // total_cmp sorts NaN after every finite value.
+        let first_nan = d.values.iter().position(|v| v.is_nan()).unwrap();
+        assert!(d.values[first_nan..].iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn round_robin_schedule_is_a_tournament() {
+        for m in [2, 4, 6, 12] {
+            let rounds = round_robin_rounds(m);
+            assert_eq!(rounds.len(), m - 1);
+            let mut seen = std::collections::HashSet::new();
+            for round in &rounds {
+                assert_eq!(round.len(), m / 2);
+                // Each round partitions 0..m into disjoint pairs.
+                let mut used = vec![false; m];
+                for &(i, j) in round {
+                    assert!(i < j && j < m);
+                    assert!(!used[i] && !used[j], "m={m}: index reused in round");
+                    used[i] = true;
+                    used[j] = true;
+                    assert!(seen.insert((i, j)), "m={m}: pair ({i},{j}) repeated");
+                }
+            }
+            // Every unordered pair exactly once per sweep.
+            assert_eq!(seen.len(), m * (m - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_spd() {
+        let pool = ThreadPool::new(4);
+        for p in [2, 5, 16, 33] {
+            let k = spd(p, 100 + p as u64);
+            let serial = jacobi_eigh(&k, 30, 1e-13);
+            let par = jacobi_eigh_parallel(&k, 30, 1e-13, &pool);
+            for (a, b) in par.values.iter().zip(&serial.values) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+            let err = reconstruction_error(&k, &par.values, &par.vectors);
+            assert!(err < 1e-9, "p={p} err={err}");
+        }
+    }
+
+    #[test]
+    fn parallel_deterministic_across_pool_sizes() {
+        // Round tasks own disjoint rows and apply rotations in a fixed
+        // order, so the result cannot depend on how tasks land on
+        // workers: bit-identical for every pool width.
+        let k = spd(19, 7);
+        let p1 = ThreadPool::new(1);
+        let base = jacobi_eigh_parallel(&k, 30, 1e-13, &p1);
+        for threads in [2, 3, 5, 8] {
+            let pt = ThreadPool::new(threads);
+            let d = jacobi_eigh_parallel(&k, 30, 1e-13, &pt);
+            assert_eq!(d.values, base.values, "threads={threads}");
+            assert_eq!(
+                d.vectors.max_abs_diff(&base.vectors),
+                0.0,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_dispatch_thresholds() {
+        // Small problem or single-thread pool → serial path, bit-identical
+        // to jacobi_eigh. (The parallel branch itself is covered by the
+        // parity tests above and tests/kernel_parity.rs at p ≥ 128.)
+        let k = spd(12, 55);
+        let serial = jacobi_eigh(&k, 30, 1e-13);
+        let p4 = ThreadPool::new(4);
+        let small = jacobi_eigh_auto(&k, 30, 1e-13, &p4);
+        assert_eq!(small.values, serial.values);
+        assert_eq!(small.vectors.max_abs_diff(&serial.vectors), 0.0);
+        assert!(12 < PARALLEL_EIGH_MIN_P);
     }
 }

@@ -10,7 +10,10 @@ pub mod eigh;
 pub mod mat;
 pub mod qr;
 
-pub use eigh::{eigh_calls_this_thread, eigh_calls_total, jacobi_eigh, Eigh};
+pub use eigh::{
+    eigh_calls_this_thread, eigh_calls_total, jacobi_eigh, jacobi_eigh_auto,
+    jacobi_eigh_parallel, Eigh, PARALLEL_EIGH_MIN_P,
+};
 pub use mat::Mat;
 
 /// Solve the 2-norm condition-style reconstruction error ‖VEVᵀ − K‖_F / ‖K‖_F.

@@ -151,7 +151,9 @@ pub fn split_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape
     let FitShape { n, p, splits, .. } = shape;
     let s = splits.max(1) as f64;
     let gemm_tp = cal.gemm_flops(backend);
-    let gram = 2.0 * (p * p) as f64 * n as f64 / gemm_tp;
+    // Triangular syrk: K = XᵀX computes only the upper triangle and
+    // mirrors, so the Gram term is p²n FLOPs, not the full-GEMM 2p²n.
+    let gram = (p * p) as f64 * n as f64 / gemm_tp;
     let eigh = 12.0 * (p as f64).powi(3) / cal.eigh_flops;
     let nv = (n as f64 / s).max(1.0);
     let aproj = 2.0 * nv * (p * p) as f64 / gemm_tp;
@@ -163,7 +165,8 @@ pub fn split_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape
 pub fn full_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
     let FitShape { n, p, .. } = shape;
     let gemm_tp = cal.gemm_flops(backend);
-    let gram = 2.0 * (p * p) as f64 * n as f64 / gemm_tp;
+    // Triangular syrk (see split_decompose_secs): p²n, not 2p²n.
+    let gram = (p * p) as f64 * n as f64 / gemm_tp;
     let eigh = 12.0 * (p as f64).powi(3) / cal.eigh_flops;
     gram + eigh
 }

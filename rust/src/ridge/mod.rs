@@ -36,7 +36,7 @@ pub mod plan;
 
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
-use crate::linalg::{cholesky, eigh::jacobi_eigh, Mat};
+use crate::linalg::{cholesky, Mat};
 use crate::util::Stopwatch;
 
 pub use plan::{
@@ -158,7 +158,7 @@ pub fn fit_ridge_cv_unshared(
     let (k, c) = gram(blas, x, y);
     timings.gram_secs += sw.secs();
     let sw = Stopwatch::start();
-    let dec = jacobi_eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, 1e-12);
     timings.eigh_secs += sw.secs();
     let sw = Stopwatch::start();
     let z = blas.at_b(&dec.vectors, &c);
@@ -197,7 +197,7 @@ pub fn sweep_scores(
     tim.gram_secs = sw.secs();
 
     let sw = Stopwatch::start();
-    let dec = jacobi_eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, 1e-12);
     tim.eigh_secs = sw.secs();
 
     let sw = Stopwatch::start();
@@ -326,6 +326,24 @@ impl ScoreAccumulator {
         }
     }
 
+    /// Fold a *column range* of one split's scores for λ row `li`: `rs`
+    /// covers targets `j0..j0 + rs.len()` of the accumulator's width.
+    /// This is [`ScoreAccumulator::add_row`] for callers that sweep
+    /// target chunks (the XLA runtime twin folds per-chunk score rows
+    /// into the full-width accumulator).
+    pub(crate) fn add_at(&mut self, li: usize, j0: usize, rs: &[f64]) {
+        let t = self.sum.cols();
+        assert!(j0 + rs.len() <= t, "score chunk exceeds accumulator width");
+        let row = &mut self.sum.row_mut(li)[j0..j0 + rs.len()];
+        let counts = &mut self.finite[li * t + j0..li * t + j0 + rs.len()];
+        for ((acc, cnt), &rv) in row.iter_mut().zip(counts.iter_mut()).zip(rs) {
+            if !rv.is_nan() {
+                *acc += rv;
+                *cnt += 1;
+            }
+        }
+    }
+
     /// Fold one split's full (r × t) score matrix into the accumulator.
     pub(crate) fn add_scores(&mut self, scores: &Mat) {
         assert_eq!(scores.shape(), self.sum.shape());
@@ -392,6 +410,7 @@ mod tests {
     use super::*;
     use crate::blas::Backend;
     use crate::cv::kfold;
+    use crate::linalg::jacobi_eigh;
     use crate::util::Pcg64;
 
     fn blas() -> Blas {
@@ -582,6 +601,25 @@ mod tests {
     }
 
     #[test]
+    fn score_accumulator_add_at_equals_full_row_adds() {
+        // Chunked column-range folds must reproduce full-width row folds
+        // exactly (the XLA runtime accumulates per target chunk).
+        let rows = [[0.1, 0.2, f64::NAN, 0.4], [0.5, f64::NAN, 0.7, 0.8]];
+        let mut whole = ScoreAccumulator::new(1, 4);
+        let mut chunked = ScoreAccumulator::new(1, 4);
+        for r in &rows {
+            whole.add_row(0, r);
+            chunked.add_at(0, 0, &r[0..2]);
+            chunked.add_at(0, 2, &r[2..4]);
+        }
+        let (a, b) = (whole.into_mean(), chunked.into_mean());
+        for j in 0..4 {
+            let (x, y) = (a.get(0, j), b.get(0, j));
+            assert!(x == y || (x.is_nan() && y.is_nan()), "col {j}");
+        }
+    }
+
+    #[test]
     fn one_nan_split_does_not_poison_cross_split_scores() {
         // Regression for the cross-split NaN-poisoning bug: one target
         // constant on ONE split's validation rows (zero variance there →
@@ -590,7 +628,7 @@ mod tests {
         // in both CV paths, silently ejecting the target's finite
         // evidence from λ selection; the NaN-aware per-cell mean keeps
         // the finite splits voting.
-        let (x, y, _) = planted(60, 8, 5, 12);
+        let (x, y, _) = planted(60, 8, 5, 0.2, 12);
         let splits = kfold(60, 3, Some(9));
         let b = blas();
         let mut yp = y.clone();

@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
-use crate::linalg::{eigh::jacobi_eigh, Mat};
+use crate::linalg::Mat;
 use crate::util::Stopwatch;
 
 use super::{
@@ -79,9 +79,10 @@ pub struct FullDesign {
 
 /// Factorize ONE CV split's training design: gather the training and
 /// validation rows, form the Gram matrix, eigendecompose it (exactly one
-/// `jacobi_eigh` call) and project the validation rows. This is one
-/// decompose task of the coordinator's B-MOR graph; [`DesignPlan::build`]
-/// runs it serially per split for single-batch callers.
+/// eigh call, size-dispatched onto the Blas pool) and project the
+/// validation rows. This is one decompose task of the coordinator's B-MOR
+/// graph; [`DesignPlan::build`] runs it serially per split for
+/// single-batch callers.
 pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, RidgeTimings) {
     let mut tim = RidgeTimings::default();
     let xtr = x.rows_gather(&split.train);
@@ -92,7 +93,7 @@ pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, Rid
     tim.gram_secs += sw.secs();
 
     let sw = Stopwatch::start();
-    let dec = jacobi_eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, 1e-12);
     tim.eigh_secs += sw.secs();
 
     let sw = Stopwatch::start();
@@ -110,7 +111,7 @@ pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, Rid
     (sd, tim)
 }
 
-/// Factorize the full training design (one `jacobi_eigh` call) — the
+/// Factorize the full training design (one eigh call) — the
 /// `decompose-full` task of the coordinator's B-MOR graph.
 pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
     let mut tim = RidgeTimings::default();
@@ -118,7 +119,7 @@ pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
     let k = blas.syrk(x);
     tim.gram_secs += sw.secs();
     let sw = Stopwatch::start();
-    let dec = jacobi_eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, 1e-12);
     tim.eigh_secs += sw.secs();
     (FullDesign { v: dec.vectors, e: dec.values }, tim)
 }

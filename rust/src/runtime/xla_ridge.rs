@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 use super::{literal_to_mat, literal_to_vec, mat_to_literal, pad_to, PresetCfg, Runtime};
 use crate::cv::Split;
 use crate::linalg::Mat;
+use crate::ridge::{argmax_finite, nanmean, ScoreAccumulator};
 use crate::util::ceil_div;
 
 /// Result of an XLA-path CV fit (mirrors `ridge::RidgeCvFit`).
@@ -164,7 +165,12 @@ impl<'rt> XlaRidge<'rt> {
         anyhow::ensure!(x.cols() == p, "x cols {} != preset p {p}", x.cols());
         let t = y.cols();
         let tchunks = ceil_div(t, t_chunk).max(1);
-        let mut scores_acc = Mat::zeros(r, t);
+        // Same NaN-aware cross-split accumulation as the native twin
+        // (`ridge::ScoreAccumulator`): a split whose validation score for
+        // one (λ, target) cell is NaN is skipped for that cell instead of
+        // poisoning the mean; NaN-free fits stay bit-identical to the old
+        // sum-then-scale(1/s).
+        let mut acc = ScoreAccumulator::new(r, t);
 
         for split in splits {
             anyhow::ensure!(split.val.len() >= nv, "fold validation smaller than nv");
@@ -195,24 +201,18 @@ impl<'rt> XlaRidge<'rt> {
                 };
                 let s = self.sweep(a, e, &z, &yval)?; // (r × t_chunk)
                 for li in 0..r {
-                    for j in j0..j1 {
-                        let v0 = scores_acc.get(li, j) + s.get(li, j - j0);
-                        scores_acc.set(li, j, v0);
-                    }
+                    // Padded columns beyond j1 - j0 are sliced off.
+                    acc.add_at(li, j0, &s.row(li)[..j1 - j0]);
                 }
             }
         }
-        scores_acc.scale(1.0 / splits.len() as f64);
+        let scores_acc = acc.into_mean();
 
-        let mean_scores: Vec<f64> = (0..r)
-            .map(|li| scores_acc.row(li).iter().sum::<f64>() / t as f64)
-            .collect();
-        let best_idx = mean_scores
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        // Shared λ*: argmax of the target-mean score, skipping non-finite
+        // entries — a NaN score (constant voxel column) must never win
+        // nor poison selection (mirrors the native path post-PR-4).
+        let mean_scores: Vec<f64> = (0..r).map(|li| nanmean(scores_acc.row(li))).collect();
+        let best_idx = argmax_finite(&mean_scores);
         let best_lambda = self.lambdas[best_idx];
 
         // Final fit on the full data.

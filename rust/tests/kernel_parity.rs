@@ -1,0 +1,267 @@
+//! Kernel-layer parity contracts: explicit-SIMD vs scalar microkernels,
+//! the triangular syrk vs the full Aᵀ·B product, and the round-robin
+//! parallel Jacobi eigh vs the serial cyclic sweep — plus the eigh
+//! counter accounting for pool-dispatched decompositions.
+//!
+//! ISA coverage: `active_isa()` is decided once per process, so one test
+//! run exercises exactly one microkernel. CI runs this binary twice —
+//! once plain (AVX2+FMA on x86_64 runners) and once under
+//! `FMRI_ENCODE_FORCE_SCALAR=1` — so both dispatch arms are tested; the
+//! explicit `kernel_4x8_with` parity test below compares the two kernels
+//! directly inside a single process whenever the host supports both.
+
+use std::sync::{Mutex, MutexGuard};
+
+use fmri_encode::blas::micro::{
+    self, active_isa, kernel_4x8_with, KernelIsa, MR, NR,
+};
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::cv::kfold;
+use fmri_encode::linalg::{
+    eigh_calls_this_thread, eigh_calls_total, jacobi_eigh, jacobi_eigh_parallel,
+    reconstruction_error, Mat, PARALLEL_EIGH_MIN_P,
+};
+use fmri_encode::ridge::{DesignPlan, LAMBDA_GRID};
+use fmri_encode::util::pool::ThreadPool;
+use fmri_encode::util::Pcg64;
+
+/// Serialize tests that measure deltas of the process-wide eigh counter
+/// (same discipline as tests/plan_parity.rs — separate binaries are
+/// separate processes, so only this file's tests contend here).
+static EIGH_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize_eigh_counting() -> MutexGuard<'static, ()> {
+    EIGH_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn naive_at_a(x: &Mat) -> Mat {
+    let p = x.cols();
+    let mut k = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let mut acc = 0.0;
+            for r in 0..x.rows() {
+                acc += x.get(r, i) * x.get(r, j);
+            }
+            k.set(i, j, acc);
+        }
+    }
+    k
+}
+
+#[test]
+fn simd_and_scalar_kernels_agree_on_odd_panels() {
+    // The AVX2 kernel contracts each multiply-add with FMA, so its
+    // roundoff differs from the scalar kernel by O(kb·ε) per output
+    // element; with N(0,1) inputs and kb ≤ KC = 256 the difference is
+    // far below 1e-10 absolute. Runs only where both kernels exist.
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: host lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Pcg64::seeded(21);
+        for kb in [1, 2, 3, 7, 64, 117, 256] {
+            let a = Mat::randn(MR, kb, &mut rng);
+            let b = Mat::randn(kb, NR, &mut rng);
+            let mut apack = vec![0.0; MR * kb];
+            let mut bpack = vec![0.0; NR * kb];
+            micro::pack_a(&a, 0, MR, 0, kb, &mut apack);
+            micro::pack_b(&b, 0, kb, 0, NR, &mut bpack);
+            // Non-zero starting accumulators so the spill path's
+            // load-add-store is exercised too.
+            let mut acc_scalar = [[0.5f64; NR]; MR];
+            let mut acc_simd = [[0.5f64; NR]; MR];
+            kernel_4x8_with(KernelIsa::Scalar, &apack, &bpack, kb, &mut acc_scalar);
+            kernel_4x8_with(KernelIsa::Avx2Fma, &apack, &bpack, kb, &mut acc_simd);
+            for r in 0..MR {
+                for c in 0..NR {
+                    let d = (acc_scalar[r][c] - acc_simd[r][c]).abs();
+                    assert!(d < 1e-10, "kb={kb} ({r},{c}): diff {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_override_is_respected() {
+    // Under FMRI_ENCODE_FORCE_SCALAR the dispatcher must pin the scalar
+    // kernel even on AVX2 hosts (CI's second run asserts this arm).
+    if std::env::var_os("FMRI_ENCODE_FORCE_SCALAR").is_some() {
+        assert_eq!(active_isa(), KernelIsa::Scalar);
+    }
+}
+
+#[test]
+fn all_tiers_match_naive_gemm_at_odd_shapes_under_active_isa() {
+    // Whatever kernel active_isa() picked, every backend tier must agree
+    // with the naive oracle at shapes straddling MR/NR/MC/KC edges, at
+    // one and several threads.
+    let mut rng = Pcg64::seeded(22);
+    for (m, k, n) in [(5, 3, 9), (67, 130, 33), (129, 257, 41)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = Blas::new(Backend::Naive, 1).gemm(&a, &b);
+        for backend in [Backend::OpenBlasLike, Backend::MklLike] {
+            for threads in [1, 4] {
+                let got = Blas::new(backend, threads).gemm(&a, &b);
+                let d = want.max_abs_diff(&got);
+                assert!(d < 1e-10, "{backend:?} t={threads} ({m},{k},{n}): {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn at_b_all_tiers_match_transpose_oracle() {
+    // The MKL-like tier's Aᵀ·B now runs the packed microkernel path
+    // (pack_at); all tiers must still match Xᵀ·Y computed explicitly.
+    let mut rng = Pcg64::seeded(23);
+    let x = Mat::randn(90, 141, &mut rng);
+    let y = Mat::randn(90, 37, &mut rng);
+    let want = Blas::new(Backend::Naive, 1).gemm(&x.transpose(), &y);
+    for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+        for threads in [1, 3] {
+            let got = Blas::new(backend, threads).at_b(&x, &y);
+            let d = want.max_abs_diff(&got);
+            assert!(d < 1e-10, "{backend:?} t={threads}: {d}");
+        }
+    }
+}
+
+#[test]
+fn triangular_syrk_matches_at_b_product() {
+    // syrk computes only upper tiles and mirrors; it must match the full
+    // Aᵀ·A to roundoff, be exactly symmetric, and be bit-stable across
+    // thread counts — at sizes spanning the SYRK_TILE boundary.
+    let mut rng = Pcg64::seeded(24);
+    for p in [9, Blas::SYRK_TILE, Blas::SYRK_TILE + 31, 2 * Blas::SYRK_TILE + 5] {
+        let x = Mat::randn(64, p, &mut rng);
+        let want = naive_at_a(&x);
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let k1 = Blas::new(backend, 1).syrk(&x);
+            let d = k1.max_abs_diff(&want);
+            assert!(d < 1e-9, "{backend:?} p={p}: {d}");
+            for i in 0..p {
+                for j in 0..p {
+                    assert_eq!(k1.get(i, j), k1.get(j, i), "{backend:?} p={p}");
+                }
+            }
+            for threads in [2, 5] {
+                let kt = Blas::new(backend, threads).syrk(&x);
+                assert_eq!(k1.max_abs_diff(&kt), 0.0, "{backend:?} p={p} t={threads}");
+            }
+        }
+    }
+}
+
+fn spd(n: usize, p: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    Blas::new(Backend::MklLike, 1).syrk(&x)
+}
+
+#[test]
+fn parallel_eigh_matches_serial_above_dispatch_threshold() {
+    let _guard = serialize_eigh_counting();
+    let p = PARALLEL_EIGH_MIN_P + 22; // 150: the auto-dispatch regime
+    let k = spd(2 * p, p, 31);
+    let serial = jacobi_eigh(&k, 30, 1e-12);
+    let pool = ThreadPool::new(4);
+    let par = jacobi_eigh_parallel(&k, 30, 1e-12, &pool);
+    for (a, b) in par.values.iter().zip(&serial.values) {
+        assert!((a - b).abs() < 1e-8 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    let err = reconstruction_error(&k, &par.values, &par.vectors);
+    assert!(err < 1e-9, "reconstruction err {err}");
+
+    // Blas::eigh at this size on a multi-thread pool takes the parallel
+    // path; the result must be the same decomposition.
+    let via_blas = Blas::new(Backend::MklLike, 4).eigh(&k, 30, 1e-12);
+    assert_eq!(via_blas.values, par.values);
+    assert_eq!(via_blas.vectors.max_abs_diff(&par.vectors), 0.0);
+}
+
+#[test]
+fn parallel_eigh_handles_ill_conditioned_spectrum() {
+    let _guard = serialize_eigh_counting();
+    // Spectrum spanning 10 orders of magnitude at parallel-dispatch size.
+    let p = PARALLEL_EIGH_MIN_P + 5;
+    let mut rng = Pcg64::seeded(32);
+    let q = gram_schmidt(&Mat::randn(p, p, &mut rng));
+    let evals: Vec<f64> = (0..p)
+        .map(|i| 10f64.powf(-5.0 + 10.0 * i as f64 / (p - 1) as f64))
+        .collect();
+    let mut k = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let mut acc = 0.0;
+            for l in 0..p {
+                acc += q.get(i, l) * evals[l] * q.get(j, l);
+            }
+            k.set(i, j, acc);
+        }
+    }
+    let pool = ThreadPool::new(4);
+    let d = jacobi_eigh_parallel(&k, 30, 1e-13, &pool);
+    assert!(reconstruction_error(&k, &d.values, &d.vectors) < 1e-9);
+    for w in d.values.windows(2) {
+        assert!(w[0] <= w[1], "eigenvalues not ascending");
+    }
+}
+
+fn gram_schmidt(m: &Mat) -> Mat {
+    let p = m.rows();
+    let mut q = m.clone();
+    for j in 0..p {
+        for prev in 0..j {
+            let dot: f64 = (0..p).map(|i| q.get(i, j) * q.get(i, prev)).sum();
+            for i in 0..p {
+                let v = q.get(i, j) - dot * q.get(i, prev);
+                q.set(i, j, v);
+            }
+        }
+        let norm: f64 = (0..p).map(|i| q.get(i, j).powi(2)).sum::<f64>().sqrt();
+        for i in 0..p {
+            let v = q.get(i, j) / norm;
+            q.set(i, j, v);
+        }
+    }
+    q
+}
+
+#[test]
+fn pool_threaded_eigh_counts_exactly_once() {
+    let _guard = serialize_eigh_counting();
+    // A parallel eigh fans rotation work across the pool but is ONE
+    // decomposition: both counters move by exactly 1, and the increment
+    // lands on the calling thread (workers never touch the thread-local).
+    let p = PARALLEL_EIGH_MIN_P + 2;
+    let k = spd(2 * p, p, 33);
+    let blas = Blas::new(Backend::MklLike, 4);
+    let total_before = eigh_calls_total();
+    let local_before = eigh_calls_this_thread();
+    let _ = blas.eigh(&k, 30, 1e-12);
+    assert_eq!(eigh_calls_total() - total_before, 1);
+    assert_eq!(eigh_calls_this_thread() - local_before, 1);
+}
+
+#[test]
+fn plan_eigh_count_pin_holds_with_multithreaded_blas() {
+    let _guard = serialize_eigh_counting();
+    // The decompose-once contract must survive the Blas-pool eigh
+    // dispatch: a plan build on a 4-thread Blas still costs exactly
+    // splits + 1 decompositions, counted on the building thread.
+    let mut rng = Pcg64::seeded(34);
+    let x = Mat::randn(80, 10, &mut rng);
+    let splits = kfold(80, 3, Some(0));
+    let blas = Blas::new(Backend::MklLike, 4);
+    let before = eigh_calls_this_thread();
+    let plan = DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits);
+    assert_eq!(eigh_calls_this_thread() - before, splits.len() + 1);
+    assert_eq!(plan.decompositions(), splits.len() + 1);
+}
