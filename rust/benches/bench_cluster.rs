@@ -1,0 +1,161 @@
+//! Cluster-scaling bench: the multi-process executor measured for real,
+//! checked against the DES prediction.
+//!
+//! For each worker count the bench (1) asks `Engine::placement` to pick
+//! the batch count that minimizes the DES-predicted makespan on a local
+//! pipe-cluster spec, (2) runs the identical B-MOR emission cold through
+//! `ProcessExecutor` with that many spawned worker processes and records
+//! the measured wall, (3) runs the same request on `ThreadExecutor` as
+//! the in-process reference, and (4) reports the predicted-vs-measured
+//! relative error plus the pool's broadcast/return byte accounting.
+//!
+//! Knobs: `BENCH_CLUSTER_QUICK=1` shrinks the problem and the worker
+//! sweep; `BENCH_CLUSTER_JSON=path` overrides the JSON output path.
+
+mod common;
+use common::{header, report};
+
+use std::sync::Arc;
+
+use fmri_encode::blas::Backend;
+use fmri_encode::cluster::{AmdahlModel, ClusterSpec};
+use fmri_encode::coordinator::Strategy;
+use fmri_encode::engine::{Engine, ExecutorKind, FitRequest, SimRequest};
+use fmri_encode::jobj;
+use fmri_encode::linalg::Mat;
+use fmri_encode::perfmodel::{calibrate, rel_error, FitShape};
+use fmri_encode::ridge::LAMBDA_GRID;
+use fmri_encode::util::json::Json;
+use fmri_encode::util::{human_bytes, human_secs, Pcg64};
+
+/// This machine as a cluster: one single-threaded worker process per
+/// "node", pipes instead of NFS (high bandwidth, sub-ms dispatch).
+fn local_spec(workers: usize) -> ClusterSpec {
+    ClusterSpec {
+        nodes: workers,
+        cores_per_node: 1,
+        workers_per_node: 1,
+        nfs_bandwidth: 4e9,
+        dispatch_latency: 2e-4,
+        scheduler_overhead: 1e-4,
+        amdahl: AmdahlModel::for_backend(Backend::MklLike),
+    }
+}
+
+/// Cold-fit wall seconds: best of `iters` runs, plan cache cleared
+/// before each so every run pays the full decompose+assemble+sweep.
+fn cold_wall(engine: &Engine, req: &FitRequest, iters: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        engine.clear_plan_cache();
+        let fit = engine.fit(req).expect("cold fit");
+        best = best.min(fit.wall_secs);
+        std::hint::black_box(&fit);
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_CLUSTER_QUICK").is_ok();
+    let iters = if quick { 1 } else { 3 };
+    let (n, p, t) = if quick { (192, 24, 48) } else { (384, 48, 128) };
+    let folds = 3usize;
+
+    header("cluster: process executor vs DES-predicted makespan");
+    let cal = calibrate(quick);
+    let mut rng = Pcg64::seeded(7);
+    let x = Arc::new(Mat::randn(n, p, &mut rng));
+    let y = Mat::randn(n, t, &mut rng);
+    let shape = FitShape { n, p, t, r: LAMBDA_GRID.len(), splits: folds };
+
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let mut entries: Vec<Json> = Vec::new();
+
+    for &w in worker_counts {
+        let engine = Engine::with_calibration(cal, local_spec(w))
+            .with_worker_bin(env!("CARGO_BIN_EXE_fmri-encode"));
+
+        // Placement: the perfmodel picks the batch count for this pool.
+        let sim = SimRequest::new(shape)
+            .strategy(Strategy::Bmor)
+            .nodes(w)
+            .threads_per_node(1);
+        let placement = engine.placement(&sim).expect("placement");
+        let batches = placement.batches;
+        let predicted = placement.predicted_makespan;
+        report(
+            &format!("placement  workers={w}"),
+            format!(
+                "-> {batches} batches, predicted makespan {}",
+                human_secs(predicted)
+            ),
+        );
+
+        let base = FitRequest::new(&x, &y)
+            .strategy(Strategy::Bmor)
+            .nodes(batches)
+            .threads_per_node(1)
+            .folds(folds)
+            .seed(0);
+
+        // Warm the pool (first run pays worker spawns), then measure.
+        let proc_req = base.clone().executor(ExecutorKind::Process { workers: w });
+        engine.clear_plan_cache();
+        let proc_fit = engine.fit(&proc_req).expect("pool warm-up fit");
+        let proc_secs = cold_wall(&engine, &proc_req, iters);
+        report(
+            &format!("process    workers={w}"),
+            format!("-> measured {}", human_secs(proc_secs)),
+        );
+
+        engine.clear_plan_cache();
+        let thread_req = base.clone().executor(ExecutorKind::Thread);
+        let thread_fit = engine.fit(&thread_req).expect("thread reference fit");
+        let thread_secs = cold_wall(&engine, &thread_req, iters);
+        report(
+            &format!("thread     workers={w}"),
+            format!("-> measured {}", human_secs(thread_secs)),
+        );
+
+        // The two executors run the same emission bit-identically.
+        let drift = proc_fit.weights.max_abs_diff(&thread_fit.weights);
+        assert_eq!(drift, 0.0, "process/thread weight drift at workers={w}");
+
+        let err = rel_error(predicted, proc_secs);
+        let stats = engine.process_pool_stats().expect("pool stats");
+        report(
+            &format!("model      workers={w}"),
+            format!(
+                "-> rel error {:.1}%, broadcast {}, returned {}",
+                err * 100.0,
+                human_bytes(stats.bytes_broadcast as u64),
+                human_bytes(stats.bytes_returned as u64)
+            ),
+        );
+
+        entries.push(jobj! {
+            "workers" => w,
+            "batches" => batches,
+            "predicted_makespan_secs" => predicted,
+            "process_secs" => proc_secs,
+            "thread_secs" => thread_secs,
+            "rel_error" => err,
+            "graphs_run" => stats.graphs_run,
+            "tasks_dispatched" => stats.tasks_dispatched,
+            "spawns" => stats.spawns,
+            "bytes_broadcast" => stats.bytes_broadcast,
+            "bytes_returned" => stats.bytes_returned,
+        });
+    }
+
+    let json = jobj! {
+        "bench" => "bench_cluster",
+        "quick" => quick,
+        "n" => n, "p" => p, "t" => t, "folds" => folds,
+        "scaling" => entries,
+    };
+    let out =
+        std::env::var("BENCH_CLUSTER_JSON").unwrap_or_else(|_| "BENCH_cluster.json".into());
+    std::fs::write(&out, json.to_string_pretty()).expect("write BENCH_cluster.json");
+    println!("\nwrote {out}");
+}

@@ -8,7 +8,8 @@
 //!   tables   --table 1|2|all     reproduce Table 1/2 (paper + repro scale)
 //!   figures  --fig 4..10|all     reproduce the evaluation figures
 //!   fit      --resolution R --strategy S --nodes N --threads T
-//!            [--backend B] [--path native|xla]   run a real fit
+//!            [--backend B] [--path native|xla]
+//!            [--executor thread|process --workers W]   run a real fit
 //!   calibrate                    measure this machine's kernel throughput
 //!   validate                     native-vs-XLA parity + perfmodel checks
 //! common:  --quick --subjects N --out DIR --seed S
@@ -21,7 +22,7 @@ use crate::config::{Args, ExperimentConfig};
 use crate::coordinator::DistConfig;
 use crate::cv::kfold;
 use crate::data::friends::generate;
-use crate::engine::{EncodeRequest, Engine, FitRequest};
+use crate::engine::{EncodeRequest, Engine, ExecutorKind, FitRequest};
 use crate::figures::{generate_figure, FigCtx};
 use crate::metrics::fnum;
 use crate::perfmodel::{calibrate, flops};
@@ -33,6 +34,7 @@ const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|calibrate|valid
   figures  --fig 4|5|6|7|8|9|10|all [--out DIR] [--quick] [--subjects N]
   fit      [--resolution parcels|roi|whole-brain|mor] [--strategy ridgecv|mor|bmor]
            [--nodes N] [--threads T] [--backend naive|openblas|mkl]
+           [--executor thread|process] [--workers W]
            [--path native|xla] [--subject 1..6] [--quick]
   calibrate [--quick]
   validate [--quick] [--artifacts DIR]";
@@ -140,15 +142,27 @@ fn cmd_fit(args: &Args) -> Result<()> {
             // (the fit keys on the full X, the encode on its outer
             // training rows — two distinct plans) would be served warm.
             let engine = Engine::new();
+            let executor = match args.str_or("executor", "thread") {
+                "thread" => ExecutorKind::Thread,
+                "process" => {
+                    ExecutorKind::Process { workers: args.usize_or("workers", cfg.nodes)? }
+                }
+                other => bail!("--executor must be thread or process, got `{other}`"),
+            };
             let sw = Stopwatch::start();
-            let fit = engine.fit(&FitRequest::new(&ds.x, &ds.y).config(&cfg))?;
+            let fit =
+                engine.fit(&FitRequest::new(&ds.x, &ds.y).config(&cfg).executor(executor))?;
             println!(
-                "fit done in {} — strategy={} nodes={} threads={} backend={}",
+                "fit done in {} — strategy={} nodes={} threads={} backend={} executor={}",
                 human_secs(sw.secs()),
                 cfg.strategy,
                 cfg.nodes,
                 cfg.threads_per_node,
-                cfg.backend
+                cfg.backend,
+                match executor {
+                    ExecutorKind::Thread => "thread".to_string(),
+                    ExecutorKind::Process { workers } => format!("process×{workers}"),
+                }
             );
             println!("batches: {:?}", fit.batches);
             println!(
@@ -200,6 +214,27 @@ fn cmd_fit(args: &Args) -> Result<()> {
                     human_bytes(e.bytes as u64),
                     e.last_touch
                 );
+            }
+            // Process-pool observability (only present after a
+            // process-executed fit spawned workers).
+            if let Some(ps) = engine.process_pool_stats() {
+                println!(
+                    "worker pool: {} worker(s), {} graph(s), {} task(s) dispatched, {} broadcast, {} returned",
+                    ps.workers,
+                    ps.graphs_run,
+                    ps.tasks_dispatched,
+                    human_bytes(ps.bytes_broadcast as u64),
+                    human_bytes(ps.bytes_returned as u64)
+                );
+                for (i, w) in ps.worker_stats.iter().enumerate() {
+                    println!(
+                        "  worker {i} (pid {}): {} task(s), {} broadcast, busy {}",
+                        w.pid,
+                        w.tasks_run,
+                        human_bytes(w.bytes_broadcast as u64),
+                        human_secs(w.busy_secs)
+                    );
+                }
             }
         }
         "xla" => {

@@ -312,10 +312,17 @@ pub fn task_graph(shape: FitShape, cfg: &DistConfig, cal: &Calibration) -> TaskG
 /// the plan to its cache mid-execution, so single-flight waiters parked
 /// on the same design unblock after the decompositions rather than
 /// after the winner's entire fit.
+///
+/// `x_shared` is the Arc the assembled plan will hold. Callers that
+/// already own X behind an Arc (the engine's cache admission path) pass
+/// it through so the plan shares their allocation; it is required iff
+/// the graph has an assemble barrier (the self-contained strategies
+/// never need it).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn instantiate<'a>(
     graph: TaskGraph<TaskKind>,
     x: &'a Mat,
+    x_shared: Option<Arc<Mat>>,
     y: &'a Mat,
     splits: &'a [Split],
     backend: Backend,
@@ -325,14 +332,6 @@ pub(crate) fn instantiate<'a>(
     plan_elapsed: &'a Mutex<f64>,
     on_plan: Option<&'a (dyn Fn(&Arc<DesignPlan>) + Sync)>,
 ) -> TaskGraph<TaskFn<'a, TaskOutput>> {
-    // The assembled plan shares X behind an Arc instead of owning a
-    // private clone; materialize that Arc once, only when the graph has
-    // an assemble barrier (the self-contained strategies never need it).
-    let x_shared = graph
-        .payloads
-        .iter()
-        .any(|k| matches!(k, TaskKind::Assemble))
-        .then(|| Arc::new(x.clone()));
     graph.map(move |kind| match kind {
         TaskKind::SelfContained { j0, j1 } => {
             let yb = y.cols_slice(j0, j1);
@@ -587,6 +586,7 @@ mod tests {
         let executed = instantiate(
             priced.clone(),
             &x,
+            Some(Arc::new(x.clone())),
             &y,
             &splits,
             cfg.backend,

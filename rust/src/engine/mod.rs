@@ -58,6 +58,7 @@
 mod cache;
 
 use std::fmt;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -76,7 +77,10 @@ use crate::encoding::{EncodeOpts, EncodingResult, RSummary};
 use crate::linalg::Mat;
 use crate::perfmodel::{Calibration, FitShape};
 use crate::ridge::{self, DesignPlan, RidgeCvFit, RidgeTimings};
-use crate::scheduler::{DesExecutor, Executor, Schedule, ThreadExecutor};
+use crate::scheduler::{
+    DesExecutor, Executor, PoolStats, ProcessCtx, ProcessError, ProcessExecutor, Schedule,
+    ThreadExecutor,
+};
 
 /// Typed failure of an engine request. Every constructor that used to
 /// panic on bad input (dimension mismatches, empty grids, zero nodes)
@@ -103,6 +107,14 @@ pub enum EngineError {
     EmptyLambdaGrid,
     /// Outer test fraction outside (0, 1).
     InvalidTestFraction { test_frac: f64 },
+    /// A worker process died while owning `task` (process executor).
+    WorkerLost { worker: usize, task: String },
+    /// A dispatched task exceeded the process executor's per-task
+    /// deadline.
+    TaskTimeout { task: String, timeout_secs: u64 },
+    /// The worker pool failed outside a specific running task: spawn
+    /// failure, wire-protocol violation, or a worker-side panic.
+    WorkerPool { detail: String },
 }
 
 impl fmt::Display for EngineError {
@@ -126,6 +138,25 @@ impl fmt::Display for EngineError {
             EngineError::InvalidTestFraction { test_frac } => {
                 write!(f, "test fraction must be in (0, 1), got {test_frac}")
             }
+            EngineError::WorkerLost { worker, task } => {
+                write!(f, "worker process {worker} lost while running `{task}`")
+            }
+            EngineError::TaskTimeout { task, timeout_secs } => {
+                write!(f, "task `{task}` exceeded the {timeout_secs}s worker deadline")
+            }
+            EngineError::WorkerPool { detail } => write!(f, "worker pool failure: {detail}"),
+        }
+    }
+}
+
+impl From<ProcessError> for EngineError {
+    fn from(e: ProcessError) -> Self {
+        match e {
+            ProcessError::WorkerLost { worker, task } => EngineError::WorkerLost { worker, task },
+            ProcessError::TaskTimeout { task, timeout_secs } => {
+                EngineError::TaskTimeout { task, timeout_secs }
+            }
+            other => EngineError::WorkerPool { detail: other.to_string() },
         }
     }
 }
@@ -136,13 +167,77 @@ impl std::error::Error for EngineError {}
 // Requests
 // ---------------------------------------------------------------------------
 
+/// A design-matrix input: borrowed from the caller or shared behind an
+/// [`Arc`].
+///
+/// The distinction matters at the cold-fit boundary: the cache-resident
+/// [`DesignPlan`] holds X behind an `Arc`, so a borrowed design must be
+/// cloned once at admission, while an `Arc` input is adopted as-is —
+/// whole-brain designs are never duplicated. Built via `From`, so call
+/// sites stay `FitRequest::new(&x, &y)` or pass `Arc<Mat>` directly.
+#[derive(Clone, Debug)]
+pub enum DesignRef<'a> {
+    Borrowed(&'a Mat),
+    Shared(Arc<Mat>),
+}
+
+impl DesignRef<'_> {
+    fn mat(&self) -> &Mat {
+        match self {
+            DesignRef::Borrowed(m) => m,
+            DesignRef::Shared(m) => m,
+        }
+    }
+
+    /// The `Arc` the assembled plan will hold: the caller's own for
+    /// shared inputs, a one-time clone for borrowed ones.
+    fn to_shared(&self) -> Arc<Mat> {
+        match self {
+            DesignRef::Borrowed(m) => Arc::new((*m).clone()),
+            DesignRef::Shared(m) => Arc::clone(m),
+        }
+    }
+}
+
+impl<'a> From<&'a Mat> for DesignRef<'a> {
+    fn from(m: &'a Mat) -> Self {
+        DesignRef::Borrowed(m)
+    }
+}
+
+impl<'a> From<Arc<Mat>> for DesignRef<'a> {
+    fn from(m: Arc<Mat>) -> Self {
+        DesignRef::Shared(m)
+    }
+}
+
+impl<'a> From<&Arc<Mat>> for DesignRef<'a> {
+    fn from(m: &Arc<Mat>) -> Self {
+        DesignRef::Shared(Arc::clone(m))
+    }
+}
+
+/// Which executor runs a cold fit's task graph ([`FitRequest::executor`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// In-process worker threads (`scheduler::ThreadExecutor`) — the
+    /// default.
+    Thread,
+    /// A pool of spawned worker processes
+    /// (`scheduler::ProcessExecutor`); `workers` is clamped to at
+    /// least 1. The engine keeps the pool alive across fits, so repeat
+    /// cold fits at the same width reuse warm workers.
+    Process { workers: usize },
+}
+
 /// Builder for a functional distributed fit ([`Engine::fit`]).
 ///
 /// Defaults mirror [`DistConfig::default`]: B-MOR on one node, one
-/// thread, MKL-like backend, 3 inner folds, seed 0, the paper's λ grid.
+/// thread, MKL-like backend, 3 inner folds, seed 0, the paper's λ grid,
+/// thread executor.
 #[derive(Clone, Debug)]
 pub struct FitRequest<'a> {
-    x: &'a Mat,
+    x: DesignRef<'a>,
     y: &'a Mat,
     strategy: Strategy,
     nodes: usize,
@@ -151,13 +246,14 @@ pub struct FitRequest<'a> {
     folds: usize,
     seed: u64,
     lambdas: Vec<f64>,
+    executor: ExecutorKind,
 }
 
 impl<'a> FitRequest<'a> {
-    pub fn new(x: &'a Mat, y: &'a Mat) -> Self {
+    pub fn new(x: impl Into<DesignRef<'a>>, y: &'a Mat) -> Self {
         let d = DistConfig::default();
         Self {
-            x,
+            x: x.into(),
             y,
             strategy: d.strategy,
             nodes: d.nodes,
@@ -166,7 +262,17 @@ impl<'a> FitRequest<'a> {
             folds: d.inner_folds,
             seed: d.seed,
             lambdas: ridge::LAMBDA_GRID.to_vec(),
+            executor: ExecutorKind::Thread,
         }
+    }
+
+    /// Select the executor for cold fits. Warm (cache-hit) fits always
+    /// run in-process: the plan is already resident on the coordinator,
+    /// and re-broadcasting its factors to workers would redo the very
+    /// shipment the cache exists to skip.
+    pub fn executor(mut self, executor: ExecutorKind) -> Self {
+        self.executor = executor;
+        self
     }
 
     pub fn strategy(mut self, strategy: Strategy) -> Self {
@@ -228,20 +334,21 @@ impl<'a> FitRequest<'a> {
     }
 
     fn validate(&self) -> Result<(), EngineError> {
-        if self.x.rows() == 0 || self.x.cols() == 0 {
-            return Err(EngineError::EmptyDesign { rows: self.x.rows(), cols: self.x.cols() });
+        let x = self.x.mat();
+        if x.rows() == 0 || x.cols() == 0 {
+            return Err(EngineError::EmptyDesign { rows: x.rows(), cols: x.cols() });
         }
-        if self.x.rows() != self.y.rows() {
+        if x.rows() != self.y.rows() {
             return Err(EngineError::DimensionMismatch {
-                x_rows: self.x.rows(),
+                x_rows: x.rows(),
                 y_rows: self.y.rows(),
             });
         }
         if self.y.cols() == 0 {
             return Err(EngineError::EmptyTargets);
         }
-        if self.folds < 2 || self.folds > self.x.rows() {
-            return Err(EngineError::InvalidFolds { folds: self.folds, samples: self.x.rows() });
+        if self.folds < 2 || self.folds > x.rows() {
+            return Err(EngineError::InvalidFolds { folds: self.folds, samples: x.rows() });
         }
         if self.nodes == 0 {
             return Err(EngineError::ZeroNodes);
@@ -344,6 +451,18 @@ impl SimRequest {
         }
         Ok(())
     }
+}
+
+/// A batch-count decision from [`Engine::placement`]: the perfmodel
+/// graduated from reporting tool to scheduler.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Chosen batch count (the `nodes` knob handed to the emission).
+    pub batches: usize,
+    /// Predicted makespan at that choice, seconds.
+    pub predicted_makespan: f64,
+    /// Every candidate `(batch count, predicted makespan)`, ascending.
+    pub candidates: Vec<(usize, f64)>,
 }
 
 /// Builder for a full encoding experiment ([`Engine::encode`]): outer
@@ -449,6 +568,12 @@ pub struct Engine {
     cal: Calibration,
     cluster: ClusterSpec,
     plans: PlanCache,
+    /// Lazily spawned process pool, kept alive across fits so repeat
+    /// process-executed cold fits reuse warm workers. Replaced (and
+    /// gracefully shut down via its `Drop`) when a request asks for a
+    /// different worker count.
+    pool: Mutex<Option<Arc<ProcessExecutor>>>,
+    worker_bin: Option<PathBuf>,
 }
 
 impl Default for Engine {
@@ -467,7 +592,13 @@ impl Engine {
     }
 
     pub fn with_calibration(cal: Calibration, cluster: ClusterSpec) -> Self {
-        Engine { cal, cluster, plans: PlanCache::new(DEFAULT_CACHE_BUDGET) }
+        Engine {
+            cal,
+            cluster,
+            plans: PlanCache::new(DEFAULT_CACHE_BUDGET),
+            pool: Mutex::new(None),
+            worker_bin: None,
+        }
     }
 
     /// Set the plan-cache byte budget (builder-style, construction-time).
@@ -477,6 +608,42 @@ impl Engine {
     pub fn with_cache_budget(mut self, bytes: usize) -> Self {
         self.plans.set_budget(bytes);
         self
+    }
+
+    /// Explicit worker binary for the process executor (tests pass
+    /// `env!("CARGO_BIN_EXE_fmri-encode")`; the default resolution is
+    /// the `FMRI_ENCODE_WORKER_BIN` environment variable, then the
+    /// current executable).
+    pub fn with_worker_bin(mut self, bin: impl Into<PathBuf>) -> Self {
+        self.worker_bin = Some(bin.into());
+        self
+    }
+
+    /// Observability snapshot of the process pool (`None` until the
+    /// first process-executed fit spawns it): per-worker task counts,
+    /// broadcast/returned bytes and busy wall times — the distributed
+    /// counterpart of [`Engine::cache_stats`].
+    pub fn process_pool_stats(&self) -> Option<PoolStats> {
+        lock_recover(&self.pool).as_ref().map(|p| p.stats())
+    }
+
+    /// The engine-held pool at the requested width, spawning or
+    /// replacing as needed.
+    fn process_pool(&self, workers: usize) -> Arc<ProcessExecutor> {
+        let workers = workers.max(1);
+        let mut slot = lock_recover(&self.pool);
+        match slot.as_ref() {
+            Some(p) if p.workers() == workers => Arc::clone(p),
+            _ => {
+                let mut exec = ProcessExecutor::new(workers);
+                if let Some(bin) = &self.worker_bin {
+                    exec = exec.with_worker_bin(bin.clone());
+                }
+                let exec = Arc::new(exec);
+                *slot = Some(Arc::clone(&exec));
+                exec
+            }
+        }
     }
 
     pub fn calibration(&self) -> &Calibration {
@@ -523,36 +690,64 @@ impl Engine {
     pub fn fit(&self, req: &FitRequest) -> Result<DistributedFit, EngineError> {
         req.validate()?;
         let cfg = req.dist_config();
-        let splits = kfold(req.x.rows(), cfg.inner_folds, Some(cfg.seed));
+        let x = req.x.mat();
+        let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+        let pool = match req.executor {
+            ExecutorKind::Thread => None,
+            ExecutorKind::Process { workers } => Some(self.process_pool(workers)),
+        };
         if cfg.strategy == Strategy::Bmor {
-            let key = PlanKey::new(
-                req.x,
-                &splits,
-                &req.lambdas,
-                cfg.backend,
-                cfg.threads_per_node,
-            );
+            let key = PlanKey::new(x, &splits, &req.lambdas, cfg.backend, cfg.threads_per_node);
             match self.plans.lease(key) {
+                // Warm fits always run in-process: the plan is resident
+                // on the coordinator, and shipping its factors back out
+                // would redo the broadcast the cache exists to skip.
                 Lease::Hit(plan) => Ok(warm_fit(&plan, req.y, &cfg)),
                 Lease::Build(guard) => {
                     // Publish from inside the assemble barrier: waiters
                     // parked on this key unblock as soon as the factors
                     // exist, while this fit's sweeps are still running.
-                    // If the build unwinds before assembling, `pending`
-                    // drops the unfulfilled guard and releases the claim.
+                    // If the build unwinds — or a worker dies — before
+                    // assembling, `pending` drops the unfulfilled guard
+                    // and releases the claim.
                     let pending = Mutex::new(Some(guard));
                     let publish = |plan: &Arc<DesignPlan>| {
                         if let Some(g) = lock_recover(&pending).take() {
                             g.fulfill(plan);
                         }
                     };
-                    let (fit, _plan) =
-                        cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas, Some(&publish));
+                    // Adopt the caller's Arc (or clone a borrowed X
+                    // exactly once) for the cache-resident plan.
+                    let (fit, _plan) = cold_fit(
+                        x,
+                        Some(req.x.to_shared()),
+                        req.y,
+                        &cfg,
+                        &splits,
+                        &req.lambdas,
+                        Some(&publish),
+                        match &pool {
+                            Some(p) => ColdExec::Process(p.as_ref()),
+                            None => ColdExec::Thread,
+                        },
+                    )?;
                     Ok(fit)
                 }
             }
         } else {
-            let (fit, _) = cold_fit(req.x, req.y, &cfg, &splits, &req.lambdas, None);
+            let (fit, _) = cold_fit(
+                x,
+                None,
+                req.y,
+                &cfg,
+                &splits,
+                &req.lambdas,
+                None,
+                match &pool {
+                    Some(p) => ColdExec::Process(p.as_ref()),
+                    None => ColdExec::Thread,
+                },
+            )?;
             Ok(fit)
         }
     }
@@ -565,6 +760,35 @@ impl Engine {
         spec.nodes = req.nodes;
         let cfg = req.dist_config();
         Ok(DesExecutor::new(spec).execute(task_graph(req.shape, &cfg, &self.cal)))
+    }
+
+    /// The perfmodel as a **placement scheduler**: price the request's
+    /// emission at every batch count `c` in `1..=nodes` (capped by the
+    /// target count — a batch needs at least one target) on the fixed
+    /// `nodes`-wide cluster, and pick the `c` minimizing the predicted
+    /// makespan. Ties break toward fewer batches (less plan broadcast,
+    /// fewer sweep dispatches). The prediction is validated against
+    /// measured process-executor runs in `bench_cluster`
+    /// (`perfmodel::rel_error`).
+    pub fn placement(&self, req: &SimRequest) -> Result<Placement, EngineError> {
+        req.validate()?;
+        let mut spec = self.cluster.clone();
+        spec.nodes = req.nodes;
+        let max_c = req.nodes.min(req.shape.t).max(1);
+        let mut candidates = Vec::with_capacity(max_c);
+        for c in 1..=max_c {
+            // Hardware stays `nodes` wide; only the emission's batch
+            // count varies — exactly the knob a deployment controls.
+            let cfg = DistConfig { nodes: c, ..req.dist_config() };
+            let sched =
+                DesExecutor::new(spec.clone()).execute(task_graph(req.shape, &cfg, &self.cal));
+            candidates.push((c, sched.makespan));
+        }
+        let &(batches, predicted_makespan) = candidates
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("at least one candidate");
+        Ok(Placement { batches, predicted_makespan, candidates })
     }
 
     /// Full encoding experiment (the paper's Fig. 1 pipeline): outer
@@ -657,9 +881,18 @@ fn collect_fits(
     }
 }
 
+/// Which engine runs a cold fit's graph (resolved from
+/// [`ExecutorKind`]; the process variant carries the engine-held pool).
+enum ColdExec<'e> {
+    Thread,
+    Process(&'e ProcessExecutor),
+}
+
 /// Cold path: emit the strategy's task graph ONCE (the same emission
-/// [`Engine::simulate`] prices), instantiate each node as a closure and
-/// execute it on the [`ThreadExecutor`]. For B-MOR the `splits + 1`
+/// [`Engine::simulate`] prices) and execute it — as in-process closures
+/// on the [`ThreadExecutor`], or as serialized `TaskKind` dispatches on
+/// the [`ProcessExecutor`] worker pool (bit-identical results; pinned
+/// by tests/executor_parity.rs). For B-MOR the `splits + 1`
 /// factorizations run as independent decompose tasks feeding the
 /// assemble barrier; `on_plan` fires from inside that barrier — as soon
 /// as the plan exists, before the sweeps — so the engine can publish it
@@ -667,14 +900,18 @@ fn collect_fits(
 /// unblock after the decompositions, not after the whole fit). The
 /// assembled [`Arc<DesignPlan>`] is also returned (`None` for the
 /// self-contained strategies, whose graphs have no assemble barrier).
+/// `x_shared` is the Arc that plan will hold; required for B-MOR.
+#[allow(clippy::too_many_arguments)]
 fn cold_fit(
     x: &Mat,
+    x_shared: Option<Arc<Mat>>,
     y: &Mat,
     cfg: &DistConfig,
     splits: &[Split],
     lambdas: &[f64],
     on_plan: Option<&(dyn Fn(&Arc<DesignPlan>) + Sync)>,
-) -> (DistributedFit, Option<Arc<DesignPlan>>) {
+    exec: ColdExec<'_>,
+) -> Result<(DistributedFit, Option<Arc<DesignPlan>>), EngineError> {
     let t = y.cols();
     let p = x.cols();
     let batches = strategy_batches(cfg.strategy, t, cfg.nodes);
@@ -691,19 +928,39 @@ fn cold_fit(
 
     let started = Instant::now();
     let plan_elapsed = Mutex::new(0.0f64);
-    let runnable = instantiate(
-        graph,
-        x,
-        y,
-        splits,
-        cfg.backend,
-        cfg.threads_per_node,
-        lambdas,
-        started,
-        &plan_elapsed,
-        on_plan,
-    );
-    let outs = ThreadExecutor::new(cfg.nodes).execute(runnable);
+    let outs = match exec {
+        ColdExec::Thread => {
+            let runnable = instantiate(
+                graph,
+                x,
+                x_shared,
+                y,
+                splits,
+                cfg.backend,
+                cfg.threads_per_node,
+                lambdas,
+                started,
+                &plan_elapsed,
+                on_plan,
+            );
+            ThreadExecutor::new(cfg.nodes).execute(runnable)
+        }
+        ColdExec::Process(pool) => {
+            let ctx = ProcessCtx {
+                x,
+                x_shared,
+                y,
+                splits,
+                lambdas,
+                backend: cfg.backend,
+                threads: cfg.threads_per_node,
+                started,
+                plan_elapsed: &plan_elapsed,
+                on_plan,
+            };
+            pool.session(ctx).execute(graph)?
+        }
+    };
     let wall_secs = started.elapsed().as_secs_f64();
 
     // Collect: batch fits arrive in task-id order, which is batch order.
@@ -723,7 +980,7 @@ fn cold_fit(
     }
     let plan_secs = *lock_recover(&plan_elapsed);
     let fit = collect_fits(p, t, fits, batches, timings, wall_secs, plan_secs, false);
-    (fit, plan_arc)
+    Ok((fit, plan_arc))
 }
 
 /// Warm path: the design's factors are already resident, so the graph

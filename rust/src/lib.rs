@@ -20,12 +20,38 @@
 //! for a batch against that shared plan. `coordinator::task_graph` emits
 //! each strategy's DAG exactly once as a `scheduler::TaskGraph` with
 //! typed payloads (B-MOR: parallel decompose tasks → assemble barrier →
-//! per-batch sweeps) and both engines consume it through the
+//! per-batch sweeps) and THREE executors consume it through the
 //! `scheduler::Executor` abstraction: `ThreadExecutor` runs the closures
-//! for real (functional path), `DesExecutor` prices the identical nodes
-//! with `perfmodel` costs on the cluster DES (timing path). The O(p³)
-//! eigendecomposition count is `splits + 1`, independent of the batch
-//! count, and the two paths cannot structurally diverge.
+//! for real (functional path), `ProcessExecutor` runs the same emission
+//! across spawned worker processes (distributed path), and `DesExecutor`
+//! prices the identical nodes with `perfmodel` costs on the cluster DES
+//! (timing path). The O(p³) eigendecomposition count is `splits + 1`,
+//! independent of the batch count, and the three paths cannot
+//! structurally diverge.
+//!
+//! The process executor (`scheduler::process`) makes the cluster real:
+//! workers are re-executions of the CLI binary (`FMRI_ENCODE_WORKER=1`,
+//! `scheduler::worker_entry`) speaking a length-prefixed binary protocol
+//! over pipes (`scheduler::wire`) in which every f64 travels as IEEE-754
+//! bits — X and the assembled plan factors (V, e, A) are broadcast once
+//! per worker, exactly the shipment `cluster::broadcast_share` and
+//! `perfmodel::plan_bytes` price, and per-worker broadcast/return bytes
+//! are surfaced through `engine::Engine::process_pool_stats`. Assemble
+//! barriers run inline on the coordinator (their inputs live there);
+//! warm cache hits always run in-process, because re-broadcasting
+//! factors would redo the very shipment the plan cache exists to skip.
+//! Failure semantics are typed, never a hang: a dead worker surfaces as
+//! `WorkerLost`, a deadline overrun as `TaskTimeout`, a worker-side
+//! panic ships back as `TaskPanicked`, and a failed run kills the pool
+//! so the next graph starts on fresh workers. Because the wire format is
+//! bit-exact and the kernels are deterministic, process-executor fits
+//! are bit-identical to thread-executor fits — pinned at multiple worker
+//! counts by `tests/executor_parity.rs` and enforced by a CI matrix over
+//! `FMRI_ENCODE_WORKERS`. The perfmodel doubles as a placement
+//! scheduler: `engine::Engine::placement` picks the batch count by
+//! minimizing DES-predicted makespan, and `bench_cluster` validates
+//! prediction against the measured multi-process run
+//! (`BENCH_cluster.json` CI artifact).
 //!
 //! The public entry point is `engine::Engine`, the long-lived session
 //! over all of the above: builder-style `FitRequest` / `SimRequest` /

@@ -1,3 +1,7 @@
 fn main() -> anyhow::Result<()> {
+    // A spawned worker process re-executes this binary with
+    // FMRI_ENCODE_WORKER set; worker_entry takes over (and exits) in
+    // that case, before any CLI parsing.
+    fmri_encode::scheduler::worker_entry();
     fmri_encode::cli::run()
 }

@@ -312,6 +312,18 @@ pub fn sweep_task_cost(
     }
 }
 
+/// Relative error of a model prediction against a measurement:
+/// `|predicted − measured| / measured`. The predicted-vs-measured
+/// makespan validation loop (`bench_cluster`, `BENCH_cluster.json`)
+/// reports this per worker count. A zero measurement with a nonzero
+/// prediction is infinitely wrong; zero vs zero is a perfect 0.
+pub fn rel_error(predicted: f64, measured: f64) -> f64 {
+    if measured == 0.0 {
+        return if predicted == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    ((predicted - measured) / measured).abs()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,6 +357,14 @@ mod tests {
             mor8x > 3.0 * single,
             "mor {mor8x:.3e} vs single {single:.3e}"
         );
+    }
+
+    #[test]
+    fn rel_error_is_symmetric_in_sign_and_handles_zero() {
+        assert_eq!(rel_error(1.25, 1.0), rel_error(0.75, 1.0));
+        assert_eq!(rel_error(1.5, 1.0), 0.5);
+        assert_eq!(rel_error(0.0, 0.0), 0.0);
+        assert_eq!(rel_error(1.0, 0.0), f64::INFINITY);
     }
 
     #[test]

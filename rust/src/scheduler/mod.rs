@@ -1,4 +1,4 @@
-//! Dask-like task-graph scheduler: ONE graph, TWO executors.
+//! Dask-like task-graph scheduler: ONE graph, THREE executors.
 //!
 //! The paper drives scikit-learn through joblib's Dask backend: a leader
 //! process holds a task graph, dispatches ready tasks to worker nodes, and
@@ -8,19 +8,28 @@
 //! * [`TaskGraph`] — named tasks, explicit dependencies, per-task cost and
 //!   thread width, plus a typed payload per task (a strategy descriptor,
 //!   a closure, or `()`);
-//! * [`Executor`] — the common abstraction both engines sit behind: an
+//! * [`Executor`] — the common abstraction the engines sit behind: an
 //!   executor consumes a graph and produces its kind of result;
 //! * [`ThreadExecutor`] — really runs closure payloads on `nodes` worker
 //!   threads, respecting dependencies and feeding each task its
 //!   dependencies' outputs (the functional path: actual ridge fits);
+//! * [`ProcessExecutor`] — really runs descriptor payloads
+//!   (`coordinator::TaskKind`) on a pool of spawned worker *processes*
+//!   over the [`wire`] pipe protocol: X broadcast once per worker, the
+//!   assemble barrier on the coordinator, plan factors (V, e, A)
+//!   broadcast once per worker — the distribution pattern
+//!   `cluster::broadcast_share` prices, made real (see [`process`]);
 //! * [`DesExecutor`] — prices the *identical* nodes with their
 //!   [`TaskCost`]s and schedules them onto the [`crate::cluster`]
 //!   simulator (list scheduling: earliest-free gang slot, releases
 //!   respect deps) — the timing path behind the scaling figures.
 //!
-//! Because both executors consume the same [`TaskGraph`], the functional
-//! and simulated paths cannot structurally diverge: the coordinator emits
-//! the decompose→assemble→sweep DAG once and hands it to either engine.
+//! Because all executors consume the same [`TaskGraph`], the functional,
+//! multi-process and simulated paths cannot structurally diverge: the
+//! coordinator emits the decompose→assemble→sweep DAG once and hands it
+//! to any engine. Thread- and process-executed fits are additionally
+//! **bit-identical** (exact IEEE-754 wire format + deterministic
+//! kernels), pinned by `tests/executor_parity.rs`.
 //!
 //! Invariants (property-tested): every task runs exactly once; no task
 //! starts before all dependencies finish; the DES makespan is bounded
@@ -30,6 +39,14 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::cluster::{ClusterSpec, TaskCost};
+
+pub mod process;
+pub(crate) mod wire;
+
+pub use process::{
+    worker_entry, PoolStats, ProcessCtx, ProcessError, ProcessExecutor, ProcessSession,
+    WorkerStats,
+};
 
 /// Execution-relevant description of a node (what the DES prices).
 #[derive(Clone, Debug)]

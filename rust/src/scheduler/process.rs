@@ -1,0 +1,1095 @@
+//! Multi-process executor: the B-MOR task graph across real OS processes.
+//!
+//! [`ProcessExecutor`] is the third consumer of the ONE graph emission
+//! (`coordinator::task_graph`), next to [`ThreadExecutor`] (in-process
+//! closures) and [`DesExecutor`] (cluster pricing): it dispatches the
+//! identical `TaskKind` nodes to a pool of spawned **worker processes**
+//! over a pipe protocol (`scheduler::wire`) and collects their outputs
+//! back on the coordinator — the paper's leader/worker control plane
+//! (§2.3.4), made of processes instead of Dask nodes.
+//!
+//! Data movement mirrors what `cluster::broadcast_share` prices:
+//!
+//! * **Init broadcast** — X, the CV split index sets and the λ grid go
+//!   to every worker once per graph (a node stages one copy of the
+//!   design, shared by all tasks resident there);
+//! * **Plan broadcast** — the assemble barrier runs **on the
+//!   coordinator** (it joins outputs that live here), then ships the
+//!   shared factors (per-split V, e, A + full-train V, e — exactly
+//!   `perfmodel::plan_bytes`) to every worker once;
+//! * **Task dispatch** — a `TaskKind` plus, for target-dependent tasks,
+//!   the batch's Y columns; outputs return through the coordinator
+//!   (dependency shipping), never worker-to-worker.
+//!
+//! Workers are re-executions of the CLI binary: `main` calls
+//! [`worker_entry`] first, which takes over the process when
+//! `FMRI_ENCODE_WORKER=1` is set. All floats travel as exact IEEE-754
+//! bit patterns and workers run the same deterministic kernels (same
+//! machine → same ISA dispatch; `FMRI_ENCODE_FORCE_SCALAR` is inherited
+//! from the coordinator's environment), so a process-executed fit is
+//! **bit-identical** to the thread-executed one — pinned by
+//! `tests/executor_parity.rs` across worker counts.
+//!
+//! Failure semantics: a worker death mid-task surfaces as
+//! [`ProcessError::WorkerLost`] (never a hang — the per-worker reader
+//! thread turns pipe EOF into an event), slow tasks hit the configurable
+//! [`ProcessError::TaskTimeout`], and a worker-side panic is caught and
+//! shipped back as [`ProcessError::TaskPanicked`]. Any failed run kills
+//! the pool; the executor itself stays usable — the next run respawns
+//! fresh workers. Dropping the executor sends a shutdown frame (workers
+//! finish their in-flight task, then exit) and reaps with a bounded
+//! wait. Observability: [`ProcessExecutor::stats`] surfaces per-worker
+//! task counts, broadcast/returned bytes and busy wall time, in the
+//! spirit of the engine's `CacheStats`.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::panic::{self, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::blas::{Backend, Blas};
+use crate::coordinator::{TaskKind, TaskOutput};
+use crate::cv::Split;
+use crate::linalg::Mat;
+use crate::ridge::{self, DesignPlan, FullDesign, RidgeTimings, SplitDesign};
+use crate::scheduler::wire::{
+    read_msg, write_msg, DoneMsg, FailMsg, InitMsg, PlanMsg, TaskMsg, WireOutput, WireSplit,
+    TAG_DONE, TAG_FAIL, TAG_INIT, TAG_PLAN, TAG_SHUTDOWN, TAG_TASK,
+};
+use crate::scheduler::{Executor, TaskGraph};
+
+/// Set in a spawned worker's environment; [`worker_entry`] takes over the
+/// process when present.
+pub const WORKER_ENV: &str = "FMRI_ENCODE_WORKER";
+/// Overrides the worker binary path (default: `std::env::current_exe`).
+pub const WORKER_BIN_ENV: &str = "FMRI_ENCODE_WORKER_BIN";
+/// Fault injection for the robustness tests: a worker exits immediately
+/// when dispatched a task whose name contains this substring.
+pub const WORKER_DIE_ENV: &str = "FMRI_ENCODE_WORKER_DIE_ON";
+
+/// Default per-task deadline (decompose tasks on whole-brain designs are
+/// minutes at most; anything longer means a wedged worker).
+pub const DEFAULT_TASK_TIMEOUT: Duration = Duration::from_secs(300);
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed failure of a process-executor run. The engine maps these onto
+/// `EngineError` so serving callers see one error surface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProcessError {
+    /// A worker binary could not be spawned (or located).
+    Spawn { worker: usize, detail: String },
+    /// A worker died (pipe closed) while owning `task`, or while tasks
+    /// were still pending with no surviving capacity.
+    WorkerLost { worker: usize, task: String },
+    /// A dispatched task exceeded the per-task deadline.
+    TaskTimeout { task: String, timeout_secs: u64 },
+    /// The task panicked inside the worker (caught and shipped back).
+    TaskPanicked { task: String, detail: String },
+    /// A malformed or unexpected frame on the wire.
+    Protocol { worker: usize, detail: String },
+}
+
+impl fmt::Display for ProcessError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProcessError::Spawn { worker, detail } => {
+                write!(f, "failed to spawn worker {worker}: {detail}")
+            }
+            ProcessError::WorkerLost { worker, task } => {
+                write!(f, "worker {worker} lost while running `{task}`")
+            }
+            ProcessError::TaskTimeout { task, timeout_secs } => {
+                write!(f, "task `{task}` exceeded the {timeout_secs}s deadline")
+            }
+            ProcessError::TaskPanicked { task, detail } => {
+                write!(f, "task `{task}` panicked in its worker: {detail}")
+            }
+            ProcessError::Protocol { worker, detail } => {
+                write!(f, "wire protocol violation from worker {worker}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProcessError {}
+
+// ---------------------------------------------------------------------------
+// Observability
+// ---------------------------------------------------------------------------
+
+/// Per-worker counters (slot-cumulative: a respawned worker inherits its
+/// slot's history; `pid` is the current process).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerStats {
+    pub pid: u32,
+    pub tasks_run: usize,
+    pub bytes_broadcast: usize,
+    pub bytes_returned: usize,
+    /// Wall time between dispatch and completion, summed over tasks.
+    pub busy_secs: f64,
+}
+
+/// Pool-level observability snapshot ([`ProcessExecutor::stats`]) — the
+/// process-executor analogue of the engine's `CacheStats`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Configured pool width.
+    pub workers: usize,
+    /// Worker processes spawned over the executor's lifetime (respawns
+    /// after a failed run included).
+    pub spawns: usize,
+    /// Graphs run to completion.
+    pub graphs_run: usize,
+    /// Tasks dispatched to workers (coordinator-side assembles excluded).
+    pub tasks_dispatched: usize,
+    /// Total broadcast bytes (Init + Plan frames, summed over workers).
+    pub bytes_broadcast: usize,
+    /// Total result bytes shipped back from workers.
+    pub bytes_returned: usize,
+    /// Wall time of completed graph runs.
+    pub run_secs: f64,
+    pub worker_stats: Vec<WorkerStats>,
+}
+
+// ---------------------------------------------------------------------------
+// Pool plumbing
+// ---------------------------------------------------------------------------
+
+enum WorkerReply {
+    Done(DoneMsg),
+    Fail(FailMsg),
+}
+
+/// (slot, spawn generation, decoded reply + frame bytes | death reason).
+type Event = (usize, u64, Result<(WorkerReply, usize), String>);
+
+struct Worker {
+    child: Child,
+    stdin: BufWriter<ChildStdin>,
+    gen: u64,
+}
+
+struct Pool {
+    slots: Vec<Option<Worker>>,
+    stats: PoolStats,
+    next_gen: u64,
+}
+
+fn kill_pool(pool: &mut Pool) {
+    for slot in &mut pool.slots {
+        if let Some(mut w) = slot.take() {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+    }
+}
+
+/// Everything a run needs besides the graph: the data the broadcasts
+/// carry and the plan-publication hooks the engine threads through
+/// (mirroring `coordinator::instantiate`'s environment).
+pub struct ProcessCtx<'a> {
+    pub x: &'a Mat,
+    /// Arc'd X for the assembled plan (required iff the graph has an
+    /// assemble barrier). The engine passes its cache-resident Arc so
+    /// admission does not clone the design.
+    pub x_shared: Option<Arc<Mat>>,
+    pub y: &'a Mat,
+    pub splits: &'a [Split],
+    pub lambdas: &'a [f64],
+    pub backend: Backend,
+    pub threads: usize,
+    pub started: Instant,
+    pub plan_elapsed: &'a Mutex<f64>,
+    pub on_plan: Option<&'a (dyn Fn(&Arc<DesignPlan>) + Sync)>,
+}
+
+/// A process pool that executes `TaskKind` graphs. Construction is lazy:
+/// workers spawn at the first run and persist across runs (each run
+/// re-broadcasts its Init, so state never leaks between graphs); a
+/// failed run kills the pool and the next run respawns it.
+pub struct ProcessExecutor {
+    workers: usize,
+    worker_bin: Option<PathBuf>,
+    worker_env: Vec<(String, String)>,
+    task_timeout: Duration,
+    state: Mutex<Pool>,
+    events_tx: Sender<Event>,
+    events_rx: Mutex<Receiver<Event>>,
+}
+
+impl ProcessExecutor {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        ProcessExecutor {
+            workers,
+            worker_bin: None,
+            worker_env: Vec::new(),
+            task_timeout: DEFAULT_TASK_TIMEOUT,
+            state: Mutex::new(Pool {
+                slots: (0..workers).map(|_| None).collect(),
+                stats: PoolStats {
+                    workers,
+                    worker_stats: vec![WorkerStats::default(); workers],
+                    ..PoolStats::default()
+                },
+                next_gen: 0,
+            }),
+            events_tx: tx,
+            events_rx: Mutex::new(rx),
+        }
+    }
+
+    /// Explicit worker binary (tests pass `env!("CARGO_BIN_EXE_...")`;
+    /// default is [`WORKER_BIN_ENV`], then the current executable).
+    pub fn with_worker_bin(mut self, bin: impl Into<PathBuf>) -> Self {
+        self.worker_bin = Some(bin.into());
+        self
+    }
+
+    /// Extra environment for spawned workers (fault injection, kernel
+    /// pinning).
+    pub fn with_worker_env(mut self, key: impl Into<String>, val: impl Into<String>) -> Self {
+        self.worker_env.push((key.into(), val.into()));
+        self
+    }
+
+    /// Per-task deadline (default [`DEFAULT_TASK_TIMEOUT`]).
+    pub fn with_task_timeout(mut self, timeout: Duration) -> Self {
+        self.task_timeout = timeout;
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Observability snapshot: pool-lifetime counters plus per-worker
+    /// task counts, broadcast bytes and busy wall time.
+    pub fn stats(&self) -> PoolStats {
+        lock_recover(&self.state).stats.clone()
+    }
+
+    /// Bind run-context to the executor so it satisfies the common
+    /// [`Executor`] abstraction (the trait's `execute` takes only a
+    /// graph; the process path additionally needs the broadcast data).
+    pub fn session<'a>(&'a self, ctx: ProcessCtx<'a>) -> ProcessSession<'a> {
+        ProcessSession { exec: self, ctx }
+    }
+
+    fn resolve_bin(&self) -> Result<PathBuf, ProcessError> {
+        if let Some(b) = &self.worker_bin {
+            return Ok(b.clone());
+        }
+        if let Some(b) = std::env::var_os(WORKER_BIN_ENV) {
+            return Ok(PathBuf::from(b));
+        }
+        std::env::current_exe().map_err(|e| ProcessError::Spawn {
+            worker: 0,
+            detail: format!("cannot resolve worker binary: {e}"),
+        })
+    }
+
+    fn spawn_worker(&self, slot: usize, gen: u64) -> Result<Worker, ProcessError> {
+        let bin = self.resolve_bin()?;
+        let mut cmd = Command::new(&bin);
+        cmd.env(WORKER_ENV, "1")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        for (k, v) in &self.worker_env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().map_err(|e| ProcessError::Spawn {
+            worker: slot,
+            detail: format!("{}: {e}", bin.display()),
+        })?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let tx = self.events_tx.clone();
+        // One reader thread per worker: decodes frames into the shared
+        // event channel and turns EOF into a death event — worker loss
+        // becomes a message, never a hang. Detached: it exits on EOF
+        // after the child is reaped.
+        std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match read_msg(&mut r) {
+                    Ok(Some((tag, payload))) => {
+                        let bytes = 1 + 8 + payload.len();
+                        let reply = match tag {
+                            TAG_DONE => DoneMsg::decode(&payload).map(WorkerReply::Done),
+                            TAG_FAIL => FailMsg::decode(&payload).map(WorkerReply::Fail),
+                            other => Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("unexpected frame tag {other} from worker"),
+                            )),
+                        };
+                        match reply {
+                            Ok(rp) => {
+                                if tx.send((slot, gen, Ok((rp, bytes)))).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = tx.send((slot, gen, Err(format!("bad frame: {e}"))));
+                                return;
+                            }
+                        }
+                    }
+                    Ok(None) => {
+                        let _ = tx.send((slot, gen, Err("worker closed its pipe".into())));
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = tx.send((slot, gen, Err(format!("pipe read failed: {e}"))));
+                        return;
+                    }
+                }
+            }
+        });
+        Ok(Worker { child, stdin: BufWriter::new(stdin), gen })
+    }
+
+    /// Fill every empty or dead slot with a fresh worker.
+    fn ensure_workers(&self, pool: &mut Pool) -> Result<(), ProcessError> {
+        for i in 0..pool.slots.len() {
+            let dead = match &mut pool.slots[i] {
+                None => true,
+                // A worker that exited between runs is reaped here.
+                Some(w) => w.child.try_wait().map(|s| s.is_some()).unwrap_or(true),
+            };
+            if dead {
+                pool.slots[i] = None;
+                let gen = pool.next_gen;
+                pool.next_gen += 1;
+                let w = self.spawn_worker(i, gen)?;
+                pool.stats.spawns += 1;
+                pool.stats.worker_stats[i].pid = w.child.id();
+                pool.slots[i] = Some(w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Send one frame to every live worker, charging broadcast bytes per
+    /// worker — the accounting `cluster::broadcast_share` models.
+    fn broadcast(&self, pool: &mut Pool, tag: u8, payload: &[u8]) -> Result<(), ProcessError> {
+        for i in 0..pool.slots.len() {
+            let wrote = match &mut pool.slots[i] {
+                Some(w) => write_msg(&mut w.stdin, tag, payload),
+                None => continue,
+            };
+            match wrote {
+                Ok(nb) => {
+                    pool.stats.bytes_broadcast += nb;
+                    pool.stats.worker_stats[i].bytes_broadcast += nb;
+                }
+                Err(e) => {
+                    return Err(ProcessError::WorkerLost {
+                        worker: i,
+                        task: format!("<broadcast failed: {e}>"),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a `TaskKind` graph on the pool. Outputs land at their task
+    /// indices, exactly like `ThreadExecutor::run_graph`. On error the
+    /// pool is killed (the next run respawns it) and the typed failure is
+    /// returned — callers never hang on a dead worker.
+    pub fn run_tasks(
+        &self,
+        graph: &TaskGraph<TaskKind>,
+        ctx: &ProcessCtx<'_>,
+    ) -> Result<Vec<TaskOutput>, ProcessError> {
+        let mut pool = lock_recover(&self.state);
+        let rx = lock_recover(&self.events_rx);
+        // Drop events from generations killed by a previous failed run.
+        while rx.try_recv().is_ok() {}
+
+        let started = Instant::now();
+        let result = self.run_inner(&mut pool, &rx, graph, ctx);
+        match result {
+            Ok(outs) => {
+                pool.stats.graphs_run += 1;
+                pool.stats.run_secs += started.elapsed().as_secs_f64();
+                Ok(outs)
+            }
+            Err(e) => {
+                kill_pool(&mut pool);
+                Err(e)
+            }
+        }
+    }
+
+    fn run_inner(
+        &self,
+        pool: &mut Pool,
+        rx: &Receiver<Event>,
+        graph: &TaskGraph<TaskKind>,
+        ctx: &ProcessCtx<'_>,
+    ) -> Result<Vec<TaskOutput>, ProcessError> {
+        let n = graph.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        self.ensure_workers(pool)?;
+        let init = InitMsg::encode(ctx.backend, ctx.threads, ctx.x, ctx.splits, ctx.lambdas);
+        self.broadcast(pool, TAG_INIT, &init)?;
+
+        let mut run = RunLoop::new(graph, ctx, pool.slots.len());
+        loop {
+            // Dispatch every ready task; assemble barriers run inline on
+            // the coordinator (their inputs live here) and may ready
+            // further tasks, so keep scanning until the queue stalls.
+            while let Some(&t) = run.ready.front() {
+                if matches!(graph.payloads[t], TaskKind::Assemble) {
+                    run.ready.pop_front();
+                    let plan_frame = run.assemble(t)?;
+                    self.broadcast(pool, TAG_PLAN, &plan_frame)?;
+                    continue;
+                }
+                let Some(w) = run.idle.pop() else { break };
+                run.ready.pop_front();
+                run.dispatch(pool, w, t)?;
+            }
+            if run.completed == n {
+                break;
+            }
+            if run.in_flight.is_empty() {
+                // Ready work, nobody running it, nobody to give it to.
+                let next = run
+                    .ready
+                    .front()
+                    .map(|&t| graph.tasks[t].name.clone())
+                    .unwrap_or_else(|| "<pending task>".into());
+                return Err(ProcessError::WorkerLost { worker: 0, task: next });
+            }
+
+            let deadline = run
+                .in_flight
+                .values()
+                .map(|&(_, t0)| t0 + self.task_timeout)
+                .min()
+                .expect("non-empty in-flight set");
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(wait) {
+                Ok(ev) => run.handle_event(pool, ev)?,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Drain anything that raced the deadline before
+                    // declaring the task dead.
+                    while let Ok(ev) = rx.try_recv() {
+                        run.handle_event(pool, ev)?;
+                    }
+                    let expired = run
+                        .in_flight
+                        .iter()
+                        .find(|(_, &(_, t0))| t0.elapsed() >= self.task_timeout)
+                        .map(|(_, &(t, _))| t);
+                    if let Some(t) = expired {
+                        return Err(ProcessError::TaskTimeout {
+                            task: graph.tasks[t].name.clone(),
+                            timeout_secs: self.task_timeout.as_secs(),
+                        });
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("executor holds a sender; channel cannot disconnect")
+                }
+            }
+        }
+
+        Ok(run
+            .outputs
+            .into_iter()
+            .map(|o| o.expect("completed run with missing output"))
+            .collect())
+    }
+}
+
+impl Drop for ProcessExecutor {
+    /// Graceful shutdown: workers get a shutdown frame (a busy worker
+    /// finishes its in-flight task first — it reads frames between
+    /// tasks), then are reaped with a bounded wait and killed only if
+    /// they overstay.
+    fn drop(&mut self) {
+        let mut pool = lock_recover(&self.state);
+        for slot in &mut pool.slots {
+            if let Some(w) = slot {
+                let _ = write_msg(&mut w.stdin, TAG_SHUTDOWN, &[]);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        for slot in &mut pool.slots {
+            if let Some(mut w) = slot.take() {
+                drop(w.stdin); // EOF: belt and braces next to the frame
+                loop {
+                    match w.child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        _ => {
+                            let _ = w.child.kill();
+                            let _ = w.child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`Executor`] adapter: a [`ProcessExecutor`] bound to one run's context
+/// (see [`ProcessExecutor::session`]).
+pub struct ProcessSession<'a> {
+    exec: &'a ProcessExecutor,
+    ctx: ProcessCtx<'a>,
+}
+
+impl Executor<TaskKind> for ProcessSession<'_> {
+    type Output = Result<Vec<TaskOutput>, ProcessError>;
+
+    fn execute(&self, graph: TaskGraph<TaskKind>) -> Self::Output {
+        self.exec.run_tasks(&graph, &self.ctx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-run scheduling loop (Kahn order + event handling)
+// ---------------------------------------------------------------------------
+
+struct RunLoop<'g, 'c> {
+    graph: &'g TaskGraph<TaskKind>,
+    ctx: &'g ProcessCtx<'c>,
+    children: Vec<Vec<usize>>,
+    indeg: Vec<usize>,
+    ready: VecDeque<usize>,
+    outputs: Vec<Option<TaskOutput>>,
+    /// worker slot → (task id, dispatch instant)
+    in_flight: HashMap<usize, (usize, Instant)>,
+    idle: Vec<usize>,
+    completed: usize,
+}
+
+impl<'g, 'c> RunLoop<'g, 'c> {
+    fn new(graph: &'g TaskGraph<TaskKind>, ctx: &'g ProcessCtx<'c>, workers: usize) -> Self {
+        let n = graph.len();
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, ds) in graph.deps.iter().enumerate() {
+            indeg[i] = ds.len();
+            for &d in ds {
+                children[d].push(i);
+            }
+        }
+        let ready: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        RunLoop {
+            graph,
+            ctx,
+            children,
+            indeg,
+            ready,
+            outputs: (0..n).map(|_| None).collect(),
+            in_flight: HashMap::new(),
+            idle: (0..workers).collect(),
+            completed: 0,
+        }
+    }
+
+    fn complete(&mut self, task: usize, out: TaskOutput) {
+        self.outputs[task] = Some(out);
+        self.completed += 1;
+        for &c in &self.children[task] {
+            self.indeg[c] -= 1;
+            if self.indeg[c] == 0 {
+                self.ready.push_back(c);
+            }
+        }
+    }
+
+    /// Run the assemble barrier on the coordinator: join the decompose
+    /// outputs into the shared [`DesignPlan`], stamp the plan wall time,
+    /// fire the engine's publish hook, and return the encoded factor
+    /// frame for the per-worker Plan broadcast.
+    fn assemble(&mut self, task: usize) -> Result<Vec<u8>, ProcessError> {
+        let mut tim = RidgeTimings::default();
+        let mut designs: Vec<Arc<SplitDesign>> = Vec::new();
+        let mut full: Option<FullDesign> = None;
+        for &d in &self.graph.deps[task] {
+            match self.outputs[d].as_ref() {
+                Some(TaskOutput::Split(sd, t)) => {
+                    designs.push(Arc::clone(sd));
+                    tim.add(t);
+                }
+                Some(TaskOutput::Full(f, t)) => {
+                    full = Some(f.clone());
+                    tim.add(t);
+                }
+                _ => {
+                    return Err(ProcessError::Protocol {
+                        worker: 0,
+                        detail: "assemble dependency is not a factorization".into(),
+                    })
+                }
+            }
+        }
+        let x_shared = self
+            .ctx
+            .x_shared
+            .clone()
+            .expect("assemble task without shared X");
+        let plan = Arc::new(DesignPlan::assemble(
+            x_shared,
+            designs,
+            full.expect("missing full-train factorization"),
+            self.ctx.lambdas,
+            tim,
+        ));
+        *lock_recover(self.ctx.plan_elapsed) = self.ctx.started.elapsed().as_secs_f64();
+        if let Some(publish) = self.ctx.on_plan {
+            publish(&plan);
+        }
+        let frame = PlanMsg::encode_plan(&plan);
+        self.complete(task, TaskOutput::Plan(plan));
+        Ok(frame)
+    }
+
+    fn dispatch(&mut self, pool: &mut Pool, w: usize, task: usize) -> Result<(), ProcessError> {
+        let y = match self.graph.payloads[task] {
+            TaskKind::SelfContained { j0, j1 } | TaskKind::Sweep { j0, j1, .. } => {
+                Some(self.ctx.y.cols_slice(j0, j1))
+            }
+            _ => None,
+        };
+        let msg = TaskMsg {
+            id: task,
+            name: self.graph.tasks[task].name.clone(),
+            kind: self.graph.payloads[task].clone(),
+            y,
+        };
+        let frame = msg.encode();
+        let wrote = match &mut pool.slots[w] {
+            Some(wk) => write_msg(&mut wk.stdin, TAG_TASK, &frame),
+            None => Err(io::Error::new(io::ErrorKind::BrokenPipe, "worker slot empty")),
+        };
+        match wrote {
+            Ok(_) => {
+                pool.stats.tasks_dispatched += 1;
+                self.in_flight.insert(w, (task, Instant::now()));
+                Ok(())
+            }
+            Err(_) => Err(ProcessError::WorkerLost {
+                worker: w,
+                task: self.graph.tasks[task].name.clone(),
+            }),
+        }
+    }
+
+    fn handle_event(&mut self, pool: &mut Pool, ev: Event) -> Result<(), ProcessError> {
+        let (w, gen, msg) = ev;
+        // Stale event from a worker killed by a previous failed run.
+        if !pool.slots[w].as_ref().is_some_and(|wk| wk.gen == gen) {
+            return Ok(());
+        }
+        match msg {
+            Ok((WorkerReply::Done(done), bytes)) => {
+                let Some((task, t0)) = self.in_flight.remove(&w) else {
+                    return Err(ProcessError::Protocol {
+                        worker: w,
+                        detail: format!("unsolicited completion for task {}", done.id),
+                    });
+                };
+                if done.id != task {
+                    return Err(ProcessError::Protocol {
+                        worker: w,
+                        detail: format!("completed task {} while owning {task}", done.id),
+                    });
+                }
+                let ws = &mut pool.stats.worker_stats[w];
+                ws.tasks_run += 1;
+                ws.bytes_returned += bytes;
+                ws.busy_secs += t0.elapsed().as_secs_f64();
+                pool.stats.bytes_returned += bytes;
+                self.idle.push(w);
+                let out = wire_to_output(done.out, self.ctx.x);
+                self.complete(task, out);
+                Ok(())
+            }
+            Ok((WorkerReply::Fail(fail), _)) => Err(ProcessError::TaskPanicked {
+                task: self
+                    .in_flight
+                    .get(&w)
+                    .map(|&(t, _)| self.graph.tasks[t].name.clone())
+                    .unwrap_or_else(|| format!("task {}", fail.id)),
+                detail: fail.detail,
+            }),
+            Err(_reason) => {
+                // The worker's pipe closed. Fatal if it owned a task;
+                // otherwise shrink the pool and continue.
+                if let Some((task, _)) = self.in_flight.remove(&w) {
+                    return Err(ProcessError::WorkerLost {
+                        worker: w,
+                        task: self.graph.tasks[task].name.clone(),
+                    });
+                }
+                self.idle.retain(|&i| i != w);
+                if let Some(mut wk) = pool.slots[w].take() {
+                    let _ = wk.child.kill();
+                    let _ = wk.child.wait();
+                }
+                if self.idle.is_empty()
+                    && self.in_flight.is_empty()
+                    && self.completed < self.graph.len()
+                {
+                    let next = self
+                        .ready
+                        .front()
+                        .map(|&t| self.graph.tasks[t].name.clone())
+                        .unwrap_or_else(|| "<pending task>".into());
+                    return Err(ProcessError::WorkerLost { worker: w, task: next });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Rehydrate a worker's wire output into the coordinator's [`TaskOutput`].
+/// Split factorizations re-gather Xtr from the local X (an exact row
+/// copy, bit-identical to the worker's — Xtr never travels).
+fn wire_to_output(out: WireOutput, x: &Mat) -> TaskOutput {
+    match out {
+        WireOutput::Split { split, timings } => {
+            let xtr = x.rows_gather(&split.train_idx);
+            TaskOutput::Split(
+                Arc::new(SplitDesign {
+                    xtr,
+                    train_idx: split.train_idx,
+                    val_idx: split.val_idx,
+                    v: split.v,
+                    e: split.e,
+                    a: split.a,
+                }),
+                timings,
+            )
+        }
+        WireOutput::Full { v, e, timings } => TaskOutput::Full(FullDesign { v, e }, timings),
+        WireOutput::Fit(fit) => TaskOutput::Fit(fit),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Taken over by a spawned worker process. `main` must call this before
+/// any CLI handling: when [`WORKER_ENV`] is set it runs the worker loop
+/// on stdin/stdout and **exits the process**; otherwise it returns
+/// `false` and the binary proceeds as the normal CLI.
+pub fn worker_entry() -> bool {
+    if std::env::var_os(WORKER_ENV).is_none() {
+        return false;
+    }
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    let code = match worker_main(&mut stdin.lock(), &mut stdout.lock()) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("fmri-encode worker: {e}");
+            1
+        }
+    };
+    std::process::exit(code)
+}
+
+struct WorkerState {
+    x: Arc<Mat>,
+    splits: Vec<Split>,
+    lambdas: Vec<f64>,
+    backend: Backend,
+    threads: usize,
+}
+
+fn proto(detail: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, detail.into())
+}
+
+/// The worker loop: Init resets per-graph state, Plan rebuilds the
+/// shared factors from the broadcast, Task runs one `TaskKind` (panics
+/// caught and shipped back as Fail frames), Shutdown drains out.
+/// Separated from [`worker_entry`] so tests can drive it over in-memory
+/// pipes.
+pub(crate) fn worker_main(r: &mut impl Read, w: &mut impl Write) -> io::Result<()> {
+    let mut state: Option<WorkerState> = None;
+    let mut plan: Option<Arc<DesignPlan>> = None;
+    let die_on = std::env::var(WORKER_DIE_ENV).ok().filter(|p| !p.is_empty());
+    while let Some((tag, payload)) = read_msg(r)? {
+        match tag {
+            TAG_INIT => {
+                let m = InitMsg::decode(&payload)?;
+                state = Some(WorkerState {
+                    x: Arc::new(m.x),
+                    splits: m.splits,
+                    lambdas: m.lambdas,
+                    backend: m.backend,
+                    threads: m.threads,
+                });
+                plan = None;
+            }
+            TAG_PLAN => {
+                let st = state.as_ref().ok_or_else(|| proto("Plan before Init"))?;
+                let m = PlanMsg::decode(&payload)?;
+                plan = Some(Arc::new(rebuild_plan(st, m)));
+            }
+            TAG_TASK => {
+                let task = TaskMsg::decode(&payload)?;
+                if let Some(pat) = &die_on {
+                    if task.name.contains(pat.as_str()) {
+                        // Fault injection: die exactly like a crashed or
+                        // OOM-killed worker would — no Fail frame.
+                        std::process::exit(3);
+                    }
+                }
+                let st = state.as_ref();
+                let pl = plan.as_ref();
+                let outcome =
+                    panic::catch_unwind(AssertUnwindSafe(|| run_task(st, pl, &task)));
+                let frame = match outcome {
+                    Ok(Ok(out)) => {
+                        let done = DoneMsg { id: task.id, out };
+                        (TAG_DONE, done.encode())
+                    }
+                    Ok(Err(detail)) => (TAG_FAIL, FailMsg { id: task.id, detail }.encode()),
+                    Err(p) => {
+                        let detail = p
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "panic with non-string payload".into());
+                        (TAG_FAIL, FailMsg { id: task.id, detail }.encode())
+                    }
+                };
+                write_msg(w, frame.0, &frame.1)?;
+            }
+            TAG_SHUTDOWN => break,
+            other => return Err(proto(format!("unexpected frame tag {other}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Reconstruct the shared [`DesignPlan`] from the Plan broadcast: Xtr is
+/// re-gathered from the broadcast X (exact row copies), everything else
+/// arrived bit-exactly on the wire.
+fn rebuild_plan(st: &WorkerState, m: PlanMsg) -> DesignPlan {
+    let mut designs = Vec::with_capacity(m.splits.len());
+    for ws in m.splits {
+        let xtr = st.x.rows_gather(&ws.train_idx);
+        designs.push(Arc::new(SplitDesign {
+            xtr,
+            train_idx: ws.train_idx,
+            val_idx: ws.val_idx,
+            v: ws.v,
+            e: ws.e,
+            a: ws.a,
+        }));
+    }
+    let full = FullDesign { v: m.full_v, e: m.full_e };
+    DesignPlan::assemble(
+        Arc::clone(&st.x),
+        designs,
+        full,
+        &st.lambdas,
+        RidgeTimings::default(),
+    )
+}
+
+fn run_task(
+    state: Option<&WorkerState>,
+    plan: Option<&Arc<DesignPlan>>,
+    task: &TaskMsg,
+) -> Result<WireOutput, String> {
+    let st = state.ok_or("task before Init broadcast")?;
+    let blas = Blas::new(st.backend, st.threads);
+    match task.kind {
+        TaskKind::SelfContained { .. } => {
+            let y = task.y.as_ref().ok_or("self-contained task without Y")?;
+            let fit = ridge::fit_ridge_cv(&blas, &st.x, y, &st.lambdas, &st.splits);
+            Ok(WireOutput::Fit(Box::new(fit)))
+        }
+        TaskKind::DecomposeSplit { split } => {
+            let sp = st
+                .splits
+                .get(split)
+                .ok_or_else(|| format!("split {split} out of range"))?;
+            let (sd, timings) = ridge::factorize_split(&blas, &st.x, sp);
+            Ok(WireOutput::Split {
+                split: WireSplit {
+                    train_idx: sd.train_idx,
+                    val_idx: sd.val_idx,
+                    v: sd.v,
+                    e: sd.e,
+                    a: sd.a,
+                },
+                timings,
+            })
+        }
+        TaskKind::DecomposeFull => {
+            let (full, timings) = ridge::factorize_full(&blas, &st.x);
+            Ok(WireOutput::Full { v: full.v, e: full.e, timings })
+        }
+        TaskKind::Assemble => Err("assemble barriers run on the coordinator".into()),
+        TaskKind::Sweep { .. } => {
+            let y = task.y.as_ref().ok_or("sweep task without Y")?;
+            let plan = plan.ok_or("sweep before Plan broadcast")?;
+            let fit = ridge::fit_batch_with_plan(&blas, plan, y);
+            Ok(WireOutput::Fit(Box::new(fit)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::kfold;
+    use crate::util::Pcg64;
+
+    /// Drive the worker loop over in-memory pipes: a full B-MOR round
+    /// (Init → decompose tasks → Plan → sweep) must produce outputs
+    /// bit-identical to computing the same stages locally.
+    #[test]
+    fn worker_loop_over_in_memory_pipes_is_bit_identical() {
+        let mut rng = Pcg64::seeded(11);
+        let x = Mat::randn(36, 6, &mut rng);
+        let y = Mat::randn(36, 4, &mut rng);
+        let splits = kfold(36, 3, Some(0));
+        let lambdas = ridge::LAMBDA_GRID.to_vec();
+        let backend = Backend::MklLike;
+
+        let mut inbox: Vec<u8> = Vec::new();
+        write_msg(
+            &mut inbox,
+            TAG_INIT,
+            &InitMsg::encode(backend, 1, &x, &splits, &lambdas),
+        )
+        .unwrap();
+        for si in 0..splits.len() {
+            let t = TaskMsg {
+                id: si,
+                name: format!("decompose-split-{si}"),
+                kind: TaskKind::DecomposeSplit { split: si },
+                y: None,
+            };
+            write_msg(&mut inbox, TAG_TASK, &t.encode()).unwrap();
+        }
+        // Plan broadcast built locally (the coordinator-side assemble).
+        let blas = Blas::new(backend, 1);
+        let local_plan = DesignPlan::build(&blas, &x, &lambdas, &splits);
+        write_msg(&mut inbox, TAG_PLAN, &PlanMsg::encode_plan(&local_plan)).unwrap();
+        let sweep = TaskMsg {
+            id: 9,
+            name: "sweep-batch-0".into(),
+            kind: TaskKind::Sweep { batch: 0, j0: 0, j1: 4 },
+            y: Some(y.clone()),
+        };
+        write_msg(&mut inbox, TAG_TASK, &sweep.encode()).unwrap();
+        write_msg(&mut inbox, TAG_SHUTDOWN, &[]).unwrap();
+
+        let mut outbox: Vec<u8> = Vec::new();
+        worker_main(&mut io::Cursor::new(inbox), &mut outbox).unwrap();
+
+        let mut r = io::Cursor::new(outbox);
+        for si in 0..splits.len() {
+            let (tag, payload) = read_msg(&mut r).unwrap().expect("decompose reply");
+            assert_eq!(tag, TAG_DONE);
+            let done = DoneMsg::decode(&payload).unwrap();
+            assert_eq!(done.id, si);
+            let (want, _) = ridge::factorize_split(&blas, &x, &splits[si]);
+            match done.out {
+                WireOutput::Split { split, .. } => {
+                    assert_eq!(split.train_idx, want.train_idx);
+                    assert_eq!(split.e, want.e);
+                    assert_eq!(split.v.max_abs_diff(&want.v), 0.0);
+                    assert_eq!(split.a.max_abs_diff(&want.a), 0.0);
+                }
+                _ => panic!("expected a split factorization"),
+            }
+        }
+        let (tag, payload) = read_msg(&mut r).unwrap().expect("sweep reply");
+        assert_eq!(tag, TAG_DONE);
+        let done = DoneMsg::decode(&payload).unwrap();
+        let want = ridge::fit_batch_with_plan(&blas, &local_plan, &y);
+        match done.out {
+            WireOutput::Fit(fit) => {
+                assert_eq!(fit.weights.max_abs_diff(&want.weights), 0.0);
+                assert_eq!(fit.best_lambda, want.best_lambda);
+                assert_eq!(fit.mean_scores, want.mean_scores);
+            }
+            _ => panic!("expected a batch fit"),
+        }
+        assert!(read_msg(&mut r).unwrap().is_none(), "worker drained cleanly");
+    }
+
+    #[test]
+    fn worker_ships_panics_back_as_fail_frames() {
+        // A sweep before any Plan broadcast is a typed failure, and an
+        // out-of-range split is too — the loop answers with Fail frames
+        // and keeps serving (Shutdown still drains cleanly).
+        let mut rng = Pcg64::seeded(12);
+        let x = Mat::randn(20, 4, &mut rng);
+        let splits = kfold(20, 2, Some(0));
+        let mut inbox: Vec<u8> = Vec::new();
+        write_msg(
+            &mut inbox,
+            TAG_INIT,
+            &InitMsg::encode(Backend::Naive, 1, &x, &splits, &[1.0]),
+        )
+        .unwrap();
+        let bad = TaskMsg {
+            id: 5,
+            name: "decompose-split-9".into(),
+            kind: TaskKind::DecomposeSplit { split: 9 },
+            y: None,
+        };
+        write_msg(&mut inbox, TAG_TASK, &bad.encode()).unwrap();
+        write_msg(&mut inbox, TAG_SHUTDOWN, &[]).unwrap();
+
+        let mut outbox: Vec<u8> = Vec::new();
+        worker_main(&mut io::Cursor::new(inbox), &mut outbox).unwrap();
+        let mut r = io::Cursor::new(outbox);
+        let (tag, payload) = read_msg(&mut r).unwrap().expect("fail reply");
+        assert_eq!(tag, TAG_FAIL);
+        let fail = FailMsg::decode(&payload).unwrap();
+        assert_eq!(fail.id, 5);
+        assert!(fail.detail.contains("out of range"), "{}", fail.detail);
+    }
+
+    #[test]
+    fn errors_render_human_readable() {
+        let e = ProcessError::WorkerLost { worker: 2, task: "decompose-split-1".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("worker 2") && msg.contains("decompose-split-1"), "{msg}");
+        let t = ProcessError::TaskTimeout { task: "sweep-batch-0".into(), timeout_secs: 7 };
+        assert!(t.to_string().contains("7s"), "{t}");
+    }
+}

@@ -1,0 +1,682 @@
+//! Wire protocol of the multi-process executor (`scheduler::process`).
+//!
+//! Hand-rolled, length-prefixed binary framing over the worker pipes —
+//! serde is not in the vendored set, and the payloads are dense f64
+//! matrices for which a bespoke codec is both smaller and faster. Every
+//! float travels as its exact IEEE-754 bit pattern (`f64::to_bits`,
+//! little-endian), so a factorization computed in a worker process is
+//! **bit-identical** after the round-trip — the executor-parity contract
+//! (thread vs process) depends on this.
+//!
+//! Framing: one message = `[tag: u8][len: u64 LE][payload: len bytes]`.
+//!
+//! Coordinator → worker:
+//! * [`InitMsg`] — per-graph broadcast: backend + thread width, the full
+//!   design X, the CV split index sets and the λ grid. Sent once per
+//!   worker per graph, exactly the per-node staging
+//!   `cluster::broadcast_share` models.
+//! * [`PlanMsg`] — the assembled plan's shared factors (per-split V, e,
+//!   A + index sets; full-train V, e), broadcast once per worker after
+//!   the coordinator-side assemble barrier. Workers re-gather each
+//!   split's Xtr from the already-broadcast X instead of shipping it.
+//! * [`TaskMsg`] — one task dispatch: id, name, [`TaskKind`] and, for
+//!   target-dependent tasks, the batch's Y columns.
+//! * `Shutdown` — graceful drain: the worker exits its loop.
+//!
+//! Worker → coordinator:
+//! * [`DoneMsg`] — the task's output ([`WireOutput`]): a split/full
+//!   factorization plus stage timings, or a finished batch fit.
+//! * `Fail` — the task panicked in the worker; the message carries the
+//!   panic payload so the coordinator can surface a typed error instead
+//!   of hanging.
+
+use std::io::{self, Read, Write};
+
+use crate::blas::Backend;
+use crate::coordinator::TaskKind;
+use crate::cv::Split;
+use crate::linalg::Mat;
+use crate::ridge::{RidgeCvFit, RidgeTimings};
+
+/// Protocol version, embedded in every [`InitMsg`]: a worker binary from
+/// a different build refuses mismatched frames instead of misreading
+/// them.
+pub(crate) const WIRE_VERSION: u32 = 1;
+
+// Message tags (coordinator → worker).
+pub(crate) const TAG_INIT: u8 = 1;
+pub(crate) const TAG_PLAN: u8 = 2;
+pub(crate) const TAG_TASK: u8 = 3;
+pub(crate) const TAG_SHUTDOWN: u8 = 4;
+// Message tags (worker → coordinator).
+pub(crate) const TAG_DONE: u8 = 10;
+pub(crate) const TAG_FAIL: u8 = 11;
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one framed message; returns the total bytes on the wire
+/// (header + payload) for broadcast accounting.
+pub(crate) fn write_msg(w: &mut impl Write, tag: u8, payload: &[u8]) -> io::Result<usize> {
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(1 + 8 + payload.len())
+}
+
+/// Read one framed message. `Ok(None)` is a clean EOF (peer closed the
+/// pipe before a header started); a mid-frame EOF is an error.
+pub(crate) fn read_msg(r: &mut impl Read) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut tag = [0u8; 1];
+    match r.read_exact(&mut tag) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some((tag[0], payload)))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive codec
+// ---------------------------------------------------------------------------
+
+/// Append-only payload encoder.
+#[derive(Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+
+    pub fn mat(&mut self, m: &Mat) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.data() {
+            self.f64(x);
+        }
+    }
+
+    pub fn timings(&mut self, t: &RidgeTimings) {
+        self.f64(t.gram_secs);
+        self.f64(t.eigh_secs);
+        self.f64(t.sweep_secs);
+        self.f64(t.solve_secs);
+    }
+}
+
+/// Cursor-based payload decoder. Every accessor returns a protocol
+/// `io::Error` on truncation instead of panicking, so a corrupt frame
+/// from a mismatched binary surfaces as a typed failure.
+pub(crate) struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+fn proto_err(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("wire: truncated {what}"))
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> io::Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(proto_err(what));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, "u32")?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, "u64")?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> io::Result<String> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n, "str")?;
+        String::from_utf8(raw.to_vec()).map_err(|_| proto_err("utf8 str"))
+    }
+
+    pub fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub fn usizes(&mut self) -> io::Result<Vec<usize>> {
+        let n = self.u64()? as usize;
+        (0..n).map(|_| self.u64().map(|v| v as usize)).collect()
+    }
+
+    pub fn mat(&mut self) -> io::Result<Mat> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| proto_err("mat shape"))?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn timings(&mut self) -> io::Result<RidgeTimings> {
+        Ok(RidgeTimings {
+            gram_secs: self.f64()?,
+            eigh_secs: self.f64()?,
+            sweep_secs: self.f64()?,
+            solve_secs: self.f64()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Per-graph broadcast: everything target-independent a worker needs
+/// before any task can run.
+pub(crate) struct InitMsg {
+    pub backend: Backend,
+    pub threads: usize,
+    pub x: Mat,
+    pub splits: Vec<Split>,
+    pub lambdas: Vec<f64>,
+}
+
+fn backend_tag(b: Backend) -> u8 {
+    match b {
+        Backend::Naive => 0,
+        Backend::OpenBlasLike => 1,
+        Backend::MklLike => 2,
+    }
+}
+
+fn backend_from(tag: u8) -> io::Result<Backend> {
+    match tag {
+        0 => Ok(Backend::Naive),
+        1 => Ok(Backend::OpenBlasLike),
+        2 => Ok(Backend::MklLike),
+        _ => Err(proto_err("backend tag")),
+    }
+}
+
+impl InitMsg {
+    pub fn encode(
+        backend: Backend,
+        threads: usize,
+        x: &Mat,
+        splits: &[Split],
+        lambdas: &[f64],
+    ) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(WIRE_VERSION);
+        e.u8(backend_tag(backend));
+        e.u64(threads as u64);
+        e.mat(x);
+        e.u64(splits.len() as u64);
+        for s in splits {
+            e.usizes(&s.train);
+            e.usizes(&s.val);
+        }
+        e.f64s(lambdas);
+        e.into_vec()
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<InitMsg> {
+        let mut d = Dec::new(payload);
+        let version = d.u32()?;
+        if version != WIRE_VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("wire: version mismatch (coordinator {version}, worker {WIRE_VERSION})"),
+            ));
+        }
+        let backend = backend_from(d.u8()?)?;
+        let threads = d.u64()? as usize;
+        let x = d.mat()?;
+        let ns = d.u64()? as usize;
+        let mut splits = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let train = d.usizes()?;
+            let val = d.usizes()?;
+            splits.push(Split { train, val });
+        }
+        let lambdas = d.f64s()?;
+        Ok(InitMsg { backend, threads, x, splits, lambdas })
+    }
+}
+
+/// One split's shared factors as they travel on the wire. Xtr is NOT
+/// shipped: both sides re-gather it from their copy of X (an exact
+/// row copy, so the reconstruction is bit-identical).
+pub(crate) struct WireSplit {
+    pub train_idx: Vec<usize>,
+    pub val_idx: Vec<usize>,
+    pub v: Mat,
+    pub e: Vec<f64>,
+    pub a: Mat,
+}
+
+impl WireSplit {
+    fn encode_into(&self, e: &mut Enc) {
+        e.usizes(&self.train_idx);
+        e.usizes(&self.val_idx);
+        e.mat(&self.v);
+        e.f64s(&self.e);
+        e.mat(&self.a);
+    }
+
+    fn decode_from(d: &mut Dec) -> io::Result<WireSplit> {
+        Ok(WireSplit {
+            train_idx: d.usizes()?,
+            val_idx: d.usizes()?,
+            v: d.mat()?,
+            e: d.f64s()?,
+            a: d.mat()?,
+        })
+    }
+}
+
+/// The assembled plan's shared factors, broadcast once per worker after
+/// the coordinator-side assemble barrier — `perfmodel::plan_bytes` is
+/// the cost model of exactly this shipment.
+pub(crate) struct PlanMsg {
+    pub splits: Vec<WireSplit>,
+    pub full_v: Mat,
+    pub full_e: Vec<f64>,
+}
+
+impl PlanMsg {
+    /// Encode the broadcast frame directly from an assembled plan — the
+    /// hot coordinator path, avoiding a clone of every factor matrix
+    /// into an intermediate [`PlanMsg`].
+    pub fn encode_plan(plan: &crate::ridge::DesignPlan) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(plan.splits.len() as u64);
+        for sd in plan.splits.iter() {
+            e.usizes(&sd.train_idx);
+            e.usizes(&sd.val_idx);
+            e.mat(&sd.v);
+            e.f64s(&sd.e);
+            e.mat(&sd.a);
+        }
+        e.mat(&plan.v_full);
+        e.f64s(&plan.e_full);
+        e.into_vec()
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<PlanMsg> {
+        let mut d = Dec::new(payload);
+        let ns = d.u64()? as usize;
+        let mut splits = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            splits.push(WireSplit::decode_from(&mut d)?);
+        }
+        let full_v = d.mat()?;
+        let full_e = d.f64s()?;
+        Ok(PlanMsg { splits, full_v, full_e })
+    }
+}
+
+/// One task dispatch: the typed kind plus, for target-dependent tasks,
+/// the batch's Y columns (dependency data shipped with the task — the
+/// only per-task payload that is not already broadcast).
+pub(crate) struct TaskMsg {
+    pub id: usize,
+    pub name: String,
+    pub kind: TaskKind,
+    pub y: Option<Mat>,
+}
+
+fn kind_encode(e: &mut Enc, kind: &TaskKind) {
+    match kind {
+        TaskKind::SelfContained { j0, j1 } => {
+            e.u8(0);
+            e.u64(*j0 as u64);
+            e.u64(*j1 as u64);
+        }
+        TaskKind::DecomposeSplit { split } => {
+            e.u8(1);
+            e.u64(*split as u64);
+        }
+        TaskKind::DecomposeFull => e.u8(2),
+        TaskKind::Assemble => e.u8(3),
+        TaskKind::Sweep { batch, j0, j1 } => {
+            e.u8(4);
+            e.u64(*batch as u64);
+            e.u64(*j0 as u64);
+            e.u64(*j1 as u64);
+        }
+    }
+}
+
+fn kind_decode(d: &mut Dec) -> io::Result<TaskKind> {
+    Ok(match d.u8()? {
+        0 => TaskKind::SelfContained { j0: d.u64()? as usize, j1: d.u64()? as usize },
+        1 => TaskKind::DecomposeSplit { split: d.u64()? as usize },
+        2 => TaskKind::DecomposeFull,
+        3 => TaskKind::Assemble,
+        4 => TaskKind::Sweep {
+            batch: d.u64()? as usize,
+            j0: d.u64()? as usize,
+            j1: d.u64()? as usize,
+        },
+        _ => return Err(proto_err("task kind tag")),
+    })
+}
+
+impl TaskMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.id as u64);
+        e.str(&self.name);
+        kind_encode(&mut e, &self.kind);
+        match &self.y {
+            Some(m) => {
+                e.u8(1);
+                e.mat(m);
+            }
+            None => e.u8(0),
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<TaskMsg> {
+        let mut d = Dec::new(payload);
+        let id = d.u64()? as usize;
+        let name = d.str()?;
+        let kind = kind_decode(&mut d)?;
+        let y = match d.u8()? {
+            0 => None,
+            1 => Some(d.mat()?),
+            _ => return Err(proto_err("y presence tag")),
+        };
+        Ok(TaskMsg { id, name, kind, y })
+    }
+}
+
+/// A worker's task result as it travels on the wire.
+pub(crate) enum WireOutput {
+    Split { split: WireSplit, timings: RidgeTimings },
+    Full { v: Mat, e: Vec<f64>, timings: RidgeTimings },
+    Fit(Box<RidgeCvFit>),
+}
+
+/// Successful task completion.
+pub(crate) struct DoneMsg {
+    pub id: usize,
+    pub out: WireOutput,
+}
+
+impl DoneMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.id as u64);
+        match &self.out {
+            WireOutput::Split { split, timings } => {
+                e.u8(0);
+                split.encode_into(&mut e);
+                e.timings(timings);
+            }
+            WireOutput::Full { v, e: ev, timings } => {
+                e.u8(1);
+                e.mat(v);
+                e.f64s(ev);
+                e.timings(timings);
+            }
+            WireOutput::Fit(fit) => {
+                e.u8(2);
+                e.mat(&fit.weights);
+                e.f64(fit.best_lambda);
+                e.u64(fit.best_idx as u64);
+                e.f64s(&fit.mean_scores);
+                e.mat(&fit.scores);
+                e.timings(&fit.timings);
+            }
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<DoneMsg> {
+        let mut d = Dec::new(payload);
+        let id = d.u64()? as usize;
+        let out = match d.u8()? {
+            0 => WireOutput::Split {
+                split: WireSplit::decode_from(&mut d)?,
+                timings: d.timings()?,
+            },
+            1 => WireOutput::Full { v: d.mat()?, e: d.f64s()?, timings: d.timings()? },
+            2 => WireOutput::Fit(Box::new(RidgeCvFit {
+                weights: d.mat()?,
+                best_lambda: d.f64()?,
+                best_idx: d.u64()? as usize,
+                mean_scores: d.f64s()?,
+                scores: d.mat()?,
+                timings: d.timings()?,
+            })),
+            _ => return Err(proto_err("output tag")),
+        };
+        Ok(DoneMsg { id, out })
+    }
+}
+
+/// Worker-side task failure (caught panic), surfaced so the coordinator
+/// can return a typed error instead of waiting on a completion that will
+/// never come.
+pub(crate) struct FailMsg {
+    pub id: usize,
+    pub detail: String,
+}
+
+impl FailMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.id as u64);
+        e.str(&self.detail);
+        e.into_vec()
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<FailMsg> {
+        let mut d = Dec::new(payload);
+        Ok(FailMsg { id: d.u64()? as usize, detail: d.str()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn framing_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        let n = write_msg(&mut buf, TAG_TASK, &[1, 2, 3]).unwrap();
+        assert_eq!(n, 1 + 8 + 3);
+        let mut r = std::io::Cursor::new(buf);
+        let (tag, payload) = read_msg(&mut r).unwrap().expect("one frame");
+        assert_eq!(tag, TAG_TASK);
+        assert_eq!(payload, vec![1, 2, 3]);
+        assert!(read_msg(&mut r).unwrap().is_none(), "EOF after the frame");
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, TAG_DONE, &[9; 16]).unwrap();
+        buf.truncate(12);
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn init_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::seeded(1);
+        let x = Mat::randn(13, 7, &mut rng);
+        let splits = crate::cv::kfold(13, 3, Some(2));
+        let lambdas = [1e-3, f64::MIN_POSITIVE, 1.0, 1e12];
+        let raw = InitMsg::encode(Backend::MklLike, 4, &x, &splits, &lambdas);
+        let m = InitMsg::decode(&raw).unwrap();
+        assert_eq!(m.backend, Backend::MklLike);
+        assert_eq!(m.threads, 4);
+        assert_eq!(m.x.max_abs_diff(&x), 0.0);
+        assert_eq!(m.splits.len(), 3);
+        for (a, b) in m.splits.iter().zip(&splits) {
+            assert_eq!(a.train, b.train);
+            assert_eq!(a.val, b.val);
+        }
+        assert_eq!(m.lambdas, lambdas.to_vec());
+    }
+
+    #[test]
+    fn init_rejects_version_mismatch() {
+        let mut rng = Pcg64::seeded(3);
+        let x = Mat::randn(4, 2, &mut rng);
+        let splits = crate::cv::kfold(4, 2, None);
+        let mut raw = InitMsg::encode(Backend::Naive, 1, &x, &splits, &[1.0]);
+        raw[0] ^= 0xFF;
+        assert!(InitMsg::decode(&raw).is_err());
+    }
+
+    #[test]
+    fn task_and_done_roundtrip() {
+        let mut rng = Pcg64::seeded(5);
+        let y = Mat::randn(6, 2, &mut rng);
+        let t = TaskMsg {
+            id: 42,
+            name: "sweep-batch-1".into(),
+            kind: TaskKind::Sweep { batch: 1, j0: 2, j1: 4 },
+            y: Some(y.clone()),
+        };
+        let t2 = TaskMsg::decode(&t.encode()).unwrap();
+        assert_eq!(t2.id, 42);
+        assert_eq!(t2.name, "sweep-batch-1");
+        assert_eq!(t2.kind, TaskKind::Sweep { batch: 1, j0: 2, j1: 4 });
+        assert_eq!(t2.y.unwrap().max_abs_diff(&y), 0.0);
+
+        let fit = RidgeCvFit {
+            weights: Mat::randn(3, 2, &mut rng),
+            best_lambda: 0.1,
+            best_idx: 4,
+            mean_scores: vec![0.5, f64::NAN],
+            scores: Mat::randn(2, 2, &mut rng),
+            timings: RidgeTimings {
+                gram_secs: 0.1,
+                eigh_secs: 0.2,
+                sweep_secs: 0.3,
+                solve_secs: 0.4,
+            },
+        };
+        let weights = fit.weights.clone();
+        let d = DoneMsg { id: 7, out: WireOutput::Fit(Box::new(fit)) };
+        let d2 = DoneMsg::decode(&d.encode()).unwrap();
+        assert_eq!(d2.id, 7);
+        match d2.out {
+            WireOutput::Fit(f) => {
+                assert_eq!(f.weights.max_abs_diff(&weights), 0.0);
+                assert_eq!(f.best_lambda, 0.1);
+                assert_eq!(f.best_idx, 4);
+                // NaN survives the wire bit-exactly (to_bits roundtrip).
+                assert!(f.mean_scores[1].is_nan());
+                assert_eq!(f.timings.solve_secs, 0.4);
+            }
+            _ => panic!("wrong output variant"),
+        }
+    }
+
+    #[test]
+    fn plan_broadcast_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::seeded(8);
+        let x = Mat::randn(18, 5, &mut rng);
+        let splits = crate::cv::kfold(18, 3, Some(1));
+        let blas = crate::blas::Blas::new(Backend::MklLike, 1);
+        let plan = crate::ridge::DesignPlan::build(&blas, &x, &[0.1, 1.0, 10.0], &splits);
+        let m = PlanMsg::decode(&PlanMsg::encode_plan(&plan)).unwrap();
+        assert_eq!(m.splits.len(), plan.splits.len());
+        for (w, sd) in m.splits.iter().zip(&plan.splits) {
+            assert_eq!(w.train_idx, sd.train_idx);
+            assert_eq!(w.val_idx, sd.val_idx);
+            assert_eq!(w.v.max_abs_diff(&sd.v), 0.0);
+            assert_eq!(w.e, sd.e);
+            assert_eq!(w.a.max_abs_diff(&sd.a), 0.0);
+        }
+        assert_eq!(m.full_v.max_abs_diff(&plan.v_full), 0.0);
+        assert_eq!(m.full_e, plan.e_full);
+    }
+
+    #[test]
+    fn fail_roundtrip() {
+        let f = FailMsg { id: 3, detail: "worker panicked: boom".into() };
+        let f2 = FailMsg::decode(&f.encode()).unwrap();
+        assert_eq!(f2.id, 3);
+        assert_eq!(f2.detail, "worker panicked: boom");
+    }
+}

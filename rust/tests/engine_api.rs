@@ -10,7 +10,7 @@
 //! grabs `EIGH_LOCK` so concurrently scheduled tests cannot perturb the
 //! global deltas (other test binaries are separate processes).
 
-use std::sync::{Barrier, Mutex, MutexGuard};
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::coordinator::{self, DistConfig, Strategy};
@@ -468,4 +468,45 @@ fn cache_stats_expose_real_residency_and_counters() {
     assert!(st3.entries.is_empty());
     assert_eq!(st3.evictions, 0, "manual clear is not an eviction");
     assert_eq!((st3.hits, st3.misses), (1, 1), "counters are monotone across clears");
+}
+
+#[test]
+fn arc_design_is_adopted_not_cloned_into_the_cache() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(70, 9, 6, 21);
+    let x = Arc::new(x);
+
+    // Cold B-MOR fit with a shared design: the cache-resident plan must
+    // adopt the caller's Arc instead of cloning the matrix.
+    let engine = Engine::new();
+    let before = Arc::strong_count(&x);
+    let fit_shared = engine.fit(&FitRequest::new(&x, &y)).expect("shared-X fit");
+    assert!(
+        Arc::strong_count(&x) > before,
+        "cold fit should adopt the caller's Arc into the plan cache"
+    );
+
+    // Bit-identical to the borrowed-X path on a fresh engine.
+    let engine2 = Engine::new();
+    let fit_borrowed = engine2.fit(&FitRequest::new(&*x, &y)).expect("borrowed-X fit");
+    assert_eq!(fit_shared.weights.max_abs_diff(&fit_borrowed.weights), 0.0);
+
+    // The adopted plan serves warm hits like any other.
+    let warm = engine.fit(&FitRequest::new(&x, &y)).expect("warm fit");
+    assert!(warm.plan_reused);
+    assert_eq!(warm.weights.max_abs_diff(&fit_shared.weights), 0.0);
+
+    // Dropping the cache releases the adopted Arc.
+    engine.clear_plan_cache();
+    assert_eq!(Arc::strong_count(&x), before);
+}
+
+#[test]
+fn process_executor_errors_render_human_readable() {
+    let lost = EngineError::WorkerLost { worker: 1, task: "sweep-batch-0".into() };
+    assert_eq!(lost.to_string(), "worker process 1 lost while running `sweep-batch-0`");
+    let timeout = EngineError::TaskTimeout { task: "decompose-full".into(), timeout_secs: 300 };
+    assert_eq!(timeout.to_string(), "task `decompose-full` exceeded the 300s worker deadline");
+    let pool = EngineError::WorkerPool { detail: "spawn failed".into() };
+    assert_eq!(pool.to_string(), "worker pool failure: spawn failed");
 }

@@ -9,13 +9,43 @@
 //! batch structure.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
+use fmri_encode::blas::Backend;
 use fmri_encode::cluster::{AmdahlModel, ClusterSpec, TaskCost};
 use fmri_encode::coordinator::{self, DistConfig, Strategy, TaskKind};
+use fmri_encode::cv::kfold;
+use fmri_encode::engine::{Engine, EngineError, ExecutorKind, FitRequest};
+use fmri_encode::linalg::Mat;
 use fmri_encode::perfmodel::{Calibration, FitShape};
-use fmri_encode::scheduler::{task_fn, DesExecutor, TaskFn, TaskGraph, ThreadExecutor};
+use fmri_encode::ridge::LAMBDA_GRID;
+use fmri_encode::scheduler::{
+    task_fn, DesExecutor, ProcessCtx, ProcessError, ProcessExecutor, TaskFn, TaskGraph,
+    ThreadExecutor,
+};
 use fmri_encode::util::proptest::{check, int_in, random_dag};
 use fmri_encode::util::Pcg64;
+
+/// The CLI binary doubles as the worker executable (`worker_entry` runs
+/// first in its `main`); cargo builds it for integration tests and
+/// exposes the path through this env var.
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_fmri-encode");
+
+/// Worker-pool widths under test: {1, 2} always, plus the CI matrix arm
+/// (`FMRI_ENCODE_WORKERS`) when it names a width not already covered.
+fn worker_widths() -> Vec<usize> {
+    let mut widths = vec![1, 2];
+    if let Some(w) = std::env::var("FMRI_ENCODE_WORKERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        if !widths.contains(&w) {
+            widths.push(w);
+        }
+    }
+    widths
+}
 
 fn free_spec(nodes: usize) -> ClusterSpec {
     ClusterSpec {
@@ -148,4 +178,180 @@ fn bmor_priced_graph_is_the_executed_graph() {
     let mut ids: Vec<usize> = s.tasks.iter().map(|t| t.id).collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..g.len()).collect::<Vec<_>>());
+}
+
+// ---------------------------------------------------------------------------
+// Three-way parity: the SAME emission through threads, processes, DES.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn process_executor_is_bit_identical_to_thread_executor() {
+    let mut rng = Pcg64::seeded(11);
+    let x = Mat::randn(120, 12, &mut rng);
+    let y = Mat::randn(120, 18, &mut rng);
+
+    for strategy in [Strategy::Bmor, Strategy::Mor, Strategy::Single] {
+        let engine = Engine::new().with_worker_bin(WORKER_BIN);
+        let base = FitRequest::new(&x, &y)
+            .strategy(strategy)
+            .nodes(3)
+            .folds(3)
+            .seed(0);
+        let thread_fit = engine.fit(&base).expect("thread fit");
+
+        for w in worker_widths() {
+            // Warm B-MOR hits always run in-process; clear the cache so
+            // the process pool actually executes the graph.
+            engine.clear_plan_cache();
+            let proc_fit = engine
+                .fit(&base.clone().executor(ExecutorKind::Process { workers: w }))
+                .expect("process fit");
+            assert_eq!(
+                proc_fit.weights.max_abs_diff(&thread_fit.weights),
+                0.0,
+                "weight drift: {strategy} at workers={w}"
+            );
+            assert_eq!(proc_fit.best_lambda_per_batch, thread_fit.best_lambda_per_batch);
+            assert_eq!(proc_fit.batches, thread_fit.batches);
+            assert!(!proc_fit.plan_reused);
+        }
+
+        // The pool is observable: real dispatch counts and broadcast
+        // bytes, not zeros.
+        let stats = engine.process_pool_stats().expect("pool stats after process fits");
+        assert!(stats.graphs_run >= 1);
+        assert!(stats.tasks_dispatched >= 1);
+        assert!(stats.bytes_broadcast > 0);
+        assert!(stats.bytes_returned > 0);
+    }
+}
+
+#[test]
+fn des_makespan_bounds_hold_for_the_bmor_emission() {
+    // Third leg of the parity triangle: the DES prices the identical
+    // emission, and its makespan lands in [critical path, serial sum].
+    let shape = FitShape { n: 300, p: 24, t: 60, r: 11, splits: 4 };
+    let cfg = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 3,
+        threads_per_node: 1,
+        ..Default::default()
+    };
+    let g = coordinator::task_graph(shape, &cfg, &Calibration::nominal());
+    let s = DesExecutor::new(free_spec(cfg.nodes)).run(&g);
+    let serial: f64 = g.tasks.iter().map(|t| t.cost.compute_secs).sum();
+    let cp = g.critical_path();
+    assert!(cp > 0.0 && serial >= cp);
+    assert!(s.makespan >= cp - 1e-9, "makespan {} below critical path {cp}", s.makespan);
+    assert!(s.makespan <= serial + 1e-6, "makespan {} above serial sum {serial}", s.makespan);
+}
+
+// ---------------------------------------------------------------------------
+// Robustness: typed failures, never hangs, and the pool outlives them.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_worker_is_typed_worker_lost_and_the_pool_survives() {
+    let mut rng = Pcg64::seeded(5);
+    let x = Mat::randn(90, 10, &mut rng);
+    let y = Mat::randn(90, 12, &mut rng);
+    let splits = kfold(90, 3, Some(0));
+    let shape = FitShape { n: 90, p: 10, t: 12, r: LAMBDA_GRID.len(), splits: 3 };
+    let cal = Calibration::nominal();
+
+    // Whichever worker draws decompose-split-1 exits like a crash
+    // (no Fail frame, just a dead pipe).
+    let exec = ProcessExecutor::new(2)
+        .with_worker_bin(WORKER_BIN)
+        .with_worker_env(fmri_encode::scheduler::process::WORKER_DIE_ENV, "decompose-split-1");
+
+    let plan_elapsed = Mutex::new(0.0);
+    let ctx = ProcessCtx {
+        x: &x,
+        x_shared: Some(Arc::new(x.clone())),
+        y: &y,
+        splits: &splits,
+        lambdas: &LAMBDA_GRID,
+        backend: Backend::MklLike,
+        threads: 1,
+        started: Instant::now(),
+        plan_elapsed: &plan_elapsed,
+        on_plan: None,
+    };
+
+    let bmor = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 2,
+        threads_per_node: 1,
+        ..Default::default()
+    };
+    let graph = coordinator::task_graph(shape, &bmor, &cal);
+    match exec.run_tasks(&graph, &ctx) {
+        Err(ProcessError::WorkerLost { task, .. }) => assert_eq!(task, "decompose-split-1"),
+        other => panic!("expected WorkerLost, got {other:?}"),
+    }
+
+    // Same executor, next graph: the pool respawns and completes. The
+    // die-pattern only matches decompose task names; Single emits
+    // "ridgecv", which the respawned workers run to completion.
+    let single = DistConfig {
+        strategy: Strategy::Single,
+        nodes: 1,
+        threads_per_node: 1,
+        ..Default::default()
+    };
+    let graph2 = coordinator::task_graph(shape, &single, &cal);
+    let outs = exec.run_tasks(&graph2, &ctx).expect("pool survives to the next graph");
+    assert_eq!(outs.len(), graph2.len());
+    assert!(exec.stats().spawns >= 3, "failed run's workers were respawned");
+}
+
+#[test]
+fn task_timeout_is_typed_not_a_hang() {
+    let mut rng = Pcg64::seeded(6);
+    let x = Mat::randn(90, 10, &mut rng);
+    let y = Mat::randn(90, 12, &mut rng);
+    let splits = kfold(90, 3, Some(0));
+    let shape = FitShape { n: 90, p: 10, t: 12, r: LAMBDA_GRID.len(), splits: 3 };
+
+    let exec = ProcessExecutor::new(1)
+        .with_worker_bin(WORKER_BIN)
+        .with_task_timeout(Duration::ZERO);
+
+    let plan_elapsed = Mutex::new(0.0);
+    let ctx = ProcessCtx {
+        x: &x,
+        x_shared: Some(Arc::new(x.clone())),
+        y: &y,
+        splits: &splits,
+        lambdas: &LAMBDA_GRID,
+        backend: Backend::MklLike,
+        threads: 1,
+        started: Instant::now(),
+        plan_elapsed: &plan_elapsed,
+        on_plan: None,
+    };
+    let cfg = DistConfig {
+        strategy: Strategy::Bmor,
+        nodes: 2,
+        threads_per_node: 1,
+        ..Default::default()
+    };
+    let graph = coordinator::task_graph(shape, &cfg, &Calibration::nominal());
+    match exec.run_tasks(&graph, &ctx) {
+        Err(ProcessError::TaskTimeout { timeout_secs, .. }) => assert_eq!(timeout_secs, 0),
+        other => panic!("expected TaskTimeout, got {other:?}"),
+    }
+}
+
+#[test]
+fn bogus_worker_bin_is_a_typed_engine_error() {
+    let mut rng = Pcg64::seeded(8);
+    let x = Mat::randn(40, 6, &mut rng);
+    let y = Mat::randn(40, 4, &mut rng);
+    let engine = Engine::new().with_worker_bin("/nonexistent/fmri-worker-bin");
+    let err = engine
+        .fit(&FitRequest::new(&x, &y).executor(ExecutorKind::Process { workers: 2 }))
+        .unwrap_err();
+    assert!(matches!(err, EngineError::WorkerPool { .. }), "{err:?}");
 }
