@@ -1,0 +1,177 @@
+//! Serving bench: cross-request sweep coalescing under an open-loop
+//! arrival process.
+//!
+//! A deterministic synthetic trace (Poisson arrivals, many small
+//! requests — 4 target columns each, the multi-tenant shape that wastes
+//! microkernel lanes when swept alone) is replayed through
+//! `serve::Server` at several merge-policy settings:
+//!
+//! - `uncoalesced`  — `max_coalesce_targets = 0`, every request sweeps
+//!   alone (the baseline);
+//! - `coalesce-*`   — growing target budgets with a short linger.
+//!
+//! Two traces: `shared` (one design — every request is coalescible, the
+//! headline case) and `mixed` (several designs — coalescing works per
+//! plan key). Per run the bench reports p50/p99 submit→response latency,
+//! answered-request throughput and the `ServeStats` counters, and CI
+//! enforces the headline claim: on the shared-design trace, the best
+//! coalesced throughput is at least the uncoalesced baseline.
+//!
+//! Knobs: `BENCH_SERVING_QUICK=1` shrinks the trace;
+//! `BENCH_SERVING_JSON=path` overrides the JSON output path.
+
+mod common;
+use common::{header, report};
+
+use std::time::Duration;
+
+use fmri_encode::engine::Engine;
+use fmri_encode::jobj;
+use fmri_encode::serve::trace::{Trace, TraceConfig, TraceReport};
+use fmri_encode::serve::{ServeConfig, Server};
+use fmri_encode::util::human_secs;
+use fmri_encode::util::json::Json;
+
+struct Setting {
+    name: &'static str,
+    max_coalesce_targets: usize,
+    linger: Duration,
+}
+
+fn run(trace: &Trace, requests: usize, s: &Setting) -> TraceReport {
+    let server = Server::new(
+        Engine::new(),
+        ServeConfig {
+            workers: 2,
+            // The bench measures latency under load, not admission
+            // control: the queue must absorb the whole burst.
+            queue_capacity: requests,
+            max_coalesce_targets: s.max_coalesce_targets,
+            max_linger: s.linger,
+        },
+    );
+    let rep = trace.replay(&server);
+    server.shutdown();
+    rep
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_SERVING_QUICK").is_ok();
+    let requests = if quick { 48 } else { 192 };
+    let (n, p) = if quick { (128, 32) } else { (256, 48) };
+    let base = TraceConfig {
+        designs: 1,
+        requests,
+        n,
+        p,
+        targets_per_request: 4,
+        // Near-burst offered load: the server, not the arrival schedule,
+        // must be the bottleneck for throughput to mean anything.
+        arrival_hz: 2000.0,
+        folds: 3,
+        seed: 42,
+    };
+    let settings = [
+        Setting { name: "uncoalesced", max_coalesce_targets: 0, linger: Duration::ZERO },
+        Setting {
+            name: "coalesce-64",
+            max_coalesce_targets: 64,
+            linger: Duration::from_millis(1),
+        },
+        Setting {
+            name: "coalesce-256",
+            max_coalesce_targets: 256,
+            linger: Duration::from_millis(2),
+        },
+    ];
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut shared_tput: Vec<(&str, f64)> = Vec::new();
+    for (trace_name, designs) in [("shared", 1usize), ("mixed", 4usize)] {
+        header(&format!(
+            "serving: {trace_name} trace ({requests} req × {} targets, {designs} design(s))",
+            base.targets_per_request
+        ));
+        let cfg = TraceConfig { designs, ..base.clone() };
+        let trace = Trace::synth(&cfg);
+        for s in &settings {
+            let rep = run(&trace, requests, s);
+            assert_eq!(
+                rep.completed + rep.errored,
+                requests,
+                "every request must be answered ({trace_name}/{})",
+                s.name
+            );
+            assert_eq!(rep.errored, 0, "no rejections at burst capacity");
+            let (p50, p99) = (rep.latency_pctl(0.5), rep.latency_pctl(0.99));
+            let tput = rep.throughput_rps();
+            report(
+                &format!("{trace_name:<8} {:<14}", s.name),
+                format!(
+                    "p50 {:>9} | p99 {:>9} | {:>7.1} req/s | {} batch(es), {} coalesced",
+                    human_secs(p50),
+                    human_secs(p99),
+                    tput,
+                    rep.stats.batches,
+                    rep.stats.coalesced
+                ),
+            );
+            if trace_name == "shared" {
+                shared_tput.push((s.name, tput));
+            }
+            entries.push(jobj! {
+                "trace" => trace_name,
+                "designs" => designs,
+                "setting" => s.name,
+                "max_coalesce_targets" => s.max_coalesce_targets,
+                "linger_us" => s.linger.as_micros() as usize,
+                "p50_secs" => p50,
+                "p99_secs" => p99,
+                "throughput_rps" => tput,
+                "completed" => rep.completed,
+                "errored" => rep.errored,
+                "wall_secs" => rep.wall_secs,
+                "batches" => rep.stats.batches as usize,
+                "coalesced" => rep.stats.coalesced as usize,
+                "flushed_full" => rep.stats.flushed_full as usize,
+                "flushed_linger" => rep.stats.flushed_linger as usize,
+            });
+        }
+    }
+
+    // The headline claim, CI-enforced: on the shared-design trace the
+    // best coalescing setting must not lose throughput vs running every
+    // sweep alone.
+    let baseline = shared_tput
+        .iter()
+        .find(|(name, _)| *name == "uncoalesced")
+        .map(|&(_, t)| t)
+        .expect("baseline ran");
+    let best = shared_tput
+        .iter()
+        .filter(|(name, _)| *name != "uncoalesced")
+        .map(|&(_, t)| t)
+        .fold(f64::NEG_INFINITY, f64::max);
+    report(
+        "shared-trace coalescing speedup",
+        format!("{:.2}× over uncoalesced", best / baseline),
+    );
+    assert!(
+        best >= baseline,
+        "coalesced throughput ({best:.1} req/s) below uncoalesced baseline ({baseline:.1} req/s)"
+    );
+
+    let json = jobj! {
+        "bench" => "bench_serving",
+        "quick" => quick,
+        "requests" => requests,
+        "n" => n, "p" => p,
+        "targets_per_request" => base.targets_per_request,
+        "arrival_hz" => base.arrival_hz,
+        "runs" => entries,
+    };
+    let out =
+        std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    std::fs::write(&out, json.to_string_pretty()).expect("write BENCH_serving.json");
+    println!("\nwrote {out}");
+}

@@ -22,6 +22,7 @@
 //! roundoff differs from the scalar kernel's by O(kb·ε) per element —
 //! the documented tolerance of the SIMD/scalar parity tests.
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 
 use crate::linalg::Mat;
@@ -30,6 +31,31 @@ use super::gemm::{KC, MC, NC};
 
 pub const MR: usize = 4;
 pub const NR: usize = 8;
+
+thread_local! {
+    static KERNEL_MULS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Physical multiplies issued by this thread's microkernel calls since
+/// the last [`reset_kernel_muls`] — full strips count MR·NR·kb (padding
+/// lanes included; the registers compute them regardless), triangular
+/// diagonal strips count exactly the upper-triangle lanes they touch.
+/// The counter is **per thread**: FLOP-accounting tests must run the
+/// kernels on a single-thread `Blas`, whose pool executes chunks inline
+/// on the calling thread.
+pub fn kernel_muls() -> u64 {
+    KERNEL_MULS.with(|c| c.get())
+}
+
+/// Zero this thread's microkernel multiply counter.
+pub fn reset_kernel_muls() {
+    KERNEL_MULS.with(|c| c.set(0));
+}
+
+#[inline]
+fn count_muls(n: u64) {
+    KERNEL_MULS.with(|c| c.set(c.get() + n));
+}
 
 /// Which microkernel implementation the dispatcher selected.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,12 +158,20 @@ pub fn kernel_block(
 }
 
 /// [`kernel_block`] with an optional symmetric-output mask: when `diag`
-/// carries the block's global (row, col) offsets, MR×NR strip pairs that
-/// lie entirely below the diagonal are skipped — their outputs belong to
-/// the lower triangle, which the triangular `syrk` mirrors from the upper
-/// triangle instead of computing. Strips straddling the diagonal are
-/// computed in full (their sub-diagonal lanes are overwritten by the
-/// mirror), so the waste is at most one strip per row band.
+/// carries the block's global (row, col) offsets, each MR×NR strip pair
+/// is classified against the diagonal. Strips entirely below it are
+/// skipped — their outputs belong to the lower triangle, which the
+/// triangular `syrk` mirrors from the upper triangle instead of
+/// computing. Strips entirely on or above it run the full SIMD kernel.
+/// Strips *straddling* the diagonal run a scalar triangular kernel
+/// ([`kernel_4x8_triangular`]) whose per-row lane start tracks the
+/// diagonal exactly, so a diagonal tile issues precisely its
+/// upper-triangle multiplies and nothing more. The classification
+/// depends only on the strip's global origin — never on thread chunking
+/// — so masked results stay bit-stable across thread counts. Straddled
+/// upper-triangle elements accumulate in the same k-ascending order as
+/// the full kernels but without FMA contraction, a tolerance-level (not
+/// bitwise) difference from the unmasked path.
 #[allow(clippy::too_many_arguments)]
 pub fn kernel_block_masked(
     apack: &[f64],
@@ -156,17 +190,34 @@ pub fn kernel_block_masked(
         let mrows = (is + MR).min(ib) - is;
         let astrip = &apack[ai * kb * MR..][..kb * MR];
         for (bi, js) in (0..jb).step_by(NR).enumerate() {
-            if let Some((grow, gcol)) = diag {
-                // Strip's last column still left of the strip's first row:
-                // entirely sub-diagonal, mirrored later, skip the FLOPs.
-                if gcol + js + NR <= grow + is {
-                    continue;
-                }
-            }
             let ncols = (js + NR).min(jb) - js;
             let bstrip = &bpack[bi * kb * NR..][..kb * NR];
             let mut acc = [[0.0f64; NR]; MR];
-            kernel_4x8_with(isa, astrip, bstrip, kb, &mut acc);
+            match diag {
+                // Strip's last column still left of the strip's first
+                // row: entirely sub-diagonal, mirrored later, skip the
+                // FLOPs.
+                Some((grow, gcol)) if gcol + js + NR <= grow + is => continue,
+                // Strip straddles the diagonal: scalar kernel, each row
+                // starting at its own diagonal lane.
+                Some((grow, gcol)) if gcol + js < grow + is + mrows - 1 => {
+                    let (row0, col0) = (grow + is, gcol + js);
+                    let mut lane_start = [NR; MR];
+                    let mut muls = 0;
+                    for (r, ls) in lane_start.iter_mut().enumerate().take(mrows) {
+                        *ls = (row0 + r).saturating_sub(col0).min(NR);
+                        muls += NR - *ls;
+                    }
+                    count_muls((muls * kb) as u64);
+                    kernel_4x8_triangular(astrip, bstrip, kb, &mut acc, mrows, &lane_start);
+                }
+                // No mask, or the whole strip is on/above the diagonal:
+                // full-width SIMD kernel.
+                _ => {
+                    count_muls((MR * NR * kb) as u64);
+                    kernel_4x8_with(isa, astrip, bstrip, kb, &mut acc);
+                }
+            }
             // Scatter accumulator into C (masking partial edges).
             for r in 0..mrows {
                 let crow = &mut crows
@@ -175,6 +226,32 @@ pub fn kernel_block_masked(
                     *dst += acc[r][c];
                 }
             }
+        }
+    }
+}
+
+/// Scalar triangular register tile for diagonal-straddling strips: row
+/// `r` accumulates only lanes `lane_start[r]..NR` (its on-or-above-
+/// diagonal columns), each element in the same k-ascending order as the
+/// full kernels. Sub-diagonal lanes stay zero in `acc`; the caller's
+/// scatter adds them as no-ops and the `syrk` mirror overwrites them.
+fn kernel_4x8_triangular(
+    astrip: &[f64],
+    bstrip: &[f64],
+    kb: usize,
+    acc: &mut [[f64; NR]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    debug_assert!(astrip.len() >= kb * MR);
+    debug_assert!(bstrip.len() >= kb * NR);
+    for (r, row) in acc.iter_mut().enumerate().take(mrows) {
+        for (l, out) in row.iter_mut().enumerate().skip(lane_start[r]) {
+            let mut s = 0.0;
+            for k in 0..kb {
+                s += astrip[k * MR + r] * bstrip[k * NR + l];
+            }
+            *out += s;
         }
     }
 }

@@ -161,11 +161,15 @@ impl Blas {
     pub const SYRK_TILE: usize = 128;
 
     /// K = XᵀX exploiting symmetry: only the ⌈p/SB⌉·(⌈p/SB⌉+1)/2 upper
-    /// tiles are computed — diagonal tiles with a sub-diagonal strip mask,
-    /// off-diagonal tiles via the packed rectangular block kernel — then
-    /// the upper triangle is mirrored once, serially. Roughly half the
-    /// FLOPs of the old `at_b(x, x)` Gram and exactly symmetric by
-    /// construction (mirror copy, not triangle averaging).
+    /// tiles are computed — off-diagonal tiles via the packed rectangular
+    /// block kernel, diagonal tiles genuinely triangular (sub-diagonal
+    /// strips skipped, straddling strips per-row masked to their
+    /// on-or-above-diagonal lanes, so a diagonal tile issues exactly its
+    /// upper-triangle multiplies — pinned by the FLOP-count test in
+    /// `tests/kernel_parity.rs`) — then the upper triangle is mirrored
+    /// once, serially. Half the FLOPs of the old `at_b(x, x)` Gram and
+    /// exactly symmetric by construction (mirror copy, not triangle
+    /// averaging).
     ///
     /// Tiles are distributed across the pool, but each output element's
     /// accumulation order depends only on its tile origin and the fixed

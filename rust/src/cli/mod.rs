@@ -10,6 +10,9 @@
 //!   fit      --resolution R --strategy S --nodes N --threads T
 //!            [--backend B] [--path native|xla]
 //!            [--executor thread|process --workers W]   run a real fit
+//!   serve-bench  --requests N --designs D --rate HZ
+//!            [--workers W] [--max-coalesce T] [--linger-us US]
+//!            replay an open-loop trace through the serving layer
 //!   calibrate                    measure this machine's kernel throughput
 //!   validate                     native-vs-XLA parity + perfmodel checks
 //! common:  --quick --subjects N --out DIR --seed S
@@ -27,15 +30,18 @@ use crate::figures::{generate_figure, FigCtx};
 use crate::metrics::fnum;
 use crate::perfmodel::{calibrate, flops};
 use crate::ridge;
-use crate::util::{human_bytes, human_secs, Stopwatch};
+use crate::util::{format_stats_table, human_bytes, human_secs, Stopwatch};
 
-const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|calibrate|validate> [--help]
+const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|serve-bench|calibrate|validate> [--help]
   tables   --table 1|2|all [--out DIR] [--quick]
   figures  --fig 4|5|6|7|8|9|10|all [--out DIR] [--quick] [--subjects N]
   fit      [--resolution parcels|roi|whole-brain|mor] [--strategy ridgecv|mor|bmor]
            [--nodes N] [--threads T] [--backend naive|openblas|mkl]
            [--executor thread|process] [--workers W]
            [--path native|xla] [--subject 1..6] [--quick]
+  serve-bench [--requests N] [--designs D] [--rate HZ] [--targets T]
+           [--workers W] [--queue Q] [--max-coalesce T] [--linger-us US]
+           [--quick] [--seed S]
   calibrate [--quick]
   validate [--quick] [--artifacts DIR]";
 
@@ -51,6 +57,7 @@ pub fn run() -> Result<()> {
         "tables" => cmd_tables(&args),
         "figures" => cmd_figures(&args),
         "fit" => cmd_fit(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "calibrate" => cmd_calibrate(&args),
         "validate" => cmd_validate(&args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
@@ -197,16 +204,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
             // encode key two distinct plans — full X vs its outer
             // training rows — so a fresh session shows 2 misses).
             let cs = engine.cache_stats();
-            println!(
-                "plan cache: {} plan(s) resident, {} of {} budget — {} hit(s), {} miss(es), {} coalesced, {} eviction(s)",
-                cs.entries.len(),
-                human_bytes(cs.resident_bytes as u64),
-                human_bytes(cs.budget_bytes as u64),
-                cs.hits,
-                cs.misses,
-                cs.coalesced,
-                cs.evictions
-            );
+            println!("{}", format_stats_table("plan cache", &cs.table_rows()));
             for e in &cs.entries {
                 println!(
                     "  plan {:016x}: {} resident (last touch #{})",
@@ -264,6 +262,59 @@ fn cmd_fit(args: &Args) -> Result<()> {
         }
         other => bail!("--path must be native or xla, got `{other}`"),
     }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use crate::serve::trace::{Trace, TraceConfig};
+    use crate::serve::{ServeConfig, Server};
+    use std::time::Duration;
+
+    let quick = args.flag("quick");
+    let trace_cfg = TraceConfig {
+        designs: args.usize_or("designs", 1)?,
+        requests: args.usize_or("requests", if quick { 48 } else { 256 })?,
+        n: args.usize_or("n", if quick { 96 } else { 240 })?,
+        p: args.usize_or("p", if quick { 24 } else { 48 })?,
+        targets_per_request: args.usize_or("targets", 4)?,
+        arrival_hz: args.f64_or("rate", if quick { 400.0 } else { 800.0 })?,
+        folds: args.usize_or("folds", 3)?,
+        seed: args.usize_or("seed", 0)? as u64,
+    };
+    let serve_cfg = ServeConfig {
+        workers: args.usize_or("workers", 2)?,
+        queue_capacity: args.usize_or("queue", 1024)?,
+        max_coalesce_targets: args.usize_or("max-coalesce", 256)?,
+        max_linger: Duration::from_micros(args.usize_or("linger-us", 2000)? as u64),
+    };
+    println!(
+        "serve-bench: {} request(s) × {} target(s) over {} design(s), open-loop at {:.0} req/s",
+        trace_cfg.requests,
+        trace_cfg.targets_per_request,
+        trace_cfg.designs,
+        trace_cfg.arrival_hz
+    );
+    println!(
+        "merge policy: workers={} queue={} max-coalesce={} targets, linger={}",
+        serve_cfg.workers,
+        serve_cfg.queue_capacity,
+        serve_cfg.max_coalesce_targets,
+        human_secs(serve_cfg.max_linger.as_secs_f64())
+    );
+    let trace = Trace::synth(&trace_cfg);
+    let server = Server::new(Engine::new(), serve_cfg);
+    let report = trace.replay(&server);
+    server.shutdown();
+    println!(
+        "latency p50 {} | p99 {} | throughput {:.1} req/s | completed {} | errored {}",
+        human_secs(report.latency_pctl(0.5)),
+        human_secs(report.latency_pctl(0.99)),
+        report.throughput_rps(),
+        report.completed,
+        report.errored
+    );
+    println!("{}", format_stats_table("serving", &report.stats.table_rows()));
+    println!("{}", format_stats_table("plan cache", &server.engine().cache_stats().table_rows()));
     Ok(())
 }
 

@@ -14,8 +14,16 @@
 //!
 //! Policy, in one paragraph: every access stamps a monotone tick
 //! (per-key *last touch*). An insert that pushes the resident total over
-//! the budget evicts least-recently-touched entries — never the entry
-//! being inserted, so a single plan larger than the whole budget still
+//! the budget evicts entries by **cost-aware weighting**: the victim is
+//! the entry wasting the most bytes per predicted rebuild second —
+//! `resident_bytes / perfmodel::plan_decompose_secs` at the nominal
+//! calibration (relative cost is all the policy needs) — so a
+//! bytes-heavy plan that is cheap to refactorize (big n, small p; eigh
+//! is O(p³)) is sacrificed before a small but expensive one. Entries
+//! with identical shapes price identically, and exact score ties fall
+//! back to least-recently-touched, so homogeneous workloads degrade to
+//! plain LRU. The entry being inserted is never a victim, so a single
+//! plan larger than the whole budget still
 //! serves warm fits until the next insert displaces it. Eviction drops
 //! the cache's `Arc` only: in-flight fits holding a clone keep the
 //! factors alive until they finish, and the accounting tracks
@@ -39,6 +47,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use crate::blas::Backend;
 use crate::cv::Split;
 use crate::linalg::Mat;
+use crate::perfmodel::{self, Calibration, FitShape};
 use crate::ridge::DesignPlan;
 
 /// Default cache budget: 8 GiB — generous (a handful of whole-brain
@@ -136,8 +145,9 @@ impl PlanKey {
     }
 
     /// One opaque u64 naming this key in observability output
-    /// ([`CacheEntryStats::key`]) — an FNV fold of all five components.
-    fn fingerprint(&self) -> u64 {
+    /// ([`CacheEntryStats::key`]) and in the serving layer's coalescing
+    /// buckets — an FNV fold of all five components.
+    pub(crate) fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.u64(self.design);
         h.u64(self.splits);
@@ -192,6 +202,29 @@ pub struct CacheEntryStats {
     pub last_touch: u64,
 }
 
+impl CacheStats {
+    /// Rows for [`crate::util::format_stats_table`] — the shared
+    /// renderer behind `cli fit`'s cache block and `cli serve-bench`'s
+    /// [`ServeStats`](crate::serve::ServeStats) block.
+    pub fn table_rows(&self) -> Vec<(String, String)> {
+        vec![
+            ("plans resident".into(), self.entries.len().to_string()),
+            (
+                "resident bytes".into(),
+                format!(
+                    "{} of {} budget",
+                    crate::util::human_bytes(self.resident_bytes as u64),
+                    crate::util::human_bytes(self.budget_bytes as u64)
+                ),
+            ),
+            ("hits".into(), self.hits.to_string()),
+            ("misses".into(), self.misses.to_string()),
+            ("coalesced".into(), self.coalesced.to_string()),
+            ("evictions".into(), self.evictions.to_string()),
+        ]
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Cache
 // ---------------------------------------------------------------------------
@@ -200,6 +233,20 @@ struct Entry {
     plan: Arc<DesignPlan>,
     bytes: usize,
     last_touch: u64,
+    /// Predicted seconds to rebuild this plan from scratch
+    /// (`perfmodel::plan_decompose_secs` at the nominal calibration),
+    /// priced once at insert. The eviction policy's denominator.
+    rebuild_secs: f64,
+}
+
+impl Entry {
+    /// Wasted bytes per predicted rebuild second — the cost-aware
+    /// eviction score. The LARGEST score is the next victim: it frees
+    /// the most budget per second of refactorization a future cold miss
+    /// would pay to bring it back.
+    fn eviction_score(&self) -> f64 {
+        self.bytes as f64 / self.rebuild_secs
+    }
 }
 
 #[derive(Default)]
@@ -291,16 +338,34 @@ impl PlanCache {
         }
     }
 
-    /// Insert a finished plan under `key`, then evict least-recently
-    /// touched entries (never `key` itself) until the resident total is
-    /// back under budget. Runs under the caller's guard so the claim
+    /// Insert a finished plan under `key`, then evict entries (never
+    /// `key` itself) until the resident total is back under budget. The
+    /// victim order is cost-aware: highest `bytes / predicted rebuild
+    /// seconds` first, least-recently-touched on exact score ties (see
+    /// the module docs). Runs under the caller's guard so the claim
     /// release and the insert are one atomic step — a waiter can never
     /// observe "not building, not resident" for a build that succeeded.
     fn insert_locked(&self, st: &mut CacheState, key: PlanKey, plan: Arc<DesignPlan>) {
         let bytes = plan.resident_bytes();
+        // Price the rebuild once, at the nominal calibration: the policy
+        // compares entries against each other, so only relative cost
+        // matters, not this machine's absolute throughput. `t` is 0
+        // because rebuilding a plan redoes the target-independent
+        // decompositions only.
+        let shape = FitShape {
+            n: plan.x.rows(),
+            p: plan.x.cols(),
+            t: 0,
+            r: plan.lambdas.len(),
+            splits: plan.splits.len(),
+        };
+        let rebuild_secs =
+            perfmodel::plan_decompose_secs(&Calibration::nominal(), key.backend, shape)
+                .max(f64::MIN_POSITIVE);
         st.tick += 1;
         let tick = st.tick;
-        if let Some(old) = st.map.insert(key, Entry { plan, bytes, last_touch: tick }) {
+        if let Some(old) = st.map.insert(key, Entry { plan, bytes, last_touch: tick, rebuild_secs })
+        {
             // Same key rebuilt concurrently with a clear(): replacement,
             // not an eviction.
             st.resident -= old.bytes;
@@ -311,7 +376,16 @@ impl PlanCache {
                 .map
                 .iter()
                 .filter(|(k, _)| **k != key)
-                .min_by_key(|(_, e)| e.last_touch)
+                .min_by(|(_, a), (_, b)| {
+                    // Highest score first (the comparator's minimum is
+                    // the victim); ties — identical shapes price
+                    // identically — fall back to least recently touched.
+                    // last_touch stamps are unique, so the order is
+                    // total and independent of HashMap iteration order.
+                    b.eviction_score()
+                        .total_cmp(&a.eviction_score())
+                        .then(a.last_touch.cmp(&b.last_touch))
+                })
                 .map(|(k, _)| *k);
             match victim {
                 Some(v) => {
@@ -412,6 +486,14 @@ mod tests {
         PlanKey { design: i, splits: 0, lambdas: 0, backend: Backend::MklLike, threads: 1 }
     }
 
+    fn shaped_plan(n: usize, p: usize, seed: u64) -> Arc<DesignPlan> {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let splits = kfold(n, 3, Some(seed));
+        let blas = Blas::new(Backend::MklLike, 1);
+        Arc::new(DesignPlan::build(&blas, &x, &LAMBDA_GRID, &splits))
+    }
+
     fn claim_and_fulfill(cache: &PlanCache, k: PlanKey, plan: &Arc<DesignPlan>) {
         match cache.lease(k) {
             Lease::Build(g) => g.fulfill(plan),
@@ -439,6 +521,76 @@ mod tests {
             Lease::Build(_) => {} // claim released on guard drop
             Lease::Hit(_) => panic!("LRU entry survived over-budget insert"),
         }
+    }
+
+    #[test]
+    fn cost_aware_eviction_sacrifices_the_cheap_to_rebuild_giant() {
+        // A many-sample/few-feature design is bytes-heavy (X and the Xtr
+        // gathers scale with n·p) but cheap to refactorize (eigh is
+        // O(p³)); a few-sample/many-feature design is the opposite.
+        // Under byte pressure the victim must be the giant — even though
+        // it is the MOST recently touched entry. Pure LRU would evict
+        // the expensive small plan here.
+        let giant = shaped_plan(240, 4, 1);
+        let small = shaped_plan(24, 16, 2);
+        assert!(
+            giant.resident_bytes() > small.resident_bytes(),
+            "test premise: the cheap-to-rebuild plan is the bigger one"
+        );
+        // Self-check the policy's other premise with the real pricer.
+        let cost = |pl: &Arc<DesignPlan>| {
+            let shape = FitShape {
+                n: pl.x.rows(),
+                p: pl.x.cols(),
+                t: 0,
+                r: pl.lambdas.len(),
+                splits: pl.splits.len(),
+            };
+            perfmodel::plan_decompose_secs(&Calibration::nominal(), Backend::MklLike, shape)
+        };
+        assert!(
+            giant.resident_bytes() as f64 / cost(&giant)
+                > small.resident_bytes() as f64 / cost(&small),
+            "test premise: the giant wastes more bytes per rebuild second"
+        );
+
+        let budget = giant.resident_bytes() + small.resident_bytes();
+        let cache = PlanCache::new(budget);
+        claim_and_fulfill(&cache, key(1), &small); // older
+        claim_and_fulfill(&cache, key(2), &giant); // most recently touched
+        assert_eq!(cache.len(), 2);
+
+        // A third (small-shaped) insert goes over budget: the giant is
+        // evicted despite its freshness; the LRU small plan survives.
+        claim_and_fulfill(&cache, key(3), &shaped_plan(24, 16, 3));
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "one eviction must cover the overflow");
+        assert_eq!(cache.len(), 2);
+        assert!(
+            matches!(cache.lease(key(1)), Lease::Hit(_)),
+            "expensive small plan must survive cost-aware eviction"
+        );
+        assert!(
+            matches!(cache.lease(key(2)), Lease::Build(_)),
+            "cheap-to-rebuild giant must be the victim"
+        );
+    }
+
+    #[test]
+    fn equal_cost_entries_fall_back_to_lru_order() {
+        // Identical shapes price identically, so the cost-aware score
+        // ties exactly and recency must decide — the homogeneous-traffic
+        // degradation the LRU tests elsewhere rely on.
+        let a = shaped_plan(30, 6, 10);
+        let one = a.resident_bytes();
+        let cache = PlanCache::new(2 * one + one / 2);
+        claim_and_fulfill(&cache, key(1), &a);
+        claim_and_fulfill(&cache, key(2), &shaped_plan(30, 6, 11));
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_))); // refresh 1; 2 is LRU
+        claim_and_fulfill(&cache, key(3), &shaped_plan(30, 6, 12));
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(matches!(cache.lease(key(1)), Lease::Hit(_)), "refreshed entry evicted");
+        assert!(matches!(cache.lease(key(2)), Lease::Build(_)), "LRU entry must be the victim");
     }
 
     #[test]

@@ -115,6 +115,10 @@ pub enum EngineError {
     /// The worker pool failed outside a specific running task: spawn
     /// failure, wire-protocol violation, or a worker-side panic.
     WorkerPool { detail: String },
+    /// [`Engine::fit_coalesced`] was handed requests that do not share
+    /// one plan identity (same design, CV splits, λ grid, backend and
+    /// thread width) or use a strategy that is not plan-backed.
+    CoalesceKeyMismatch,
 }
 
 impl fmt::Display for EngineError {
@@ -145,6 +149,11 @@ impl fmt::Display for EngineError {
                 write!(f, "task `{task}` exceeded the {timeout_secs}s worker deadline")
             }
             EngineError::WorkerPool { detail } => write!(f, "worker pool failure: {detail}"),
+            EngineError::CoalesceKeyMismatch => write!(
+                f,
+                "coalesced fit requests must share one plan key \
+                 (same design, splits, λ grid, backend, threads; plan-backed strategy only)"
+            ),
         }
     }
 }
@@ -752,6 +761,150 @@ impl Engine {
         }
     }
 
+    /// Resolve a request's plan identity WITHOUT fitting: validate it
+    /// and return the opaque fingerprint of the [`DesignPlan`] cache key
+    /// it would resolve to — the same u64 [`CacheEntryStats::key`]
+    /// reports. `Ok(None)` means the request is valid but not
+    /// plan-backed (Single / MOR baselines bypass the cache), so it
+    /// cannot participate in cross-request coalescing.
+    ///
+    /// This is the serving layer's admission primitive: two requests
+    /// with equal fingerprints would build bit-identical plans, so their
+    /// λ sweeps can be merged into one [`Engine::fit_coalesced`] call.
+    /// Costs one FNV pass over X (O(n·p)) — negligible against the
+    /// O(p³) decomposition the coalescing saves.
+    pub fn plan_fingerprint(&self, req: &FitRequest) -> Result<Option<u64>, EngineError> {
+        req.validate()?;
+        if req.strategy != Strategy::Bmor {
+            return Ok(None);
+        }
+        let x = req.x.mat();
+        let splits = kfold(x.rows(), req.folds, Some(req.seed));
+        let key = PlanKey::new(x, &splits, &req.lambdas, req.backend, req.threads_per_node);
+        Ok(Some(key.fingerprint()))
+    }
+
+    /// Fit MANY requests sharing one plan identity in ONE coalesced
+    /// sweep — the serving layer's cross-request batching primitive.
+    ///
+    /// Every request must resolve to the same plan key (same design, CV
+    /// splits, λ grid, backend and thread width — check with
+    /// [`Engine::plan_fingerprint`]); otherwise
+    /// [`EngineError::CoalesceKeyMismatch`]. The target columns of all
+    /// requests are horizontally concatenated and swept through
+    /// [`ridge::fit_coalesced_with_plan`] in one pass — t small
+    /// per-caller GEMMs become one large one — then scattered back into
+    /// one [`DistributedFit`] per request. Segment boundaries follow
+    /// each request's own batch partition (`strategy_batches`), and λ
+    /// selection runs per segment, so every returned fit is
+    /// **bit-identical** to what [`Engine::fit`] would have returned for
+    /// that request alone (pinned by `tests/serving.rs`).
+    ///
+    /// Cache behavior matches [`Engine::fit`]: a warm hit decomposes
+    /// nothing; a miss claims the single-flight build (serial
+    /// factorization, bit-identical to the graph build) and publishes
+    /// the plan. On a cold call, `plan_secs` is reported on every
+    /// member — they all waited on the one build. Per-stage timings are
+    /// zeroed on coalesced fits (the shared sweep is not separable per
+    /// request); `wall_secs` carries the shared wall clock.
+    pub fn fit_coalesced(&self, reqs: &[FitRequest]) -> Result<Vec<DistributedFit>, EngineError> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for r in reqs {
+            r.validate()?;
+            if r.strategy != Strategy::Bmor {
+                return Err(EngineError::CoalesceKeyMismatch);
+            }
+        }
+        let first = &reqs[0];
+        let x = first.x.mat();
+        let cfg = first.dist_config();
+        let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+        let key = PlanKey::new(x, &splits, &first.lambdas, cfg.backend, cfg.threads_per_node);
+        for r in &reqs[1..] {
+            let rc = r.dist_config();
+            let rs = kfold(r.x.mat().rows(), rc.inner_folds, Some(rc.seed));
+            let rk =
+                PlanKey::new(r.x.mat(), &rs, &r.lambdas, rc.backend, rc.threads_per_node);
+            if rk != key {
+                return Err(EngineError::CoalesceKeyMismatch);
+            }
+        }
+
+        let blas = Blas::new(cfg.backend, cfg.threads_per_node);
+        let (plan, plan_secs, reused) = match self.plans.lease(key) {
+            Lease::Hit(plan) => (plan, 0.0, true),
+            Lease::Build(guard) => {
+                // Serial factorization on the calling thread — the same
+                // per-factorization code path as the coordinator's
+                // graph build, so the plans are bit-identical (pinned
+                // by ridge::plan's assemble-vs-build test). Adopt the
+                // caller's Arc (or clone a borrowed X exactly once).
+                let started = Instant::now();
+                let mut tim = RidgeTimings::default();
+                let mut sds = Vec::with_capacity(splits.len());
+                for s in &splits {
+                    let (sd, t) = ridge::factorize_split(&blas, x, s);
+                    tim.add(&t);
+                    sds.push(Arc::new(sd));
+                }
+                let (full, t) = ridge::factorize_full(&blas, x);
+                tim.add(&t);
+                let plan = Arc::new(DesignPlan::assemble(
+                    first.x.to_shared(),
+                    sds,
+                    full,
+                    &first.lambdas,
+                    tim,
+                ));
+                let secs = started.elapsed().as_secs_f64();
+                guard.fulfill(&plan);
+                (plan, secs, false)
+            }
+        };
+
+        // One wide sweep over the concatenation of every request's
+        // targets. Segments are the requests' OWN batch partitions
+        // (contiguous within each request's columns), so the scatter
+        // below reassembles exactly what Engine::fit would have built.
+        let started = Instant::now();
+        let ys: Vec<&Mat> = reqs.iter().map(|r| r.y).collect();
+        let ycat = Mat::hcat(&ys);
+        let mut widths = Vec::new();
+        let mut all_batches = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let batches = strategy_batches(Strategy::Bmor, r.y.cols(), r.nodes);
+            for &(j0, j1) in &batches {
+                widths.push(j1 - j0);
+            }
+            all_batches.push(batches);
+        }
+        let (fits, _timings) = ridge::fit_coalesced_with_plan(&blas, &plan, &ycat, &widths);
+        let wall_secs = started.elapsed().as_secs_f64();
+
+        let p = plan.x.cols();
+        let mut it = fits.into_iter();
+        let mut out = Vec::with_capacity(reqs.len());
+        for (r, batches) in reqs.iter().zip(all_batches) {
+            let fits_r: Vec<Box<RidgeCvFit>> = batches
+                .iter()
+                .map(|_| Box::new(it.next().expect("one fit per segment")))
+                .collect();
+            out.push(collect_fits(
+                p,
+                r.y.cols(),
+                fits_r,
+                batches,
+                RidgeTimings::default(),
+                wall_secs,
+                plan_secs,
+                reused,
+            ));
+        }
+        Ok(out)
+    }
+
     /// Price a strategy's task graph — the same emission [`Engine::fit`]
     /// executes — on the cluster DES with this engine's calibration.
     pub fn simulate(&self, req: &SimRequest) -> Result<Schedule, EngineError> {
@@ -1126,6 +1279,123 @@ mod tests {
 
         engine.clear_plan_cache();
         assert_eq!(engine.cached_plans(), 0);
+    }
+
+    #[test]
+    fn plan_fingerprint_resolves_without_fitting() {
+        let (x, y) = planted(60, 8, 5, 20);
+        let engine = Engine::new();
+        let req = FitRequest::new(&x, &y).strategy(Strategy::Bmor);
+        let f1 = engine.plan_fingerprint(&req).unwrap();
+        assert!(f1.is_some());
+        assert_eq!(engine.cached_plans(), 0, "fingerprinting must not build anything");
+
+        // Same design + knobs → same fingerprint; any key component
+        // change → different fingerprint.
+        assert_eq!(engine.plan_fingerprint(&req).unwrap(), f1);
+        let (_, y2) = planted(60, 8, 3, 21);
+        assert_eq!(
+            engine.plan_fingerprint(&FitRequest::new(&x, &y2).strategy(Strategy::Bmor)).unwrap(),
+            f1,
+            "targets are not part of the plan identity"
+        );
+        assert_ne!(engine.plan_fingerprint(&req.clone().folds(4)).unwrap(), f1);
+        assert_ne!(engine.plan_fingerprint(&req.clone().seed(9)).unwrap(), f1);
+        assert_ne!(engine.plan_fingerprint(&req.clone().lambdas(&[1.0])).unwrap(), f1);
+        assert_ne!(engine.plan_fingerprint(&req.clone().backend(Backend::Naive)).unwrap(), f1);
+
+        // Baseline strategies are valid but uncoalescible; invalid
+        // requests still fail typed.
+        assert_eq!(engine.plan_fingerprint(&req.clone().strategy(Strategy::Single)).unwrap(), None);
+        assert_eq!(
+            engine.plan_fingerprint(&req.clone().folds(0)).unwrap_err(),
+            EngineError::InvalidFolds { folds: 0, samples: 60 }
+        );
+
+        // And the fingerprint matches what the cache reports after a fit.
+        engine.fit(&req).unwrap();
+        assert_eq!(engine.cache_stats().entries[0].key, f1.unwrap());
+    }
+
+    #[test]
+    fn coalesced_fit_is_bit_identical_to_sequential_fits() {
+        let (x, ya) = planted(80, 10, 7, 22);
+        let (_, yb) = planted(80, 10, 1, 23);
+        let (_, yc) = planted(80, 10, 12, 24);
+        // Mixed batch partitions: request C fans over 3 nodes, so its
+        // segments are its three batches, not one.
+        let reqs = [
+            FitRequest::new(&x, &ya).strategy(Strategy::Bmor),
+            FitRequest::new(&x, &yb).strategy(Strategy::Bmor),
+            FitRequest::new(&x, &yc).strategy(Strategy::Bmor).nodes(3),
+        ];
+
+        let engine = Engine::new();
+        let coalesced = engine.fit_coalesced(&reqs).unwrap();
+        assert_eq!(coalesced.len(), 3);
+        assert_eq!(engine.cached_plans(), 1);
+        assert_eq!(engine.cache_stats().misses, 1, "one shared cold build");
+
+        // Sequential reference on a fresh engine: bit-identical weights,
+        // λ choices and batch partitions per request.
+        let reference = Engine::new();
+        for (c, req) in coalesced.iter().zip(&reqs) {
+            let solo = reference.fit(req).unwrap();
+            assert_eq!(c.weights.max_abs_diff(&solo.weights), 0.0);
+            assert_eq!(c.best_lambda_per_batch, solo.best_lambda_per_batch);
+            assert_eq!(c.batches, solo.batches);
+        }
+        assert!(!coalesced[0].plan_reused);
+        assert!(coalesced[0].plan_secs > 0.0);
+
+        // Warm coalesced call: plan reused, still bit-identical.
+        let warm = engine.fit_coalesced(&reqs).unwrap();
+        assert!(warm.iter().all(|f| f.plan_reused && f.plan_secs == 0.0));
+        for (w, c) in warm.iter().zip(&coalesced) {
+            assert_eq!(w.weights.max_abs_diff(&c.weights), 0.0);
+        }
+
+        // Empty input is a no-op.
+        assert!(engine.fit_coalesced(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn coalesced_fit_rejects_mismatched_keys() {
+        let (x, y) = planted(50, 8, 4, 25);
+        let (x2, y2) = planted(50, 8, 4, 26);
+        let engine = Engine::new();
+        // Different design.
+        assert_eq!(
+            engine
+                .fit_coalesced(&[FitRequest::new(&x, &y), FitRequest::new(&x2, &y2)])
+                .unwrap_err(),
+            EngineError::CoalesceKeyMismatch
+        );
+        // Different λ grid.
+        assert_eq!(
+            engine
+                .fit_coalesced(&[
+                    FitRequest::new(&x, &y),
+                    FitRequest::new(&x, &y2).lambdas(&[1.0]),
+                ])
+                .unwrap_err(),
+            EngineError::CoalesceKeyMismatch
+        );
+        // Non-plan-backed strategy.
+        assert_eq!(
+            engine
+                .fit_coalesced(&[FitRequest::new(&x, &y).strategy(Strategy::Single)])
+                .unwrap_err(),
+            EngineError::CoalesceKeyMismatch
+        );
+        // Invalid member surfaces its own typed error.
+        assert_eq!(
+            engine
+                .fit_coalesced(&[FitRequest::new(&x, &y).folds(0)])
+                .unwrap_err(),
+            EngineError::InvalidFolds { folds: 0, samples: 50 }
+        );
+        assert_eq!(engine.cached_plans(), 0, "rejected groups must not build");
     }
 
     #[test]

@@ -72,6 +72,25 @@
 //! `encoding::run_encoding` remain as thin single-request compatibility
 //! wrappers.
 //!
+//! On top of the engine sits a **multi-tenant serving layer**
+//! (`serve::Server`): a bounded admission queue with backpressure,
+//! per-request deadlines and worker threads, whose headline optimization
+//! is **cross-request sweep coalescing** — concurrent requests that
+//! resolve to the same plan fingerprint (`engine::Engine::plan_fingerprint`)
+//! are merged into one shared λ sweep (`engine::Engine::fit_coalesced` →
+//! `ridge::fit_coalesced_with_plan`): their target columns are
+//! horizontally concatenated so t small GEMMs from t callers become one
+//! large one, then weights and scores are scattered back per caller.
+//! λ* is still selected per request batch, so every caller's result is
+//! bit-identical to a sequential `engine::Engine::fit` of its own
+//! request (pinned by `tests/serving.rs`). The merge policy is tunable
+//! (`serve::ServeConfig`: max coalesced targets, max linger before a
+//! partial batch flushes) and observable (`serve::ServeStats`: queue /
+//! coalesce / flush / deadline counters plus a batch-size histogram),
+//! and `bench_serving` measures p50/p99 latency and throughput across
+//! coalescing settings under an open-loop arrival process
+//! (`BENCH_serving.json` CI artifact).
+//!
 //! The kernel layer underneath is explicit about its fast paths. The
 //! MKL-like GEMM tier runs a 4×8 register microkernel (`blas::micro`)
 //! that dispatches once per process between an AVX2+FMA implementation
@@ -110,6 +129,7 @@ pub mod cluster;
 pub mod scheduler;
 pub mod coordinator;
 pub mod engine;
+pub mod serve;
 pub mod perfmodel;
 pub mod runtime;
 pub mod metrics;

@@ -40,7 +40,8 @@ use crate::linalg::{cholesky, Mat};
 use crate::util::Stopwatch;
 
 pub use plan::{
-    factorize_full, factorize_split, fit_batch_with_plan, DesignPlan, FullDesign, SplitDesign,
+    factorize_full, factorize_split, fit_batch_with_plan, fit_coalesced_with_plan, DesignPlan,
+    FullDesign, SplitDesign,
 };
 
 /// The paper's λ grid (§2.2.4).

@@ -313,6 +313,121 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
     }
 }
 
+/// Fit MANY independent target segments against one shared plan in ONE
+/// sweep — the serving layer's cross-request coalescing primitive.
+///
+/// `y` is the horizontal concatenation of every segment's target columns
+/// and `widths` gives each segment's column count (summing to
+/// `y.cols()`). The expensive per-split GEMMs (C = XᵀY, Z = VᵀC, the
+/// r·splits prediction products) run once over the concatenated matrix —
+/// t small GEMMs from t callers become one large one, the paper's
+/// batched-targets insight applied across requests — while λ selection
+/// and the final solve stay **per segment**: each segment's mean
+/// validation score is reduced over its own columns only, so a segment
+/// picks exactly the λ* it would have picked alone.
+///
+/// Bit-identity contract: every returned fit is bit-identical to
+/// `fit_batch_with_plan(blas, plan, y_segment)` run on that segment by
+/// itself. This holds because every kernel on the path is
+/// column-separable with a fixed per-element accumulation order — GEMM
+/// accumulates each output element in ascending-k order within the fixed
+/// KC blocking regardless of which NR lane or column block the output
+/// lands in, `scale_rows_into` is elementwise, and Pearson scoring is
+/// per column — so concatenating target columns changes *where* a column
+/// is computed, never *what* is accumulated into it. Pinned by
+/// `tests/serving.rs`.
+///
+/// Returned timings cover the whole coalesced call (they are not
+/// separable per segment); each returned [`RidgeCvFit`] carries zeroed
+/// timings.
+pub fn fit_coalesced_with_plan(
+    blas: &Blas,
+    plan: &DesignPlan,
+    y: &Mat,
+    widths: &[usize],
+) -> (Vec<RidgeCvFit>, RidgeTimings) {
+    assert_eq!(plan.x.rows(), y.rows(), "plan/Y row mismatch");
+    let total: usize = widths.iter().sum();
+    assert_eq!(total, y.cols(), "segment widths must cover Y's columns");
+    assert!(widths.iter().all(|&w| w > 0), "empty coalesced segment");
+    let t = y.cols();
+    let r = plan.lambdas.len();
+    let p = plan.x.cols();
+    let mut timings = RidgeTimings::default();
+    let mut acc = ScoreAccumulator::new(r, t);
+    let mut zs = Mat::zeros(p, t);
+
+    // Shared sweep over the CONCATENATED targets: identical structure to
+    // fit_batch_with_plan, just wider matrices.
+    for sd in &plan.splits {
+        let ytr = y.rows_gather(&sd.train_idx);
+        let yval = y.rows_gather(&sd.val_idx);
+
+        let sw = Stopwatch::start();
+        let c = blas.at_b(&sd.xtr, &ytr);
+        timings.gram_secs += sw.secs();
+
+        let sw = Stopwatch::start();
+        let z = blas.at_b(&sd.v, &c);
+        let mut pred = Mat::zeros(sd.a.rows(), t);
+        for (li, &lam) in plan.lambdas.iter().enumerate() {
+            scale_rows_into(&z, &sd.e, lam, &mut zs);
+            blas.gemm_into(&sd.a, &zs, &mut pred);
+            let rs = pearson_cols(&pred, &yval);
+            acc.add_row(li, &rs);
+        }
+        timings.sweep_secs += sw.secs();
+    }
+    let scores_acc = acc.into_mean();
+
+    // Final-fit projections, still concatenated (one big GEMM each).
+    let sw = Stopwatch::start();
+    let c = blas.at_b(&plan.x, y);
+    timings.gram_secs += sw.secs();
+    let sw = Stopwatch::start();
+    let z = blas.at_b(&plan.v_full, &c);
+    timings.solve_secs += sw.secs();
+
+    // Per-segment λ selection and final solve: each segment reduces its
+    // own score columns and solves at its own λ*, exactly as if it had
+    // been fit alone.
+    let mut fits = Vec::with_capacity(widths.len());
+    let mut j0 = 0;
+    for &w in widths {
+        let j1 = j0 + w;
+        let mean_scores: Vec<f64> =
+            (0..r).map(|li| nanmean(&scores_acc.row(li)[j0..j1])).collect();
+        let best_idx = argmax_finite(&mean_scores);
+        let best_lambda = plan.lambdas[best_idx];
+
+        let sw = Stopwatch::start();
+        let z_seg = z.cols_slice(j0, j1);
+        let mut zs_seg = Mat::zeros(p, w);
+        let mut weights = Mat::zeros(p, w);
+        weights_for_lambda_into(
+            blas,
+            &plan.v_full,
+            &plan.e_full,
+            &z_seg,
+            best_lambda,
+            &mut zs_seg,
+            &mut weights,
+        );
+        timings.solve_secs += sw.secs();
+
+        fits.push(RidgeCvFit {
+            weights,
+            best_lambda,
+            best_idx,
+            mean_scores,
+            scores: scores_acc.cols_slice(j0, j1),
+            timings: RidgeTimings::default(),
+        });
+        j0 = j1;
+    }
+    (fits, timings)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,6 +553,39 @@ mod tests {
             );
             assert!(planned.scores.max_abs_diff(&unshared.scores) < 1e-10);
         }
+    }
+
+    #[test]
+    fn coalesced_fit_is_bit_identical_to_per_segment_fits() {
+        // The serving-layer contract at the ridge level: fitting the
+        // horizontal concatenation of several segments in one call must
+        // reproduce each segment's standalone fit BIT FOR BIT — same
+        // weights, same per-segment λ*, same scores.
+        let (x, y) = planted(90, 10, 13, 11);
+        let splits = kfold(90, 3, Some(6));
+        let b = blas();
+        let plan = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        // Uneven widths, including a single-column segment.
+        let widths = [4usize, 1, 5, 3];
+        let (fits, tim) = fit_coalesced_with_plan(&b, &plan, &y, &widths);
+        assert_eq!(fits.len(), widths.len());
+        assert!(tim.total() > 0.0);
+        let mut j0 = 0;
+        for (f, &w) in fits.iter().zip(&widths) {
+            let solo = fit_batch_with_plan(&b, &plan, &y.cols_slice(j0, j0 + w));
+            assert_eq!(f.best_idx, solo.best_idx, "segment at {j0}");
+            assert_eq!(f.best_lambda, solo.best_lambda);
+            assert_eq!(f.weights.max_abs_diff(&solo.weights), 0.0, "segment at {j0}");
+            assert_eq!(f.scores.max_abs_diff(&solo.scores), 0.0);
+            assert_eq!(f.mean_scores, solo.mean_scores);
+            j0 += w;
+        }
+
+        // Degenerate single segment: the coalesced path IS the batch path.
+        let (one, _) = fit_coalesced_with_plan(&b, &plan, &y, &[13]);
+        let full = fit_batch_with_plan(&b, &plan, &y);
+        assert_eq!(one[0].weights.max_abs_diff(&full.weights), 0.0);
+        assert_eq!(one[0].best_idx, full.best_idx);
     }
 
     #[test]

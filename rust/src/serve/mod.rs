@@ -1,0 +1,706 @@
+//! Multi-tenant serving layer: a bounded admission queue over
+//! [`Engine`] with **cross-request sweep coalescing**.
+//!
+//! The paper's core result is that batching targets amortizes the
+//! expensive design-side work — B-MOR turns many small ridge fits into a
+//! few large GEMM sweeps. This module applies the same insight at the
+//! *traffic* level: concurrent requests whose [`ServeRequest`] resolves
+//! to the same plan fingerprint (same design, CV splits, λ grid, backend
+//! and thread width — [`Engine::plan_fingerprint`]) are merged into one
+//! shared [`Engine::fit_coalesced`] call: their target columns are
+//! horizontally concatenated, swept once, and the results scattered back
+//! per caller. t small GEMMs from t callers become one large one, and
+//! because every kernel on the path is column-separable with a fixed
+//! accumulation order, each caller's result is **bit-identical** to a
+//! sequential [`Engine::fit`] of its own request (pinned by
+//! `tests/serving.rs`).
+//!
+//! Mechanics:
+//! - **Admission** ([`Server::submit`]): requests are validated and
+//!   fingerprinted synchronously, then enqueued on a bounded FIFO. A
+//!   full queue rejects immediately ([`ServeError::QueueFull`]) — the
+//!   backpressure signal — and the caller gets a [`Ticket`] to block on.
+//! - **Merge policy** ([`ServeConfig`]): a worker pops the queue head as
+//!   batch *leader*, then absorbs same-fingerprint requests until the
+//!   batch holds [`ServeConfig::max_coalesce_targets`] target columns,
+//!   lingering up to [`ServeConfig::max_linger`] for late arrivals
+//!   before flushing a partial batch. `max_coalesce_targets = 0`
+//!   disables coalescing (the bench baseline). Absorption may serve a
+//!   later same-key request ahead of an earlier different-key one;
+//!   results are unaffected (fits are independent), only ordering.
+//! - **Deadlines / cancellation**: a request with a
+//!   [`ServeRequest::deadline`] that expires while queued or lingering
+//!   is cancelled with [`ServeError::DeadlineExpired`] instead of
+//!   occupying a sweep; dropping the [`Ticket`] abandons the response.
+//! - **Observability** ([`ServeStats`], mirroring
+//!   [`CacheStats`](crate::engine::CacheStats) /
+//!   [`PoolStats`](crate::scheduler::PoolStats)): queued / rejected /
+//!   coalesced / flushed / expired / completed counters plus a
+//!   batch-size histogram, printable through the same
+//!   [`crate::util::format_stats_table`] renderer `cli fit` uses.
+//!
+//! Non-plan-backed requests (Single / MOR baselines) are admitted but
+//! never coalesced — they run as individual [`Engine::fit`] calls.
+
+pub mod trace;
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::blas::Backend;
+use crate::coordinator::{DistConfig, DistributedFit, Strategy};
+use crate::engine::{Engine, EngineError, FitRequest};
+use crate::linalg::Mat;
+use crate::ridge;
+
+/// Recover from a poisoned lock: counters and queue entries stay
+/// consistent under panic (same idiom as the engine's plan cache).
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Requests, responses, errors
+// ---------------------------------------------------------------------------
+
+/// An owned fit request for the serving queue — the knobs of
+/// [`FitRequest`] without its borrow lifetimes, so it can cross the
+/// admission boundary into worker threads. The design travels as an
+/// `Arc` (shared designs are the whole point of coalescing); targets are
+/// owned.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    x: Arc<Mat>,
+    y: Arc<Mat>,
+    strategy: Strategy,
+    nodes: usize,
+    threads_per_node: usize,
+    backend: Backend,
+    folds: usize,
+    seed: u64,
+    lambdas: Vec<f64>,
+    deadline: Option<Duration>,
+}
+
+impl ServeRequest {
+    /// Defaults mirror [`FitRequest::new`]: B-MOR, one node, one thread,
+    /// MKL-like backend, 3 folds, seed 0, the paper's λ grid, no
+    /// deadline.
+    pub fn new(x: Arc<Mat>, y: impl Into<Arc<Mat>>) -> Self {
+        let d = DistConfig::default();
+        ServeRequest {
+            x,
+            y: y.into(),
+            strategy: d.strategy,
+            nodes: d.nodes,
+            threads_per_node: d.threads_per_node,
+            backend: d.backend,
+            folds: d.inner_folds,
+            seed: d.seed,
+            lambdas: ridge::LAMBDA_GRID.to_vec(),
+            deadline: None,
+        }
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn threads_per_node(mut self, threads: usize) -> Self {
+        self.threads_per_node = threads;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn folds(mut self, folds: usize) -> Self {
+        self.folds = folds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lambdas(mut self, lambdas: &[f64]) -> Self {
+        self.lambdas = lambdas.to_vec();
+        self
+    }
+
+    /// Relative deadline, measured from admission. A request that has
+    /// not *started executing* by then is cancelled with
+    /// [`ServeError::DeadlineExpired`]; an execution already in flight
+    /// is never abandoned (its sweep also serves other callers).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Number of target columns this request contributes to a batch.
+    pub fn targets(&self) -> usize {
+        self.y.cols()
+    }
+
+    /// The borrow-view the engine consumes.
+    fn to_fit(&self) -> FitRequest<'_> {
+        FitRequest::new(&self.x, &self.y)
+            .strategy(self.strategy)
+            .nodes(self.nodes)
+            .threads_per_node(self.threads_per_node)
+            .backend(self.backend)
+            .folds(self.folds)
+            .seed(self.seed)
+            .lambdas(&self.lambdas)
+    }
+}
+
+/// Typed serving failure. `Engine` wraps a validation or execution error
+/// from the engine itself; the other variants are the queue's.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The admission queue is at capacity — backpressure; retry later.
+    QueueFull { capacity: usize },
+    /// The request's deadline passed before a worker started its sweep.
+    DeadlineExpired,
+    /// The server is shutting down (request was still queued, or
+    /// submitted after shutdown began).
+    ShuttingDown,
+    /// The engine rejected or failed the request.
+    Engine(EngineError),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull { capacity } => {
+                write!(f, "admission queue full ({capacity} requests)")
+            }
+            ServeError::DeadlineExpired => write!(f, "deadline expired before execution"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::Engine(e) => write!(f, "engine error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The serving result: one [`DistributedFit`] per request, exactly what
+/// [`Engine::fit`] would have returned.
+pub type ServeResult = Result<DistributedFit, ServeError>;
+
+/// Handle to an admitted request's eventual response. Dropping the
+/// ticket abandons the response (the sweep still runs if the request was
+/// coalesced with others).
+pub struct Ticket {
+    rx: mpsc::Receiver<ServeResult>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> ServeResult {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+
+    /// Block up to `timeout`; `None` means still pending (the ticket
+    /// stays usable).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<ServeResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Err(ServeError::ShuttingDown)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config & stats
+// ---------------------------------------------------------------------------
+
+/// Serving knobs: queue bound, worker width, and the two merge-policy
+/// levers the bench sweeps.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads draining the queue (≥ 1).
+    pub workers: usize,
+    /// Admission-queue bound; a full queue rejects with
+    /// [`ServeError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Maximum target columns one coalesced sweep may hold. A batch
+    /// flushes as *full* when absorbing another request would exceed
+    /// this. `0` disables coalescing entirely — every request runs its
+    /// own sweep (the uncoalesced baseline).
+    pub max_coalesce_targets: usize,
+    /// How long a worker holding a partial batch waits for late
+    /// same-fingerprint arrivals before flushing. Zero flushes
+    /// immediately (coalesce only what is already queued).
+    pub max_linger: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            queue_capacity: 256,
+            max_coalesce_targets: 4096,
+            max_linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Observability counters of a [`Server`], mirroring
+/// [`CacheStats`](crate::engine::CacheStats) /
+/// [`PoolStats`](crate::scheduler::PoolStats). All counters are monotone
+/// over the server's lifetime.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests admitted into the queue.
+    pub queued: u64,
+    /// Requests rejected at admission (queue full).
+    pub rejected: u64,
+    /// Requests whose sweep ran in a batch with at least one other
+    /// request (each member counts once).
+    pub coalesced: u64,
+    /// Batches flushed because the target budget filled.
+    pub flushed_full: u64,
+    /// Batches flushed by the linger timeout with room to spare.
+    pub flushed_linger: u64,
+    /// Requests cancelled by their deadline before execution.
+    pub expired: u64,
+    /// Responses delivered successfully.
+    pub completed: u64,
+    /// Requests that failed in the engine.
+    pub failed: u64,
+    /// Executed sweeps (every batch, coalesced or not).
+    pub batches: u64,
+    /// Batch-size histogram: `batch_sizes[i]` = executed batches holding
+    /// exactly `i + 1` requests.
+    pub batch_sizes: Vec<u64>,
+}
+
+impl ServeStats {
+    fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        if self.batch_sizes.len() < size {
+            self.batch_sizes.resize(size, 0);
+        }
+        self.batch_sizes[size - 1] += 1;
+        if size > 1 {
+            self.coalesced += size as u64;
+        }
+    }
+
+    /// Rows for [`crate::util::format_stats_table`] — the same renderer
+    /// `cli fit` uses for [`CacheStats`](crate::engine::CacheStats), so
+    /// the two surfaces stay visually consistent.
+    pub fn table_rows(&self) -> Vec<(String, String)> {
+        let hist = if self.batch_sizes.is_empty() {
+            "-".to_string()
+        } else {
+            self.batch_sizes
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n > 0)
+                .map(|(i, n)| format!("{}×{}", i + 1, n))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        vec![
+            ("queued".into(), self.queued.to_string()),
+            ("rejected".into(), self.rejected.to_string()),
+            ("coalesced".into(), self.coalesced.to_string()),
+            ("flushed full".into(), self.flushed_full.to_string()),
+            ("flushed linger".into(), self.flushed_linger.to_string()),
+            ("expired".into(), self.expired.to_string()),
+            ("completed".into(), self.completed.to_string()),
+            ("failed".into(), self.failed.to_string()),
+            ("batches".into(), self.batches.to_string()),
+            ("batch sizes".into(), hist),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+struct Queued {
+    req: ServeRequest,
+    /// Plan fingerprint ([`Engine::plan_fingerprint`]); `None` =
+    /// uncoalescible (baseline strategies).
+    fpr: Option<u64>,
+    /// Absolute execution deadline (admission time + requested delta).
+    expires: Option<Instant>,
+    tx: mpsc::Sender<ServeResult>,
+}
+
+impl Queued {
+    fn expired(&self, now: Instant) -> bool {
+        self.expires.is_some_and(|e| now >= e)
+    }
+}
+
+struct QueueState {
+    q: VecDeque<Queued>,
+    shutdown: bool,
+}
+
+struct Inner {
+    engine: Engine,
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    stats: Mutex<ServeStats>,
+}
+
+/// The serving front end: owns an [`Engine`], a bounded admission queue
+/// and the worker threads draining it. See the module docs for the
+/// merge policy. Dropping the server shuts it down gracefully (queued
+/// requests are answered [`ServeError::ShuttingDown`]; in-flight sweeps
+/// complete).
+pub struct Server {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Server {
+    pub fn new(engine: Engine, cfg: ServeConfig) -> Self {
+        let inner = Arc::new(Inner {
+            engine,
+            cfg: ServeConfig { workers: cfg.workers.max(1), ..cfg },
+            state: Mutex::new(QueueState { q: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            stats: Mutex::new(ServeStats::default()),
+        });
+        let workers = (0..inner.cfg.workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        Server { inner, workers: Mutex::new(workers) }
+    }
+
+    /// The engine behind the queue (e.g. for
+    /// [`Engine::cache_stats`]).
+    pub fn engine(&self) -> &Engine {
+        &self.inner.engine
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+
+    /// Snapshot of the serving counters.
+    pub fn stats(&self) -> ServeStats {
+        lock_recover(&self.inner.stats).clone()
+    }
+
+    /// Admit a request. Validation and plan-key resolution happen
+    /// synchronously — an invalid request is rejected here with the
+    /// engine's typed error, and a full queue rejects with
+    /// [`ServeError::QueueFull`] (backpressure). On success the request
+    /// is queued and a [`Ticket`] returned.
+    pub fn submit(&self, req: ServeRequest) -> Result<Ticket, ServeError> {
+        let fpr = self.inner.engine.plan_fingerprint(&req.to_fit()).map_err(ServeError::Engine)?;
+        let expires = req.deadline.map(|d| Instant::now() + d);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock_recover(&self.inner.state);
+            if st.shutdown {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.q.len() >= self.inner.cfg.queue_capacity {
+                lock_recover(&self.inner.stats).rejected += 1;
+                return Err(ServeError::QueueFull { capacity: self.inner.cfg.queue_capacity });
+            }
+            st.q.push_back(Queued { req, fpr, expires, tx });
+        }
+        lock_recover(&self.inner.stats).queued += 1;
+        self.inner.cv.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Stop admitting, answer queued requests with
+    /// [`ServeError::ShuttingDown`], and join the workers (in-flight
+    /// sweeps complete first). Idempotent; also runs on `Drop`.
+    pub fn shutdown(&self) {
+        {
+            let mut st = lock_recover(&self.inner.state);
+            st.shutdown = true;
+            while let Some(item) = st.q.pop_front() {
+                let _ = item.tx.send(Err(ServeError::ShuttingDown));
+            }
+        }
+        self.inner.cv.notify_all();
+        let mut workers = lock_recover(&self.workers);
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Why a coalescible batch left the assembly loop.
+enum Flush {
+    /// Target budget filled — no room for another request.
+    Full,
+    /// Linger deadline passed with room to spare.
+    Linger,
+    /// Never eligible to grow (coalescing disabled, uncoalescible
+    /// request, or leader alone exceeds the budget) or shutdown flush.
+    Immediate,
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // Pop a batch leader (or exit on drained shutdown).
+        let mut st = lock_recover(&inner.state);
+        let leader = loop {
+            if let Some(item) = st.q.pop_front() {
+                break item;
+            }
+            if st.shutdown {
+                return;
+            }
+            st = inner.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        };
+        if leader.expired(Instant::now()) {
+            drop(st);
+            expire(inner, leader);
+            continue;
+        }
+
+        // Assemble: absorb same-fingerprint requests, lingering for
+        // late arrivals while there is room.
+        let max_targets = inner.cfg.max_coalesce_targets;
+        let mut targets = leader.req.targets();
+        let mut batch = vec![leader];
+        let mut flush = Flush::Immediate;
+        if batch[0].fpr.is_some() && targets < max_targets {
+            let linger_until = Instant::now() + inner.cfg.max_linger;
+            loop {
+                let now = Instant::now();
+                absorb(inner, &mut st, &mut batch, &mut targets, now);
+                if targets >= max_targets {
+                    flush = Flush::Full;
+                    break;
+                }
+                if st.shutdown {
+                    break;
+                }
+                if now >= linger_until {
+                    flush = Flush::Linger;
+                    break;
+                }
+                let (guard, timed_out) = inner
+                    .cv
+                    .wait_timeout(st, linger_until - now)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                st = guard;
+                if timed_out.timed_out() {
+                    // One last absorb below, then flush as lingered.
+                    absorb(inner, &mut st, &mut batch, &mut targets, Instant::now());
+                    flush = if targets >= max_targets { Flush::Full } else { Flush::Linger };
+                    break;
+                }
+            }
+        }
+        drop(st);
+
+        // Final deadline check: lingering must not execute a request its
+        // caller has already given up on.
+        let now = Instant::now();
+        let (batch, dead): (Vec<_>, Vec<_>) = batch.into_iter().partition(|q| !q.expired(now));
+        for item in dead {
+            expire(inner, item);
+        }
+        if batch.is_empty() {
+            continue;
+        }
+
+        execute(inner, batch, flush);
+    }
+}
+
+/// Move every same-fingerprint, still-live, still-fitting request from
+/// the queue into the batch. Expired candidates are answered and
+/// counted; over-budget candidates stay queued (in order) for the next
+/// batch.
+fn absorb(
+    inner: &Inner,
+    st: &mut QueueState,
+    batch: &mut Vec<Queued>,
+    targets: &mut usize,
+    now: Instant,
+) {
+    let fpr = batch[0].fpr;
+    let max_targets = inner.cfg.max_coalesce_targets;
+    let mut i = 0;
+    while i < st.q.len() && *targets < max_targets {
+        if st.q[i].fpr != fpr {
+            i += 1;
+            continue;
+        }
+        if st.q[i].expired(now) {
+            let item = st.q.remove(i).expect("index in range");
+            // Count before answering: a caller observing its response
+            // must already see the counter (both locks are leaf locks,
+            // so taking stats under state is safe).
+            lock_recover(&inner.stats).expired += 1;
+            let _ = item.tx.send(Err(ServeError::DeadlineExpired));
+            continue;
+        }
+        let t = st.q[i].req.targets();
+        if *targets + t > max_targets {
+            i += 1;
+            continue;
+        }
+        let item = st.q.remove(i).expect("index in range");
+        *targets += t;
+        batch.push(item);
+    }
+}
+
+fn expire(inner: &Inner, item: Queued) {
+    // Count before answering (see `absorb`): the caller must see the
+    // counter as soon as it sees the response.
+    lock_recover(&inner.stats).expired += 1;
+    let _ = item.tx.send(Err(ServeError::DeadlineExpired));
+}
+
+fn execute(inner: &Inner, batch: Vec<Queued>, flush: Flush) {
+    let coalescible = batch[0].fpr.is_some();
+    let results: Vec<ServeResult> = if coalescible {
+        let fits: Vec<FitRequest<'_>> = batch.iter().map(|q| q.req.to_fit()).collect();
+        match inner.engine.fit_coalesced(&fits) {
+            Ok(fits) => fits.into_iter().map(Ok).collect(),
+            // A fingerprint collision across distinct real keys (or any
+            // group-level rejection): degrade to individual fits rather
+            // than failing every member.
+            Err(EngineError::CoalesceKeyMismatch) if batch.len() > 1 => batch
+                .iter()
+                .map(|q| inner.engine.fit(&q.req.to_fit()).map_err(ServeError::Engine))
+                .collect(),
+            Err(e) => vec![Err(ServeError::Engine(e)); batch.len()],
+        }
+    } else {
+        batch
+            .iter()
+            .map(|q| inner.engine.fit(&q.req.to_fit()).map_err(ServeError::Engine))
+            .collect()
+    };
+
+    {
+        let mut stats = lock_recover(&inner.stats);
+        stats.record_batch(batch.len());
+        if coalescible {
+            match flush {
+                Flush::Full => stats.flushed_full += 1,
+                Flush::Linger => stats.flushed_linger += 1,
+                Flush::Immediate => {}
+            }
+        }
+        for r in &results {
+            match r {
+                Ok(_) => stats.completed += 1,
+                Err(_) => stats.failed += 1,
+            }
+        }
+    }
+    for (item, result) in batch.into_iter().zip(results) {
+        // A dropped ticket abandoned the response; nothing to do.
+        let _ = item.tx.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Arc<Mat>, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let blas = crate::blas::Blas::new(Backend::MklLike, 1);
+        let mut y = blas.gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += 0.3 * rng.normal();
+        }
+        (Arc::new(x), y)
+    }
+
+    #[test]
+    fn submit_and_wait_round_trip() {
+        let (x, y) = planted(50, 6, 4, 1);
+        let server = Server::new(Engine::new(), ServeConfig::default());
+        let ticket = server.submit(ServeRequest::new(Arc::clone(&x), y)).unwrap();
+        let fit = ticket.wait().expect("serve fit");
+        assert_eq!(fit.weights.shape(), (6, 4));
+        let st = server.stats();
+        assert_eq!(st.queued, 1);
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.batch_sizes, vec![1]);
+    }
+
+    #[test]
+    fn invalid_requests_reject_at_admission() {
+        let (x, _) = planted(50, 6, 4, 2);
+        let server = Server::new(Engine::new(), ServeConfig::default());
+        let bad = ServeRequest::new(Arc::clone(&x), Mat::zeros(50, 0));
+        match server.submit(bad) {
+            Err(ServeError::Engine(EngineError::EmptyTargets)) => {}
+            other => panic!("expected typed admission rejection, got {other:?}"),
+        }
+        assert_eq!(server.stats().queued, 0);
+    }
+
+    #[test]
+    fn shutdown_answers_queued_requests() {
+        let (x, y) = planted(40, 5, 2, 3);
+        // No workers draining fast enough matters little here: shutdown
+        // must answer anything still queued.
+        let server = Server::new(Engine::new(), ServeConfig::default());
+        let t = server.submit(ServeRequest::new(Arc::clone(&x), y.clone())).unwrap();
+        server.shutdown();
+        match t.wait() {
+            Ok(_) | Err(ServeError::ShuttingDown) => {}
+            other => panic!("unexpected post-shutdown response: {other:?}"),
+        }
+        assert!(matches!(
+            server.submit(ServeRequest::new(x, y)),
+            Err(ServeError::ShuttingDown)
+        ));
+    }
+
+    #[test]
+    fn stats_table_rows_render() {
+        let mut st = ServeStats::default();
+        st.record_batch(1);
+        st.record_batch(3);
+        assert_eq!(st.batches, 2);
+        assert_eq!(st.coalesced, 3);
+        assert_eq!(st.batch_sizes, vec![1, 0, 1]);
+        let rows = st.table_rows();
+        assert!(rows.iter().any(|(k, v)| k == "batch sizes" && v == "1×1 3×1"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Open-loop trace replay for serving benchmarks.
+//!
+//! One driver behind both `cli serve-bench` and `benches/bench_serving`:
+//! a deterministic synthetic trace (Poisson arrivals over a pool of
+//! designs, small per-request target blocks — the multi-tenant pattern
+//! coalescing exists for) is replayed **open-loop** against a
+//! [`Server`]: arrival times are fixed up front and the submitter never
+//! waits for responses, so a slow server sees the queue grow instead of
+//! the offered load silently shrinking (closed-loop replay would hide
+//! exactly the latency the bench exists to measure). Per-request latency
+//! is stamped at response delivery by parked collector threads, not when
+//! the driver happens to poll.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{ServeError, ServeRequest, Server};
+use crate::blas::{Backend, Blas};
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// Shape of a synthetic serving trace. Every field is deterministic
+/// given `seed`; two replays offer the identical request sequence at the
+/// identical relative times.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Distinct designs in the tenant pool; each request picks one
+    /// uniformly. `1` is the shared-design trace (every request
+    /// coalescible with every other); larger values mix plan keys.
+    pub designs: usize,
+    /// Total requests replayed.
+    pub requests: usize,
+    /// Samples per design.
+    pub n: usize,
+    /// Features per design.
+    pub p: usize,
+    /// Target columns per request (requests are deliberately small —
+    /// amortizing them is the point).
+    pub targets_per_request: usize,
+    /// Mean arrival rate of the open-loop Poisson process, requests/s.
+    pub arrival_hz: f64,
+    /// Inner-CV folds per request.
+    pub folds: usize,
+    /// Root seed for designs, targets and arrival jitter.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            designs: 1,
+            requests: 64,
+            n: 96,
+            p: 24,
+            targets_per_request: 4,
+            arrival_hz: 400.0,
+            folds: 3,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of one replay.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Submit→response latency per *answered* request, seconds.
+    pub latencies_secs: Vec<f64>,
+    /// First submission → last response.
+    pub wall_secs: f64,
+    /// Requests answered with a fit.
+    pub completed: usize,
+    /// Requests answered with an error (rejected / expired / engine).
+    pub errored: usize,
+    /// Serving counters at the end of the replay.
+    pub stats: super::ServeStats,
+}
+
+impl TraceReport {
+    /// Latency percentile in seconds (nearest-rank), `q` in [0, 1].
+    pub fn latency_pctl(&self, q: f64) -> f64 {
+        if self.latencies_secs.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.latencies_secs.clone();
+        xs.sort_by(f64::total_cmp);
+        let rank = ((q * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+        xs[rank - 1]
+    }
+
+    /// Answered requests per second of wall clock.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return f64::NAN;
+        }
+        self.completed as f64 / self.wall_secs
+    }
+}
+
+/// Pre-built request sequence: the trace is materialized before the
+/// clock starts so generation cost never pollutes the measurement.
+pub struct Trace {
+    /// (relative arrival offset, request) in arrival order.
+    arrivals: Vec<(Duration, ServeRequest)>,
+}
+
+impl Trace {
+    /// Materialize the synthetic trace: `designs` planted design
+    /// matrices, `requests` small target blocks with Poisson
+    /// inter-arrival gaps.
+    pub fn synth(cfg: &TraceConfig) -> Trace {
+        assert!(cfg.designs > 0 && cfg.requests > 0 && cfg.arrival_hz > 0.0);
+        let mut rng = Pcg64::seeded(cfg.seed);
+        let blas = Blas::new(Backend::MklLike, 1);
+        let designs: Vec<(Arc<Mat>, Mat)> = (0..cfg.designs)
+            .map(|d| {
+                let mut drng = rng.split(d as u64 + 1);
+                let x = Mat::randn(cfg.n, cfg.p, &mut drng);
+                let w = Mat::randn(cfg.p, cfg.targets_per_request, &mut drng);
+                (Arc::new(x), w)
+            })
+            .collect();
+        let mut at = Duration::ZERO;
+        let arrivals = (0..cfg.requests)
+            .map(|i| {
+                // Exponential inter-arrival gap (u > 0 by construction).
+                let gap = -(1.0 - rng.uniform()).ln() / cfg.arrival_hz;
+                at += Duration::from_secs_f64(gap);
+                let (x, w) = &designs[rng.below(cfg.designs)];
+                let mut y = blas.gemm(x, w);
+                let mut yrng = rng.split(0x1000 + i as u64);
+                for v in y.data_mut() {
+                    *v += 0.3 * yrng.normal();
+                }
+                let req = ServeRequest::new(Arc::clone(x), y).folds(cfg.folds).seed(cfg.seed);
+                (at, req)
+            })
+            .collect();
+        Trace { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Replay the trace open-loop against `server` and collect
+    /// latencies. The submitter thread sticks to the precomputed arrival
+    /// schedule; each admitted request's response is awaited by a parked
+    /// collector thread that stamps latency at delivery.
+    pub fn replay(&self, server: &Server) -> TraceReport {
+        let latencies = Arc::new(Mutex::new(Vec::with_capacity(self.arrivals.len())));
+        let errored = Arc::new(Mutex::new(0usize));
+        let start = Instant::now();
+        let collectors: Vec<_> = self
+            .arrivals
+            .iter()
+            .map(|(at, req)| {
+                if let Some(wait) = at.checked_sub(start.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                let submitted = Instant::now();
+                match server.submit(req.clone()) {
+                    Ok(ticket) => {
+                        let latencies = Arc::clone(&latencies);
+                        let errored = Arc::clone(&errored);
+                        Some(std::thread::spawn(move || match ticket.wait() {
+                            Ok(_) => latencies
+                                .lock()
+                                .expect("collector lock")
+                                .push(submitted.elapsed().as_secs_f64()),
+                            Err(_) => *errored.lock().expect("collector lock") += 1,
+                        }))
+                    }
+                    Err(ServeError::QueueFull { .. }) => {
+                        *errored.lock().expect("collector lock") += 1;
+                        None
+                    }
+                    Err(e) => panic!("trace submit failed: {e}"),
+                }
+            })
+            .collect();
+        for c in collectors.into_iter().flatten() {
+            let _ = c.join();
+        }
+        let wall_secs = start.elapsed().as_secs_f64();
+        let latencies = latencies.lock().expect("collector lock").clone();
+        let errored = *errored.lock().expect("collector lock");
+        TraceReport {
+            completed: latencies.len(),
+            latencies_secs: latencies,
+            wall_secs,
+            errored,
+            stats: server.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::serve::ServeConfig;
+
+    #[test]
+    fn synth_trace_is_deterministic() {
+        let cfg = TraceConfig { requests: 5, ..TraceConfig::default() };
+        let a = Trace::synth(&cfg);
+        let b = Trace::synth(&cfg);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.targets(), y.1.targets());
+        }
+    }
+
+    #[test]
+    fn replay_answers_every_request() {
+        let cfg = TraceConfig {
+            requests: 8,
+            n: 48,
+            p: 8,
+            arrival_hz: 4000.0,
+            ..TraceConfig::default()
+        };
+        let trace = Trace::synth(&cfg);
+        let server = Server::new(Engine::new(), ServeConfig::default());
+        let report = trace.replay(&server);
+        assert_eq!(report.completed + report.errored, 8);
+        assert_eq!(report.errored, 0, "default queue must absorb a tiny trace");
+        assert!(report.latency_pctl(0.5) <= report.latency_pctl(0.99));
+        assert!(report.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let r = TraceReport {
+            latencies_secs: vec![4.0, 1.0, 3.0, 2.0],
+            wall_secs: 2.0,
+            completed: 4,
+            ..TraceReport::default()
+        };
+        assert_eq!(r.latency_pctl(0.5), 2.0);
+        assert_eq!(r.latency_pctl(1.0), 4.0);
+        assert_eq!(r.latency_pctl(0.0), 1.0);
+        assert_eq!(r.throughput_rps(), 2.0);
+    }
+}

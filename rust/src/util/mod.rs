@@ -59,6 +59,22 @@ pub fn human_secs(s: f64) -> String {
     }
 }
 
+/// Render a two-column stats block as the aligned, human-readable table
+/// every CLI surface shares: a title line, then one `  key  value` row
+/// per entry with keys padded to a common width. `cli fit` prints
+/// [`CacheStats`](crate::engine::CacheStats) through this and
+/// `cli serve-bench` prints [`ServeStats`](crate::serve::ServeStats) —
+/// one renderer, so the two stay visually consistent.
+pub fn format_stats_table(title: &str, rows: &[(String, String)]) -> String {
+    let width = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    let mut out = String::from(title);
+    for (k, v) in rows {
+        out.push('\n');
+        out.push_str(&format!("  {k:<width$}  {v}"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +93,15 @@ mod tests {
         assert_eq!(human_bytes(2_600_000_000), "2.6 GB");
         assert_eq!(human_bytes(138_000_000_000), "138 GB");
         assert_eq!(human_bytes(512), "512 B");
+    }
+
+    #[test]
+    fn stats_table_aligns_keys() {
+        let rows =
+            vec![("hits".to_string(), "3".to_string()), ("misses".to_string(), "1".to_string())];
+        let t = format_stats_table("plan cache", &rows);
+        assert_eq!(t, "plan cache\n  hits    3\n  misses  1");
+        assert_eq!(format_stats_table("empty", &[]), "empty");
     }
 
     #[test]

@@ -159,6 +159,50 @@ fn triangular_syrk_matches_at_b_product() {
     }
 }
 
+#[test]
+fn syrk_flop_count_is_exactly_the_upper_triangle() {
+    // The multiply counter is thread-local and a 1-thread Blas runs all
+    // kernel work inline on the calling thread, so this test observes
+    // exactly its own kernels (the harness gives each test its own
+    // thread).
+    let mut rng = Pcg64::seeded(25);
+    let n = 40;
+    let blas = Blas::new(Backend::MklLike, 1);
+
+    // One full diagonal tile, no MR/NR padding: the triangular diagonal
+    // kernel must issue *exactly* the upper-triangle multiplies —
+    // n·p(p+1)/2, not a strip-rounded approximation.
+    let p = Blas::SYRK_TILE;
+    let x = Mat::randn(n, p, &mut rng);
+    micro::reset_kernel_muls();
+    let k = blas.syrk(&x);
+    let syrk_muls = micro::kernel_muls();
+    assert_eq!(syrk_muls, (n * p * (p + 1) / 2) as u64);
+
+    // Reference: the full AᵀB Gram issues n·p² (again no padding at
+    // these sizes). The symmetric kernel saves just under half, and the
+    // two results still agree to roundoff.
+    micro::reset_kernel_muls();
+    let kfull = blas.at_b(&x, &x);
+    let full_muls = micro::kernel_muls();
+    assert_eq!(full_muls, (n * p * p) as u64);
+    assert!(syrk_muls < full_muls);
+    assert!(k.max_abs_diff(&kfull) < 1e-9);
+
+    // Multi-tile p with a ragged edge (diagonal tiles, off-diagonal
+    // tiles, NR padding): the exact count no longer closes, but the
+    // total must stay well under 60% of the full product's.
+    let p2 = 2 * Blas::SYRK_TILE + 5;
+    let x2 = Mat::randn(n, p2, &mut rng);
+    micro::reset_kernel_muls();
+    let _ = blas.syrk(&x2);
+    let syrk2 = micro::kernel_muls();
+    micro::reset_kernel_muls();
+    let _ = blas.at_b(&x2, &x2);
+    let full2 = micro::kernel_muls();
+    assert!(syrk2 * 100 < full2 * 60, "syrk {syrk2} muls vs full {full2}");
+}
+
 fn spd(n: usize, p: usize, seed: u64) -> Mat {
     let mut rng = Pcg64::seeded(seed);
     let x = Mat::randn(n, p, &mut rng);

@@ -1,0 +1,280 @@
+//! Serving-layer contracts (`serve::Server` over `engine::Engine`).
+//!
+//! The headline pin: **cross-request sweep coalescing is bit-identical
+//! to sequential per-request fits**. A coalesced batch concatenates the
+//! callers' target columns and sweeps them in one GEMM pass, but every
+//! kernel on the path is column-separable with a fixed k-ascending
+//! accumulation order and λ* is still selected per request batch — so
+//! weights, scores and chosen λ must match a lone `Engine::fit` of each
+//! request to the last bit, at every coalescing setting. The rest of the
+//! suite pins the queueing semantics: backpressure rejection, deadline
+//! expiry, shutdown draining, and the `ServeStats` accounting the bench
+//! reports.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::coordinator::{DistributedFit, Strategy};
+use fmri_encode::engine::{Engine, FitRequest};
+use fmri_encode::linalg::Mat;
+use fmri_encode::serve::trace::{Trace, TraceConfig};
+use fmri_encode::serve::{ServeConfig, ServeError, ServeRequest, Server};
+use fmri_encode::util::Pcg64;
+
+fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Arc<Mat>, Mat) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(&x, &w);
+    for v in y.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    (Arc::new(x), y)
+}
+
+/// What a lone `Engine::fit` of the same request returns (fresh engine:
+/// no cache interaction with the server under test).
+fn sequential_fit(x: &Arc<Mat>, y: &Mat) -> DistributedFit {
+    Engine::new().fit(&FitRequest::new(x, y)).expect("sequential fit")
+}
+
+fn assert_same_fit(served: &DistributedFit, seq: &DistributedFit) {
+    assert_eq!(served.weights.max_abs_diff(&seq.weights), 0.0, "weights must be bit-identical");
+    assert_eq!(served.best_lambda_per_batch, seq.best_lambda_per_batch);
+    assert_eq!(served.batches, seq.batches);
+}
+
+// ---------------------------------------------------------------------------
+// The headline pin
+// ---------------------------------------------------------------------------
+
+/// Same shared design, many concurrent small requests, across coalescing
+/// settings (disabled / small budget / large budget): every caller's
+/// response is bit-identical to fitting its request alone.
+#[test]
+fn coalesced_serving_is_bit_identical_to_sequential_fits() {
+    let (x, _) = planted(90, 12, 1, 1);
+    let ys: Vec<Mat> = (0..6).map(|i| planted(90, 12, 2 + (i % 3), 100 + i as u64).1).collect();
+    let expected: Vec<DistributedFit> = ys.iter().map(|y| sequential_fit(&x, y)).collect();
+
+    for max_coalesce in [0, 5, 64] {
+        let server = Server::new(
+            Engine::new(),
+            ServeConfig {
+                workers: 2,
+                max_coalesce_targets: max_coalesce,
+                max_linger: Duration::from_millis(20),
+                ..ServeConfig::default()
+            },
+        );
+        let tickets: Vec<_> = ys
+            .iter()
+            .map(|y| server.submit(ServeRequest::new(Arc::clone(&x), y.clone())).expect("submit"))
+            .collect();
+        for (ticket, want) in tickets.into_iter().zip(&expected) {
+            let got = ticket.wait().expect("served fit");
+            assert_same_fit(&got, want);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.queued, 6);
+        assert_eq!(stats.completed, 6);
+        if max_coalesce == 0 {
+            // Coalescing disabled: six lone sweeps.
+            assert_eq!(stats.batches, 6);
+            assert_eq!(stats.coalesced, 0);
+        }
+        server.shutdown();
+    }
+}
+
+/// Mixed tenants: two designs plus a non-plan-backed (Single-strategy)
+/// request interleaved. Only same-key requests may share a sweep, and
+/// everyone still gets exactly their sequential answer.
+#[test]
+fn mixed_designs_coalesce_only_within_a_plan_key() {
+    let (xa, _) = planted(80, 10, 1, 2);
+    let (xb, _) = planted(64, 14, 1, 3);
+    let ya: Vec<Mat> = (0..3).map(|i| planted(80, 10, 3, 200 + i).1).collect();
+    let yb: Vec<Mat> = (0..3).map(|i| planted(64, 14, 2, 300 + i).1).collect();
+    let ysingle = planted(80, 10, 2, 400).1;
+
+    let server = Server::new(
+        Engine::new(),
+        ServeConfig { workers: 1, max_linger: Duration::from_millis(10), ..ServeConfig::default() },
+    );
+    let ta: Vec<_> = ya
+        .iter()
+        .map(|y| server.submit(ServeRequest::new(Arc::clone(&xa), y.clone())).expect("submit a"))
+        .collect();
+    let tsingle = server
+        .submit(ServeRequest::new(Arc::clone(&xa), ysingle.clone()).strategy(Strategy::Single))
+        .expect("submit single");
+    let tb: Vec<_> = yb
+        .iter()
+        .map(|y| server.submit(ServeRequest::new(Arc::clone(&xb), y.clone())).expect("submit b"))
+        .collect();
+
+    for (t, y) in ta.into_iter().zip(&ya) {
+        assert_same_fit(&t.wait().expect("served a"), &sequential_fit(&xa, y));
+    }
+    for (t, y) in tb.into_iter().zip(&yb) {
+        assert_same_fit(&t.wait().expect("served b"), &sequential_fit(&xb, y));
+    }
+    let got = tsingle.wait().expect("served single");
+    let want =
+        Engine::new().fit(&FitRequest::new(&xa, &ysingle).strategy(Strategy::Single)).unwrap();
+    assert_same_fit(&got, &want);
+    // Two plan keys → exactly two cold builds, regardless of batching.
+    assert_eq!(server.engine().cache_stats().misses, 2);
+    server.shutdown();
+}
+
+/// The trace driver end-to-end: a shared-design replay answers every
+/// request with the sequential result (spot-checked) and actually
+/// coalesces under a generous linger.
+#[test]
+fn trace_replay_coalesces_and_stays_exact() {
+    let cfg = TraceConfig {
+        designs: 1,
+        requests: 10,
+        n: 60,
+        p: 10,
+        targets_per_request: 2,
+        arrival_hz: 5000.0,
+        folds: 3,
+        seed: 9,
+    };
+    let trace = Trace::synth(&cfg);
+    assert_eq!(trace.len(), 10);
+    let server = Server::new(
+        Engine::new(),
+        ServeConfig { workers: 1, max_linger: Duration::from_millis(5), ..ServeConfig::default() },
+    );
+    let report = trace.replay(&server);
+    assert_eq!(report.completed, 10);
+    assert_eq!(report.errored, 0);
+    assert_eq!(report.stats.completed, 10);
+    // One design + fast arrivals + one worker: at least one sweep must
+    // have served multiple requests.
+    assert!(
+        report.stats.coalesced >= 2,
+        "expected coalescing on a shared-design trace, stats: {:?}",
+        report.stats
+    );
+    // Shared design ⇒ one plan, built once.
+    assert_eq!(server.engine().cache_stats().misses, 1);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Queueing semantics
+// ---------------------------------------------------------------------------
+
+/// A full admission queue rejects synchronously with `QueueFull` — the
+/// backpressure contract — and counts the rejection.
+#[test]
+fn full_queue_rejects_with_backpressure() {
+    let (x, y) = planted(50, 6, 2, 4);
+    // Zero-capacity queue: nothing is admitted, even with idle workers.
+    let server =
+        Server::new(Engine::new(), ServeConfig { queue_capacity: 0, ..ServeConfig::default() });
+    match server.submit(ServeRequest::new(Arc::clone(&x), y)) {
+        Err(ServeError::QueueFull { capacity: 0 }) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.queued, 0);
+    server.shutdown();
+}
+
+/// An already-expired deadline is honored: the request is answered
+/// `DeadlineExpired` without running its sweep.
+#[test]
+fn expired_deadline_cancels_before_execution() {
+    let (x, y) = planted(50, 6, 2, 5);
+    let server = Server::new(Engine::new(), ServeConfig::default());
+    let ticket = server
+        .submit(ServeRequest::new(Arc::clone(&x), y).deadline(Duration::ZERO))
+        .expect("submit");
+    match ticket.wait() {
+        Err(ServeError::DeadlineExpired) => {}
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    assert_eq!(server.stats().expired, 1);
+    // The expired request must not have cost a plan build.
+    assert_eq!(server.engine().cache_stats().misses, 0);
+    server.shutdown();
+}
+
+/// Shutdown answers still-queued requests with `ShuttingDown` and
+/// refuses new submissions; `wait_timeout` surfaces a pending response
+/// as `None` first.
+#[test]
+fn shutdown_drains_and_rejects() {
+    let (x, y) = planted(50, 6, 2, 6);
+    let server = Server::new(Engine::new(), ServeConfig::default());
+    let ticket = server.submit(ServeRequest::new(Arc::clone(&x), y.clone())).expect("submit");
+    let first = ticket.wait_timeout(Duration::from_secs(30)).expect("response within 30s");
+    match first {
+        Ok(_) | Err(ServeError::ShuttingDown) => {}
+        other => panic!("unexpected response: {other:?}"),
+    }
+    server.shutdown();
+    assert!(matches!(
+        server.submit(ServeRequest::new(Arc::clone(&x), y)),
+        Err(ServeError::ShuttingDown)
+    ));
+}
+
+/// Admission-time validation: engine-invalid requests come back as typed
+/// `ServeError::Engine` synchronously, not as a worker-side panic.
+#[test]
+fn invalid_request_is_rejected_at_admission() {
+    let (x, _) = planted(50, 6, 2, 7);
+    let server = Server::new(Engine::new(), ServeConfig::default());
+    let bad = ServeRequest::new(Arc::clone(&x), Mat::zeros(50, 2)).folds(1);
+    match server.submit(bad) {
+        Err(ServeError::Engine(_)) => {}
+        other => panic!("expected Engine error, got {other:?}"),
+    }
+    assert_eq!(server.stats().queued, 0);
+    server.shutdown();
+}
+
+/// Stats accounting: histogram buckets sum to the batch count and
+/// coalesced counts only multi-request batches.
+#[test]
+fn stats_histogram_is_consistent() {
+    let (x, _) = planted(70, 8, 1, 8);
+    let ys: Vec<Mat> = (0..5).map(|i| planted(70, 8, 2, 500 + i).1).collect();
+    let server = Server::new(
+        Engine::new(),
+        ServeConfig { workers: 1, max_linger: Duration::from_millis(10), ..ServeConfig::default() },
+    );
+    let tickets: Vec<_> = ys
+        .iter()
+        .map(|y| server.submit(ServeRequest::new(Arc::clone(&x), y.clone())).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait().expect("served");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 5);
+    let batches_in_hist: u64 = stats.batch_sizes.iter().sum();
+    assert_eq!(batches_in_hist, stats.batches);
+    let requests_in_hist: u64 =
+        stats.batch_sizes.iter().enumerate().map(|(i, &n)| (i as u64 + 1) * n).sum();
+    assert_eq!(requests_in_hist, 5);
+    let coalesced_in_hist: u64 = stats
+        .batch_sizes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i > 0)
+        .map(|(i, &n)| (i as u64 + 1) * n)
+        .sum();
+    assert_eq!(stats.coalesced, coalesced_in_hist);
+    server.shutdown();
+}
