@@ -1,0 +1,172 @@
+//! Streaming-design bench: incremental plan updates vs cold rebuilds
+//! across a multi-append growth trace.
+//!
+//! One planted design grows session by session (≥3 appends). Each
+//! append is factorized twice:
+//!
+//! - `update` — the streaming path: one rank-`n_new` delta `syrk` into
+//!   every retained Gram plus `splits + 1` warm-started Jacobi
+//!   eigendecompositions (`Blas::eigh_warm`, seeded with the previous
+//!   eigenbasis);
+//! - `cold` — a full `StreamingDesign::new` at the grown shape with the
+//!   same extended splits: full Grams, cold Jacobi from identity.
+//!
+//! Per append the bench reports measured wall-clock and Jacobi sweep
+//! counts for both sides (via the global `linalg` sweep counter) next to
+//! the perfmodel's predictions (`update_decompose_secs` vs
+//! `plan_decompose_secs`). CI enforces the headline claims on the
+//! aggregate trace: the streaming path must use strictly fewer total
+//! sweeps AND strictly less total wall-clock than the cold rebuilds.
+//!
+//! Knobs: `BENCH_STREAMING_QUICK=1` shrinks the trace;
+//! `BENCH_STREAMING_JSON=path` overrides the JSON output path.
+
+mod common;
+use common::{header, report};
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::cv::kfold;
+use fmri_encode::jobj;
+use fmri_encode::linalg::{eigh_sweeps_total, Mat};
+use fmri_encode::perfmodel::{
+    plan_decompose_secs, update_decompose_secs, Calibration, FitShape,
+};
+use fmri_encode::ridge::{StreamingDesign, LAMBDA_GRID};
+use fmri_encode::util::json::Json;
+use fmri_encode::util::{human_secs, Pcg64, Stopwatch};
+
+fn main() {
+    let quick = std::env::var("BENCH_STREAMING_QUICK").is_ok();
+    let (n0, n_new, p, appends) =
+        if quick { (240usize, 30usize, 48usize, 3usize) } else { (1200, 150, 192, 4) };
+    let folds = 3;
+    let backend = Backend::MklLike;
+    let seed = 4242u64;
+
+    let total = n0 + appends * n_new;
+    let mut rng = Pcg64::seeded(seed);
+    let x_all = Mat::randn(total, p, &mut rng);
+    let blas = Blas::new(backend, 1);
+    let cal = Calibration::nominal();
+
+    header(&format!(
+        "streaming: base {n0} rows + {appends} append(s) × {n_new} rows, p={p}, {folds} folds"
+    ));
+
+    let base_splits = kfold(n0, folds, Some(7));
+    let x0 = x_all.rows_slice(0, n0);
+    let sw = Stopwatch::start();
+    let mut stream = StreamingDesign::new(&blas, &x0, &LAMBDA_GRID, &base_splits);
+    let base_secs = sw.secs();
+    report(
+        "base factorization (cold, shared by both sides)",
+        format!("{} ({} sweeps)", human_secs(base_secs), stream.base_sweeps()),
+    );
+
+    let mut splits = base_splits;
+    let mut entries: Vec<Json> = Vec::new();
+    let (mut upd_wall, mut cold_wall) = (0.0f64, 0.0f64);
+    let (mut upd_sweeps, mut cold_sweeps) = (0usize, 0usize);
+    for k in 1..=appends {
+        let head = n0 + (k - 1) * n_new;
+        let grown = head + n_new;
+        let x_new = x_all.rows_slice(head, grown);
+
+        let s0 = eigh_sweeps_total();
+        let sw = Stopwatch::start();
+        let up = stream.append(&blas, &x_new);
+        let u_secs = sw.secs();
+        let u_sweeps = eigh_sweeps_total() - s0;
+
+        // The comparable cold rebuild: same grown design, same extended
+        // splits (appended rows train-only, validation folds fixed).
+        splits = up.schedule.extended_splits(&splits);
+        let x_grown = x_all.rows_slice(0, grown);
+        let s1 = eigh_sweeps_total();
+        let sw = Stopwatch::start();
+        let cold = StreamingDesign::new(&blas, &x_grown, &LAMBDA_GRID, &splits);
+        let c_secs = sw.secs();
+        let c_sweeps = eigh_sweeps_total() - s1;
+        assert_eq!(c_sweeps, cold.base_sweeps(), "counter delta vs reported sweeps");
+        assert_eq!(
+            stream.rows(),
+            cold.rows(),
+            "stream and cold rebuild must describe the same grown design"
+        );
+
+        let shape = FitShape { n: grown, p, t: 0, r: LAMBDA_GRID.len(), splits: folds };
+        let pred_update = update_decompose_secs(&cal, backend, shape, n_new);
+        let pred_cold = plan_decompose_secs(&cal, backend, shape);
+
+        upd_wall += u_secs;
+        cold_wall += c_secs;
+        upd_sweeps += u_sweeps;
+        cold_sweeps += c_sweeps;
+        report(
+            &format!("append {k} ({head} -> {grown} rows)"),
+            format!(
+                "update {:>9} ({:>3} sweeps) | cold {:>9} ({:>3} sweeps) | predicted {:.2}x",
+                human_secs(u_secs),
+                u_sweeps,
+                human_secs(c_secs),
+                c_sweeps,
+                pred_cold / pred_update
+            ),
+        );
+        entries.push(jobj! {
+            "append" => k,
+            "rows_before" => head,
+            "rows_after" => grown,
+            "update_secs" => u_secs,
+            "update_sweeps" => u_sweeps,
+            "cold_secs" => c_secs,
+            "cold_sweeps" => c_sweeps,
+            "predicted_update_secs" => pred_update,
+            "predicted_cold_secs" => pred_cold,
+        });
+    }
+
+    report(
+        "totals over the trace",
+        format!(
+            "update {} ({} sweeps) vs cold {} ({} sweeps) — {:.2}x wall, {:.2}x sweeps",
+            human_secs(upd_wall),
+            upd_sweeps,
+            human_secs(cold_wall),
+            cold_sweeps,
+            cold_wall / upd_wall.max(f64::MIN_POSITIVE),
+            cold_sweeps as f64 / (upd_sweeps.max(1)) as f64
+        ),
+    );
+
+    // The headline claims, CI-enforced on the aggregate trace.
+    assert!(
+        upd_sweeps < cold_sweeps,
+        "streaming must use strictly fewer Jacobi sweeps: {upd_sweeps} vs {cold_sweeps}"
+    );
+    assert!(
+        upd_wall < cold_wall,
+        "streaming must be strictly faster than cold rebuilds: {upd_wall:.4}s vs {cold_wall:.4}s"
+    );
+
+    let json = jobj! {
+        "bench" => "bench_streaming",
+        "quick" => quick,
+        "n0" => n0,
+        "n_new" => n_new,
+        "p" => p,
+        "appends" => appends,
+        "folds" => folds,
+        "base_secs" => base_secs,
+        "base_sweeps" => stream.base_sweeps(),
+        "update_total_secs" => upd_wall,
+        "update_total_sweeps" => upd_sweeps,
+        "cold_total_secs" => cold_wall,
+        "cold_total_sweeps" => cold_sweeps,
+        "appends_detail" => entries,
+    };
+    let out =
+        std::env::var("BENCH_STREAMING_JSON").unwrap_or_else(|_| "BENCH_streaming.json".into());
+    std::fs::write(&out, json.to_string_pretty()).expect("write BENCH_streaming.json");
+    println!("\nwrote {out}");
+}

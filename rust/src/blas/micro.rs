@@ -163,15 +163,15 @@ pub fn kernel_block(
 /// skipped — their outputs belong to the lower triangle, which the
 /// triangular `syrk` mirrors from the upper triangle instead of
 /// computing. Strips entirely on or above it run the full SIMD kernel.
-/// Strips *straddling* the diagonal run a scalar triangular kernel
-/// ([`kernel_4x8_triangular`]) whose per-row lane start tracks the
-/// diagonal exactly, so a diagonal tile issues precisely its
-/// upper-triangle multiplies and nothing more. The classification
+/// Strips *straddling* the diagonal run the ISA-dispatched triangular
+/// kernel ([`kernel_4x8_triangular_with`]) whose per-row lane start
+/// tracks the diagonal exactly, so a diagonal tile accumulates precisely
+/// its upper-triangle lanes and nothing more. The classification
 /// depends only on the strip's global origin — never on thread chunking
 /// — so masked results stay bit-stable across thread counts. Straddled
 /// upper-triangle elements accumulate in the same k-ascending order as
-/// the full kernels but without FMA contraction, a tolerance-level (not
-/// bitwise) difference from the unmasked path.
+/// the full kernels; the scalar variant skips FMA contraction, a
+/// tolerance-level (not bitwise) difference from the unmasked path.
 #[allow(clippy::too_many_arguments)]
 pub fn kernel_block_masked(
     apack: &[f64],
@@ -209,7 +209,7 @@ pub fn kernel_block_masked(
                         muls += NR - *ls;
                     }
                     count_muls((muls * kb) as u64);
-                    kernel_4x8_triangular(astrip, bstrip, kb, &mut acc, mrows, &lane_start);
+                    kernel_4x8_triangular_with(isa, astrip, bstrip, kb, &mut acc, mrows, &lane_start);
                 }
                 // No mask, or the whole strip is on/above the diagonal:
                 // full-width SIMD kernel.
@@ -230,12 +230,47 @@ pub fn kernel_block_masked(
     }
 }
 
-/// Scalar triangular register tile for diagonal-straddling strips: row
-/// `r` accumulates only lanes `lane_start[r]..NR` (its on-or-above-
-/// diagonal columns), each element in the same k-ascending order as the
-/// full kernels. Sub-diagonal lanes stay zero in `acc`; the caller's
-/// scatter adds them as no-ops and the `syrk` mirror overwrites them.
-fn kernel_4x8_triangular(
+/// Triangular register tile for diagonal-straddling strips with explicit
+/// ISA selection: row `r` accumulates only lanes `lane_start[r]..NR`
+/// (its on-or-above-diagonal columns); sub-diagonal lanes of `acc` stay
+/// bit-exactly untouched — the caller's scatter adds them as no-ops and
+/// the `syrk` mirror overwrites them. Public so parity tests can pin the
+/// scalar and AVX2 variants against each other regardless of what
+/// [`active_isa`] detected. Note the multiply *counter* is charged by the
+/// caller with the logical (accumulated) lane count only: the AVX2
+/// variant computes full-width lanes in registers and discards the
+/// masked ones, so physical and counted multiplies differ there by
+/// design — the FLOP-count pin tracks the upper-triangle work the tile
+/// contributes, not register occupancy.
+pub fn kernel_4x8_triangular_with(
+    isa: KernelIsa,
+    astrip: &[f64],
+    bstrip: &[f64],
+    kb: usize,
+    acc: &mut [[f64; NR]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    assert!(astrip.len() >= kb * MR);
+    assert!(bstrip.len() >= kb * NR);
+    match isa {
+        KernelIsa::Scalar => kernel_4x8_triangular_scalar(astrip, bstrip, kb, acc, mrows, lane_start),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: same qualification as [`kernel_4x8_with`] — Avx2Fma only
+        // reaches here via runtime detection (or a parity test on an
+        // already-qualified host), and the length asserts above keep every
+        // vector load in-bounds.
+        KernelIsa::Avx2Fma => unsafe {
+            kernel_4x8_triangular_avx2(astrip, bstrip, kb, acc, mrows, lane_start)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2Fma => kernel_4x8_triangular_scalar(astrip, bstrip, kb, acc, mrows, lane_start),
+    }
+}
+
+/// Portable scalar triangular tile: each element accumulates in the same
+/// k-ascending order as the full kernels but without FMA contraction.
+fn kernel_4x8_triangular_scalar(
     astrip: &[f64],
     bstrip: &[f64],
     kb: usize,
@@ -252,6 +287,57 @@ fn kernel_4x8_triangular(
                 s += astrip[k * MR + r] * bstrip[k * NR + l];
             }
             *out += s;
+        }
+    }
+}
+
+/// AVX2+FMA triangular tile: the k loop runs at full 8-lane width — the
+/// same broadcast + two-fmadd shape as [`kernel_4x8_avx2`], masked lanes
+/// computed in registers and discarded (cheaper than per-lane masking at
+/// NR = 8) — then the register sums spill to a stack buffer and only
+/// lanes `lane_start[r]..NR` of rows `0..mrows` are added into `acc`.
+/// Masked lanes of `acc` are never written, preserving the scalar
+/// variant's bit-exact untouched-lane contract; accumulated lanes differ
+/// from scalar by FMA-contraction roundoff only (same k order), the
+/// documented tolerance of the SIMD/scalar parity tests.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, and that
+/// `astrip.len() >= kb*MR` and `bstrip.len() >= kb*NR`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kernel_4x8_triangular_avx2(
+    astrip: &[f64],
+    bstrip: &[f64],
+    kb: usize,
+    acc: &mut [[f64; NR]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    use std::arch::x86_64::*;
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    let mut c = [[_mm256_setzero_pd(); 2]; MR];
+    for _ in 0..kb {
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a = _mm256_broadcast_sd(&*ap.add(r));
+            cr[0] = _mm256_fmadd_pd(a, b0, cr[0]);
+            cr[1] = _mm256_fmadd_pd(a, b1, cr[1]);
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+    // Spill full rows to the stack, then add back the unmasked lanes only.
+    let mut buf = [[0.0f64; NR]; MR];
+    for (br, cr) in buf.iter_mut().zip(&c) {
+        _mm256_storeu_pd(br.as_mut_ptr(), cr[0]);
+        _mm256_storeu_pd(br.as_mut_ptr().add(4), cr[1]);
+    }
+    for r in 0..mrows {
+        for l in lane_start[r]..NR {
+            acc[r][l] += buf[r][l];
         }
     }
 }

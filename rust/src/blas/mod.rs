@@ -239,6 +239,46 @@ impl Blas {
         crate::linalg::jacobi_eigh_auto(k, max_sweeps, tol, &self.pool)
     }
 
+    /// Warm-started eigendecomposition: rotate `k` into the previous
+    /// eigenbasis `v0` (B = V₀ᵀKV₀ via two backend GEMMs), decompose B
+    /// through the same size-dispatched tiering as [`Blas::eigh`], and
+    /// map back (V = V₀·V_B, a third GEMM). The streaming subsystem's
+    /// production path: after a small design append B is near-diagonal,
+    /// so the inner decomposition converges in fewer sweeps than a cold
+    /// [`Blas::eigh`] of `k` — observable through `sweeps_used` and the
+    /// `linalg::eigh` sweep counters. Same tolerance contract as the
+    /// serial reference `linalg::jacobi_eigh_warm`: correct to the eigh
+    /// bound, NOT bit-identical to the cold path.
+    pub fn eigh_warm(
+        &self,
+        k: &Mat,
+        v0: &Mat,
+        max_sweeps: usize,
+        tol: f64,
+    ) -> crate::linalg::Eigh {
+        let p = k.rows();
+        assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
+        assert_eq!(v0.shape(), (p, p), "warm-start basis must match k's order");
+        let kv = self.gemm(k, v0);
+        let mut b = self.at_b(v0, &kv);
+        // Exact symmetrization: the congruence of a symmetric matrix is
+        // symmetric in exact arithmetic, and the Jacobi rotation angles
+        // assume it bit-exactly.
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let v = 0.5 * (b.get(i, j) + b.get(j, i));
+                b.set(i, j, v);
+                b.set(j, i, v);
+            }
+        }
+        let inner = crate::linalg::jacobi_eigh_auto(&b, max_sweeps, tol, &self.pool);
+        crate::linalg::Eigh {
+            values: inner.values,
+            vectors: self.gemm(v0, &inner.vectors),
+            sweeps_used: inner.sweeps_used,
+        }
+    }
+
     /// y = A·x. Parallel over row chunks on the pool like every other
     /// entry point; the per-row kernel follows the backend tier (the
     /// naive backend keeps the textbook sequential accumulation, the
@@ -474,6 +514,25 @@ mod tests {
                 assert_eq!(y1, yt, "{backend:?} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn eigh_warm_reconstructs_after_an_append_delta() {
+        let mut rng = Pcg64::seeded(17);
+        let p = 20;
+        let x = Mat::randn(50, p, &mut rng);
+        let blas = Blas::new(Backend::MklLike, 2);
+        let k0 = blas.syrk(&x);
+        let cold = blas.eigh(&k0, 30, 1e-13);
+        // Small append: K = K₀ + XₙₑᵥᵀXₙₑᵥ, the streaming delta shape.
+        let xn = Mat::randn(2, p, &mut rng);
+        let mut k = k0.clone();
+        k.add_assign(&blas.syrk(&xn));
+        let warm = blas.eigh_warm(&k, &cold.vectors, 30, 1e-13);
+        assert!(crate::linalg::reconstruction_error(&k, &warm.values, &warm.vectors) < 1e-9);
+        let vtv = blas.at_b(&warm.vectors, &warm.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(p)) < 1e-10);
+        assert!(warm.sweeps_used <= blas.eigh(&k, 30, 1e-13).sweeps_used);
     }
 
     #[test]

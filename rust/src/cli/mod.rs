@@ -10,6 +10,9 @@
 //!   fit      --resolution R --strategy S --nodes N --threads T
 //!            [--backend B] [--path native|xla]
 //!            [--executor thread|process --workers W]   run a real fit
+//!   stream   --appends K --rows N0 --append-rows M
+//!            grow a design session by session: incremental plan updates
+//!            (delta Gram + warm-started eigh) vs cold rebuilds
 //!   serve-bench  --requests N --designs D --rate HZ
 //!            [--workers W] [--max-coalesce T] [--linger-us US]
 //!            replay an open-loop trace through the serving layer
@@ -25,20 +28,24 @@ use crate::config::{Args, ExperimentConfig};
 use crate::coordinator::DistConfig;
 use crate::cv::kfold;
 use crate::data::friends::generate;
-use crate::engine::{EncodeRequest, Engine, ExecutorKind, FitRequest};
+use crate::engine::{AppendRequest, EncodeRequest, Engine, ExecutorKind, FitRequest};
 use crate::figures::{generate_figure, FigCtx};
+use crate::linalg::Mat;
 use crate::metrics::fnum;
-use crate::perfmodel::{calibrate, flops};
+use crate::perfmodel::{calibrate, flops, FitShape};
 use crate::ridge;
-use crate::util::{format_stats_table, human_bytes, human_secs, Stopwatch};
+use crate::util::{format_stats_table, human_bytes, human_secs, Pcg64, Stopwatch};
 
-const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|serve-bench|calibrate|validate> [--help]
+const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|stream|serve-bench|calibrate|validate> [--help]
   tables   --table 1|2|all [--out DIR] [--quick]
   figures  --fig 4|5|6|7|8|9|10|all [--out DIR] [--quick] [--subjects N]
   fit      [--resolution parcels|roi|whole-brain|mor] [--strategy ridgecv|mor|bmor]
            [--nodes N] [--threads T] [--backend naive|openblas|mkl]
            [--executor thread|process] [--workers W]
            [--path native|xla] [--subject 1..6] [--quick]
+  stream   [--appends K] [--rows N0] [--append-rows M] [--p P] [--targets T]
+           [--folds F] [--threads T] [--backend naive|openblas|mkl]
+           [--quick] [--seed S]
   serve-bench [--requests N] [--designs D] [--rate HZ] [--targets T]
            [--workers W] [--queue Q] [--max-coalesce T] [--linger-us US]
            [--quick] [--seed S]
@@ -57,6 +64,7 @@ pub fn run() -> Result<()> {
         "tables" => cmd_tables(&args),
         "figures" => cmd_figures(&args),
         "fit" => cmd_fit(&args),
+        "stream" => cmd_stream(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "calibrate" => cmd_calibrate(&args),
         "validate" => cmd_validate(&args),
@@ -262,6 +270,96 @@ fn cmd_fit(args: &Args) -> Result<()> {
         }
         other => bail!("--path must be native or xla, got `{other}`"),
     }
+    Ok(())
+}
+
+/// Demonstrate the streaming-design path: grow a design session by
+/// session through [`Engine::append_fit`] and race every incremental
+/// update (delta Gram + warm-started eigh) against a comparable cold
+/// rebuild of all `folds + 1` factorizations at the same grown shape.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let p = args.usize_or("p", if quick { 48 } else { 160 })?;
+    let n0 = args.usize_or("rows", if quick { 240 } else { 960 })?;
+    let n_new = args.usize_or("append-rows", (n0 / 8).max(1))?;
+    let appends = args.usize_or("appends", 3)?;
+    let t = args.usize_or("targets", if quick { 16 } else { 64 })?;
+    let folds = args.usize_or("folds", 3)?;
+    let threads = args.usize_or("threads", 1)?;
+    let backend = args.backend()?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    anyhow::ensure!(appends >= 1, "--appends must be >= 1");
+
+    // One planted problem over the FINAL row count; each session reveals
+    // the next block of rows, exactly the append-only growth pattern of
+    // a longitudinal scan campaign.
+    let total = n0 + appends * n_new;
+    let mut rng = Pcg64::seeded(seed);
+    let x_all = Mat::randn(total, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(backend, threads);
+    let mut y_all = blas.gemm(&x_all, &w);
+    for v in y_all.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    println!(
+        "streaming design growth: base {n0} rows, {appends} append(s) of {n_new} rows, p={p}, t={t}, {folds} folds, backend={backend}"
+    );
+
+    let engine = Engine::new();
+    let shape = FitShape { n: total, p, t, r: ridge::LAMBDA_GRID.len(), splits: folds };
+    let pl = engine.append_placement(backend, shape, n_new);
+    println!(
+        "perfmodel at the final shape: update {} vs cold rebuild {} — streaming {}",
+        human_secs(pl.update_secs),
+        human_secs(pl.cold_secs),
+        if pl.prefers_stream() { "wins" } else { "loses" }
+    );
+
+    let mut head = n0;
+    let mut splits = kfold(n0, folds, Some(seed));
+    let (mut upd_total, mut cold_total) = (0.0f64, 0.0f64);
+    for k in 1..=appends {
+        let x_head = x_all.rows_slice(0, head);
+        let x_new = x_all.rows_slice(head, head + n_new);
+        let y_grown = y_all.rows_slice(0, head + n_new);
+        let out = engine.append_fit(
+            &AppendRequest::new(&x_head, &x_new, &y_grown)
+                .backend(backend)
+                .threads_per_node(threads)
+                .folds(folds)
+                .seed(seed),
+        )?;
+        // The comparable cold rebuild: same grown design, same extended
+        // splits (validation folds fixed, appended rows train-only).
+        splits = out.schedule.extended_splits(&splits);
+        let x_grown = x_all.rows_slice(0, head + n_new);
+        let sw = Stopwatch::start();
+        let cold = ridge::StreamingDesign::new(&blas, &x_grown, &ridge::LAMBDA_GRID, &splits);
+        let cold_secs = sw.secs();
+        upd_total += out.update_secs;
+        cold_total += cold_secs;
+        println!(
+            "append {k}: {} -> {} rows | update {} ({} warm sweeps) vs cold rebuild {} ({} sweeps) | λ* {:?}",
+            head,
+            head + n_new,
+            human_secs(out.update_secs),
+            out.warm_sweeps,
+            human_secs(cold_secs),
+            cold.base_sweeps(),
+            out.fit.best_lambda_per_batch
+        );
+        head += n_new;
+    }
+    println!(
+        "totals over {appends} append(s): update {} vs cold rebuild {} ({}x)",
+        human_secs(upd_total),
+        human_secs(cold_total),
+        fnum(cold_total / upd_total.max(f64::MIN_POSITIVE))
+    );
+    // The cache now holds the whole lineage: base root at depth 0 plus
+    // one child per append, each priced by its measured update time.
+    println!("{}", format_stats_table("plan cache", &engine.cache_stats().table_rows()));
     Ok(())
 }
 

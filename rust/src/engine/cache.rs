@@ -15,11 +15,15 @@
 //! Policy, in one paragraph: every access stamps a monotone tick
 //! (per-key *last touch*). An insert that pushes the resident total over
 //! the budget evicts entries by **cost-aware weighting**: the victim is
-//! the entry wasting the most bytes per predicted rebuild second —
-//! `resident_bytes / perfmodel::plan_decompose_secs` at the nominal
-//! calibration (relative cost is all the policy needs) — so a
+//! the entry wasting the most bytes per rebuild second —
+//! `resident_bytes / max(measured build secs, nominal estimate)`, where
+//! the nominal estimate is `perfmodel::plan_decompose_secs` at the
+//! nominal calibration and the measured term is the wall-clock the
+//! builder actually reported ([`BuildGuard::fulfill_measured`]) — so a
 //! bytes-heavy plan that is cheap to refactorize (big n, small p; eigh
-//! is O(p³)) is sacrificed before a small but expensive one. Entries
+//! is O(p³)) is sacrificed before a small but expensive one, and a plan
+//! whose build demonstrably ran slow is kept longer than the model alone
+//! would keep it. Entries
 //! with identical shapes price identically, and exact score ties fall
 //! back to least-recently-touched, so homogeneous workloads degrade to
 //! plain LRU. The entry being inserted is never a victim, so a single
@@ -76,6 +80,16 @@ pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// [`DesignPlan`]s, so the cached plan can serve both. 64-bit FNV-1a
 /// over the exact f64 bit patterns — hashing is O(n·p), negligible
 /// against the O(p³) decomposition it saves.
+///
+/// **Plan lineage**: a plan produced by a streaming append
+/// ([`crate::ridge::StreamingDesign`]) carries its *parent* plan's
+/// fingerprint in `parent`. The design/splits/λ components still hash the
+/// full grown contents — an updated plan's identity is self-contained —
+/// but the parent component keeps warm children distinct from cold
+/// rebuilds of the same grown design: warm-started eigendecompositions
+/// are not bit-identical to cold ones, so a cold request (`parent = 0`)
+/// must never be served a warm child and vice versa. Root plans have
+/// `parent = 0`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct PlanKey {
     pub(crate) design: u64,
@@ -83,23 +97,26 @@ pub(crate) struct PlanKey {
     pub(crate) lambdas: u64,
     pub(crate) backend: Backend,
     pub(crate) threads: usize,
+    /// Fingerprint of the parent plan this one was streamed from
+    /// (0 = root / cold build).
+    pub(crate) parent: u64,
 }
 
-struct Fnv(u64);
+pub(crate) struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         for b in v.to_le_bytes() {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x100_0000_01b3);
         }
     }
 
-    fn finish(self) -> u64 {
+    pub(crate) fn finish(self) -> u64 {
         self.0
     }
 }
@@ -141,12 +158,20 @@ impl PlanKey {
             lambdas: hl.finish(),
             backend,
             threads,
+            parent: 0,
         }
+    }
+
+    /// Rekey as a streamed child of the plan fingerprinted `parent` (see
+    /// the lineage paragraph in the type docs).
+    pub(crate) fn with_parent(mut self, parent: u64) -> PlanKey {
+        self.parent = parent;
+        self
     }
 
     /// One opaque u64 naming this key in observability output
     /// ([`CacheEntryStats::key`]) and in the serving layer's coalescing
-    /// buckets — an FNV fold of all five components.
+    /// buckets — an FNV fold of all components, lineage included.
     pub(crate) fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.u64(self.design);
@@ -154,6 +179,7 @@ impl PlanKey {
         h.u64(self.lambdas);
         h.u64(self.backend as u64);
         h.u64(self.threads as u64);
+        h.u64(self.parent);
         h.finish()
     }
 }
@@ -166,7 +192,7 @@ impl PlanKey {
 /// [`Engine::cache_stats`](crate::engine::Engine::cache_stats)).
 /// Counters are monotone over the engine's lifetime; the byte gauges and
 /// the per-entry list describe the current residency.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CacheStats {
     /// Warm lookups served from a resident plan (includes coalesced
     /// waiters that were handed a plan another request just built).
@@ -191,7 +217,7 @@ pub struct CacheStats {
 }
 
 /// Per-plan residency row of [`CacheStats`].
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CacheEntryStats {
     /// Opaque fingerprint of the plan's cache key.
     pub key: u64,
@@ -200,6 +226,18 @@ pub struct CacheEntryStats {
     /// Monotone access stamp: larger = touched more recently. Stamped on
     /// insert and on every warm hit (a hit refreshes LRU order).
     pub last_touch: u64,
+    /// Streamed-append lineage depth: 0 for a cold-built root, parent's
+    /// depth + 1 for a child plan (1 if the parent was already evicted
+    /// when the child arrived).
+    pub depth: u32,
+    /// Rebuild seconds the eviction policy actually uses for this entry:
+    /// `max(measured, nominal)`.
+    pub rebuild_secs: f64,
+    /// The nominal-calibration perfmodel estimate.
+    pub nominal_secs: f64,
+    /// Measured wall-clock build seconds, if the builder reported them
+    /// (`BuildGuard::fulfill_measured`).
+    pub measured_secs: Option<f64>,
 }
 
 impl CacheStats {
@@ -207,7 +245,7 @@ impl CacheStats {
     /// renderer behind `cli fit`'s cache block and `cli serve-bench`'s
     /// [`ServeStats`](crate::serve::ServeStats) block.
     pub fn table_rows(&self) -> Vec<(String, String)> {
-        vec![
+        let mut rows = vec![
             ("plans resident".into(), self.entries.len().to_string()),
             (
                 "resident bytes".into(),
@@ -221,7 +259,29 @@ impl CacheStats {
             ("misses".into(), self.misses.to_string()),
             ("coalesced".into(), self.coalesced.to_string()),
             ("evictions".into(), self.evictions.to_string()),
-        ]
+        ];
+        // One lineage/pricing row per resident plan: how deep in a
+        // streamed-append chain it sits, and what a rebuild is believed
+        // to cost (measured wall-clock when the builder reported one,
+        // else the nominal perfmodel estimate — the policy prices with
+        // the max of the two).
+        for e in &self.entries {
+            let measured = match e.measured_secs {
+                Some(m) => format!("{} measured", crate::util::human_secs(m)),
+                None => "unmeasured".into(),
+            };
+            rows.push((
+                format!("plan {:016x}", e.key),
+                format!(
+                    "depth {}, rebuild {} ({}, {} nominal)",
+                    e.depth,
+                    crate::util::human_secs(e.rebuild_secs),
+                    measured,
+                    crate::util::human_secs(e.nominal_secs)
+                ),
+            ));
+        }
+        rows
     }
 }
 
@@ -233,10 +293,19 @@ struct Entry {
     plan: Arc<DesignPlan>,
     bytes: usize,
     last_touch: u64,
-    /// Predicted seconds to rebuild this plan from scratch
-    /// (`perfmodel::plan_decompose_secs` at the nominal calibration),
-    /// priced once at insert. The eviction policy's denominator.
+    /// Seconds to rebuild this plan from scratch as the eviction policy
+    /// prices it: `max(measured wall-clock, nominal perfmodel estimate)`,
+    /// fixed at insert. Taking the max means a build that ran slow (cold
+    /// caches, contention) raises the entry's keep-priority, while a
+    /// suspiciously fast measurement can never underprice a rebuild
+    /// below what the complexity model says it must cost.
     rebuild_secs: f64,
+    /// The nominal-calibration estimate alone (observability).
+    nominal_secs: f64,
+    /// Measured wall-clock build seconds, when the builder reported them.
+    measured_secs: Option<f64>,
+    /// Streamed-append lineage depth (0 = cold-built root).
+    depth: u32,
 }
 
 impl Entry {
@@ -345,13 +414,22 @@ impl PlanCache {
     /// the module docs). Runs under the caller's guard so the claim
     /// release and the insert are one atomic step — a waiter can never
     /// observe "not building, not resident" for a build that succeeded.
-    fn insert_locked(&self, st: &mut CacheState, key: PlanKey, plan: Arc<DesignPlan>) {
+    fn insert_locked(
+        &self,
+        st: &mut CacheState,
+        key: PlanKey,
+        plan: Arc<DesignPlan>,
+        measured_secs: Option<f64>,
+    ) {
         let bytes = plan.resident_bytes();
-        // Price the rebuild once, at the nominal calibration: the policy
-        // compares entries against each other, so only relative cost
-        // matters, not this machine's absolute throughput. `t` is 0
-        // because rebuilding a plan redoes the target-independent
-        // decompositions only.
+        // Price the rebuild once. The nominal-calibration estimate is the
+        // floor — relative cost between entries is what the policy needs,
+        // and a measured build time below the model's prediction (warm OS
+        // caches, a lucky scheduler) must not underprice the entry. A
+        // measurement ABOVE nominal is believed: that build really cost
+        // that much wall-clock and would again. `t` is 0 because
+        // rebuilding a plan redoes the target-independent decompositions
+        // only.
         let shape = FitShape {
             n: plan.x.rows(),
             p: plan.x.cols(),
@@ -359,13 +437,27 @@ impl PlanCache {
             r: plan.lambdas.len(),
             splits: plan.splits.len(),
         };
-        let rebuild_secs =
+        let nominal_secs =
             perfmodel::plan_decompose_secs(&Calibration::nominal(), key.backend, shape)
                 .max(f64::MIN_POSITIVE);
+        let rebuild_secs = measured_secs.map_or(nominal_secs, |m| m.max(nominal_secs));
+        // Lineage: a child's depth extends its parent's chain. If the
+        // parent was already evicted the chain length is unknowable; 1
+        // records "streamed, ancestry truncated".
+        let depth = if key.parent == 0 {
+            0
+        } else {
+            st.map
+                .iter()
+                .find(|(k, _)| k.fingerprint() == key.parent)
+                .map_or(1, |(_, e)| e.depth + 1)
+        };
         st.tick += 1;
         let tick = st.tick;
-        if let Some(old) = st.map.insert(key, Entry { plan, bytes, last_touch: tick, rebuild_secs })
-        {
+        if let Some(old) = st.map.insert(
+            key,
+            Entry { plan, bytes, last_touch: tick, rebuild_secs, nominal_secs, measured_secs, depth },
+        ) {
             // Same key rebuilt concurrently with a clear(): replacement,
             // not an eviction.
             st.resident -= old.bytes;
@@ -410,6 +502,10 @@ impl PlanCache {
                 key: k.fingerprint(),
                 bytes: e.bytes,
                 last_touch: e.last_touch,
+                depth: e.depth,
+                rebuild_secs: e.rebuild_secs,
+                nominal_secs: e.nominal_secs,
+                measured_secs: e.measured_secs,
             })
             .collect();
         entries.sort_by(|a, b| b.last_touch.cmp(&a.last_touch));
@@ -442,12 +538,28 @@ pub(crate) struct BuildGuard<'a> {
 }
 
 impl BuildGuard<'_> {
+    /// Publish without a measurement: the entry is priced by the nominal
+    /// perfmodel estimate alone. Every production publish site now
+    /// reports its measured build time via [`BuildGuard::fulfill_measured`];
+    /// this stays as the unmeasured path the pricing tests pin.
+    #[allow(dead_code)]
     pub(crate) fn fulfill(mut self, plan: &Arc<DesignPlan>) {
+        self.publish(plan, None);
+    }
+
+    /// Fulfill with the build's measured wall-clock seconds: the entry's
+    /// eviction pricing becomes `max(measured, nominal)` instead of the
+    /// nominal estimate alone (see [`Entry::rebuild_secs`]).
+    pub(crate) fn fulfill_measured(mut self, plan: &Arc<DesignPlan>, secs: f64) {
+        self.publish(plan, Some(secs));
+    }
+
+    fn publish(&mut self, plan: &Arc<DesignPlan>, measured_secs: Option<f64>) {
         self.fulfilled = true;
         {
             let mut st = lock_recover(&self.cache.state);
             st.building.remove(&self.key);
-            self.cache.insert_locked(&mut st, self.key, Arc::clone(plan));
+            self.cache.insert_locked(&mut st, self.key, Arc::clone(plan), measured_secs);
         }
         self.cache.cv.notify_all();
     }
@@ -483,7 +595,14 @@ mod tests {
     }
 
     fn key(i: u64) -> PlanKey {
-        PlanKey { design: i, splits: 0, lambdas: 0, backend: Backend::MklLike, threads: 1 }
+        PlanKey {
+            design: i,
+            splits: 0,
+            lambdas: 0,
+            backend: Backend::MklLike,
+            threads: 1,
+            parent: 0,
+        }
     }
 
     fn shaped_plan(n: usize, p: usize, seed: u64) -> Arc<DesignPlan> {
@@ -591,6 +710,87 @@ mod tests {
         assert_eq!(cache.stats().evictions, 1);
         assert!(matches!(cache.lease(key(1)), Lease::Hit(_)), "refreshed entry evicted");
         assert!(matches!(cache.lease(key(2)), Lease::Build(_)), "LRU entry must be the victim");
+    }
+
+    #[test]
+    fn measured_build_time_raises_keep_priority_over_identical_twin() {
+        // Two identically-shaped plans price identically under the
+        // nominal model, so recency would decide. A measured build time
+        // far above nominal must flip the outcome: the slow-to-build
+        // entry survives even as the LRU one.
+        let a = shaped_plan(30, 6, 20);
+        let one = a.resident_bytes();
+        let cache = PlanCache::new(2 * one + one / 2);
+        match cache.lease(key(1)) {
+            Lease::Build(g) => g.fulfill_measured(&a, 1e6), // demonstrably slow build
+            Lease::Hit(_) => panic!("expected miss"),
+        }
+        claim_and_fulfill(&cache, key(2), &shaped_plan(30, 6, 21));
+        // Touch key 2 so the measured entry is the LRU candidate.
+        assert!(matches!(cache.lease(key(2)), Lease::Hit(_)));
+        claim_and_fulfill(&cache, key(3), &shaped_plan(30, 6, 22));
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(
+            matches!(cache.lease(key(1)), Lease::Hit(_)),
+            "slow-measured plan must outlive its nominal-priced twin"
+        );
+        assert!(matches!(cache.lease(key(2)), Lease::Build(_)), "twin must be the victim");
+    }
+
+    #[test]
+    fn measured_pricing_floors_at_the_nominal_estimate() {
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        let a = small_plan(23);
+        match cache.lease(key(1)) {
+            Lease::Build(g) => g.fulfill_measured(&a, 1e-12), // implausibly fast
+            Lease::Hit(_) => panic!("expected miss"),
+        }
+        claim_and_fulfill(&cache, key(2), &small_plan(24)); // unmeasured twin
+        let st = cache.stats();
+        let by_key = |k: PlanKey| {
+            st.entries.iter().find(|e| e.key == k.fingerprint()).expect("entry resident").clone()
+        };
+        let fast = by_key(key(1));
+        let unmeasured = by_key(key(2));
+        assert_eq!(fast.measured_secs, Some(1e-12));
+        assert_eq!(
+            fast.rebuild_secs, fast.nominal_secs,
+            "a measurement below nominal must not underprice the rebuild"
+        );
+        assert_eq!(unmeasured.measured_secs, None);
+        assert_eq!(unmeasured.rebuild_secs, unmeasured.nominal_secs);
+        // The table surfaces the measured-vs-nominal split per entry.
+        let rows = st.table_rows();
+        assert!(rows.iter().any(|(k, v)| k.starts_with("plan ") && v.contains("measured")));
+        assert!(rows.iter().any(|(k, v)| k.starts_with("plan ") && v.contains("unmeasured")));
+    }
+
+    #[test]
+    fn lineage_depth_extends_parent_chains_and_truncates_on_eviction() {
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        let root = key(30);
+        claim_and_fulfill(&cache, root, &small_plan(30));
+        let child = key(31).with_parent(root.fingerprint());
+        claim_and_fulfill(&cache, child, &small_plan(31));
+        let grandchild = key(32).with_parent(child.fingerprint());
+        claim_and_fulfill(&cache, grandchild, &small_plan(32));
+        let st = cache.stats();
+        let depth_of = |k: PlanKey| {
+            st.entries.iter().find(|e| e.key == k.fingerprint()).expect("resident").depth
+        };
+        assert_eq!(depth_of(root), 0);
+        assert_eq!(depth_of(child), 1);
+        assert_eq!(depth_of(grandchild), 2);
+        // Distinct identities: the child's key never collides with a cold
+        // rebuild of the same contents (parent = 0).
+        assert_ne!(child.fingerprint(), key(31).fingerprint());
+
+        // An orphaned child (parent never resident) records depth 1.
+        let orphan = key(40).with_parent(key(99).fingerprint());
+        claim_and_fulfill(&cache, orphan, &small_plan(40));
+        let st = cache.stats();
+        let d = st.entries.iter().find(|e| e.key == orphan.fingerprint()).expect("resident").depth;
+        assert_eq!(d, 1, "ancestry truncated, not zero");
     }
 
     #[test]

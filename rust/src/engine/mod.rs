@@ -28,6 +28,24 @@
 //! fresh single-request engine; anything that issues more than one
 //! request against the same design should hold an `Engine` instead.
 //!
+//! **Streaming appends** ([`AppendRequest`] → [`Engine::append_fit`]):
+//! when new scan sessions extend a design the engine already factorized,
+//! the plan is not rebuilt — the engine keeps a live
+//! [`ridge::StreamingDesign`] per design lineage, updates each fold's
+//! Gram with one rank-`n_new` `syrk`, and warm-starts the Jacobi
+//! eigensolver from the previous eigenbasis
+//! ([`crate::blas::Blas::eigh_warm`]). The updated plan enters the cache
+//! as a **child** keyed by its parent's fingerprint, so a repeat of the
+//! same append is a warm hit (zero eigendecompositions) and
+//! [`CacheEntryStats::depth`] reports how many appends the entry is away
+//! from its cold root. Warm-started factors are *not* bit-identical to a
+//! cold rebuild (the rotation into the previous basis reorders the
+//! floating-point work); `tests/streaming.rs` pins the fit-level
+//! agreement tolerance, and the distinct lineage in the key guarantees a
+//! cold request is never served a warm child. The update-vs-rebuild
+//! trade is priced by [`perfmodel::update_decompose_secs`] through
+//! [`Engine::append_placement`].
+//!
 //! Cache discipline: only plan-backed strategies consult the cache
 //! ([`Strategy::Bmor`]). The self-contained strategies exist to
 //! reproduce the paper's baselines — MOR's per-target refactorization
@@ -57,6 +75,7 @@
 
 mod cache;
 
+use std::collections::HashMap;
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -64,7 +83,7 @@ use std::time::Instant;
 
 pub use cache::{CacheEntryStats, CacheStats, DEFAULT_CACHE_BUDGET};
 
-use cache::{lock_recover, Lease, PlanCache, PlanKey};
+use cache::{lock_recover, Fnv, Lease, PlanCache, PlanKey};
 
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
@@ -75,7 +94,7 @@ use crate::cv::{self, kfold, pearson_cols, Split};
 use crate::data::friends::EncodingDataset;
 use crate::encoding::{EncodeOpts, EncodingResult, RSummary};
 use crate::linalg::Mat;
-use crate::perfmodel::{Calibration, FitShape};
+use crate::perfmodel::{self, Calibration, FitShape};
 use crate::ridge::{self, DesignPlan, RidgeCvFit, RidgeTimings};
 use crate::scheduler::{
     DesExecutor, Executor, PoolStats, ProcessCtx, ProcessError, ProcessExecutor, Schedule,
@@ -119,6 +138,10 @@ pub enum EngineError {
     /// one plan identity (same design, CV splits, λ grid, backend and
     /// thread width) or use a strategy that is not plan-backed.
     CoalesceKeyMismatch,
+    /// [`Engine::append_fit`] was handed an appended block with no rows.
+    EmptyAppend,
+    /// The appended block's feature width differs from the base design's.
+    AppendWidthMismatch { design_cols: usize, append_cols: usize },
 }
 
 impl fmt::Display for EngineError {
@@ -153,6 +176,12 @@ impl fmt::Display for EngineError {
                 f,
                 "coalesced fit requests must share one plan key \
                  (same design, splits, λ grid, backend, threads; plan-backed strategy only)"
+            ),
+            EngineError::EmptyAppend => write!(f, "appended block has no rows"),
+            EngineError::AppendWidthMismatch { design_cols, append_cols } => write!(
+                f,
+                "appended block width mismatch: design has {design_cols} features, \
+                 append has {append_cols}"
             ),
         }
     }
@@ -372,6 +401,183 @@ impl<'a> FitRequest<'a> {
     }
 }
 
+/// Builder for a streaming append-and-fit ([`Engine::append_fit`]).
+///
+/// `x` is the **current head** of a design lineage — the rows the engine
+/// has already factorized (the original base, or the grown design
+/// returned by a previous append). `x_new` is the appended block (new
+/// scan sessions); under the [`ridge::SplitSchedule`] contract its rows
+/// join every fold's *training* set while validation folds stay fixed,
+/// so one rank-`n_new` Gram update serves all `splits + 1`
+/// factorizations. `y` carries targets over the **grown** row count
+/// (`x.rows() + x_new.rows()`).
+///
+/// The strategy is implicitly B-MOR: streaming updates a shared plan,
+/// which the self-contained baselines do not have. Fold geometry
+/// (`folds`, `seed`) names the *base* kfold the lineage started from —
+/// it must match across the chain, since appended rows never create new
+/// validation folds.
+#[derive(Clone, Debug)]
+pub struct AppendRequest<'a> {
+    x: DesignRef<'a>,
+    x_new: &'a Mat,
+    y: &'a Mat,
+    nodes: usize,
+    threads_per_node: usize,
+    backend: Backend,
+    folds: usize,
+    seed: u64,
+    lambdas: Vec<f64>,
+}
+
+impl<'a> AppendRequest<'a> {
+    pub fn new(x: impl Into<DesignRef<'a>>, x_new: &'a Mat, y: &'a Mat) -> Self {
+        let d = DistConfig::default();
+        Self {
+            x: x.into(),
+            x_new,
+            y,
+            nodes: d.nodes,
+            threads_per_node: d.threads_per_node,
+            backend: d.backend,
+            folds: d.inner_folds,
+            seed: d.seed,
+            lambdas: ridge::LAMBDA_GRID.to_vec(),
+        }
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn threads_per_node(mut self, threads: usize) -> Self {
+        self.threads_per_node = threads;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn folds(mut self, folds: usize) -> Self {
+        self.folds = folds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lambdas(mut self, lambdas: &[f64]) -> Self {
+        self.lambdas = lambdas.to_vec();
+        self
+    }
+
+    fn dist_config(&self) -> DistConfig {
+        DistConfig {
+            strategy: Strategy::Bmor,
+            nodes: self.nodes,
+            threads_per_node: self.threads_per_node,
+            backend: self.backend,
+            inner_folds: self.folds,
+            seed: self.seed,
+        }
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        let x = self.x.mat();
+        if x.rows() == 0 || x.cols() == 0 {
+            return Err(EngineError::EmptyDesign { rows: x.rows(), cols: x.cols() });
+        }
+        if self.x_new.rows() == 0 {
+            return Err(EngineError::EmptyAppend);
+        }
+        if self.x_new.cols() != x.cols() {
+            return Err(EngineError::AppendWidthMismatch {
+                design_cols: x.cols(),
+                append_cols: self.x_new.cols(),
+            });
+        }
+        let grown = x.rows() + self.x_new.rows();
+        if self.y.rows() != grown {
+            return Err(EngineError::DimensionMismatch {
+                x_rows: grown,
+                y_rows: self.y.rows(),
+            });
+        }
+        if self.y.cols() == 0 {
+            return Err(EngineError::EmptyTargets);
+        }
+        // Folds are checked against the BASE rows: the kfold that seeds
+        // the lineage runs there, and appends only extend training sets.
+        if self.folds < 2 || self.folds > x.rows() {
+            return Err(EngineError::InvalidFolds { folds: self.folds, samples: x.rows() });
+        }
+        if self.nodes == 0 {
+            return Err(EngineError::ZeroNodes);
+        }
+        if self.threads_per_node == 0 {
+            return Err(EngineError::ZeroThreads);
+        }
+        if self.lambdas.is_empty() {
+            return Err(EngineError::EmptyLambdaGrid);
+        }
+        Ok(())
+    }
+}
+
+/// What [`Engine::append_fit`] did and what it cost — the fit itself
+/// plus the lineage and solver observability the streaming contract is
+/// pinned on (`tests/streaming.rs`).
+#[derive(Debug)]
+pub struct AppendOutcome {
+    /// The distributed fit over the grown design (weights, λ*, timings).
+    pub fit: DistributedFit,
+    /// Cache fingerprint of the grown (child) plan.
+    pub plan_fingerprint: u64,
+    /// Fingerprint of the head plan the append extended (the parent in
+    /// the cache's lineage chain).
+    pub parent_fingerprint: u64,
+    /// Row schedule of the appended block (where the new rows landed).
+    pub schedule: ridge::SplitSchedule,
+    /// Total Jacobi sweeps the warm-started eigendecompositions used
+    /// across all `splits + 1` factor updates; 0 when the child plan was
+    /// already cached (nothing was decomposed).
+    pub warm_sweeps: usize,
+    /// Wall-clock of the incremental update (Gram delta + warm eigh +
+    /// projections); 0.0 on a cache hit.
+    pub update_secs: f64,
+    /// True when the grown plan was served from the cache — the repeat
+    /// of an append the engine had already streamed.
+    pub plan_reused: bool,
+}
+
+/// Update-vs-rebuild pricing from [`Engine::append_placement`]: the
+/// perfmodel's prediction for streaming an `n_new`-row append into an
+/// existing plan versus cold-rebuilding all `splits + 1` factorizations
+/// at the grown shape.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendPlacement {
+    /// Predicted seconds for the incremental update
+    /// ([`perfmodel::update_decompose_secs`]).
+    pub update_secs: f64,
+    /// Predicted seconds for a cold rebuild at the grown shape
+    /// ([`perfmodel::plan_decompose_secs`]).
+    pub cold_secs: f64,
+}
+
+impl AppendPlacement {
+    /// True when streaming beats rebuilding — for realistic appends
+    /// (`n_new ≪ n`) always, since the update replaces the O(p²n) Gram
+    /// rebuild with O(p²·n_new) and halves the eigh sweeps.
+    pub fn prefers_stream(&self) -> bool {
+        self.update_secs < self.cold_secs
+    }
+}
+
 /// Builder for a DES pricing run ([`Engine::simulate`]): the same
 /// strategy knobs as [`FitRequest`], but over an abstract [`FitShape`]
 /// instead of concrete matrices.
@@ -583,6 +789,62 @@ pub struct Engine {
     /// different worker count.
     pool: Mutex<Option<Arc<ProcessExecutor>>>,
     worker_bin: Option<PathBuf>,
+    /// Live [`ridge::StreamingDesign`]s, keyed by the identity of their
+    /// current HEAD design (`stream_key`): the retained Grams and
+    /// eigenbases that make the next append an incremental update
+    /// instead of a rebuild. Appends are serialized per engine (the lock
+    /// is held across the update — an append mutates the stream, so two
+    /// appends to one lineage cannot proceed concurrently anyway).
+    streams: Mutex<HashMap<u64, StreamEntry>>,
+}
+
+/// A live streaming lineage: the mutable factorization state plus the
+/// head's cache key and fold geometry (needed to derive the child key of
+/// the NEXT append without rebuilding anything).
+struct StreamEntry {
+    stream: ridge::StreamingDesign,
+    head_key: PlanKey,
+    head_splits: Vec<Split>,
+}
+
+/// Registry key for a design lineage head: full design contents plus
+/// every knob that changes plan identity except the splits hash — the
+/// head's splits are *derived* state (base kfold + append extensions)
+/// that a caller holding only the grown X cannot recompute, so the
+/// lineage is addressed by `(X, λ grid, backend, threads, folds, seed)`
+/// and the entry carries the actual splits.
+fn stream_key(
+    design: u64,
+    lambdas: &[f64],
+    backend: Backend,
+    threads: usize,
+    folds: usize,
+    seed: u64,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(design);
+    h.u64(lambdas.len() as u64);
+    for v in lambdas {
+        h.u64(v.to_bits());
+    }
+    h.u64(backend as u64);
+    h.u64(threads as u64);
+    h.u64(folds as u64);
+    h.u64(seed);
+    h.finish()
+}
+
+/// Contents hash of a design matrix — the same fold `PlanKey::new` uses
+/// for its `design` component, so a child key's `design` field can
+/// re-address the registry after an append without rehashing X.
+fn design_hash(x: &Mat) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(x.rows() as u64);
+    h.u64(x.cols() as u64);
+    for v in x.data() {
+        h.u64(v.to_bits());
+    }
+    h.finish()
 }
 
 impl Default for Engine {
@@ -607,6 +869,7 @@ impl Engine {
             plans: PlanCache::new(DEFAULT_CACHE_BUDGET),
             pool: Mutex::new(None),
             worker_bin: None,
+            streams: Mutex::new(HashMap::new()),
         }
     }
 
@@ -722,7 +985,11 @@ impl Engine {
                     let pending = Mutex::new(Some(guard));
                     let publish = |plan: &Arc<DesignPlan>| {
                         if let Some(g) = lock_recover(&pending).take() {
-                            g.fulfill(plan);
+                            // Price the entry by the compute the build
+                            // actually spent (summed per-stage timings —
+                            // the wall clock isn't known inside the
+                            // assemble barrier), floored at nominal.
+                            g.fulfill_measured(plan, plan.build_timings.total());
                         }
                     };
                     // Adopt the caller's Arc (or clone a borrowed X
@@ -758,6 +1025,171 @@ impl Engine {
                 },
             )?;
             Ok(fit)
+        }
+    }
+
+    /// Streaming append-and-fit: extend an already-factorized design
+    /// with `x_new` rows and fit targets over the grown design WITHOUT
+    /// rebuilding the plan from scratch.
+    ///
+    /// The engine keeps a live [`ridge::StreamingDesign`] per lineage.
+    /// On an append it updates every fold's Gram with one rank-`n_new`
+    /// `syrk` of the delta block and warm-starts each Jacobi
+    /// eigendecomposition from the previous eigenbasis
+    /// ([`crate::blas::Blas::eigh_warm`]) — O(p²·n_new) + roughly half
+    /// the cold sweep count, versus the cold rebuild's O(p²n) Grams and
+    /// full `splits + 1` eigendecompositions (priced against each other
+    /// by [`Engine::append_placement`]). The grown plan is published to
+    /// the cache as a **child** of the head it extended
+    /// ([`CacheEntryStats::depth`] counts the chain), with its measured
+    /// update time as the eviction-pricing rebuild cost.
+    ///
+    /// Repeating an append the engine has already streamed is a warm
+    /// cache hit: zero eigendecompositions, `warm_sweeps == 0`,
+    /// `plan_reused` set (pinned by `tests/streaming.rs`). Chained
+    /// appends pass the previously grown design as `x`; the lineage is
+    /// recognized by contents, so the chain survives the caller not
+    /// holding any engine-side handle. If the engine has no live stream
+    /// for `x` (first touch, or the process restarted), the base is
+    /// factorized cold once — and that base plan is published too, so
+    /// plain [`Engine::fit`]s against the base go warm.
+    ///
+    /// Accuracy contract: warm-started factors are NOT bit-identical to
+    /// a cold rebuild; fits agree within the documented tolerance
+    /// (`ridge::stream` module docs, pinned by `tests/streaming.rs`).
+    /// The lineage-aware cache key keeps the two populations separate.
+    pub fn append_fit(&self, req: &AppendRequest) -> Result<AppendOutcome, EngineError> {
+        req.validate()?;
+        let cfg = req.dist_config();
+        let x0 = req.x.mat();
+        let blas = Blas::new(req.backend, req.threads_per_node);
+
+        let head_rkey = stream_key(
+            design_hash(x0),
+            &req.lambdas,
+            req.backend,
+            req.threads_per_node,
+            req.folds,
+            req.seed,
+        );
+
+        let mut streams = lock_recover(&self.streams);
+        // Head identity: a live lineage whose head IS x0, or a fresh
+        // base (kfold at the base rows). Either way the child key is
+        // derivable without factorizing anything, so a repeat append can
+        // warm-hit below even after the live stream moved past this
+        // head.
+        let entry = streams.remove(&head_rkey);
+        let (head_key, head_splits) = match &entry {
+            Some(e) => (e.head_key, e.head_splits.clone()),
+            None => {
+                let splits = kfold(x0.rows(), req.folds, Some(req.seed));
+                let key =
+                    PlanKey::new(x0, &splits, &req.lambdas, req.backend, req.threads_per_node);
+                (key, splits)
+            }
+        };
+        let parent_fingerprint = head_key.fingerprint();
+        let schedule = ridge::SplitSchedule::new(x0.rows(), req.x_new.rows());
+        let grown_splits = schedule.extended_splits(&head_splits);
+        let x_grown = Mat::vcat(&[x0, req.x_new]);
+        let child_key =
+            PlanKey::new(&x_grown, &grown_splits, &req.lambdas, req.backend, req.threads_per_node)
+                .with_parent(parent_fingerprint);
+        let plan_fingerprint = child_key.fingerprint();
+
+        // Leasing while holding the registry lock cannot deadlock:
+        // child keys are only ever built here, and a competing builder
+        // of this key would need the registry lock first — so the lease
+        // never parks on a build that is itself waiting on us. (A cold
+        // base build racing on `head_key` below runs under Engine::fit,
+        // which never takes the registry lock.)
+        match self.plans.lease(child_key) {
+            Lease::Hit(plan) => {
+                // Already streamed this exact append; the head (if
+                // live) has not moved. Zero decompositions.
+                if let Some(e) = entry {
+                    streams.insert(head_rkey, e);
+                }
+                drop(streams);
+                let fit = warm_fit(&plan, req.y, &cfg);
+                Ok(AppendOutcome {
+                    fit,
+                    plan_fingerprint,
+                    parent_fingerprint,
+                    schedule,
+                    warm_sweeps: 0,
+                    update_secs: 0.0,
+                    plan_reused: true,
+                })
+            }
+            Lease::Build(guard) => {
+                // Need the live stream: the lineage's own, or a
+                // cold-started one at the base design. The base plan is
+                // published too (if not already resident), so plain
+                // fits against the base go warm from here on.
+                let mut e = match entry {
+                    Some(e) => e,
+                    None => {
+                        let stream =
+                            ridge::StreamingDesign::new(&blas, x0, &req.lambdas, &head_splits);
+                        if let Lease::Build(g) = self.plans.lease(head_key) {
+                            g.fulfill_measured(
+                                stream.plan(),
+                                stream.plan().build_timings.total(),
+                            );
+                        }
+                        StreamEntry { stream, head_key, head_splits }
+                    }
+                };
+                let up = e.stream.append(&blas, req.x_new);
+                guard.fulfill_measured(&up.plan, up.secs);
+                // Advance the lineage head to the grown design.
+                let next_rkey = stream_key(
+                    child_key.design,
+                    &req.lambdas,
+                    req.backend,
+                    req.threads_per_node,
+                    req.folds,
+                    req.seed,
+                );
+                e.head_key = child_key;
+                e.head_splits = grown_splits;
+                streams.insert(next_rkey, e);
+                drop(streams);
+                let mut fit = warm_fit(&up.plan, req.y, &cfg);
+                // The sweep ran against factors this call just built —
+                // report the update as this fit's plan cost, not as a
+                // reuse.
+                fit.plan_secs = up.secs;
+                fit.plan_reused = false;
+                Ok(AppendOutcome {
+                    fit,
+                    plan_fingerprint,
+                    parent_fingerprint,
+                    schedule,
+                    warm_sweeps: up.warm_sweeps,
+                    update_secs: up.secs,
+                    plan_reused: false,
+                })
+            }
+        }
+    }
+
+    /// Price a streaming append against a cold rebuild at the **grown**
+    /// shape (`shape.n` includes the appended rows) with this engine's
+    /// calibration — the same perfmodel [`Engine::placement`] uses, so a
+    /// deployment can decide whether to stream or rebuild before
+    /// committing the work.
+    pub fn append_placement(
+        &self,
+        backend: Backend,
+        shape: FitShape,
+        n_new: usize,
+    ) -> AppendPlacement {
+        AppendPlacement {
+            update_secs: perfmodel::update_decompose_secs(&self.cal, backend, shape, n_new),
+            cold_secs: perfmodel::plan_decompose_secs(&self.cal, backend, shape),
         }
     }
 
@@ -859,7 +1291,10 @@ impl Engine {
                     tim,
                 ));
                 let secs = started.elapsed().as_secs_f64();
-                guard.fulfill(&plan);
+                // Publish with the measured build time: eviction prices
+                // this entry by what rebuilding it actually cost here,
+                // floored at the nominal perfmodel estimate.
+                guard.fulfill_measured(&plan, secs);
                 (plan, secs, false)
             }
         };
@@ -972,8 +1407,9 @@ impl Engine {
         let (plan, fresh) = match self.plans.lease(key) {
             Lease::Hit(plan) => (plan, false),
             Lease::Build(guard) => {
+                let started = Instant::now();
                 let plan = Arc::new(DesignPlan::build(&blas, &xtr, &ridge::LAMBDA_GRID, &splits));
-                guard.fulfill(&plan);
+                guard.fulfill_measured(&plan, started.elapsed().as_secs_f64());
                 (plan, true)
             }
         };
@@ -1410,6 +1846,96 @@ mod tests {
         let mor = engine.fit(&FitRequest::new(&x, &y).strategy(Strategy::Mor).nodes(5)).unwrap();
         assert_eq!(engine.cached_plans(), 0);
         assert_eq!(mor.batches.len(), 5);
+    }
+
+    #[test]
+    fn append_fit_streams_chains_and_warm_hits() {
+        let (x_all, y_all) = planted(72, 8, 5, 31);
+        let x0 = x_all.rows_slice(0, 48);
+        let x1 = x_all.rows_slice(48, 60);
+        let x01 = x_all.rows_slice(0, 60);
+        let x2 = x_all.rows_slice(60, 72);
+        let y01 = y_all.rows_slice(0, 60);
+
+        let engine = Engine::new();
+        let first = engine.append_fit(&AppendRequest::new(&x0, &x1, &y01)).unwrap();
+        assert!(!first.plan_reused);
+        assert!(first.warm_sweeps > 0, "warm eigh must report its sweeps");
+        assert_eq!(first.fit.weights.shape(), (8, 5));
+        assert_eq!(first.schedule.rows(), 48..60);
+        // Base plan + grown child are both resident; the child knows its
+        // parent and sits at depth 1.
+        assert_eq!(engine.cached_plans(), 2);
+        let stats = engine.cache_stats();
+        let child = stats
+            .entries
+            .iter()
+            .find(|e| e.key == first.plan_fingerprint)
+            .expect("grown plan resident");
+        assert_eq!(child.depth, 1);
+        assert_eq!(child.measured_secs, Some(first.update_secs));
+
+        // Repeating the exact append is a warm hit: nothing decomposed.
+        let again = engine.append_fit(&AppendRequest::new(&x0, &x1, &y01)).unwrap();
+        assert!(again.plan_reused);
+        assert_eq!(again.warm_sweeps, 0);
+        assert_eq!(again.plan_fingerprint, first.plan_fingerprint);
+        assert_eq!(again.fit.weights.max_abs_diff(&first.fit.weights), 0.0);
+
+        // Chained append: pass the grown design as the new head; the
+        // lineage is recognized and depth grows.
+        let second = engine.append_fit(&AppendRequest::new(&x01, &x2, &y_all)).unwrap();
+        assert!(!second.plan_reused);
+        assert_eq!(second.parent_fingerprint, first.plan_fingerprint);
+        let stats = engine.cache_stats();
+        let grand = stats
+            .entries
+            .iter()
+            .find(|e| e.key == second.plan_fingerprint)
+            .expect("chained plan resident");
+        assert_eq!(grand.depth, 2);
+
+        // A plain fit against the BASE design goes warm off the plan the
+        // append's cold start published.
+        let y0 = y_all.rows_slice(0, 48);
+        let base = engine.fit(&FitRequest::new(&x0, &y0)).unwrap();
+        assert!(base.plan_reused);
+    }
+
+    #[test]
+    fn append_fit_validates_into_typed_errors() {
+        let (x, y) = planted(40, 6, 3, 33);
+        let x_new = x.rows_slice(30, 40);
+        let wide = Mat::zeros(4, 7);
+        let y_grown = Mat::zeros(50, 3);
+        let engine = Engine::new();
+        assert_eq!(
+            engine
+                .append_fit(&AppendRequest::new(&x, &wide, &y_grown))
+                .unwrap_err(),
+            EngineError::AppendWidthMismatch { design_cols: 6, append_cols: 7 }
+        );
+        assert_eq!(
+            engine
+                .append_fit(&AppendRequest::new(&x, &Mat::zeros(0, 6), &y_grown))
+                .unwrap_err(),
+            EngineError::EmptyAppend
+        );
+        // y must cover the GROWN rows.
+        assert_eq!(
+            engine.append_fit(&AppendRequest::new(&x, &x_new, &y)).unwrap_err(),
+            EngineError::DimensionMismatch { x_rows: 50, y_rows: 40 }
+        );
+        assert_eq!(engine.cached_plans(), 0, "rejected appends must not build");
+    }
+
+    #[test]
+    fn append_placement_prices_update_below_cold_rebuild() {
+        let engine = Engine::new();
+        let grown = FitShape { n: 12_000, p: 512, t: 4000, r: 11, splits: 4 };
+        let pl = engine.append_placement(Backend::MklLike, grown, 600);
+        assert!(pl.prefers_stream(), "small append must price below a cold rebuild");
+        assert!(pl.update_secs > 0.0 && pl.cold_secs > pl.update_secs);
     }
 
     #[test]

@@ -91,6 +91,29 @@
 //! coalescing settings under an open-loop arrival process
 //! (`BENCH_serving.json` CI artifact).
 //!
+//! Designs are not frozen at factorization time: `ridge::stream` keeps a
+//! factorization **live** (`ridge::StreamingDesign` retains the
+//! per-split Grams and eigenbases) so that when new scan sessions extend
+//! a design, each fold's Gram is updated with one rank-`n_new`
+//! triangular `syrk` of the delta block — O(p²·n_new) instead of the
+//! O(p²n) rebuild — and each eigendecomposition restarts warm from the
+//! previous eigenbasis (`blas::Blas::eigh_warm`: rotate K into V₀, run
+//! Jacobi from there, typically about half the cold sweep count, with
+//! sweep counts observable via `linalg::eigh_sweeps_total`). Appended
+//! rows join every fold's training set under a deterministic
+//! `ridge::SplitSchedule` while validation folds stay fixed, so one
+//! delta Gram serves all `splits + 1` factorizations. The engine
+//! surfaces this as `engine::AppendRequest` → `engine::Engine::append_fit`,
+//! and the plan cache records **lineage**: an updated plan enters as a
+//! child keyed by its parent's fingerprint (warm-started factors are not
+//! bit-identical to cold ones, so the populations never alias), priced
+//! for eviction by its measured update time, with chain depth reported
+//! in `engine::CacheEntryStats`. Update-vs-rebuild is priced by
+//! `perfmodel::update_decompose_secs` (`engine::Engine::append_placement`),
+//! the accuracy contract is pinned by `tests/streaming.rs`, and
+//! `bench_streaming` measures both sides across a multi-append growth
+//! trace (`BENCH_streaming.json` CI artifact).
+//!
 //! The kernel layer underneath is explicit about its fast paths. The
 //! MKL-like GEMM tier runs a 4×8 register microkernel (`blas::micro`)
 //! that dispatches once per process between an AVX2+FMA implementation

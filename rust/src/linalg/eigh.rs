@@ -29,9 +29,11 @@ use super::Mat;
 
 thread_local! {
     static EIGH_CALLS: Cell<usize> = const { Cell::new(0) };
+    static EIGH_SWEEPS: Cell<usize> = const { Cell::new(0) };
 }
 
 static EIGH_CALLS_TOTAL: AtomicUsize = AtomicUsize::new(0);
+static EIGH_SWEEPS_TOTAL: AtomicUsize = AtomicUsize::new(0);
 
 /// Number of Jacobi eigendecompositions performed by *this thread* since
 /// it started. Instrumentation for the decompose-once contract of the
@@ -52,6 +54,30 @@ pub fn eigh_calls_this_thread() -> usize {
 /// tests/plan_parity.rs).
 pub fn eigh_calls_total() -> usize {
     EIGH_CALLS_TOTAL.load(Ordering::SeqCst)
+}
+
+/// Number of Jacobi *sweeps* performed by this thread's
+/// eigendecompositions. The streaming subsystem's headline claim — a
+/// warm-started update converges in strictly fewer sweeps than a cold
+/// refactorization — is pinned through deltas of this counter
+/// (tests/streaming.rs), the sweep-granular companion of
+/// [`eigh_calls_this_thread`].
+pub fn eigh_sweeps_this_thread() -> usize {
+    EIGH_SWEEPS.with(|c| c.get())
+}
+
+/// Process-wide Jacobi sweep count, for contracts that span worker
+/// threads (the sweep-granular companion of [`eigh_calls_total`]). Same
+/// serialization caveat: tests measuring deltas must not race other
+/// eigh-calling tests.
+pub fn eigh_sweeps_total() -> usize {
+    EIGH_SWEEPS_TOTAL.load(Ordering::SeqCst)
+}
+
+/// Charge a finished decomposition's sweep count to both counters.
+fn count_sweeps(sweeps: usize) {
+    EIGH_SWEEPS.with(|c| c.set(c.get() + sweeps));
+    EIGH_SWEEPS_TOTAL.fetch_add(sweeps, Ordering::SeqCst);
 }
 
 /// Eigendecomposition result: ascending eigenvalues, matching columns.
@@ -115,6 +141,7 @@ pub fn jacobi_eigh(k: &Mat, max_sweeps: usize, tol: f64) -> Eigh {
         }
     }
 
+    count_sweeps(sweeps_used);
     sort_and_gather(&a, vt, sweeps_used)
 }
 
@@ -317,7 +344,70 @@ pub fn jacobi_eigh_parallel(k: &Mat, max_sweeps: usize, tol: f64, pool: &ThreadP
             }
         }
     }
+    count_sweeps(sweeps_used);
     sort_and_gather(&a, vt, sweeps_used)
+}
+
+/// Warm-started Jacobi eigendecomposition: rotate `k` into a previous
+/// eigenbasis `v0` (columns = eigenvectors of a nearby matrix), run the
+/// serial cyclic sweep on B = V₀ᵀKV₀, and map the result back as
+/// V = V₀·V_B.
+///
+/// After a small symmetric update K = K₀ + Δ (the streaming append case:
+/// Δ = XₙₑᵥᵀXₙₑᵥ, low rank and small norm relative to K₀), B is
+/// near-diagonal — its off-diagonal mass is ‖V₀ᵀΔV₀‖ = ‖Δ‖_F — so Jacobi
+/// converges in fewer sweeps than a cold start from K itself
+/// (tests/streaming.rs pins this through the sweep counters). Eigenvalues
+/// are exact for K (similarity transform); eigenvectors are orthonormal
+/// because both factors are. NOT bit-identical to [`jacobi_eigh`] on the
+/// same input: the rotation reorders floating-point work, so downstream
+/// consumers carry a tolerance contract instead of a bit-parity one.
+///
+/// `v0` must be square and orthonormal with `k`'s dimension; a degenerate
+/// `v0` (e.g. rank-deficient) degrades convergence back toward the cold
+/// sweep count but stays correct — B's decomposition is exact regardless.
+/// Counted once against the eigh call counters (via the inner
+/// decomposition); this is the serial reference path, `Blas::eigh_warm`
+/// is the pool-dispatched production sibling.
+pub fn jacobi_eigh_warm(k: &Mat, v0: &Mat, max_sweeps: usize, tol: f64) -> Eigh {
+    let p = k.rows();
+    assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
+    assert_eq!(v0.shape(), (p, p), "warm-start basis must match k's order");
+    // B = V₀ᵀKV₀, then an exact symmetrization: the congruence of a
+    // symmetric matrix is symmetric in exact arithmetic, and the Jacobi
+    // sweep's rotation angles assume it bit-exactly.
+    let kv = mat_mul_naive(k, v0);
+    let mut b = mat_mul_t_naive(v0, &kv);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let v = 0.5 * (b.get(i, j) + b.get(j, i));
+            b.set(i, j, v);
+            b.set(j, i, v);
+        }
+    }
+    let inner = jacobi_eigh(&b, max_sweeps, tol);
+    Eigh {
+        values: inner.values,
+        vectors: mat_mul_naive(v0, &inner.vectors),
+        sweeps_used: inner.sweeps_used,
+    }
+}
+
+/// Naive A·B (reference path only — `Blas::eigh_warm` does the rotation
+/// through the backend GEMM).
+fn mat_mul_naive(a: &Mat, b: &Mat) -> Mat {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "inner dimensions must agree");
+    Mat::from_fn(m, n, |i, j| (0..ka).map(|l| a.get(i, l) * b.get(l, j)).sum())
+}
+
+/// Naive Aᵀ·B.
+fn mat_mul_t_naive(a: &Mat, b: &Mat) -> Mat {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "inner dimensions must agree");
+    Mat::from_fn(m, n, |i, j| (0..ka).map(|l| a.get(l, i) * b.get(l, j)).sum())
 }
 
 /// One symmetric Jacobi rotation zeroing A[i,j] (i < j), O(p) contiguous.
@@ -578,6 +668,49 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn warm_start_reconstructs_and_reuses_the_basis() {
+        // K₀ and a rank-1-perturbed K share an approximate eigenbasis:
+        // warm-starting from V₀ must still reconstruct K exactly (the
+        // congruence is a similarity transform) with orthonormal vectors.
+        let p = 14;
+        let k0 = spd(p, 3);
+        let cold0 = jacobi_eigh(&k0, 30, 1e-13);
+        let mut rng = Pcg64::seeded(9);
+        let u = Mat::randn(p, 1, &mut rng);
+        let mut k = k0.clone();
+        for i in 0..p {
+            for j in 0..p {
+                let v = k.get(i, j) + 1e-3 * u.get(i, 0) * u.get(j, 0);
+                k.set(i, j, v);
+            }
+        }
+        let warm = jacobi_eigh_warm(&k, &cold0.vectors, 30, 1e-13);
+        assert!(reconstruction_error(&k, &warm.values, &warm.vectors) < 1e-10);
+        let vt_v = Blas::new(Backend::Naive, 1).at_b(&warm.vectors, &warm.vectors);
+        assert!(vt_v.max_abs_diff(&Mat::eye(p)) < 1e-11);
+        // A small perturbation leaves B near-diagonal: strictly fewer
+        // sweeps than the cold decomposition of the same K.
+        let cold = jacobi_eigh(&k, 30, 1e-13);
+        assert!(
+            warm.sweeps_used < cold.sweeps_used,
+            "warm {} vs cold {}",
+            warm.sweeps_used,
+            cold.sweeps_used
+        );
+    }
+
+    #[test]
+    fn sweep_counters_accumulate_sweeps_used() {
+        let k = spd(10, 31);
+        let t0 = eigh_sweeps_this_thread();
+        let g0 = eigh_sweeps_total();
+        let d = jacobi_eigh(&k, 30, 1e-13);
+        assert!(d.sweeps_used > 0);
+        assert_eq!(eigh_sweeps_this_thread() - t0, d.sweeps_used);
+        assert!(eigh_sweeps_total() - g0 >= d.sweeps_used);
     }
 
     #[test]

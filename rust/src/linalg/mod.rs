@@ -11,8 +11,9 @@ pub mod mat;
 pub mod qr;
 
 pub use eigh::{
-    eigh_calls_this_thread, eigh_calls_total, jacobi_eigh, jacobi_eigh_auto,
-    jacobi_eigh_parallel, Eigh, PARALLEL_EIGH_MIN_P,
+    eigh_calls_this_thread, eigh_calls_total, eigh_sweeps_this_thread, eigh_sweeps_total,
+    jacobi_eigh, jacobi_eigh_auto, jacobi_eigh_parallel, jacobi_eigh_warm, Eigh,
+    PARALLEL_EIGH_MIN_P,
 };
 pub use mat::Mat;
 

@@ -179,6 +179,55 @@ pub fn plan_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape)
         + full_decompose_secs(cal, backend, shape)
 }
 
+/// Fraction of the cold eigh sweep budget a warm-started decomposition
+/// is modeled to pay. Measured on the streaming growth traces
+/// (`bench_streaming`): small appends leave B = V₀ᵀKV₀ near-diagonal,
+/// and the warm Jacobi typically converges in 30–60% of the cold sweep
+/// count; 0.5 is the conservative midpoint the placement logic prices
+/// with (the CI bench asserts the direction, not this constant).
+pub const WARM_EIGH_SWEEP_FRACTION: f64 = 0.5;
+
+/// Seconds to *update* an already-factorized design plan after appending
+/// `n_new` rows (the `ridge::stream` path), instead of rebuilding it
+/// cold ([`plan_decompose_secs`] at the grown `shape.n`):
+///
+/// * per Gram, a triangular rank-k syrk on the delta block only —
+///   p²·n_new FLOPs instead of p²·n (`shape.n` is the grown row count;
+///   appended rows are training-only, so one delta serves every split
+///   and the full Gram: `s + 1` cheap updates);
+/// * per eigendecomposition, the warm-started Jacobi: three p³ GEMMs for
+///   the basis rotation (B = V₀ᵀKV₀ and V = V₀·V_B) plus
+///   [`WARM_EIGH_SWEEP_FRACTION`] of the cold sweep budget;
+/// * per split, the validation projection A = X_val·V is recomputed in
+///   full (validation rows are fixed, but V changed).
+///
+/// `Engine::placement` weighs this against the cold rebuild to decide
+/// whether an append should go through the streaming path; for small
+/// `n_new` it is dominated by the warm eigh term and sits well under the
+/// cold cost (pinned by a unit test and measured by `bench_streaming`).
+pub fn update_decompose_secs(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    n_new: usize,
+) -> f64 {
+    let FitShape { n, p, splits, .. } = shape;
+    let s = splits.max(1) as f64;
+    let gemm_tp = cal.gemm_flops(backend);
+    let pf = p as f64;
+    // Delta Grams: s split Grams + the full Gram, each += a triangular
+    // p²·n_new syrk (one shared delta, but each K gets its own add).
+    let delta_gram = (s + 1.0) * pf * pf * n_new as f64 / gemm_tp;
+    // Warm eigh: rotation GEMMs (K·V₀, V₀ᵀ·(KV₀), V₀·V_B — 2p³ each)
+    // plus the reduced Jacobi sweep budget.
+    let rotation = 3.0 * 2.0 * pf.powi(3) / gemm_tp;
+    let warm_eigh = WARM_EIGH_SWEEP_FRACTION * 12.0 * pf.powi(3) / cal.eigh_flops + rotation;
+    // Validation projections: A = X_val·V per split, recomputed in full.
+    let nv = (n as f64 / s).max(1.0);
+    let aproj = 2.0 * nv * pf * pf / gemm_tp;
+    delta_gram + (s + 1.0) * warm_eigh + s * aproj
+}
+
 /// Target-dependent seconds for a batch of `shape.t` targets against an
 /// already-built plan: per split the C = XtrᵀY gram, the Z = VᵀC
 /// projection and the λ validation sweep, plus the final-fit C,
@@ -423,6 +472,27 @@ mod tests {
         let s1 = batch_sweep_secs(&cal, b, base);
         let s10 = batch_sweep_secs(&cal, b, wide);
         assert!((s10 / s1 - 10.0).abs() < 1e-9, "sweep not linear in t: {}", s10 / s1);
+    }
+
+    #[test]
+    fn update_is_cheaper_than_cold_rebuild_and_monotone_in_delta() {
+        let cal = Calibration::nominal();
+        let b = Backend::MklLike;
+        // A season-sized append to a year-sized design: the streaming
+        // update must undercut the cold rebuild at the grown shape.
+        let grown = FitShape { n: 12_000, p: 512, t: 0, r: 11, splits: 4 };
+        let update = update_decompose_secs(&cal, b, grown, 600);
+        let cold = plan_decompose_secs(&cal, b, grown);
+        assert!(
+            update < 0.8 * cold,
+            "append update ({update:.3}s) should beat cold rebuild ({cold:.3}s)"
+        );
+        // More appended rows -> strictly more delta-Gram work.
+        let bigger = update_decompose_secs(&cal, b, grown, 3000);
+        assert!(bigger > update);
+        // The target count never enters the decompose-side model.
+        let wide = FitShape { t: 50_000, ..grown };
+        assert_eq!(update, update_decompose_secs(&cal, b, wide, 600));
     }
 
     #[test]

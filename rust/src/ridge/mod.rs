@@ -26,6 +26,12 @@
 //! and serve warm fits — same X, splits and λ grid — with zero new
 //! decompositions.
 //!
+//! When the design itself grows — new scan sessions appending rows —
+//! [`stream::StreamingDesign`] keeps the factorization live: retained
+//! Grams take one delta-syrk per append and warm-started Jacobi
+//! eigendecompositions reuse the previous eigenbasis, emitting updated
+//! plans at a fraction of the cold build cost.
+//!
 //! Per-stage timings are recorded so `perfmodel/` can calibrate the T_M /
 //! T_W complexity terms from real measurements. The Cholesky-per-λ
 //! variant (`fit_naive_per_lambda`) is the paper's O(p³r) strawman, and
@@ -33,6 +39,7 @@
 //! for the planned-vs-unplanned benches and parity tests.
 
 pub mod plan;
+pub mod stream;
 
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
@@ -43,6 +50,7 @@ pub use plan::{
     factorize_full, factorize_split, fit_batch_with_plan, fit_coalesced_with_plan, DesignPlan,
     FullDesign, SplitDesign,
 };
+pub use stream::{AppendUpdate, SplitSchedule, StreamingDesign};
 
 /// The paper's λ grid (§2.2.4).
 pub const LAMBDA_GRID: [f64; 11] = [

@@ -1,0 +1,428 @@
+//! Streaming design updates: incremental plans over a growing design.
+//!
+//! The paper's dataset grows season by season — each scan session appends
+//! rows to the design matrix while `p`, the λ grid and the validation
+//! folds stay fixed. A cold [`DesignPlan::build`] at every growth step
+//! repays the full O(n·p²) Gram and the `s+1` O(p³) Jacobi
+//! eigendecompositions from scratch, even though a small append barely
+//! moves the spectrum. [`StreamingDesign`] keeps the factorization state
+//! *live* so an append costs only the delta:
+//!
+//! * **Incremental Grams** — the per-split and full-train Gram matrices
+//!   are retained; appending `n_new` rows adds one triangular rank-k
+//!   [`crate::blas::Blas::syrk`] of the delta block (O(n_new·p²)) which,
+//!   because appended rows are training-only in *every* split (see
+//!   [`SplitSchedule`]), serves all `s+1` Grams: `K += XₙₑᵥᵀXₙₑᵥ`.
+//! * **Warm-started eigh** — each updated Gram is decomposed by
+//!   [`crate::blas::Blas::eigh_warm`]: rotate K into the previous
+//!   eigenbasis (B = V₀ᵀKV₀, near-diagonal after a small append), run
+//!   Jacobi from that start, un-rotate. The sweep count is observable
+//!   ([`AppendUpdate::warm_sweeps`]) and on small deltas strictly below
+//!   the cold count — `tests/streaming.rs` and `bench_streaming` pin it.
+//! * **Plan assembly** — every append emits a full [`DesignPlan`] via
+//!   [`DesignPlan::assemble`], so downstream batch fits
+//!   ([`super::fit_batch_with_plan`]) are oblivious to how the plan was
+//!   produced. `engine::cache` keys these child plans by content plus
+//!   parent fingerprint (plan lineage), making an updated design a cheap
+//!   child build instead of a cold miss.
+//!
+//! **Accuracy contract**: the warm-started eigendecomposition is NOT
+//! bit-identical to a cold Jacobi on the same Gram — the basis rotation
+//! introduces roundoff of order the GEMM error (~p·ε per entry). The
+//! *base* plan (version 0) is bit-identical to [`DesignPlan::build`];
+//! appended versions match a cold rebuild at the grown shape to the
+//! documented tolerance in `tests/streaming.rs` (weights within 1e-6 on
+//! well-conditioned designs), and selections (λ*) agree on non-degenerate
+//! problems. Callers needing bit-exactness rebuild cold; the engine's
+//! placement logic prices that choice with
+//! [`crate::perfmodel::update_decompose_secs`].
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::blas::Blas;
+use crate::cv::Split;
+use crate::linalg::Mat;
+use crate::util::Stopwatch;
+
+use super::plan::{DesignPlan, FullDesign, SplitDesign};
+use super::RidgeTimings;
+
+/// Deterministic fold assignment for a block of appended rows: every
+/// appended row joins the TRAINING side of every split, and validation
+/// folds stay exactly as the base k-fold drew them.
+///
+/// This is the invariant the whole streaming path leans on: train-only
+/// appends mean one shared delta Gram serves every split's K *and* the
+/// full-train K, and the fixed validation rows keep scores comparable
+/// across versions (no re-shuffle, no fold migration). The alternative —
+/// re-running `kfold` at the grown `n` — would reshuffle every fold and
+/// invalidate all retained factorizations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitSchedule {
+    /// First row index of the appended block in the grown design.
+    pub start: usize,
+    /// Number of appended rows.
+    pub count: usize,
+}
+
+impl SplitSchedule {
+    pub fn new(start: usize, count: usize) -> SplitSchedule {
+        SplitSchedule { start, count }
+    }
+
+    /// Row indices of the appended block in the grown design.
+    pub fn rows(&self) -> Range<usize> {
+        self.start..self.start + self.count
+    }
+
+    /// Append the block's rows to a split's training indices (in order —
+    /// gathers stay deterministic).
+    pub fn extend_train(&self, train_idx: &mut Vec<usize>) {
+        train_idx.extend(self.rows());
+    }
+
+    /// The grown-design splits a cold rebuild must use to be comparable
+    /// to the streaming update: base splits with the appended rows added
+    /// to every training fold, validation untouched.
+    pub fn extended_splits(&self, base: &[Split]) -> Vec<Split> {
+        base.iter()
+            .map(|s| {
+                let mut train = s.train.clone();
+                self.extend_train(&mut train);
+                Split { train, val: s.val.clone() }
+            })
+            .collect()
+    }
+}
+
+/// One append's outcome: the freshly assembled plan plus the update's
+/// observability surface (schedule, warm sweep count, wall-clock).
+#[derive(Clone, Debug)]
+pub struct AppendUpdate {
+    /// The updated plan — a drop-in [`DesignPlan`] over the grown design.
+    pub plan: Arc<DesignPlan>,
+    /// Where the appended rows landed (training folds of every split).
+    pub schedule: SplitSchedule,
+    /// Total Jacobi sweeps across the `s+1` warm-started
+    /// eigendecompositions of this update. Compare against
+    /// [`StreamingDesign::base_sweeps`] of a cold build at the same
+    /// shape: small appends converge in strictly fewer sweeps.
+    pub warm_sweeps: usize,
+    /// Wall-clock seconds of the whole update (delta Gram, warm eighs,
+    /// validation reprojections, plan assembly).
+    pub secs: f64,
+}
+
+/// Retained per-split factorization state: the live Gram (updated in
+/// place per append) and the current shared design (whose `v` seeds the
+/// next warm start).
+#[derive(Clone, Debug)]
+struct StreamSplit {
+    gram: Mat,
+    design: Arc<SplitDesign>,
+}
+
+/// A versioned, updatable design factorization — the streaming twin of
+/// [`DesignPlan::build`]. Holds the current design matrix, the per-split
+/// and full-train Grams, and the previous eigenbases; [`Self::append`]
+/// turns a block of new rows into a fresh plan at delta cost.
+#[derive(Clone, Debug)]
+pub struct StreamingDesign {
+    x: Arc<Mat>,
+    lambdas: Vec<f64>,
+    splits: Vec<StreamSplit>,
+    full_gram: Mat,
+    v_full: Mat,
+    e_full: Vec<f64>,
+    plan: Arc<DesignPlan>,
+    version: usize,
+    base_sweeps: usize,
+}
+
+impl StreamingDesign {
+    /// Cold-build the base version (exactly the factorizations of
+    /// [`DesignPlan::build`], same kernels in the same order — the base
+    /// plan is bit-identical to a cold build), retaining the Grams and
+    /// eigenbases for future appends.
+    pub fn new(blas: &Blas, x: &Mat, lambdas: &[f64], splits: &[Split]) -> StreamingDesign {
+        assert!(!lambdas.is_empty(), "empty λ grid");
+        assert!(!splits.is_empty(), "need at least one CV split");
+        let mut tim = RidgeTimings::default();
+        let mut sweeps = 0usize;
+        let mut retained = Vec::with_capacity(splits.len());
+        let mut designs = Vec::with_capacity(splits.len());
+        for split in splits {
+            let xtr = x.rows_gather(&split.train);
+            let xval = x.rows_gather(&split.val);
+            let sw = Stopwatch::start();
+            let k = blas.syrk(&xtr);
+            tim.gram_secs += sw.secs();
+            let sw = Stopwatch::start();
+            let dec = blas.eigh(&k, 30, 1e-12);
+            tim.eigh_secs += sw.secs();
+            sweeps += dec.sweeps_used;
+            let sw = Stopwatch::start();
+            let a = blas.gemm(&xval, &dec.vectors);
+            tim.sweep_secs += sw.secs();
+            let design = Arc::new(SplitDesign {
+                xtr,
+                train_idx: split.train.clone(),
+                val_idx: split.val.clone(),
+                v: dec.vectors,
+                e: dec.values,
+                a,
+            });
+            designs.push(design.clone());
+            retained.push(StreamSplit { gram: k, design });
+        }
+        let sw = Stopwatch::start();
+        let full_gram = blas.syrk(x);
+        tim.gram_secs += sw.secs();
+        let sw = Stopwatch::start();
+        let dec = blas.eigh(&full_gram, 30, 1e-12);
+        tim.eigh_secs += sw.secs();
+        sweeps += dec.sweeps_used;
+        let x = Arc::new(x.clone());
+        let plan = Arc::new(DesignPlan::assemble(
+            x.clone(),
+            designs,
+            FullDesign { v: dec.vectors.clone(), e: dec.values.clone() },
+            lambdas,
+            tim,
+        ));
+        StreamingDesign {
+            x,
+            lambdas: lambdas.to_vec(),
+            splits: retained,
+            full_gram,
+            v_full: dec.vectors,
+            e_full: dec.values,
+            plan,
+            version: 0,
+            base_sweeps: sweeps,
+        }
+    }
+
+    /// Append `x_new` rows to the design and refresh every factorization
+    /// at delta cost: one triangular syrk of the new block shared by all
+    /// `s+1` Grams, a warm-started eigendecomposition per Gram seeded by
+    /// the previous eigenbasis, and per-split validation reprojections
+    /// A = X_val·V. Emits a fresh [`DesignPlan`] over the grown design.
+    pub fn append(&mut self, blas: &Blas, x_new: &Mat) -> AppendUpdate {
+        let p = self.x.cols();
+        assert_eq!(x_new.cols(), p, "appended rows must match the design width");
+        assert!(x_new.rows() > 0, "empty append");
+        let schedule = SplitSchedule::new(self.x.rows(), x_new.rows());
+        let wall = Stopwatch::start();
+        let mut tim = RidgeTimings::default();
+
+        // One delta Gram serves every K (appended rows are train-only).
+        let sw = Stopwatch::start();
+        let delta = blas.syrk(x_new);
+        tim.gram_secs += sw.secs();
+        let x_grown = Arc::new(Mat::vcat(&[self.x.as_ref(), x_new]));
+
+        let mut sweeps = 0usize;
+        let mut designs = Vec::with_capacity(self.splits.len());
+        for ss in &mut self.splits {
+            let sw = Stopwatch::start();
+            ss.gram.add_assign(&delta);
+            tim.gram_secs += sw.secs();
+            let sw = Stopwatch::start();
+            let dec = blas.eigh_warm(&ss.gram, &ss.design.v, 30, 1e-12);
+            tim.eigh_secs += sw.secs();
+            sweeps += dec.sweeps_used;
+            let mut train_idx = ss.design.train_idx.clone();
+            schedule.extend_train(&mut train_idx);
+            let xtr = Mat::vcat(&[&ss.design.xtr, x_new]);
+            let xval = x_grown.rows_gather(&ss.design.val_idx);
+            let sw = Stopwatch::start();
+            let a = blas.gemm(&xval, &dec.vectors);
+            tim.sweep_secs += sw.secs();
+            ss.design = Arc::new(SplitDesign {
+                xtr,
+                train_idx,
+                val_idx: ss.design.val_idx.clone(),
+                v: dec.vectors,
+                e: dec.values,
+                a,
+            });
+            designs.push(ss.design.clone());
+        }
+
+        let sw = Stopwatch::start();
+        self.full_gram.add_assign(&delta);
+        tim.gram_secs += sw.secs();
+        let sw = Stopwatch::start();
+        let dec = blas.eigh_warm(&self.full_gram, &self.v_full, 30, 1e-12);
+        tim.eigh_secs += sw.secs();
+        sweeps += dec.sweeps_used;
+        self.v_full = dec.vectors;
+        self.e_full = dec.values;
+        self.x = x_grown;
+        self.version += 1;
+
+        let plan = Arc::new(DesignPlan::assemble(
+            self.x.clone(),
+            designs,
+            FullDesign { v: self.v_full.clone(), e: self.e_full.clone() },
+            &self.lambdas,
+            tim,
+        ));
+        self.plan = plan.clone();
+        AppendUpdate { plan, schedule, warm_sweeps: sweeps, secs: wall.secs() }
+    }
+
+    /// The current head plan (base build or last append).
+    pub fn plan(&self) -> &Arc<DesignPlan> {
+        &self.plan
+    }
+
+    /// Number of appends applied since the base build.
+    pub fn version(&self) -> usize {
+        self.version
+    }
+
+    /// Rows of the current design.
+    pub fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Total Jacobi sweeps the *cold* base factorization spent across its
+    /// `s+1` eigendecompositions — the baseline an append's
+    /// [`AppendUpdate::warm_sweeps`] is compared against.
+    pub fn base_sweeps(&self) -> usize {
+        self.base_sweeps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+    use crate::cv::kfold;
+    use crate::ridge::{fit_batch_with_plan, LAMBDA_GRID};
+    use crate::util::Pcg64;
+
+    fn blas() -> Blas {
+        Blas::new(Backend::MklLike, 1)
+    }
+
+    fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(n, p, &mut rng);
+        let w = Mat::randn(p, t, &mut rng);
+        let mut y = blas().gemm(&x, &w);
+        for v in y.data_mut() {
+            *v += 0.2 * rng.normal();
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn schedule_extends_training_folds_only() {
+        let base = kfold(10, 2, Some(0));
+        let sched = SplitSchedule::new(10, 3);
+        assert_eq!(sched.rows(), 10..13);
+        let grown = sched.extended_splits(&base);
+        for (g, b) in grown.iter().zip(&base) {
+            assert_eq!(g.val, b.val, "validation folds must not move");
+            assert_eq!(g.train.len(), b.train.len() + 3);
+            assert_eq!(&g.train[..b.train.len()], &b.train[..]);
+            assert_eq!(&g.train[b.train.len()..], &[10, 11, 12]);
+        }
+    }
+
+    #[test]
+    fn base_version_is_bit_identical_to_cold_build() {
+        let (x, _) = planted(60, 8, 0, 21);
+        let splits = kfold(60, 3, Some(1));
+        let b = blas();
+        let cold = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        let stream = StreamingDesign::new(&b, &x, &LAMBDA_GRID, &splits);
+        let warm = stream.plan();
+        assert_eq!(stream.version(), 0);
+        assert_eq!(cold.e_full, warm.e_full);
+        assert_eq!(cold.v_full.max_abs_diff(&warm.v_full), 0.0);
+        for (c, w) in cold.splits.iter().zip(&warm.splits) {
+            assert_eq!(c.e, w.e);
+            assert_eq!(c.v.max_abs_diff(&w.v), 0.0);
+            assert_eq!(c.a.max_abs_diff(&w.a), 0.0);
+            assert_eq!(c.train_idx, w.train_idx);
+        }
+    }
+
+    #[test]
+    fn append_then_fit_tracks_cold_rebuild() {
+        // The documented tolerance contract: an appended plan is not
+        // bit-identical to a cold rebuild (warm eigh ≠ cold eigh), but
+        // fits against it must agree to well under the noise floor.
+        let (x, y) = planted(66, 8, 5, 22);
+        let x0 = x.rows_slice(0, 60);
+        let xn = x.rows_slice(60, 66);
+        let splits = kfold(60, 3, Some(2));
+        let b = blas();
+
+        let mut stream = StreamingDesign::new(&b, &x0, &LAMBDA_GRID, &splits);
+        let up = stream.append(&b, &xn);
+        assert_eq!(stream.version(), 1);
+        assert_eq!(stream.rows(), 66);
+        assert_eq!(up.schedule.rows(), 60..66);
+
+        let cold = DesignPlan::build(&b, &x, &LAMBDA_GRID, &up.schedule.extended_splits(&splits));
+        let warm_fit = fit_batch_with_plan(&b, &up.plan, &y);
+        let cold_fit = fit_batch_with_plan(&b, &cold, &y);
+        assert_eq!(warm_fit.best_idx, cold_fit.best_idx);
+        let diff = warm_fit.weights.max_abs_diff(&cold_fit.weights);
+        assert!(diff < 1e-6, "warm-vs-cold weight drift {diff}");
+        assert!(warm_fit.scores.max_abs_diff(&cold_fit.scores) < 1e-6);
+    }
+
+    #[test]
+    fn small_append_converges_in_fewer_sweeps_than_cold() {
+        let (x, _) = planted(126, 16, 0, 23);
+        let x0 = x.rows_slice(0, 120);
+        let xn = x.rows_slice(120, 126);
+        let splits = kfold(120, 3, Some(3));
+        let b = blas();
+        let mut stream = StreamingDesign::new(&b, &x0, &LAMBDA_GRID, &splits);
+        let up = stream.append(&b, &xn);
+        // Cold baseline at the SAME grown shape and schedule.
+        let cold =
+            StreamingDesign::new(&b, &x, &LAMBDA_GRID, &up.schedule.extended_splits(&splits));
+        assert!(
+            up.warm_sweeps < cold.base_sweeps(),
+            "warm {} vs cold {} sweeps",
+            up.warm_sweeps,
+            cold.base_sweeps()
+        );
+        assert!(up.secs > 0.0);
+    }
+
+    #[test]
+    fn repeated_appends_keep_the_factorization_consistent() {
+        // Three growth steps; after each, the plan's factors must still
+        // reconstruct the true Gram of the grown training rows.
+        let (x, _) = planted(80, 6, 0, 24);
+        let x0 = x.rows_slice(0, 56);
+        let splits = kfold(56, 2, Some(4));
+        let b = blas();
+        let mut stream = StreamingDesign::new(&b, &x0, &LAMBDA_GRID, &splits);
+        for step in 0..3 {
+            let lo = 56 + 8 * step;
+            let up = stream.append(&b, &x.rows_slice(lo, lo + 8));
+            assert_eq!(stream.version(), step + 1);
+            let plan = &up.plan;
+            for sd in &plan.splits {
+                let k = b.syrk(&sd.xtr);
+                let err = crate::linalg::reconstruction_error(&k, &sd.e, &sd.v);
+                assert!(err < 1e-10, "step {step}: VEVᵀ drift {err}");
+            }
+            let kf = b.syrk(&plan.x);
+            let err = crate::linalg::reconstruction_error(&kf, &plan.e_full, &plan.v_full);
+            assert!(err < 1e-10, "step {step}: full VEVᵀ drift {err}");
+        }
+        assert_eq!(stream.rows(), 80);
+    }
+}

@@ -13,7 +13,7 @@
 use std::sync::{Mutex, MutexGuard};
 
 use fmri_encode::blas::micro::{
-    self, active_isa, kernel_4x8_with, KernelIsa, MR, NR,
+    self, active_isa, kernel_4x8_triangular_with, kernel_4x8_with, KernelIsa, MR, NR,
 };
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::cv::kfold;
@@ -81,6 +81,62 @@ fn simd_and_scalar_kernels_agree_on_odd_panels() {
                 for c in 0..NR {
                     let d = (acc_scalar[r][c] - acc_simd[r][c]).abs();
                     assert!(d < 1e-10, "kb={kb} ({r},{c}): diff {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_and_scalar_triangular_kernels_agree_and_mask_identically() {
+    // The diagonal-straddling triangular tile: the AVX2 variant computes
+    // full-width lanes in registers but must (a) match the scalar tile on
+    // every accumulated lane within FMA-contraction roundoff, and (b)
+    // leave masked lanes of the accumulator bit-exactly untouched.
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: host lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Pcg64::seeded(26);
+        for kb in [1, 2, 3, 7, 64, 117, 256] {
+            // Every diagonal geometry a straddling MR-strip can see:
+            // staircase starts, full rows, fully masked rows.
+            for lane_start in [[0, 1, 2, 3], [1, 2, 3, 4], [5, 6, 7, 8], [0, 0, 7, 8]] {
+                for mrows in [1, 2, 4] {
+                    let a = Mat::randn(MR, kb, &mut rng);
+                    let b = Mat::randn(kb, NR, &mut rng);
+                    let mut apack = vec![0.0; MR * kb];
+                    let mut bpack = vec![0.0; NR * kb];
+                    micro::pack_a(&a, 0, MR, 0, kb, &mut apack);
+                    micro::pack_b(&b, 0, kb, 0, NR, &mut bpack);
+                    // A sentinel accumulator so untouched lanes are provable.
+                    let mut acc_scalar = [[0.5f64; NR]; MR];
+                    let mut acc_simd = [[0.5f64; NR]; MR];
+                    kernel_4x8_triangular_with(
+                        KernelIsa::Scalar, &apack, &bpack, kb, &mut acc_scalar, mrows, &lane_start,
+                    );
+                    kernel_4x8_triangular_with(
+                        KernelIsa::Avx2Fma, &apack, &bpack, kb, &mut acc_simd, mrows, &lane_start,
+                    );
+                    for r in 0..MR {
+                        for c in 0..NR {
+                            let masked = r >= mrows || c < lane_start[r].min(NR);
+                            if masked {
+                                assert_eq!(
+                                    acc_simd[r][c], 0.5,
+                                    "kb={kb} mrows={mrows} ({r},{c}): masked lane written"
+                                );
+                                assert_eq!(acc_scalar[r][c], 0.5);
+                            } else {
+                                let d = (acc_scalar[r][c] - acc_simd[r][c]).abs();
+                                assert!(d < 1e-10, "kb={kb} mrows={mrows} ({r},{c}): diff {d}");
+                            }
+                        }
+                    }
                 }
             }
         }

@@ -1,0 +1,372 @@
+//! Streaming-design contracts (`ridge::stream` + `engine::append_fit`).
+//!
+//! The three acceptance pins:
+//!
+//! 1. **Accuracy** — append-then-fit tracks a comparable cold rebuild
+//!    (same grown design, same extended splits) within the tolerance
+//!    documented in `ridge::stream`: warm-started Jacobi factors are NOT
+//!    bit-identical to cold ones, but fitted weights agree to 1e-6 and
+//!    λ selection is identical.
+//! 2. **Fewer sweeps** — an incremental append converges in strictly
+//!    fewer total Jacobi sweeps than cold-refactorizing all
+//!    `splits + 1` eigendecompositions at the grown shape, measured
+//!    through the global `linalg` sweep counters.
+//! 3. **Lineage cache** — repeating an append the engine already
+//!    streamed is a warm child-plan hit: ZERO eigendecompositions (the
+//!    call counter does not move), bit-identical weights.
+//!
+//! Plus robustness properties for the warm-started eigensolver itself:
+//! SPD + rank-k perturbations (the exact shape a design append
+//! produces), an ill-conditioned 10-decade spectrum, and a mismatched
+//! warm-start basis — all must stay correct to the eigh tolerance, never
+//! merely fast.
+//!
+//! Counter-reading tests serialize on one mutex: the sweep/call counters
+//! are process-global, and this binary's tests otherwise run on parallel
+//! threads (same discipline as tests/kernel_parity.rs — separate test
+//! binaries are separate processes, so only this file's tests contend
+//! here). Every test that performs eigendecompositions takes the lock so
+//! it cannot pollute a concurrent test's counter delta.
+
+use std::sync::{Mutex, MutexGuard};
+
+use fmri_encode::blas::{Backend, Blas};
+use fmri_encode::cv::kfold;
+use fmri_encode::engine::{AppendRequest, Engine, EngineError};
+use fmri_encode::linalg::{
+    eigh_calls_total, eigh_sweeps_total, jacobi_eigh, reconstruction_error, Mat,
+};
+use fmri_encode::ridge::{self, StreamingDesign, LAMBDA_GRID};
+use fmri_encode::util::proptest::{check, int_in};
+use fmri_encode::util::Pcg64;
+
+static EIGH_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize_eigh_counting() -> MutexGuard<'static, ()> {
+    EIGH_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    let w = Mat::randn(p, t, &mut rng);
+    let blas = Blas::new(Backend::MklLike, 1);
+    let mut y = blas.gemm(&x, &w);
+    for v in y.data_mut() {
+        *v += 0.3 * rng.normal();
+    }
+    (x, y)
+}
+
+fn spd(n: usize, p: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seeded(seed);
+    let x = Mat::randn(n, p, &mut rng);
+    Blas::new(Backend::MklLike, 1).syrk(&x)
+}
+
+/// VᵀV deviation from the identity, max-abs.
+fn orthonormality_defect(v: &Mat) -> f64 {
+    let p = v.rows();
+    let mut worst = 0.0f64;
+    for i in 0..p {
+        for j in 0..p {
+            let dot: f64 = (0..p).map(|r| v.get(r, i) * v.get(r, j)).sum();
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((dot - target).abs());
+        }
+    }
+    worst
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance pin 1: accuracy vs a comparable cold rebuild
+// ---------------------------------------------------------------------------
+
+#[test]
+fn append_then_fit_matches_cold_rebuild_within_documented_tolerance() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(90, 10, 6, 41);
+    let x0 = x.rows_slice(0, 72);
+    let x1 = x.rows_slice(72, 90);
+
+    let engine = Engine::new();
+    let out = engine
+        .append_fit(
+            &AppendRequest::new(&x0, &x1, &y)
+                .backend(Backend::MklLike)
+                .threads_per_node(1)
+                .folds(3)
+                .seed(0),
+        )
+        .unwrap();
+    assert!(!out.plan_reused);
+    assert_eq!(out.schedule.rows(), 72..90);
+
+    // The comparable cold rebuild: SAME grown design and SAME extended
+    // splits (appended rows train-only, validation folds untouched) —
+    // the only difference is cold Jacobi instead of warm-started.
+    let blas = Blas::new(Backend::MklLike, 1);
+    let base_splits = kfold(72, 3, Some(0));
+    let grown_splits = out.schedule.extended_splits(&base_splits);
+    let cold = ridge::DesignPlan::build(&blas, &x, &LAMBDA_GRID, &grown_splits);
+    let cold_fit = ridge::fit_batch_with_plan(&blas, &cold, &y);
+
+    // Documented accuracy contract (ridge::stream module docs): weights
+    // within 1e-6, identical λ selection.
+    let diff = out.fit.weights.max_abs_diff(&cold_fit.weights);
+    assert!(diff < 1e-6, "warm-vs-cold weight divergence {diff} exceeds tolerance");
+    assert!(
+        diff > 0.0,
+        "warm and cold paths should NOT be bit-identical; if they are, the \
+         lineage-aware cache key is protecting against nothing"
+    );
+    assert_eq!(out.fit.best_lambda_per_batch, vec![cold_fit.best_lambda]);
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance pin 2: strictly fewer Jacobi sweeps than cold, via counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn append_performs_strictly_fewer_sweeps_than_cold_refactorization() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(160, 14, 5, 43);
+    let x0 = x.rows_slice(0, 140);
+    let x1 = x.rows_slice(140, 150);
+    let x01 = x.rows_slice(0, 150);
+    let x2 = x.rows_slice(150, 160);
+    let y01 = y.rows_slice(0, 150);
+
+    let engine = Engine::new();
+    // First append cold-starts the base stream; the chained second
+    // append exercises the pure incremental path we want to meter.
+    let first = engine
+        .append_fit(&AppendRequest::new(&x0, &x1, &y01).folds(4).seed(9))
+        .unwrap();
+
+    let sweeps_before = eigh_sweeps_total();
+    let second = engine
+        .append_fit(&AppendRequest::new(&x01, &x2, &y).folds(4).seed(9))
+        .unwrap();
+    let warm_delta = eigh_sweeps_total() - sweeps_before;
+    assert!(!second.plan_reused);
+    assert_eq!(second.parent_fingerprint, first.plan_fingerprint);
+    assert_eq!(
+        warm_delta, second.warm_sweeps,
+        "global counter delta must equal the reported per-append sweep count"
+    );
+
+    // Cold refactorization of all splits+1 eigendecompositions at the
+    // same grown design and splits.
+    let blas = Blas::new(Backend::MklLike, 1);
+    let base_splits = kfold(140, 4, Some(9));
+    let grown1 = first.schedule.extended_splits(&base_splits);
+    let grown2 = second.schedule.extended_splits(&grown1);
+    let sweeps_before = eigh_sweeps_total();
+    let cold = StreamingDesign::new(&blas, &x, &LAMBDA_GRID, &grown2);
+    let cold_delta = eigh_sweeps_total() - sweeps_before;
+    assert_eq!(cold_delta, cold.base_sweeps());
+    assert!(
+        warm_delta < cold_delta,
+        "append must converge in strictly fewer total Jacobi sweeps: \
+         warm {warm_delta} vs cold {cold_delta}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance pin 3: child-plan cache hit decomposes nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn child_plan_cache_hit_after_append_never_redecomposes() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(80, 8, 4, 47);
+    let x0 = x.rows_slice(0, 64);
+    let x1 = x.rows_slice(64, 80);
+
+    let engine = Engine::new();
+    let first = engine.append_fit(&AppendRequest::new(&x0, &x1, &y)).unwrap();
+    assert!(!first.plan_reused);
+
+    let calls_before = eigh_calls_total();
+    let again = engine.append_fit(&AppendRequest::new(&x0, &x1, &y)).unwrap();
+    assert_eq!(
+        eigh_calls_total(),
+        calls_before,
+        "a child-plan cache hit must not run a single eigendecomposition"
+    );
+    assert!(again.plan_reused);
+    assert_eq!(again.warm_sweeps, 0);
+    assert_eq!(again.update_secs, 0.0);
+    assert_eq!(again.plan_fingerprint, first.plan_fingerprint);
+    assert_eq!(again.fit.weights.max_abs_diff(&first.fit.weights), 0.0);
+    assert!(again.fit.plan_reused);
+
+    // Lineage is visible in the cache stats: the base root at depth 0,
+    // the streamed child at depth 1 with a measured rebuild price.
+    let stats = engine.cache_stats();
+    let child = stats
+        .entries
+        .iter()
+        .find(|e| e.key == first.plan_fingerprint)
+        .expect("child plan resident");
+    assert_eq!(child.depth, 1);
+    assert_eq!(child.measured_secs, Some(first.update_secs));
+    assert!(child.rebuild_secs >= child.nominal_secs);
+    assert!(stats.entries.iter().any(|e| e.depth == 0), "base root resident at depth 0");
+}
+
+#[test]
+fn append_requests_validate_into_typed_errors() {
+    let (x, y) = planted(40, 6, 3, 51);
+    let engine = Engine::new();
+    let narrow = Mat::zeros(5, 4);
+    let err = engine
+        .append_fit(&AppendRequest::new(&x, &narrow, &Mat::zeros(45, 3)))
+        .unwrap_err();
+    assert_eq!(err, EngineError::AppendWidthMismatch { design_cols: 6, append_cols: 4 });
+    let err = engine.append_fit(&AppendRequest::new(&x, &Mat::zeros(0, 6), &y)).unwrap_err();
+    assert_eq!(err, EngineError::EmptyAppend);
+    assert_eq!(engine.cached_plans(), 0, "rejected appends must not touch the cache");
+}
+
+// ---------------------------------------------------------------------------
+// Warm-eigh robustness properties (SPD + rank-k perturbations)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_eigh_is_correct_on_rank_k_perturbed_spd_matrices() {
+    let _guard = serialize_eigh_counting();
+    let blas = Blas::new(Backend::MklLike, 1);
+    check(
+        "warm-eigh-rank-k-spd",
+        |rng| {
+            let p = int_in(rng, 6, 24);
+            let k = int_in(rng, 1, 3);
+            let seed = rng.next_u64();
+            (p, k, seed)
+        },
+        |&(p, k, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let k0 = spd(2 * p, p, seed);
+            let v0 = jacobi_eigh(&k0, 30, 1e-12).vectors;
+            // The design-append shape: K1 = K0 + Σ uᵢuᵢᵀ, SPD by
+            // construction (a rank-k delta Gram is exactly this).
+            let u = Mat::randn(k, p, &mut rng);
+            let k1_delta = Blas::new(Backend::MklLike, 1).syrk(&u);
+            let mut k1 = k0.clone();
+            k1.add_assign(&k1_delta);
+            let warm = blas.eigh_warm(&k1, &v0, 30, 1e-12);
+            reconstruction_error(&k1, &warm.values, &warm.vectors) < 1e-9
+                && orthonormality_defect(&warm.vectors) < 1e-9
+                && warm.values.windows(2).all(|w| w[0] <= w[1])
+        },
+    );
+}
+
+#[test]
+fn warm_eigh_survives_ill_conditioned_ten_decade_spectrum() {
+    let _guard = serialize_eigh_counting();
+    let blas = Blas::new(Backend::MklLike, 1);
+    let p = 40;
+    let mut rng = Pcg64::seeded(61);
+    // Orthonormal Q via Gram-Schmidt on a random matrix, then a planted
+    // spectrum spanning 10 orders of magnitude: λᵢ = 10^(-5 + 10·i/(p-1)).
+    let q = {
+        let m = Mat::randn(p, p, &mut rng);
+        let mut q = m.clone();
+        for j in 0..p {
+            for prev in 0..j {
+                let dot: f64 = (0..p).map(|i| q.get(i, j) * q.get(i, prev)).sum();
+                for i in 0..p {
+                    let v = q.get(i, j) - dot * q.get(i, prev);
+                    q.set(i, j, v);
+                }
+            }
+            let norm: f64 = (0..p).map(|i| q.get(i, j).powi(2)).sum::<f64>().sqrt();
+            for i in 0..p {
+                let v = q.get(i, j) / norm;
+                q.set(i, j, v);
+            }
+        }
+        q
+    };
+    let mut k = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let mut acc = 0.0;
+            for l in 0..p {
+                let lam = 10f64.powf(-5.0 + 10.0 * l as f64 / (p - 1) as f64);
+                acc += q.get(i, l) * lam * q.get(j, l);
+            }
+            k.set(i, j, acc);
+        }
+    }
+    let v0 = jacobi_eigh(&k, 30, 1e-12).vectors;
+    // Rank-1 perturbation at the scale of the SMALL eigenvalues: the
+    // warm restart must refine the tail without losing the 10-decade
+    // head.
+    let u = Mat::randn(1, p, &mut rng);
+    let mut k1 = k.clone();
+    let delta = Blas::new(Backend::MklLike, 1).syrk(&u);
+    for i in 0..p {
+        for j in 0..p {
+            let v = k1.get(i, j) + 1e-4 * delta.get(i, j);
+            k1.set(i, j, v);
+        }
+    }
+    let warm = blas.eigh_warm(&k1, &v0, 30, 1e-12);
+    let err = reconstruction_error(&k1, &warm.values, &warm.vectors);
+    assert!(err < 1e-9, "ill-conditioned warm reconstruction err {err}");
+    assert!(orthonormality_defect(&warm.vectors) < 1e-9);
+    assert!(
+        warm.values.iter().all(|&v| v > 0.0),
+        "SPD spectrum must stay positive through the warm restart"
+    );
+}
+
+#[test]
+fn warm_eigh_with_mismatched_basis_stays_correct() {
+    let _guard = serialize_eigh_counting();
+    // A warm start from a basis that has nothing to do with K (the
+    // eigenvectors of a DIFFERENT matrix) must degrade only convergence
+    // speed, never correctness.
+    let blas = Blas::new(Backend::MklLike, 1);
+    let k = spd(40, 20, 71);
+    let unrelated = spd(40, 20, 72);
+    let v0 = jacobi_eigh(&unrelated, 30, 1e-12).vectors;
+    let warm = blas.eigh_warm(&k, &v0, 30, 1e-12);
+    assert!(reconstruction_error(&k, &warm.values, &warm.vectors) < 1e-9);
+    assert!(orthonormality_defect(&warm.vectors) < 1e-9);
+}
+
+#[test]
+fn small_perturbation_converges_in_fewer_sweeps_than_cold() {
+    let _guard = serialize_eigh_counting();
+    let blas = Blas::new(Backend::MklLike, 1);
+    check(
+        "warm-eigh-sweep-advantage",
+        |rng| (int_in(rng, 12, 28), rng.next_u64()),
+        |&(p, seed)| {
+            let k0 = spd(3 * p, p, seed);
+            let v0 = jacobi_eigh(&k0, 30, 1e-12).vectors;
+            // A SMALL rank-1 append relative to the existing Gram.
+            let mut rng = Pcg64::seeded(seed ^ 0xabcd);
+            let u = Mat::randn(1, p, &mut rng);
+            let delta = Blas::new(Backend::MklLike, 1).syrk(&u);
+            let mut k1 = k0.clone();
+            for i in 0..p {
+                for j in 0..p {
+                    let v = k1.get(i, j) + 1e-3 * delta.get(i, j);
+                    k1.set(i, j, v);
+                }
+            }
+            let cold = jacobi_eigh(&k1, 30, 1e-12);
+            let warm = blas.eigh_warm(&k1, &v0, 30, 1e-12);
+            // Near-diagonal start: warm must never need MORE sweeps, and
+            // correctness is non-negotiable.
+            warm.sweeps_used <= cold.sweeps_used
+                && reconstruction_error(&k1, &warm.values, &warm.vectors) < 1e-9
+        },
+    );
+}
