@@ -14,7 +14,7 @@ use common::{case, header, report};
 use fmri_encode::blas::micro::active_isa;
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::jobj;
-use fmri_encode::linalg::{jacobi_eigh, jacobi_eigh_parallel, Mat};
+use fmri_encode::linalg::{jacobi_eigh, jacobi_eigh_parallel, Mat, MatF32};
 use fmri_encode::util::json::Json;
 use fmri_encode::util::pool::ThreadPool;
 use fmri_encode::util::Pcg64;
@@ -24,32 +24,61 @@ fn main() {
     let mut rng = Pcg64::seeded(0);
     println!("microkernel ISA: {:?}", active_isa());
 
-    header("GEMM backends, single thread (GFLOP/s in name order: naive/openblas/mkl)");
+    header("GEMM backends, single thread, per dtype (GFLOP/s: naive/openblas/mkl)");
     let gemm_shapes: &[(usize, usize, usize)] = if quick {
         &[(128, 128, 128), (256, 256, 256)]
     } else {
         &[(128, 128, 128), (256, 256, 256), (400, 512, 444), (512, 512, 1024)]
     };
     let mut gemm_entries: Vec<Json> = Vec::new();
+    // Per-dtype MKL-tier total wall-clock across all shapes — the
+    // precision gate below compares these.
+    let (mut mkl_secs_f64, mut mkl_secs_f32) = (0.0f64, 0.0f64);
     for &(m, k, n) in gemm_shapes {
         let a = Mat::randn(m, k, &mut rng);
         let b = Mat::randn(k, n, &mut rng);
+        let a32 = MatF32::from_f64(&a);
+        let b32 = MatF32::from_f64(&b);
         let flops = 2.0 * (m * k * n) as f64;
         for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
             let blas = Blas::new(backend, 1);
-            let stats = case(&format!("gemm {m}x{k}x{n} {backend}"), || {
-                std::hint::black_box(blas.gemm(&a, &b));
-            });
-            let gflops = flops / stats.median() / 1e9;
-            report("", format!("-> {gflops:.2} GFLOP/s"));
-            gemm_entries.push(jobj! {
-                "m" => m, "k" => k, "n" => n,
-                "backend" => backend.to_string(),
-                "median_secs" => stats.median(),
-                "gflops" => gflops,
-            });
+            for dtype in ["f64", "f32"] {
+                let stats = case(&format!("gemm {m}x{k}x{n} {backend} {dtype}"), || match dtype {
+                    "f64" => {
+                        std::hint::black_box(blas.gemm(&a, &b));
+                    }
+                    _ => {
+                        std::hint::black_box(blas.gemm(&a32, &b32));
+                    }
+                });
+                let gflops = flops / stats.median() / 1e9;
+                report("", format!("-> {gflops:.2} GFLOP/s"));
+                if backend == Backend::MklLike {
+                    match dtype {
+                        "f64" => mkl_secs_f64 += stats.median(),
+                        _ => mkl_secs_f32 += stats.median(),
+                    }
+                }
+                gemm_entries.push(jobj! {
+                    "m" => m, "k" => k, "n" => n,
+                    "backend" => backend.to_string(),
+                    "dtype" => dtype,
+                    "median_secs" => stats.median(),
+                    "gflops" => gflops,
+                });
+            }
         }
     }
+    // Precision gate: the f32 instantiation runs double-lane kernels and
+    // moves half the bytes, so on the SIMD tier its aggregate throughput
+    // must be at least the f64 path's (a small tolerance absorbs timer
+    // noise on the quick CI shapes).
+    let ratio = mkl_secs_f64 / mkl_secs_f32.max(f64::MIN_POSITIVE);
+    report("", format!("-> mkl-tier f32 throughput is {ratio:.2}× f64 (gate: >= 1)"));
+    assert!(
+        ratio >= 0.95,
+        "f32 gemm must not be slower than f64 on the SIMD tier: {mkl_secs_f32:.4}s vs {mkl_secs_f64:.4}s"
+    );
 
     header("gram: triangular syrk vs the old at_b-based full product");
     // Acceptance gate: syrk must beat the full Aᵀ·A Gram at p ≥ 512

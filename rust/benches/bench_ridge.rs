@@ -19,8 +19,9 @@ use fmri_encode::coordinator::{batch_bounds, Strategy};
 use fmri_encode::cv::kfold;
 use fmri_encode::engine::{Engine, FitRequest};
 use fmri_encode::jobj;
-use fmri_encode::linalg::{eigh::jacobi_eigh, Mat};
+use fmri_encode::linalg::{eigh::jacobi_eigh, Mat, Precision};
 use fmri_encode::ridge::{self, DesignPlan, LAMBDA_GRID};
+use fmri_encode::util::json::Json;
 use fmri_encode::util::{human_bytes, Pcg64};
 
 fn planted(n: usize, p: usize, t: usize, seed: u64) -> (Mat, Mat) {
@@ -186,6 +187,37 @@ fn main() {
             ),
         );
 
+        // Precision floor: the same serving fit at each element dtype,
+        // each against its own (dtype-disjoint) cached plan. The warm
+        // sweep is the steady-state serving cost; the resident bytes
+        // show the f32 plan's halved factor footprint.
+        let mut precision_entries: Vec<Json> = Vec::new();
+        let mut warm_by_dtype = [0.0f64; 2];
+        for (i, dtype) in [Precision::F64, Precision::F32].into_iter().enumerate() {
+            let eng = Engine::new();
+            let req = FitRequest::new(&xa, &ya)
+                .strategy(Strategy::Bmor)
+                .nodes(4)
+                .precision(dtype);
+            let _ = eng.fit(&req).unwrap(); // cold build outside the timer
+            let s = case(&format!("warm {}  n={n} p={p} t={t}", dtype.name()), || {
+                std::hint::black_box(eng.fit(&req).unwrap());
+            });
+            warm_by_dtype[i] = s.median();
+            precision_entries.push(jobj! {
+                "dtype" => dtype.name(),
+                "warm_secs" => s.median(),
+                "plan_resident_bytes" => eng.cache_stats().resident_bytes,
+            });
+        }
+        report(
+            "",
+            format!(
+                "-> f32 warm sweep is {:.2}× the f64 one (double-lane kernels, half the bytes)",
+                warm_by_dtype[0] / warm_by_dtype[1].max(f64::MIN_POSITIVE)
+            ),
+        );
+
         // Machine-readable serving summary — CI uploads this per commit.
         let json = jobj! {
             "bench" => "bench_ridge.serving",
@@ -202,6 +234,7 @@ fn main() {
             "evicted_secs" => s_evicted.median(),
             "warm_speedup" => s_cold.median() / s_warm.median(),
             "plan_resident_bytes" => one_plan,
+            "precision" => precision_entries,
             "evicted_cache" => jobj! {
                 "hits" => stats.hits as usize,
                 "misses" => stats.misses as usize,

@@ -13,19 +13,33 @@
 //! accumulation order depends only on the fixed KC-blocking of the k
 //! dimension, never on block origin or thread chunk boundaries, so
 //! results are bit-stable across thread counts.
+//!
+//! Every panel kernel is generic over the element dtype
+//! ([`micro::KernelElem`]): f64 call sites monomorphize to the historical
+//! code paths bit-for-bit, f32 runs the same blocking at half the bytes
+//! and double the microkernel lane count.
 
-use crate::linalg::Mat;
+use crate::linalg::{Elem, MatBase};
 
-use super::micro;
+use super::micro::{self, KernelElem};
 use super::Backend;
 
-/// Cache-blocking parameters (L1-ish tiles for f64).
+/// Cache-blocking parameters (L1-ish tiles for f64; shared with f32,
+/// whose strips are half the bytes at the same element counts — NC is
+/// divisible by both strip widths 8 and 16).
 pub const MC: usize = 64; // rows of A per block
 pub const KC: usize = 256; // depth per block
 pub const NC: usize = 512; // cols of B per block
 
 /// Dispatch: compute `C[s..e, :]` into `crows` (len (e-s)*n).
-pub fn gemm_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+pub fn gemm_panel<E: KernelElem>(
+    backend: Backend,
+    a: &MatBase<E>,
+    b: &MatBase<E>,
+    s: usize,
+    e: usize,
+    crows: &mut [E],
+) {
     match backend {
         Backend::Naive => naive_panel(a, b, s, e, crows),
         Backend::OpenBlasLike => blocked_panel(a, b, s, e, crows),
@@ -34,14 +48,14 @@ pub fn gemm_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows:
 }
 
 /// Textbook i-j-k triple loop: no blocking, strided B access.
-fn naive_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+fn naive_panel<E: Elem>(a: &MatBase<E>, b: &MatBase<E>, s: usize, e: usize, crows: &mut [E]) {
     let k = a.cols();
     let n = b.cols();
     for i in s..e {
         let arow = a.row(i);
         let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
         for j in 0..n {
-            let mut acc = 0.0;
+            let mut acc = E::ZERO;
             for kk in 0..k {
                 acc += arow[kk] * b.get(kk, j);
             }
@@ -54,10 +68,10 @@ fn naive_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
 /// C row stays hot; no explicit packing. The axpy body runs for every k —
 /// no data-dependent skip — so measured FLOP rates are input-independent
 /// (sparse inputs no longer inflate the Fig. 6/7 backend curves).
-fn blocked_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+fn blocked_panel<E: Elem>(a: &MatBase<E>, b: &MatBase<E>, s: usize, e: usize, crows: &mut [E]) {
     let kdim = a.cols();
     let n = b.cols();
-    crows.fill(0.0);
+    crows.fill(E::ZERO);
     for k0 in (0..kdim).step_by(KC) {
         let k1 = (k0 + KC).min(kdim);
         for j0 in (0..n).step_by(NC) {
@@ -78,27 +92,34 @@ fn blocked_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
     }
 }
 
-/// MKL-like: pack A and B blocks contiguously, then run the 4×8 register
-/// microkernel over the packed panels. Packing amortizes strided loads and
-/// lets the microkernel's inner loop run at full SIMD width.
-fn packed_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+/// MKL-like: pack A and B blocks contiguously, then run the register
+/// microkernel (4×8 f64 / 4×16 f32) over the packed panels. Packing
+/// amortizes strided loads and lets the microkernel's inner loop run at
+/// full SIMD width.
+fn packed_panel<E: KernelElem>(
+    a: &MatBase<E>,
+    b: &MatBase<E>,
+    s: usize,
+    e: usize,
+    crows: &mut [E],
+) {
     let kdim = a.cols();
     let n = b.cols();
-    crows.fill(0.0);
-    let mut apack = vec![0.0f64; MC * KC];
-    let mut bpack = vec![0.0f64; KC * NC];
+    crows.fill(E::ZERO);
+    let mut apack = vec![E::ZERO; MC * KC];
+    let mut bpack = vec![E::ZERO; KC * NC];
 
     for k0 in (0..kdim).step_by(KC) {
         let kb = (k0 + KC).min(kdim) - k0;
         for j0 in (0..n).step_by(NC) {
             let jb = (j0 + NC).min(n) - j0;
-            // Pack B block (kb × jb) into row-major panels of width NR.
-            micro::pack_b(b, k0, kb, j0, jb, &mut bpack);
+            // Pack B block (kb × jb) into row-major panels of width E::NR.
+            micro::pack_b_e(b, k0, kb, j0, jb, &mut bpack);
             for i0 in (s..e).step_by(MC) {
                 let ib = (i0 + MC).min(e) - i0;
                 // Pack A block (ib × kb) into column-panels of height MR.
-                micro::pack_a(a, i0, ib, k0, kb, &mut apack);
-                micro::kernel_block(
+                micro::pack_a_e(a, i0, ib, k0, kb, &mut apack);
+                micro::kernel_block_e::<E>(
                     &apack, &bpack, ib, jb, kb, crows, i0 - s, j0, n,
                 );
             }
@@ -107,7 +128,14 @@ fn packed_panel(a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
 }
 
 /// Aᵀ·B panel: rows `s..e` of C correspond to *columns* of A.
-pub fn at_b_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+pub fn at_b_panel<E: KernelElem>(
+    backend: Backend,
+    a: &MatBase<E>,
+    b: &MatBase<E>,
+    s: usize,
+    e: usize,
+    crows: &mut [E],
+) {
     at_b_block(backend, a, b, s, e, 0, b.cols(), crows, b.cols(), false);
 }
 
@@ -120,22 +148,22 @@ pub fn at_b_panel(backend: Backend, a: &Mat, b: &Mat, s: usize, e: usize, crows:
 /// sub-diagonal work is skipped at block and strip granularity and
 /// per-row in the streaming/naive arms.
 #[allow(clippy::too_many_arguments)]
-pub fn at_b_block(
+pub fn at_b_block<E: KernelElem>(
     backend: Backend,
-    a: &Mat,
-    b: &Mat,
+    a: &MatBase<E>,
+    b: &MatBase<E>,
     r0: usize,
     r1: usize,
     c0: usize,
     c1: usize,
-    out: &mut [f64],
+    out: &mut [E],
     ldo: usize,
     upper_only: bool,
 ) {
     let nrows = a.rows();
     let width = c1 - c0;
     for r in 0..(r1 - r0) {
-        out[r * ldo..r * ldo + width].fill(0.0);
+        out[r * ldo..r * ldo + width].fill(E::ZERO);
     }
     match backend {
         Backend::Naive => {
@@ -143,7 +171,7 @@ pub fn at_b_block(
                 let jstart = if upper_only { c0.max(p) } else { c0 };
                 let crow = &mut out[(p - r0) * ldo..][..width];
                 for j in jstart..c1 {
-                    let mut acc = 0.0;
+                    let mut acc = E::ZERO;
                     for i in 0..nrows {
                         acc += a.get(i, p) * b.get(i, j);
                     }
@@ -173,23 +201,23 @@ pub fn at_b_block(
             }
         }
         Backend::MklLike => {
-            // Packed path: Aᵀ strips via `pack_at` feed the same 4×8
-            // microkernel as GEMM, giving the Gram computation full SIMD
-            // width instead of the rank-1 streaming loop.
-            let mut apack = vec![0.0f64; MC * KC];
-            let mut bpack = vec![0.0f64; KC * NC];
+            // Packed path: Aᵀ strips via `pack_at_e` feed the same
+            // register microkernel as GEMM, giving the Gram computation
+            // full SIMD width instead of the rank-1 streaming loop.
+            let mut apack = vec![E::ZERO; MC * KC];
+            let mut bpack = vec![E::ZERO; KC * NC];
             for k0 in (0..nrows).step_by(KC) {
                 let kb = (k0 + KC).min(nrows) - k0;
                 for j0 in (c0..c1).step_by(NC) {
                     let jb = (j0 + NC).min(c1) - j0;
-                    micro::pack_b(b, k0, kb, j0, jb, &mut bpack);
+                    micro::pack_b_e(b, k0, kb, j0, jb, &mut bpack);
                     for i0 in (r0..r1).step_by(MC) {
                         let ib = (i0 + MC).min(r1) - i0;
                         if upper_only && j0 + jb <= i0 {
                             continue; // block entirely sub-diagonal
                         }
-                        micro::pack_at(a, i0, ib, k0, kb, &mut apack);
-                        micro::kernel_block_masked(
+                        micro::pack_at_e(a, i0, ib, k0, kb, &mut apack);
+                        micro::kernel_block_masked_e::<E>(
                             &apack,
                             &bpack,
                             ib,
@@ -211,6 +239,7 @@ pub fn at_b_block(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{Mat, MatF32};
     use crate::util::Pcg64;
 
     #[test]
@@ -257,6 +286,24 @@ mod tests {
             let mut want = Mat::zeros(m, n);
             naive_panel(&a, &b, 0, m, want.data_mut());
             assert!(got.max_abs_diff(&want) < 1e-9, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn f32_panels_match_f32_naive() {
+        let mut rng = Pcg64::seeded(21);
+        for (m, k, n) in [(MC + 3, KC + 5, 9), (3, 2, NC + 1), (65, 257, 33)] {
+            let a = MatF32::from_f64(&Mat::randn(m, k, &mut rng));
+            let b = MatF32::from_f64(&Mat::randn(k, n, &mut rng));
+            let mut want = MatF32::zeros(m, n);
+            naive_panel(&a, &b, 0, m, want.data_mut());
+            for backend in [Backend::OpenBlasLike, Backend::MklLike] {
+                let mut got = MatF32::zeros(m, n);
+                gemm_panel(backend, &a, &b, 0, m, got.data_mut());
+                // f32 accumulation differs from the naive order by
+                // O(k·eps_f32) per element on N(0,1) data.
+                assert!(got.max_abs_diff(&want) < 1e-2, "{backend:?} ({m},{k},{n})");
+            }
         }
     }
 

@@ -25,12 +25,17 @@
 use std::cell::Cell;
 use std::sync::OnceLock;
 
-use crate::linalg::Mat;
+use crate::linalg::{Elem, Mat, MatBase};
 
 use super::gemm::{KC, MC, NC};
 
 pub const MR: usize = 4;
 pub const NR: usize = 8;
+/// f32 strip width: the same two ymm registers per kernel row hold 16
+/// f32 lanes instead of 8 f64 lanes.
+pub const NR_F32: usize = 16;
+/// Widest strip any dtype uses — sizes the generic flat accumulator.
+pub const NR_MAX: usize = 16;
 
 thread_local! {
     static KERNEL_MULS: Cell<u64> = const { Cell::new(0) };
@@ -90,17 +95,7 @@ pub fn active_isa() -> KernelIsa {
 
 /// Pack an (ib × kb) block of A starting at (i0, k0) into MR-strips.
 pub fn pack_a(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f64]) {
-    debug_assert!(ib <= MC && kb <= KC);
-    let mut o = 0;
-    for is in (0..ib).step_by(MR) {
-        let mrows = (is + MR).min(ib) - is;
-        for k in 0..kb {
-            for r in 0..MR {
-                out[o] = if r < mrows { a.get(i0 + is + r, k0 + k) } else { 0.0 };
-                o += 1;
-            }
-        }
-    }
+    pack_a_e(a, i0, ib, k0, kb, out);
 }
 
 /// Pack an (ib × kb) block of Aᵀ into MR-strips: strip rows are *columns*
@@ -109,6 +104,45 @@ pub fn pack_a(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f6
 /// AᵀB path its full SIMD width — reads stream A row-by-row, so the
 /// strided column access is paid once here, not per k-iteration.
 pub fn pack_at(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f64]) {
+    pack_at_e(a, i0, ib, k0, kb, out);
+}
+
+/// Pack a (kb × jb) block of B starting at (k0, j0) into NR-strips.
+pub fn pack_b(b: &Mat, k0: usize, kb: usize, j0: usize, jb: usize, out: &mut [f64]) {
+    pack_b_e(b, k0, kb, j0, jb, out);
+}
+
+/// Dtype-generic [`pack_a`]: identical layout at any element width.
+pub fn pack_a_e<E: Elem>(
+    a: &MatBase<E>,
+    i0: usize,
+    ib: usize,
+    k0: usize,
+    kb: usize,
+    out: &mut [E],
+) {
+    debug_assert!(ib <= MC && kb <= KC);
+    let mut o = 0;
+    for is in (0..ib).step_by(MR) {
+        let mrows = (is + MR).min(ib) - is;
+        for k in 0..kb {
+            for r in 0..MR {
+                out[o] = if r < mrows { a.get(i0 + is + r, k0 + k) } else { E::ZERO };
+                o += 1;
+            }
+        }
+    }
+}
+
+/// Dtype-generic [`pack_at`].
+pub fn pack_at_e<E: Elem>(
+    a: &MatBase<E>,
+    i0: usize,
+    ib: usize,
+    k0: usize,
+    kb: usize,
+    out: &mut [E],
+) {
     debug_assert!(ib <= MC && kb <= KC);
     let mut o = 0;
     for is in (0..ib).step_by(MR) {
@@ -116,26 +150,111 @@ pub fn pack_at(a: &Mat, i0: usize, ib: usize, k0: usize, kb: usize, out: &mut [f
         for k in 0..kb {
             let arow = a.row(k0 + k);
             for r in 0..MR {
-                out[o] = if r < mrows { arow[i0 + is + r] } else { 0.0 };
+                out[o] = if r < mrows { arow[i0 + is + r] } else { E::ZERO };
                 o += 1;
             }
         }
     }
 }
 
-/// Pack a (kb × jb) block of B starting at (k0, j0) into NR-strips.
-pub fn pack_b(b: &Mat, k0: usize, kb: usize, j0: usize, jb: usize, out: &mut [f64]) {
+/// Dtype-generic [`pack_b`]: strips are `E::NR` wide (8 f64 / 16 f32),
+/// so an f32 packing feeds the double-lane-count kernel the same two
+/// registers' worth of columns per strip.
+pub fn pack_b_e<E: Elem>(
+    b: &MatBase<E>,
+    k0: usize,
+    kb: usize,
+    j0: usize,
+    jb: usize,
+    out: &mut [E],
+) {
     debug_assert!(kb <= KC && jb <= NC);
+    let nr = E::NR;
     let mut o = 0;
-    for js in (0..jb).step_by(NR) {
-        let ncols = (js + NR).min(jb) - js;
+    for js in (0..jb).step_by(nr) {
+        let ncols = (js + nr).min(jb) - js;
         for k in 0..kb {
             let brow = b.row(k0 + k);
-            for c in 0..NR {
-                out[o] = if c < ncols { brow[j0 + js + c] } else { 0.0 };
+            for c in 0..nr {
+                out[o] = if c < ncols { brow[j0 + js + c] } else { E::ZERO };
                 o += 1;
             }
         }
+    }
+}
+
+/// The per-dtype microkernel hook the generic block driver dispatches
+/// through. Both methods take the accumulator as a flat `&mut [Self]`
+/// slice of exactly `MR * Self::NR` elements (the fixed-shape array type
+/// differs per dtype, which a trait method cannot express without
+/// `generic_const_exprs`); each impl length-checks and reborrows it as
+/// its native `[[Self; NR]; MR]` tile before delegating to the
+/// ISA-dispatched kernels.
+pub trait KernelElem: Elem {
+    /// Full-width register tile: [`kernel_4x8_with`] / [`kernel_4x16_with`].
+    fn tile_with(isa: KernelIsa, astrip: &[Self], bstrip: &[Self], kb: usize, acc: &mut [Self]);
+
+    /// Diagonal-straddling triangular tile: [`kernel_4x8_triangular_with`]
+    /// / [`kernel_4x16_triangular_with`]. `lane_start` entries are already
+    /// clamped to `Self::NR`.
+    fn tile_triangular_with(
+        isa: KernelIsa,
+        astrip: &[Self],
+        bstrip: &[Self],
+        kb: usize,
+        acc: &mut [Self],
+        mrows: usize,
+        lane_start: &[usize; MR],
+    );
+}
+
+impl KernelElem for f64 {
+    fn tile_with(isa: KernelIsa, astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [f64]) {
+        assert_eq!(acc.len(), MR * NR);
+        // SAFETY: length checked above; `[[f64; NR]; MR]` is exactly
+        // MR·NR contiguous f64 with no padding.
+        let tile = unsafe { &mut *(acc.as_mut_ptr() as *mut [[f64; NR]; MR]) };
+        kernel_4x8_with(isa, astrip, bstrip, kb, tile);
+    }
+
+    fn tile_triangular_with(
+        isa: KernelIsa,
+        astrip: &[f64],
+        bstrip: &[f64],
+        kb: usize,
+        acc: &mut [f64],
+        mrows: usize,
+        lane_start: &[usize; MR],
+    ) {
+        assert_eq!(acc.len(), MR * NR);
+        // SAFETY: as in `tile_with`.
+        let tile = unsafe { &mut *(acc.as_mut_ptr() as *mut [[f64; NR]; MR]) };
+        kernel_4x8_triangular_with(isa, astrip, bstrip, kb, tile, mrows, lane_start);
+    }
+}
+
+impl KernelElem for f32 {
+    fn tile_with(isa: KernelIsa, astrip: &[f32], bstrip: &[f32], kb: usize, acc: &mut [f32]) {
+        assert_eq!(acc.len(), MR * NR_F32);
+        // SAFETY: length checked above; `[[f32; NR_F32]; MR]` is exactly
+        // MR·NR_F32 contiguous f32 with no padding.
+        let tile = unsafe { &mut *(acc.as_mut_ptr() as *mut [[f32; NR_F32]; MR]) };
+        kernel_4x16_with(isa, astrip, bstrip, kb, tile);
+    }
+
+    fn tile_triangular_with(
+        isa: KernelIsa,
+        astrip: &[f32],
+        bstrip: &[f32],
+        kb: usize,
+        acc: &mut [f32],
+        mrows: usize,
+        lane_start: &[usize; MR],
+    ) {
+        assert_eq!(acc.len(), MR * NR_F32);
+        // SAFETY: as in `tile_with`.
+        let tile = unsafe { &mut *(acc.as_mut_ptr() as *mut [[f32; NR_F32]; MR]) };
+        kernel_4x16_triangular_with(isa, astrip, bstrip, kb, tile, mrows, lane_start);
     }
 }
 
@@ -185,37 +304,87 @@ pub fn kernel_block_masked(
     ldc: usize,
     diag: Option<(usize, usize)>,
 ) {
+    kernel_block_masked_e::<f64>(apack, bpack, ib, jb, kb, crows, ci0, cj0, ldc, diag);
+}
+
+/// Dtype-generic [`kernel_block`].
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_block_e<E: KernelElem>(
+    apack: &[E],
+    bpack: &[E],
+    ib: usize,
+    jb: usize,
+    kb: usize,
+    crows: &mut [E],
+    ci0: usize,
+    cj0: usize,
+    ldc: usize,
+) {
+    kernel_block_masked_e::<E>(apack, bpack, ib, jb, kb, crows, ci0, cj0, ldc, None);
+}
+
+/// Dtype-generic [`kernel_block_masked`]: the same three-arm strip
+/// classification against the diagonal, at strip width `E::NR`. The
+/// classification depends only on the strip's global origin, never on
+/// thread chunking, so masked results stay bit-stable across thread
+/// counts *per dtype*; the multiply counter charges the identical
+/// logical-lane arithmetic, so f64 FLOP pins are unchanged by the
+/// genericization.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_block_masked_e<E: KernelElem>(
+    apack: &[E],
+    bpack: &[E],
+    ib: usize,
+    jb: usize,
+    kb: usize,
+    crows: &mut [E],
+    ci0: usize,
+    cj0: usize,
+    ldc: usize,
+    diag: Option<(usize, usize)>,
+) {
     let isa = active_isa();
+    let nr = E::NR;
     for (ai, is) in (0..ib).step_by(MR).enumerate() {
         let mrows = (is + MR).min(ib) - is;
         let astrip = &apack[ai * kb * MR..][..kb * MR];
-        for (bi, js) in (0..jb).step_by(NR).enumerate() {
-            let ncols = (js + NR).min(jb) - js;
-            let bstrip = &bpack[bi * kb * NR..][..kb * NR];
-            let mut acc = [[0.0f64; NR]; MR];
+        for (bi, js) in (0..jb).step_by(nr).enumerate() {
+            let ncols = (js + nr).min(jb) - js;
+            let bstrip = &bpack[bi * kb * nr..][..kb * nr];
+            // Flat accumulator at the widest strip; only the leading
+            // MR·nr elements are the live tile (row stride nr).
+            let mut acc = [E::ZERO; MR * NR_MAX];
             match diag {
                 // Strip's last column still left of the strip's first
                 // row: entirely sub-diagonal, mirrored later, skip the
                 // FLOPs.
-                Some((grow, gcol)) if gcol + js + NR <= grow + is => continue,
-                // Strip straddles the diagonal: scalar kernel, each row
-                // starting at its own diagonal lane.
+                Some((grow, gcol)) if gcol + js + nr <= grow + is => continue,
+                // Strip straddles the diagonal: triangular kernel, each
+                // row starting at its own diagonal lane.
                 Some((grow, gcol)) if gcol + js < grow + is + mrows - 1 => {
                     let (row0, col0) = (grow + is, gcol + js);
-                    let mut lane_start = [NR; MR];
+                    let mut lane_start = [nr; MR];
                     let mut muls = 0;
                     for (r, ls) in lane_start.iter_mut().enumerate().take(mrows) {
-                        *ls = (row0 + r).saturating_sub(col0).min(NR);
-                        muls += NR - *ls;
+                        *ls = (row0 + r).saturating_sub(col0).min(nr);
+                        muls += nr - *ls;
                     }
                     count_muls((muls * kb) as u64);
-                    kernel_4x8_triangular_with(isa, astrip, bstrip, kb, &mut acc, mrows, &lane_start);
+                    E::tile_triangular_with(
+                        isa,
+                        astrip,
+                        bstrip,
+                        kb,
+                        &mut acc[..MR * nr],
+                        mrows,
+                        &lane_start,
+                    );
                 }
                 // No mask, or the whole strip is on/above the diagonal:
                 // full-width SIMD kernel.
                 _ => {
-                    count_muls((MR * NR * kb) as u64);
-                    kernel_4x8_with(isa, astrip, bstrip, kb, &mut acc);
+                    count_muls((MR * nr * kb) as u64);
+                    E::tile_with(isa, astrip, bstrip, kb, &mut acc[..MR * nr]);
                 }
             }
             // Scatter accumulator into C (masking partial edges).
@@ -223,7 +392,7 @@ pub fn kernel_block_masked(
                 let crow = &mut crows
                     [(ci0 + is + r) * ldc + cj0 + js..][..ncols];
                 for (c, dst) in crow.iter_mut().enumerate() {
-                    *dst += acc[r][c];
+                    *dst += acc[r * nr + c];
                 }
             }
         }
@@ -453,6 +622,220 @@ unsafe fn kernel_4x8_avx2(astrip: &[f64], bstrip: &[f64], kb: usize, acc: &mut [
     spill(&mut acc[3], c30, c31);
 }
 
+/// The f32 register tile with explicit ISA selection: the 4×16 product
+/// of an MR-strip and an NR_F32-strip over `kb`, added into `acc`. Same
+/// dispatch contract as [`kernel_4x8_with`] — public so parity tests can
+/// pin the scalar and AVX2 variants against each other.
+pub fn kernel_4x16_with(
+    isa: KernelIsa,
+    astrip: &[f32],
+    bstrip: &[f32],
+    kb: usize,
+    acc: &mut [[f32; NR_F32]; MR],
+) {
+    assert!(astrip.len() >= kb * MR);
+    assert!(bstrip.len() >= kb * NR_F32);
+    match isa {
+        KernelIsa::Scalar => kernel_4x16_scalar(astrip, bstrip, kb, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: same qualification as [`kernel_4x8_with`] — Avx2Fma is
+        // only produced after runtime detection, and the length asserts
+        // above keep every vector load in-bounds.
+        KernelIsa::Avx2Fma => unsafe { kernel_4x16_avx2(astrip, bstrip, kb, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2Fma => kernel_4x16_scalar(astrip, bstrip, kb, acc),
+    }
+}
+
+/// Portable scalar f32 register tile: MR A values × 16 B values per k,
+/// fully unrolled, same k-ascending accumulation order as the AVX2
+/// variant (the parity tolerance between them is FMA contraction only).
+#[inline]
+fn kernel_4x16_scalar(astrip: &[f32], bstrip: &[f32], kb: usize, acc: &mut [[f32; NR_F32]; MR]) {
+    debug_assert!(astrip.len() >= kb * MR);
+    debug_assert!(bstrip.len() >= kb * NR_F32);
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    let mut c = [[0f32; NR_F32]; MR];
+    unsafe {
+        for _ in 0..kb {
+            for r in 0..MR {
+                let a = *ap.add(r);
+                let row = &mut c[r];
+                for l in 0..NR_F32 {
+                    row[l] += a * *bp.add(l);
+                }
+            }
+            ap = ap.add(MR);
+            bp = bp.add(NR_F32);
+        }
+    }
+    for r in 0..MR {
+        for l in 0..NR_F32 {
+            acc[r][l] += c[r][l];
+        }
+    }
+}
+
+/// AVX2+FMA f32 register tile: the same 8 ymm accumulators as the f64
+/// kernel (4 rows × 2 half-rows) now hold 8 f32 lanes each — double the
+/// elements per register, one `broadcast_ss` per A value and two `fmadd`
+/// per row per k. This is the 2× lane-count lever the precision axis
+/// exists for.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, and that
+/// `astrip.len() >= kb*MR` and `bstrip.len() >= kb*NR_F32` (packed strips
+/// are always full width, zero-padded at the edges).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kernel_4x16_avx2(
+    astrip: &[f32],
+    bstrip: &[f32],
+    kb: usize,
+    acc: &mut [[f32; NR_F32]; MR],
+) {
+    use std::arch::x86_64::*;
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    let mut c00 = _mm256_setzero_ps();
+    let mut c01 = _mm256_setzero_ps();
+    let mut c10 = _mm256_setzero_ps();
+    let mut c11 = _mm256_setzero_ps();
+    let mut c20 = _mm256_setzero_ps();
+    let mut c21 = _mm256_setzero_ps();
+    let mut c30 = _mm256_setzero_ps();
+    let mut c31 = _mm256_setzero_ps();
+    for _ in 0..kb {
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        let a0 = _mm256_broadcast_ss(&*ap);
+        c00 = _mm256_fmadd_ps(a0, b0, c00);
+        c01 = _mm256_fmadd_ps(a0, b1, c01);
+        let a1 = _mm256_broadcast_ss(&*ap.add(1));
+        c10 = _mm256_fmadd_ps(a1, b0, c10);
+        c11 = _mm256_fmadd_ps(a1, b1, c11);
+        let a2 = _mm256_broadcast_ss(&*ap.add(2));
+        c20 = _mm256_fmadd_ps(a2, b0, c20);
+        c21 = _mm256_fmadd_ps(a2, b1, c21);
+        let a3 = _mm256_broadcast_ss(&*ap.add(3));
+        c30 = _mm256_fmadd_ps(a3, b0, c30);
+        c31 = _mm256_fmadd_ps(a3, b1, c31);
+        ap = ap.add(MR);
+        bp = bp.add(NR_F32);
+    }
+    // Spill: load-add-store each [f32; 16] accumulator row (contiguous).
+    let spill = |row: &mut [f32; NR_F32], lo: __m256, hi: __m256| {
+        let p = row.as_mut_ptr();
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), lo));
+        _mm256_storeu_ps(p.add(8), _mm256_add_ps(_mm256_loadu_ps(p.add(8)), hi));
+    };
+    spill(&mut acc[0], c00, c01);
+    spill(&mut acc[1], c10, c11);
+    spill(&mut acc[2], c20, c21);
+    spill(&mut acc[3], c30, c31);
+}
+
+/// f32 triangular register tile for diagonal-straddling strips: row `r`
+/// accumulates only lanes `lane_start[r]..NR_F32`; sub-diagonal lanes of
+/// `acc` stay bit-exactly untouched — the same contract as
+/// [`kernel_4x8_triangular_with`], at double the lane count.
+pub fn kernel_4x16_triangular_with(
+    isa: KernelIsa,
+    astrip: &[f32],
+    bstrip: &[f32],
+    kb: usize,
+    acc: &mut [[f32; NR_F32]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    assert!(astrip.len() >= kb * MR);
+    assert!(bstrip.len() >= kb * NR_F32);
+    match isa {
+        KernelIsa::Scalar => {
+            kernel_4x16_triangular_scalar(astrip, bstrip, kb, acc, mrows, lane_start)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: same qualification as [`kernel_4x16_with`].
+        KernelIsa::Avx2Fma => unsafe {
+            kernel_4x16_triangular_avx2(astrip, bstrip, kb, acc, mrows, lane_start)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2Fma => {
+            kernel_4x16_triangular_scalar(astrip, bstrip, kb, acc, mrows, lane_start)
+        }
+    }
+}
+
+/// Portable scalar f32 triangular tile: same k-ascending order as the
+/// full kernels, no FMA contraction.
+fn kernel_4x16_triangular_scalar(
+    astrip: &[f32],
+    bstrip: &[f32],
+    kb: usize,
+    acc: &mut [[f32; NR_F32]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    debug_assert!(astrip.len() >= kb * MR);
+    debug_assert!(bstrip.len() >= kb * NR_F32);
+    for (r, row) in acc.iter_mut().enumerate().take(mrows) {
+        for (l, out) in row.iter_mut().enumerate().skip(lane_start[r]) {
+            let mut s = 0.0f32;
+            for k in 0..kb {
+                s += astrip[k * MR + r] * bstrip[k * NR_F32 + l];
+            }
+            *out += s;
+        }
+    }
+}
+
+/// AVX2+FMA f32 triangular tile: full 16-lane k loop, spill to a stack
+/// buffer, add back only lanes `lane_start[r]..NR_F32` of rows
+/// `0..mrows` — masked lanes of `acc` are never written, preserving the
+/// scalar variant's bit-exact untouched-lane contract.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, and that
+/// `astrip.len() >= kb*MR` and `bstrip.len() >= kb*NR_F32`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kernel_4x16_triangular_avx2(
+    astrip: &[f32],
+    bstrip: &[f32],
+    kb: usize,
+    acc: &mut [[f32; NR_F32]; MR],
+    mrows: usize,
+    lane_start: &[usize; MR],
+) {
+    use std::arch::x86_64::*;
+    let mut ap = astrip.as_ptr();
+    let mut bp = bstrip.as_ptr();
+    let mut c = [[_mm256_setzero_ps(); 2]; MR];
+    for _ in 0..kb {
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a = _mm256_broadcast_ss(&*ap.add(r));
+            cr[0] = _mm256_fmadd_ps(a, b0, cr[0]);
+            cr[1] = _mm256_fmadd_ps(a, b1, cr[1]);
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR_F32);
+    }
+    // Spill full rows to the stack, then add back the unmasked lanes only.
+    let mut buf = [[0.0f32; NR_F32]; MR];
+    for (br, cr) in buf.iter_mut().zip(&c) {
+        _mm256_storeu_ps(br.as_mut_ptr(), cr[0]);
+        _mm256_storeu_ps(br.as_mut_ptr().add(8), cr[1]);
+    }
+    for r in 0..mrows {
+        for l in lane_start[r]..NR_F32 {
+            acc[r][l] += buf[r][l];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -512,6 +895,39 @@ mod tests {
                 assert!((c[i * jb + j] - want).abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn f32_microkernel_matches_naive() {
+        let mut rng = Pcg64::seeded(12);
+        let (ib, kb, jb) = (7, 13, 19);
+        let a = crate::linalg::MatF32::from_f64(&Mat::randn(ib, kb, &mut rng));
+        let b = crate::linalg::MatF32::from_f64(&Mat::randn(kb, jb, &mut rng));
+        let mut apack = vec![0.0f32; MC * KC];
+        let mut bpack = vec![0.0f32; KC * NC];
+        pack_a_e(&a, 0, ib, 0, kb, &mut apack);
+        pack_b_e(&b, 0, kb, 0, jb, &mut bpack);
+        let mut c = vec![0.0f32; ib * jb];
+        kernel_block_e::<f32>(&apack, &bpack, ib, jb, kb, &mut c, 0, 0, jb);
+        for i in 0..ib {
+            for j in 0..jb {
+                let want: f64 =
+                    (0..kb).map(|k| a.get(i, k) as f64 * b.get(k, j) as f64).sum();
+                assert!((c[i * jb + j] as f64 - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_pack_b_strips_are_sixteen_wide() {
+        let b = crate::linalg::MatF32::from_fn(2, 18, |i, j| (i * 100 + j) as f32);
+        let mut out = vec![0.0f32; 2 * 32];
+        pack_b_e(&b, 0, 2, 0, 18, &mut out);
+        // First NR_F32-strip, k=0: columns 0..16 of row 0.
+        let want: Vec<f32> = (0..16).map(|j| j as f32).collect();
+        assert_eq!(&out[0..16], &want[..]);
+        // Second strip, k=0: columns 16..18 + padding.
+        assert_eq!(&out[32..36], &[16.0, 17.0, 0.0, 0.0]);
     }
 
     #[test]

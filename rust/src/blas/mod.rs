@@ -22,8 +22,10 @@
 pub mod gemm;
 pub mod micro;
 
-use crate::linalg::Mat;
+use crate::linalg::{EighBase, Elem, Mat, MatBase};
 use crate::util::pool::ThreadPool;
+
+use micro::KernelElem;
 
 /// Which GEMM implementation to use (the Fig. 6 x-axis).
 ///
@@ -95,10 +97,12 @@ impl Blas {
         self.pool.size()
     }
 
-    /// C = A·B. Parallel over output row panels.
-    pub fn gemm(&self, a: &Mat, b: &Mat) -> Mat {
+    /// C = A·B. Parallel over output row panels. Generic over the
+    /// element dtype: f64 callers monomorphize to the historical path
+    /// bit-for-bit, f32 runs the double-lane-count microkernel.
+    pub fn gemm<E: KernelElem>(&self, a: &MatBase<E>, b: &MatBase<E>) -> MatBase<E> {
         assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
-        let mut c = Mat::zeros(a.rows(), b.cols());
+        let mut c = MatBase::zeros(a.rows(), b.cols());
         self.gemm_into(a, b, &mut c);
         c
     }
@@ -106,7 +110,7 @@ impl Blas {
     /// C = A·B into a caller-owned buffer, overwriting it (the panel
     /// kernels zero-fill their slice first) — hot sweep loops reuse one
     /// allocation across λ values instead of allocating per call.
-    pub fn gemm_into(&self, a: &Mat, b: &Mat, c: &mut Mat) {
+    pub fn gemm_into<E: KernelElem>(&self, a: &MatBase<E>, b: &MatBase<E>, c: &mut MatBase<E>) {
         assert_eq!(a.cols(), b.rows());
         assert_eq!((a.rows(), b.cols()), c.shape());
         let m = a.rows();
@@ -124,7 +128,7 @@ impl Blas {
             }
             let crows = unsafe {
                 std::slice::from_raw_parts_mut(
-                    (cbase as *mut f64).add(s * ccols),
+                    (cbase as *mut E).add(s * ccols),
                     (e - s) * ccols,
                 )
             };
@@ -133,9 +137,9 @@ impl Blas {
     }
 
     /// C = Aᵀ·B (the XᵀY term; also XᵀX when `b` aliases `a`'s data).
-    pub fn at_b(&self, a: &Mat, b: &Mat) -> Mat {
+    pub fn at_b<E: KernelElem>(&self, a: &MatBase<E>, b: &MatBase<E>) -> MatBase<E> {
         assert_eq!(a.rows(), b.rows(), "at_b shape mismatch");
-        let mut c = Mat::zeros(a.cols(), b.cols());
+        let mut c = MatBase::zeros(a.cols(), b.cols());
         // Parallel over rows of C = columns of A.
         let cbase = c.data_mut().as_mut_ptr() as usize;
         let ccols = b.cols();
@@ -147,7 +151,7 @@ impl Blas {
             }
             let crows = unsafe {
                 std::slice::from_raw_parts_mut(
-                    (cbase as *mut f64).add(s * ccols),
+                    (cbase as *mut E).add(s * ccols),
                     (e - s) * ccols,
                 )
             };
@@ -174,10 +178,10 @@ impl Blas {
     /// Tiles are distributed across the pool, but each output element's
     /// accumulation order depends only on its tile origin and the fixed
     /// k-blocking, so the result is bit-stable across thread counts.
-    pub fn syrk(&self, x: &Mat) -> Mat {
+    pub fn syrk<E: KernelElem>(&self, x: &MatBase<E>) -> MatBase<E> {
         const SB: usize = Blas::SYRK_TILE;
         let p = x.cols();
-        let mut k = Mat::zeros(p, p);
+        let mut k = MatBase::zeros(p, p);
         let nb = p.div_ceil(SB);
         let tiles: Vec<(usize, usize)> = (0..nb)
             .flat_map(|bi| (bi..nb).map(move |bj| (bi, bj)))
@@ -187,7 +191,7 @@ impl Blas {
         let threads = self.pool.size();
         self.pool.scope_chunks(tiles.len(), threads, |s, e, _| {
             // Per-chunk scratch tile, reused across this chunk's tiles.
-            let mut buf = vec![0.0f64; SB * SB];
+            let mut buf = vec![E::ZERO; SB * SB];
             for &(bi, bj) in &tiles[s..e] {
                 let (r0, r1) = (bi * SB, ((bi + 1) * SB).min(p));
                 let (c0, c1) = (bj * SB, ((bj + 1) * SB).min(p));
@@ -212,7 +216,7 @@ impl Blas {
                     let src = &buf[(i - r0) * cb + (jstart - c0)..][..c1 - jstart];
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(
-                            (kbase as *mut f64).add(i * p + jstart),
+                            (kbase as *mut E).add(i * p + jstart),
                             c1 - jstart,
                         )
                     };
@@ -235,8 +239,18 @@ impl Blas {
     /// round-robin parallel ordering (see `linalg::jacobi_eigh_auto`) —
     /// small problems and single-thread pools stay on the serial path,
     /// so existing small-p results are bit-identical.
-    pub fn eigh(&self, k: &Mat, max_sweeps: usize, tol: f64) -> crate::linalg::Eigh {
-        crate::linalg::jacobi_eigh_auto(k, max_sweeps, tol, &self.pool)
+    ///
+    /// Generic over the element dtype by promote-solve-demote: the
+    /// Jacobi rotations always run in f64 (an O(p³) stage dominated by
+    /// the bandwidth-bound O(np²) Gram, so the promotion cost is
+    /// negligible) and the result is narrowed back to `E`. For `E = f64`
+    /// the promotion is a bit-identical copy, so pre-generic results are
+    /// unchanged; for f32 the eigenbasis carries f64 rotation accuracy
+    /// truncated once at the end — the documented mixed-precision policy.
+    pub fn eigh<E: Elem>(&self, k: &MatBase<E>, max_sweeps: usize, tol: f64) -> EighBase<E> {
+        let k64 = k.to_f64();
+        let r = crate::linalg::jacobi_eigh_auto(&k64, max_sweeps, tol, &self.pool);
+        EighBase::from_f64(&r)
     }
 
     /// Warm-started eigendecomposition: rotate `k` into the previous
@@ -249,18 +263,21 @@ impl Blas {
     /// `linalg::eigh` sweep counters. Same tolerance contract as the
     /// serial reference `linalg::jacobi_eigh_warm`: correct to the eigh
     /// bound, NOT bit-identical to the cold path.
-    pub fn eigh_warm(
+    pub fn eigh_warm<E: KernelElem>(
         &self,
-        k: &Mat,
-        v0: &Mat,
+        k: &MatBase<E>,
+        v0: &MatBase<E>,
         max_sweeps: usize,
         tol: f64,
-    ) -> crate::linalg::Eigh {
+    ) -> EighBase<E> {
         let p = k.rows();
         assert_eq!(k.shape(), (p, p), "eigh needs a square matrix");
         assert_eq!(v0.shape(), (p, p), "warm-start basis must match k's order");
         let kv = self.gemm(k, v0);
-        let mut b = self.at_b(v0, &kv);
+        // Promote the congruence to f64 before symmetrizing and
+        // decomposing (promote-solve-demote, as in [`Blas::eigh`]): for
+        // `E = f64` this is a bit-identical copy of the historical path.
+        let mut b = self.at_b(v0, &kv).to_f64();
         // Exact symmetrization: the congruence of a symmetric matrix is
         // symmetric in exact arithmetic, and the Jacobi rotation angles
         // assume it bit-exactly.
@@ -272,9 +289,9 @@ impl Blas {
             }
         }
         let inner = crate::linalg::jacobi_eigh_auto(&b, max_sweeps, tol, &self.pool);
-        crate::linalg::Eigh {
-            values: inner.values,
-            vectors: self.gemm(v0, &inner.vectors),
+        EighBase {
+            values: inner.values.iter().map(|&v| E::from_f64(v)).collect(),
+            vectors: self.gemm(v0, &MatBase::<E>::from_f64(&inner.vectors)),
             sweeps_used: inner.sweeps_used,
         }
     }
@@ -311,13 +328,14 @@ impl Blas {
     }
 }
 
-/// Dot product with 4-way unrolling (autovectorizes).
+/// Dot product with 4-way unrolling (autovectorizes), generic over the
+/// element dtype.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<E: Elem>(a: &[E], b: &[E]) -> E {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let (mut s0, mut s1, mut s2, mut s3) = (E::ZERO, E::ZERO, E::ZERO, E::ZERO);
     for c in 0..chunks {
         let i = c * 4;
         s0 += a[i] * b[i];
@@ -332,12 +350,12 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// y += alpha * x.
+/// y += alpha * x, generic over the element dtype.
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<E: Elem>(alpha: E, x: &[E], y: &mut [E]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+        *yi += alpha * *xi;
     }
 }
 
@@ -457,6 +475,25 @@ mod tests {
                     0.0,
                     "{backend:?} threads={threads}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemm_and_syrk_track_f64_within_tolerance() {
+        let mut rng = Pcg64::seeded(23);
+        let x = Mat::randn(60, 24, &mut rng);
+        let x32 = crate::linalg::MatF32::from_f64(&x);
+        let blas = Blas::new(Backend::MklLike, 2);
+        let k64 = blas.syrk(&x);
+        let k32 = blas.syrk(&x32);
+        // f32 accumulation error on 60-deep sums of N(0,1) products is
+        // O(60·eps_f32) per element; 1e-3 is a loose pin on that.
+        assert!(k32.to_f64().max_abs_diff(&k64) < 1e-3);
+        // Exact symmetry holds per dtype (mirror copy, not averaging).
+        for i in 0..24 {
+            for j in 0..24 {
+                assert_eq!(k32.get(i, j), k32.get(j, i));
             }
         }
     }

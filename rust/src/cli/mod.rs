@@ -8,9 +8,9 @@
 //!   tables   --table 1|2|all     reproduce Table 1/2 (paper + repro scale)
 //!   figures  --fig 4..10|all     reproduce the evaluation figures
 //!   fit      --resolution R --strategy S --nodes N --threads T
-//!            [--backend B] [--path native|xla]
+//!            [--backend B] [--precision f64|f32] [--path native|xla]
 //!            [--executor thread|process --workers W]   run a real fit
-//!   stream   --appends K --rows N0 --append-rows M
+//!   stream   --appends K --rows N0 --append-rows M [--precision f64|f32]
 //!            grow a design session by session: incremental plan updates
 //!            (delta Gram + warm-started eigh) vs cold rebuilds
 //!   serve-bench  --requests N --designs D --rate HZ
@@ -41,14 +41,14 @@ const USAGE: &str = "usage: fmri-encode <info|tables|figures|fit|stream|serve-be
   figures  --fig 4|5|6|7|8|9|10|all [--out DIR] [--quick] [--subjects N]
   fit      [--resolution parcels|roi|whole-brain|mor] [--strategy ridgecv|mor|bmor]
            [--nodes N] [--threads T] [--backend naive|openblas|mkl]
-           [--executor thread|process] [--workers W]
+           [--precision f64|f32] [--executor thread|process] [--workers W]
            [--path native|xla] [--subject 1..6] [--quick]
   stream   [--appends K] [--rows N0] [--append-rows M] [--p P] [--targets T]
            [--folds F] [--threads T] [--backend naive|openblas|mkl]
-           [--quick] [--seed S]
+           [--precision f64|f32] [--quick] [--seed S]
   serve-bench [--requests N] [--designs D] [--rate HZ] [--targets T]
            [--workers W] [--queue Q] [--max-coalesce T] [--linger-us US]
-           [--quick] [--seed S]
+           [--precision f64|f32] [--quick] [--seed S]
   calibrate [--quick]
   validate [--quick] [--artifacts DIR]";
 
@@ -142,6 +142,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
         inner_folds: args.usize_or("folds", 3)?,
         seed: exp.seed,
     };
+    let precision = args.precision()?;
     println!(
         "generating synthetic Friends data: sub-0{subject} at {} ...",
         res.name()
@@ -165,15 +166,20 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 other => bail!("--executor must be thread or process, got `{other}`"),
             };
             let sw = Stopwatch::start();
-            let fit =
-                engine.fit(&FitRequest::new(&ds.x, &ds.y).config(&cfg).executor(executor))?;
+            let fit = engine.fit(
+                &FitRequest::new(&ds.x, &ds.y)
+                    .config(&cfg)
+                    .executor(executor)
+                    .precision(precision),
+            )?;
             println!(
-                "fit done in {} — strategy={} nodes={} threads={} backend={} executor={}",
+                "fit done in {} — strategy={} nodes={} threads={} backend={} precision={} executor={}",
                 human_secs(sw.secs()),
                 cfg.strategy,
                 cfg.nodes,
                 cfg.threads_per_node,
                 cfg.backend,
+                precision,
                 match executor {
                     ExecutorKind::Thread => "thread".to_string(),
                     ExecutorKind::Process { workers } => format!("process×{workers}"),
@@ -215,9 +221,11 @@ fn cmd_fit(args: &Args) -> Result<()> {
             println!("{}", format_stats_table("plan cache", &cs.table_rows()));
             for e in &cs.entries {
                 println!(
-                    "  plan {:016x}: {} resident (last touch #{})",
+                    "  plan {:016x}: {} resident, {} ({} B/elem, last touch #{})",
                     e.key,
                     human_bytes(e.bytes as u64),
+                    e.dtype.name(),
+                    e.elem_bytes,
                     e.last_touch
                 );
             }
@@ -244,6 +252,10 @@ fn cmd_fit(args: &Args) -> Result<()> {
             }
         }
         "xla" => {
+            anyhow::ensure!(
+                precision == crate::linalg::Precision::F64,
+                "--precision f32 is native-path only (the XLA artifacts are compiled for f64)"
+            );
             let dir = args.str_or("artifacts", "artifacts");
             let rt = crate::runtime::Runtime::open(dir).context("open artifacts")?;
             let preset = args.str_or("preset", "main");
@@ -287,6 +299,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let folds = args.usize_or("folds", 3)?;
     let threads = args.usize_or("threads", 1)?;
     let backend = args.backend()?;
+    let precision = args.precision()?;
     let seed = args.usize_or("seed", 7)? as u64;
     anyhow::ensure!(appends >= 1, "--appends must be >= 1");
 
@@ -303,7 +316,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         *v += 0.3 * rng.normal();
     }
     println!(
-        "streaming design growth: base {n0} rows, {appends} append(s) of {n_new} rows, p={p}, t={t}, {folds} folds, backend={backend}"
+        "streaming design growth: base {n0} rows, {appends} append(s) of {n_new} rows, p={p}, t={t}, {folds} folds, backend={backend}, precision={precision}"
     );
 
     let engine = Engine::new();
@@ -328,14 +341,28 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 .backend(backend)
                 .threads_per_node(threads)
                 .folds(folds)
-                .seed(seed),
+                .seed(seed)
+                .precision(precision),
         )?;
         // The comparable cold rebuild: same grown design, same extended
-        // splits (validation folds fixed, appended rows train-only).
+        // splits (validation folds fixed, appended rows train-only) —
+        // at the same element precision, so the race is dtype-fair.
         splits = out.schedule.extended_splits(&splits);
         let x_grown = x_all.rows_slice(0, head + n_new);
         let sw = Stopwatch::start();
-        let cold = ridge::StreamingDesign::new(&blas, &x_grown, &ridge::LAMBDA_GRID, &splits);
+        let cold_sweeps = match precision {
+            crate::linalg::Precision::F64 => {
+                ridge::StreamingDesign::new(&blas, &x_grown, &ridge::LAMBDA_GRID, &splits)
+                    .base_sweeps()
+            }
+            crate::linalg::Precision::F32 => ridge::StreamingDesignBase::<f32>::new(
+                &blas,
+                &crate::linalg::MatF32::from_f64(&x_grown),
+                &ridge::LAMBDA_GRID,
+                &splits,
+            )
+            .base_sweeps(),
+        };
         let cold_secs = sw.secs();
         upd_total += out.update_secs;
         cold_total += cold_secs;
@@ -346,7 +373,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
             human_secs(out.update_secs),
             out.warm_sweeps,
             human_secs(cold_secs),
-            cold.base_sweeps(),
+            cold_sweeps,
             out.fit.best_lambda_per_batch
         );
         head += n_new;
@@ -384,6 +411,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         queue_capacity: args.usize_or("queue", 1024)?,
         max_coalesce_targets: args.usize_or("max-coalesce", 256)?,
         max_linger: Duration::from_micros(args.usize_or("linger-us", 2000)? as u64),
+        precision: args.precision()?,
     };
     println!(
         "serve-bench: {} request(s) × {} target(s) over {} design(s), open-loop at {:.0} req/s",

@@ -92,6 +92,14 @@ impl Args {
             .map_err(|e| anyhow!("{e}"))
     }
 
+    /// `--precision`, parsed case-insensitively via
+    /// [`Precision`](crate::linalg::Precision)'s `FromStr` (default f64).
+    pub fn precision(&self) -> Result<crate::linalg::Precision> {
+        self.str_or("precision", "f64")
+            .parse()
+            .map_err(|e| anyhow!("{e}"))
+    }
+
     pub fn resolution(&self) -> Result<Resolution> {
         let s = self.str_or("resolution", "parcels");
         Resolution::parse(s).ok_or_else(|| {

@@ -78,7 +78,16 @@ pub fn train_test_split(n: usize, test_frac: f64, seed: u64) -> Split {
 
 /// Pearson correlation per column between two equal-shape matrices
 /// (native twin of the L1 pearson kernel).
-pub fn pearson_cols(yhat: &crate::linalg::Mat, y: &crate::linalg::Mat) -> Vec<f64> {
+///
+/// Generic over the element dtype, but the five running sums always
+/// accumulate in f64 (for `E = f64` this is bit-identical to the
+/// historical code): score statistics are too cheap to be worth f32
+/// cancellation risk, so λ selection compares the same f64 quantities
+/// at every precision.
+pub fn pearson_cols<E: crate::linalg::Elem>(
+    yhat: &crate::linalg::MatBase<E>,
+    y: &crate::linalg::MatBase<E>,
+) -> Vec<f64> {
     assert_eq!(yhat.shape(), y.shape());
     let (n, t) = y.shape();
     let nf = n as f64;
@@ -86,8 +95,8 @@ pub fn pearson_cols(yhat: &crate::linalg::Mat, y: &crate::linalg::Mat) -> Vec<f6
     for j in 0..t {
         let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
         for i in 0..n {
-            let a = yhat.get(i, j);
-            let b = y.get(i, j);
+            let a = yhat.get(i, j).to_f64();
+            let b = y.get(i, j).to_f64();
             sa += a;
             sb += b;
             saa += a * a;

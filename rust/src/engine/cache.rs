@@ -50,9 +50,9 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 use crate::blas::Backend;
 use crate::cv::Split;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Precision};
 use crate::perfmodel::{self, Calibration, FitShape};
-use crate::ridge::DesignPlan;
+use crate::ridge::{DesignPlan, DesignPlanBase};
 
 /// Default cache budget: 8 GiB — generous (a handful of whole-brain
 /// 3-fold plans at the paper's p ≈ 6728) but finite, so a serving
@@ -90,6 +90,12 @@ pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// are not bit-identical to cold ones, so a cold request (`parent = 0`)
 /// must never be served a warm child and vice versa. Root plans have
 /// `parent = 0`.
+/// **Precision disjointness**: the key also carries the element dtype
+/// the plan was factorized in. An f32 plan's factors are not the f64
+/// plan's factors (different rounding at every kernel), so a key at one
+/// precision must never hit the other's entry — same design, two
+/// precisions, two cache slots. [`PlanKey::new`] defaults to
+/// [`Precision::F64`]; [`PlanKey::with_dtype`] rekeys.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct PlanKey {
     pub(crate) design: u64,
@@ -100,6 +106,8 @@ pub(crate) struct PlanKey {
     /// Fingerprint of the parent plan this one was streamed from
     /// (0 = root / cold build).
     pub(crate) parent: u64,
+    /// Element dtype of the plan's factors (no cross-precision hits).
+    pub(crate) dtype: Precision,
 }
 
 pub(crate) struct Fnv(u64);
@@ -159,6 +167,7 @@ impl PlanKey {
             backend,
             threads,
             parent: 0,
+            dtype: Precision::F64,
         }
     }
 
@@ -166,6 +175,15 @@ impl PlanKey {
     /// the lineage paragraph in the type docs).
     pub(crate) fn with_parent(mut self, parent: u64) -> PlanKey {
         self.parent = parent;
+        self
+    }
+
+    /// Rekey at another element precision (see the precision paragraph
+    /// in the type docs). The design hash stays the hash of the f64
+    /// request contents — the dtype component alone keeps the entries
+    /// disjoint, so requests need not re-hash a converted matrix.
+    pub(crate) fn with_dtype(mut self, dtype: Precision) -> PlanKey {
+        self.dtype = dtype;
         self
     }
 
@@ -180,6 +198,7 @@ impl PlanKey {
         h.u64(self.backend as u64);
         h.u64(self.threads as u64);
         h.u64(self.parent);
+        h.u64(self.dtype.wire_tag() as u64);
         h.finish()
     }
 }
@@ -221,6 +240,10 @@ pub struct CacheStats {
 pub struct CacheEntryStats {
     /// Opaque fingerprint of the plan's cache key.
     pub key: u64,
+    /// Element dtype of the resident plan's factors.
+    pub dtype: Precision,
+    /// Bytes per element at that dtype (`Precision::bytes`).
+    pub elem_bytes: usize,
     /// Real resident footprint ([`DesignPlan::resident_bytes`]).
     pub bytes: usize,
     /// Monotone access stamp: larger = touched more recently. Stamped on
@@ -273,7 +296,9 @@ impl CacheStats {
             rows.push((
                 format!("plan {:016x}", e.key),
                 format!(
-                    "depth {}, rebuild {} ({}, {} nominal)",
+                    "{} ({} B/elem), depth {}, rebuild {} ({}, {} nominal)",
+                    e.dtype.name(),
+                    e.elem_bytes,
                     e.depth,
                     crate::util::human_secs(e.rebuild_secs),
                     measured,
@@ -289,8 +314,53 @@ impl CacheStats {
 // Cache
 // ---------------------------------------------------------------------------
 
+/// A resident plan at either supported element precision. The dtype is
+/// part of the [`PlanKey`], so a slot's variant always matches its key's
+/// `dtype` — the typed lease paths ([`PlanCache::lease`] /
+/// [`PlanCache::lease_f32`]) rely on that invariant.
+#[derive(Clone)]
+pub(crate) enum PlanSlot {
+    F64(Arc<DesignPlan>),
+    F32(Arc<DesignPlanBase<f32>>),
+}
+
+impl PlanSlot {
+    fn resident_bytes(&self) -> usize {
+        match self {
+            PlanSlot::F64(p) => p.resident_bytes(),
+            PlanSlot::F32(p) => p.resident_bytes(),
+        }
+    }
+
+    fn shape(&self) -> FitShape {
+        match self {
+            PlanSlot::F64(p) => FitShape {
+                n: p.x.rows(),
+                p: p.x.cols(),
+                t: 0,
+                r: p.lambdas.len(),
+                splits: p.splits.len(),
+            },
+            PlanSlot::F32(p) => FitShape {
+                n: p.x.rows(),
+                p: p.x.cols(),
+                t: 0,
+                r: p.lambdas.len(),
+                splits: p.splits.len(),
+            },
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        match self {
+            PlanSlot::F64(_) => Precision::F64,
+            PlanSlot::F32(_) => Precision::F32,
+        }
+    }
+}
+
 struct Entry {
-    plan: Arc<DesignPlan>,
+    plan: PlanSlot,
     bytes: usize,
     last_touch: u64,
     /// Seconds to rebuild this plan from scratch as the eviction policy
@@ -351,6 +421,20 @@ pub(crate) enum Lease<'a> {
     Build(BuildGuard<'a>),
 }
 
+/// [`Lease`]'s f32 twin, returned by [`PlanCache::lease_f32`] for keys
+/// with `dtype == Precision::F32`. Same single-flight semantics; the
+/// guard is fulfilled via [`BuildGuard::fulfill_measured_f32`].
+pub(crate) enum LeaseF32<'a> {
+    Hit(Arc<DesignPlanBase<f32>>),
+    Build(BuildGuard<'a>),
+}
+
+/// Untyped lookup outcome shared by the typed lease fronts.
+enum SlotLease<'a> {
+    Hit(PlanSlot),
+    Build(BuildGuard<'a>),
+}
+
 impl PlanCache {
     pub(crate) fn new(budget: usize) -> Self {
         PlanCache { state: Mutex::new(CacheState::default()), cv: Condvar::new(), budget }
@@ -380,24 +464,49 @@ impl PlanCache {
 
     /// Look up `key`, claiming the cold build on a miss. Blocks if an
     /// identical cold build is already in flight, then returns its plan
-    /// as a hit (single-flight coalescing).
+    /// as a hit (single-flight coalescing). The key's `dtype` must be
+    /// [`Precision::F64`] — f32 callers go through
+    /// [`PlanCache::lease_f32`].
     pub(crate) fn lease(&self, key: PlanKey) -> Lease<'_> {
+        debug_assert_eq!(key.dtype, Precision::F64, "f64 lease on a non-f64 key");
+        match self.lease_slot(key) {
+            SlotLease::Hit(PlanSlot::F64(p)) => Lease::Hit(p),
+            SlotLease::Hit(PlanSlot::F32(_)) => {
+                unreachable!("f64-keyed entry held an f32 plan (dtype is part of the key)")
+            }
+            SlotLease::Build(g) => Lease::Build(g),
+        }
+    }
+
+    /// [`PlanCache::lease`] for keys at [`Precision::F32`].
+    pub(crate) fn lease_f32(&self, key: PlanKey) -> LeaseF32<'_> {
+        debug_assert_eq!(key.dtype, Precision::F32, "f32 lease on a non-f32 key");
+        match self.lease_slot(key) {
+            SlotLease::Hit(PlanSlot::F32(p)) => LeaseF32::Hit(p),
+            SlotLease::Hit(PlanSlot::F64(_)) => {
+                unreachable!("f32-keyed entry held an f64 plan (dtype is part of the key)")
+            }
+            SlotLease::Build(g) => LeaseF32::Build(g),
+        }
+    }
+
+    fn lease_slot(&self, key: PlanKey) -> SlotLease<'_> {
         let mut st = lock_recover(&self.state);
         let mut waited = false;
         loop {
             if let Some(e) = st.map.get_mut(&key) {
-                let plan = Arc::clone(&e.plan);
+                let plan = e.plan.clone();
                 st.tick += 1;
                 let tick = st.tick;
                 // Borrow again after the tick bump (split borrows).
                 st.map.get_mut(&key).expect("entry just seen").last_touch = tick;
                 st.hits += 1;
-                return Lease::Hit(plan);
+                return SlotLease::Hit(plan);
             }
             if !st.building.contains(&key) {
                 st.building.insert(key);
                 st.misses += 1;
-                return Lease::Build(BuildGuard { cache: self, key, fulfilled: false });
+                return SlotLease::Build(BuildGuard { cache: self, key, fulfilled: false });
             }
             if !waited {
                 st.coalesced += 1;
@@ -418,7 +527,7 @@ impl PlanCache {
         &self,
         st: &mut CacheState,
         key: PlanKey,
-        plan: Arc<DesignPlan>,
+        plan: PlanSlot,
         measured_secs: Option<f64>,
     ) {
         let bytes = plan.resident_bytes();
@@ -430,16 +539,14 @@ impl PlanCache {
         // that much wall-clock and would again. `t` is 0 because
         // rebuilding a plan redoes the target-independent decompositions
         // only.
-        let shape = FitShape {
-            n: plan.x.rows(),
-            p: plan.x.cols(),
-            t: 0,
-            r: plan.lambdas.len(),
-            splits: plan.splits.len(),
-        };
-        let nominal_secs =
-            perfmodel::plan_decompose_secs(&Calibration::nominal(), key.backend, shape)
-                .max(f64::MIN_POSITIVE);
+        let shape = plan.shape();
+        let nominal_secs = perfmodel::plan_decompose_secs_elem(
+            &Calibration::nominal(),
+            key.backend,
+            shape,
+            key.dtype.bytes(),
+        )
+        .max(f64::MIN_POSITIVE);
         let rebuild_secs = measured_secs.map_or(nominal_secs, |m| m.max(nominal_secs));
         // Lineage: a child's depth extends its parent's chain. If the
         // parent was already evicted the chain length is unknowable; 1
@@ -500,6 +607,8 @@ impl PlanCache {
             .iter()
             .map(|(k, e)| CacheEntryStats {
                 key: k.fingerprint(),
+                dtype: e.plan.precision(),
+                elem_bytes: e.plan.precision().bytes(),
                 bytes: e.bytes,
                 last_touch: e.last_touch,
                 depth: e.depth,
@@ -544,22 +653,28 @@ impl BuildGuard<'_> {
     /// this stays as the unmeasured path the pricing tests pin.
     #[allow(dead_code)]
     pub(crate) fn fulfill(mut self, plan: &Arc<DesignPlan>) {
-        self.publish(plan, None);
+        self.publish(PlanSlot::F64(Arc::clone(plan)), None);
     }
 
     /// Fulfill with the build's measured wall-clock seconds: the entry's
     /// eviction pricing becomes `max(measured, nominal)` instead of the
     /// nominal estimate alone (see [`Entry::rebuild_secs`]).
     pub(crate) fn fulfill_measured(mut self, plan: &Arc<DesignPlan>, secs: f64) {
-        self.publish(plan, Some(secs));
+        self.publish(PlanSlot::F64(Arc::clone(plan)), Some(secs));
     }
 
-    fn publish(&mut self, plan: &Arc<DesignPlan>, measured_secs: Option<f64>) {
+    /// [`BuildGuard::fulfill_measured`] for an f32 plan (the guard came
+    /// from [`PlanCache::lease_f32`]).
+    pub(crate) fn fulfill_measured_f32(mut self, plan: &Arc<DesignPlanBase<f32>>, secs: f64) {
+        self.publish(PlanSlot::F32(Arc::clone(plan)), Some(secs));
+    }
+
+    fn publish(&mut self, plan: PlanSlot, measured_secs: Option<f64>) {
         self.fulfilled = true;
         {
             let mut st = lock_recover(&self.cache.state);
             st.building.remove(&self.key);
-            self.cache.insert_locked(&mut st, self.key, Arc::clone(plan), measured_secs);
+            self.cache.insert_locked(&mut st, self.key, plan, measured_secs);
         }
         self.cache.cv.notify_all();
     }
@@ -602,6 +717,7 @@ mod tests {
             backend: Backend::MklLike,
             threads: 1,
             parent: 0,
+            dtype: Precision::F64,
         }
     }
 
@@ -791,6 +907,47 @@ mod tests {
         let st = cache.stats();
         let d = st.entries.iter().find(|e| e.key == orphan.fingerprint()).expect("resident").depth;
         assert_eq!(d, 1, "ancestry truncated, not zero");
+    }
+
+    #[test]
+    fn same_key_components_at_two_precisions_are_disjoint_entries() {
+        // The dtype is an identity component: an f32 request must never
+        // be served the f64 plan's factors or vice versa.
+        let k64 = key(50);
+        let k32 = key(50).with_dtype(Precision::F32);
+        assert_ne!(k64, k32);
+        assert_ne!(k64.fingerprint(), k32.fingerprint());
+
+        let cache = PlanCache::new(DEFAULT_CACHE_BUDGET);
+        claim_and_fulfill(&cache, k64, &small_plan(50));
+        // Looking up the f32 twin is a cold miss, not a hit.
+        let plan32 = {
+            let mut rng = Pcg64::seeded(51);
+            let x = crate::linalg::MatF32::from_f64(&Mat::randn(30, 4, &mut rng));
+            let splits = kfold(30, 3, Some(51));
+            let blas = Blas::new(Backend::MklLike, 1);
+            Arc::new(DesignPlanBase::<f32>::build(&blas, &x, &LAMBDA_GRID, &splits))
+        };
+        match cache.lease_f32(k32) {
+            LeaseF32::Build(g) => g.fulfill_measured_f32(&plan32, 0.01),
+            LeaseF32::Hit(_) => panic!("f32 key hit the f64 entry"),
+        }
+        assert_eq!(cache.len(), 2, "two precisions, two entries");
+        assert!(matches!(cache.lease(k64), Lease::Hit(_)));
+        assert!(matches!(cache.lease_f32(k32), LeaseF32::Hit(_)));
+
+        // Stats surface the per-entry dtype and element width.
+        let st = cache.stats();
+        let dtype_of = |k: PlanKey| {
+            st.entries.iter().find(|e| e.key == k.fingerprint()).expect("resident").clone()
+        };
+        assert_eq!(dtype_of(k64).dtype, Precision::F64);
+        assert_eq!(dtype_of(k64).elem_bytes, 8);
+        assert_eq!(dtype_of(k32).dtype, Precision::F32);
+        assert_eq!(dtype_of(k32).elem_bytes, 4);
+        let rows = st.table_rows();
+        assert!(rows.iter().any(|(_, v)| v.contains("f32 (4 B/elem)")));
+        assert!(rows.iter().any(|(_, v)| v.contains("f64 (8 B/elem)")));
     }
 
     #[test]

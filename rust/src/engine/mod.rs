@@ -83,7 +83,7 @@ use std::time::Instant;
 
 pub use cache::{CacheEntryStats, CacheStats, DEFAULT_CACHE_BUDGET};
 
-use cache::{lock_recover, Fnv, Lease, PlanCache, PlanKey};
+use cache::{lock_recover, Fnv, Lease, LeaseF32, PlanCache, PlanKey};
 
 use crate::blas::{Backend, Blas};
 use crate::cluster::ClusterSpec;
@@ -93,9 +93,9 @@ use crate::coordinator::{
 use crate::cv::{self, kfold, pearson_cols, Split};
 use crate::data::friends::EncodingDataset;
 use crate::encoding::{EncodeOpts, EncodingResult, RSummary};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatF32, Precision};
 use crate::perfmodel::{self, Calibration, FitShape};
-use crate::ridge::{self, DesignPlan, RidgeCvFit, RidgeTimings};
+use crate::ridge::{self, DesignPlan, DesignPlanBase, RidgeCvFit, RidgeTimings};
 use crate::scheduler::{
     DesExecutor, Executor, PoolStats, ProcessCtx, ProcessError, ProcessExecutor, Schedule,
     ThreadExecutor,
@@ -138,6 +138,12 @@ pub enum EngineError {
     /// one plan identity (same design, CV splits, λ grid, backend and
     /// thread width) or use a strategy that is not plan-backed.
     CoalesceKeyMismatch,
+    /// The request asked for [`Precision::F32`] in a context only the
+    /// f64 path supports: the self-contained baseline strategies (their
+    /// whole point is to reproduce the paper's f64 cost measurements)
+    /// or the process executor (the wire ships f32 frames, but the
+    /// worker task vocabulary is f64-only; see `scheduler::wire`).
+    PrecisionUnsupported { what: &'static str },
     /// [`Engine::append_fit`] was handed an appended block with no rows.
     EmptyAppend,
     /// The appended block's feature width differs from the base design's.
@@ -177,6 +183,9 @@ impl fmt::Display for EngineError {
                 "coalesced fit requests must share one plan key \
                  (same design, splits, λ grid, backend, threads; plan-backed strategy only)"
             ),
+            EngineError::PrecisionUnsupported { what } => {
+                write!(f, "f32 precision is not supported for {what}; use f64")
+            }
             EngineError::EmptyAppend => write!(f, "appended block has no rows"),
             EngineError::AppendWidthMismatch { design_cols, append_cols } => write!(
                 f,
@@ -285,6 +294,7 @@ pub struct FitRequest<'a> {
     seed: u64,
     lambdas: Vec<f64>,
     executor: ExecutorKind,
+    precision: Precision,
 }
 
 impl<'a> FitRequest<'a> {
@@ -301,7 +311,22 @@ impl<'a> FitRequest<'a> {
             seed: d.seed,
             lambdas: ridge::LAMBDA_GRID.to_vec(),
             executor: ExecutorKind::Thread,
+            precision: Precision::F64,
         }
+    }
+
+    /// Compute-floor element type for this fit (default
+    /// [`Precision::F64`]). At [`Precision::F32`] the design is demoted
+    /// once at admission and the whole plan — factors, sweeps, weights —
+    /// runs in f32 (half the factor bytes, double the SIMD lanes);
+    /// weights are promoted back to f64 at the API boundary. The f32
+    /// population is keyed separately in the plan cache (no
+    /// cross-precision hits) and agrees with the f64 fit within the
+    /// documented tolerance, not bit-exactly (tests/engine_api.rs).
+    /// Plan-backed (B-MOR) in-process fits only.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// Select the executor for cold fits. Warm (cache-hit) fits always
@@ -428,6 +453,7 @@ pub struct AppendRequest<'a> {
     folds: usize,
     seed: u64,
     lambdas: Vec<f64>,
+    precision: Precision,
 }
 
 impl<'a> AppendRequest<'a> {
@@ -443,7 +469,18 @@ impl<'a> AppendRequest<'a> {
             folds: d.inner_folds,
             seed: d.seed,
             lambdas: ridge::LAMBDA_GRID.to_vec(),
+            precision: Precision::F64,
         }
+    }
+
+    /// Compute-floor element type for this lineage (default
+    /// [`Precision::F64`]; see [`FitRequest::precision`]). A lineage is
+    /// single-precision end to end — its streams, plans and cache
+    /// entries are keyed by dtype, so an f32 append never extends (or
+    /// collides with) the f64 lineage of the same design.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 
     pub fn nodes(mut self, nodes: usize) -> Self {
@@ -796,6 +833,10 @@ pub struct Engine {
     /// is held across the update — an append mutates the stream, so two
     /// appends to one lineage cannot proceed concurrently anyway).
     streams: Mutex<HashMap<u64, StreamEntry>>,
+    /// The f32 twin of `streams`: lineages are single-precision end to
+    /// end, so the two populations live in separate registries (and
+    /// their plans under dtype-disjoint cache keys).
+    streams32: Mutex<HashMap<u64, StreamEntry32>>,
 }
 
 /// A live streaming lineage: the mutable factorization state plus the
@@ -803,6 +844,13 @@ pub struct Engine {
 /// the NEXT append without rebuilding anything).
 struct StreamEntry {
     stream: ridge::StreamingDesign,
+    head_key: PlanKey,
+    head_splits: Vec<Split>,
+}
+
+/// [`StreamEntry`] at f32: same lineage bookkeeping over the f32 stream.
+struct StreamEntry32 {
+    stream: ridge::StreamingDesignBase<f32>,
     head_key: PlanKey,
     head_splits: Vec<Split>,
 }
@@ -870,6 +918,7 @@ impl Engine {
             pool: Mutex::new(None),
             worker_bin: None,
             streams: Mutex::new(HashMap::new()),
+            streams32: Mutex::new(HashMap::new()),
         }
     }
 
@@ -961,6 +1010,17 @@ impl Engine {
     /// request arriving mid-build parks and is served that plan.
     pub fn fit(&self, req: &FitRequest) -> Result<DistributedFit, EngineError> {
         req.validate()?;
+        if req.precision == Precision::F32 {
+            if req.strategy != Strategy::Bmor {
+                return Err(EngineError::PrecisionUnsupported {
+                    what: "the self-contained baseline strategies",
+                });
+            }
+            if matches!(req.executor, ExecutorKind::Process { .. }) {
+                return Err(EngineError::PrecisionUnsupported { what: "the process executor" });
+            }
+            return Ok(self.fit_f32(req));
+        }
         let cfg = req.dist_config();
         let x = req.x.mat();
         let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
@@ -1028,6 +1088,38 @@ impl Engine {
         }
     }
 
+    /// The f32 fit path: same cache discipline as the f64 B-MOR arm
+    /// (dtype-disjoint key, single-flight cold build), but the plan is
+    /// built by serial factorization of the demoted design — the same
+    /// per-factorization code path the f32 sweeps then consume — and
+    /// the sweeps fan out in-process like a warm fit. Weights come back
+    /// promoted to f64; λ selection happened on the f64 score
+    /// accumulator, so the grid semantics match the f64 path.
+    fn fit_f32(&self, req: &FitRequest) -> DistributedFit {
+        let cfg = req.dist_config();
+        let x = req.x.mat();
+        let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
+        let key = PlanKey::new(x, &splits, &req.lambdas, cfg.backend, cfg.threads_per_node)
+            .with_dtype(Precision::F32);
+        let (plan, plan_secs, reused) = match self.plans.lease_f32(key) {
+            LeaseF32::Hit(plan) => (plan, 0.0, true),
+            LeaseF32::Build(guard) => {
+                let blas = Blas::new(cfg.backend, cfg.threads_per_node);
+                let started = Instant::now();
+                let x32 = MatF32::from_f64(x);
+                let plan =
+                    Arc::new(DesignPlanBase::<f32>::build(&blas, &x32, &req.lambdas, &splits));
+                let secs = started.elapsed().as_secs_f64();
+                guard.fulfill_measured_f32(&plan, secs);
+                (plan, secs, false)
+            }
+        };
+        let mut fit = warm_fit_f32(&plan, req.y, &cfg);
+        fit.plan_secs = plan_secs;
+        fit.plan_reused = reused;
+        fit
+    }
+
     /// Streaming append-and-fit: extend an already-factorized design
     /// with `x_new` rows and fit targets over the grown design WITHOUT
     /// rebuilding the plan from scratch.
@@ -1060,6 +1152,9 @@ impl Engine {
     /// The lineage-aware cache key keeps the two populations separate.
     pub fn append_fit(&self, req: &AppendRequest) -> Result<AppendOutcome, EngineError> {
         req.validate()?;
+        if req.precision == Precision::F32 {
+            return Ok(self.append_fit_f32(req));
+        }
         let cfg = req.dist_config();
         let x0 = req.x.mat();
         let blas = Blas::new(req.backend, req.threads_per_node);
@@ -1176,6 +1271,162 @@ impl Engine {
         }
     }
 
+    /// The f32 append path: mirrors [`Engine::append_fit`] over the f32
+    /// stream registry. The lineage keys hash the caller's f64 design
+    /// contents (same fold as the f64 twin) but carry
+    /// [`Precision::F32`], so the two precision populations never share
+    /// a plan, a stream, or a cache entry.
+    fn append_fit_f32(&self, req: &AppendRequest) -> AppendOutcome {
+        let cfg = req.dist_config();
+        let x0 = req.x.mat();
+        let blas = Blas::new(req.backend, req.threads_per_node);
+
+        let head_rkey = stream_key(
+            design_hash(x0),
+            &req.lambdas,
+            req.backend,
+            req.threads_per_node,
+            req.folds,
+            req.seed,
+        );
+
+        let mut streams = lock_recover(&self.streams32);
+        let entry = streams.remove(&head_rkey);
+        let (head_key, head_splits) = match &entry {
+            Some(e) => (e.head_key, e.head_splits.clone()),
+            None => {
+                let splits = kfold(x0.rows(), req.folds, Some(req.seed));
+                let key =
+                    PlanKey::new(x0, &splits, &req.lambdas, req.backend, req.threads_per_node)
+                        .with_dtype(Precision::F32);
+                (key, splits)
+            }
+        };
+        let parent_fingerprint = head_key.fingerprint();
+        let schedule = ridge::SplitSchedule::new(x0.rows(), req.x_new.rows());
+        let grown_splits = schedule.extended_splits(&head_splits);
+        let x_grown = Mat::vcat(&[x0, req.x_new]);
+        let child_key =
+            PlanKey::new(&x_grown, &grown_splits, &req.lambdas, req.backend, req.threads_per_node)
+                .with_dtype(Precision::F32)
+                .with_parent(parent_fingerprint);
+        let plan_fingerprint = child_key.fingerprint();
+
+        match self.plans.lease_f32(child_key) {
+            LeaseF32::Hit(plan) => {
+                if let Some(e) = entry {
+                    streams.insert(head_rkey, e);
+                }
+                drop(streams);
+                let fit = warm_fit_f32(&plan, req.y, &cfg);
+                AppendOutcome {
+                    fit,
+                    plan_fingerprint,
+                    parent_fingerprint,
+                    schedule,
+                    warm_sweeps: 0,
+                    update_secs: 0.0,
+                    plan_reused: true,
+                }
+            }
+            LeaseF32::Build(guard) => {
+                let mut e = match entry {
+                    Some(e) => e,
+                    None => {
+                        let x032 = MatF32::from_f64(x0);
+                        let stream = ridge::StreamingDesignBase::<f32>::new(
+                            &blas,
+                            &x032,
+                            &req.lambdas,
+                            &head_splits,
+                        );
+                        if let LeaseF32::Build(g) = self.plans.lease_f32(head_key) {
+                            g.fulfill_measured_f32(
+                                stream.plan(),
+                                stream.plan().build_timings.total(),
+                            );
+                        }
+                        StreamEntry32 { stream, head_key, head_splits }
+                    }
+                };
+                let x_new32 = MatF32::from_f64(req.x_new);
+                let up = e.stream.append(&blas, &x_new32);
+                guard.fulfill_measured_f32(&up.plan, up.secs);
+                let next_rkey = stream_key(
+                    child_key.design,
+                    &req.lambdas,
+                    req.backend,
+                    req.threads_per_node,
+                    req.folds,
+                    req.seed,
+                );
+                e.head_key = child_key;
+                e.head_splits = grown_splits;
+                streams.insert(next_rkey, e);
+                drop(streams);
+                let mut fit = warm_fit_f32(&up.plan, req.y, &cfg);
+                fit.plan_secs = up.secs;
+                fit.plan_reused = false;
+                AppendOutcome {
+                    fit,
+                    plan_fingerprint,
+                    parent_fingerprint,
+                    schedule,
+                    warm_sweeps: up.warm_sweeps,
+                    update_secs: up.secs,
+                    plan_reused: false,
+                }
+            }
+        }
+    }
+
+    /// Resolve an append's CHILD plan identity WITHOUT streaming
+    /// anything: validate the request and return the fingerprint of the
+    /// grown plan [`Engine::append_fit`] would publish (or warm-hit) —
+    /// the admission primitive the serving layer uses for appends, the
+    /// way [`Engine::plan_fingerprint`] serves plain fits. Reads the
+    /// live stream registry to honor lineage heads the engine already
+    /// tracks; costs one FNV pass over X plus the grown-design
+    /// concatenation, but no factorization.
+    pub fn append_fingerprint(&self, req: &AppendRequest) -> Result<u64, EngineError> {
+        req.validate()?;
+        let x0 = req.x.mat();
+        let head_rkey = stream_key(
+            design_hash(x0),
+            &req.lambdas,
+            req.backend,
+            req.threads_per_node,
+            req.folds,
+            req.seed,
+        );
+        let head = match req.precision {
+            Precision::F64 => lock_recover(&self.streams)
+                .get(&head_rkey)
+                .map(|e| (e.head_key, e.head_splits.clone())),
+            Precision::F32 => lock_recover(&self.streams32)
+                .get(&head_rkey)
+                .map(|e| (e.head_key, e.head_splits.clone())),
+        };
+        let (head_key, head_splits) = match head {
+            Some(h) => h,
+            None => {
+                let splits = kfold(x0.rows(), req.folds, Some(req.seed));
+                let key =
+                    PlanKey::new(x0, &splits, &req.lambdas, req.backend, req.threads_per_node)
+                        .with_dtype(req.precision);
+                (key, splits)
+            }
+        };
+        let schedule = ridge::SplitSchedule::new(x0.rows(), req.x_new.rows());
+        let grown_splits = schedule.extended_splits(&head_splits);
+        let x_grown = Mat::vcat(&[x0, req.x_new]);
+        let child_key =
+            PlanKey::new(&x_grown, &grown_splits, &req.lambdas, req.backend, req.threads_per_node)
+                .with_dtype(req.precision)
+                .with_parent(head_key.fingerprint());
+        Ok(child_key.fingerprint())
+    }
+
     /// Price a streaming append against a cold rebuild at the **grown**
     /// shape (`shape.n` includes the appended rows) with this engine's
     /// calibration — the same perfmodel [`Engine::placement`] uses, so a
@@ -1212,7 +1463,8 @@ impl Engine {
         }
         let x = req.x.mat();
         let splits = kfold(x.rows(), req.folds, Some(req.seed));
-        let key = PlanKey::new(x, &splits, &req.lambdas, req.backend, req.threads_per_node);
+        let key = PlanKey::new(x, &splits, &req.lambdas, req.backend, req.threads_per_node)
+            .with_dtype(req.precision);
         Ok(Some(key.fingerprint()))
     }
 
@@ -1253,59 +1505,25 @@ impl Engine {
         let x = first.x.mat();
         let cfg = first.dist_config();
         let splits = kfold(x.rows(), cfg.inner_folds, Some(cfg.seed));
-        let key = PlanKey::new(x, &splits, &first.lambdas, cfg.backend, cfg.threads_per_node);
+        let key = PlanKey::new(x, &splits, &first.lambdas, cfg.backend, cfg.threads_per_node)
+            .with_dtype(first.precision);
         for r in &reqs[1..] {
             let rc = r.dist_config();
             let rs = kfold(r.x.mat().rows(), rc.inner_folds, Some(rc.seed));
-            let rk =
-                PlanKey::new(r.x.mat(), &rs, &r.lambdas, rc.backend, rc.threads_per_node);
+            let rk = PlanKey::new(r.x.mat(), &rs, &r.lambdas, rc.backend, rc.threads_per_node)
+                .with_dtype(r.precision);
             if rk != key {
                 return Err(EngineError::CoalesceKeyMismatch);
             }
         }
 
         let blas = Blas::new(cfg.backend, cfg.threads_per_node);
-        let (plan, plan_secs, reused) = match self.plans.lease(key) {
-            Lease::Hit(plan) => (plan, 0.0, true),
-            Lease::Build(guard) => {
-                // Serial factorization on the calling thread — the same
-                // per-factorization code path as the coordinator's
-                // graph build, so the plans are bit-identical (pinned
-                // by ridge::plan's assemble-vs-build test). Adopt the
-                // caller's Arc (or clone a borrowed X exactly once).
-                let started = Instant::now();
-                let mut tim = RidgeTimings::default();
-                let mut sds = Vec::with_capacity(splits.len());
-                for s in &splits {
-                    let (sd, t) = ridge::factorize_split(&blas, x, s);
-                    tim.add(&t);
-                    sds.push(Arc::new(sd));
-                }
-                let (full, t) = ridge::factorize_full(&blas, x);
-                tim.add(&t);
-                let plan = Arc::new(DesignPlan::assemble(
-                    first.x.to_shared(),
-                    sds,
-                    full,
-                    &first.lambdas,
-                    tim,
-                ));
-                let secs = started.elapsed().as_secs_f64();
-                // Publish with the measured build time: eviction prices
-                // this entry by what rebuilding it actually cost here,
-                // floored at the nominal perfmodel estimate.
-                guard.fulfill_measured(&plan, secs);
-                (plan, secs, false)
-            }
-        };
 
         // One wide sweep over the concatenation of every request's
         // targets. Segments are the requests' OWN batch partitions
         // (contiguous within each request's columns), so the scatter
         // below reassembles exactly what Engine::fit would have built.
-        let started = Instant::now();
         let ys: Vec<&Mat> = reqs.iter().map(|r| r.y).collect();
-        let ycat = Mat::hcat(&ys);
         let mut widths = Vec::new();
         let mut all_batches = Vec::with_capacity(reqs.len());
         for r in reqs {
@@ -1315,10 +1533,85 @@ impl Engine {
             }
             all_batches.push(batches);
         }
-        let (fits, _timings) = ridge::fit_coalesced_with_plan(&blas, &plan, &ycat, &widths);
-        let wall_secs = started.elapsed().as_secs_f64();
 
-        let p = plan.x.cols();
+        // Plan lease + sweep per precision. The key carries the dtype,
+        // so the equality check above already guarantees the group is
+        // single-precision; cross-precision groups fail typed.
+        let (fits, p, plan_secs, reused, wall_secs) = match first.precision {
+            Precision::F64 => {
+                let (plan, plan_secs, reused) = match self.plans.lease(key) {
+                    Lease::Hit(plan) => (plan, 0.0, true),
+                    Lease::Build(guard) => {
+                        // Serial factorization on the calling thread —
+                        // the same per-factorization code path as the
+                        // coordinator's graph build, so the plans are
+                        // bit-identical (pinned by ridge::plan's
+                        // assemble-vs-build test). Adopt the caller's
+                        // Arc (or clone a borrowed X exactly once).
+                        let started = Instant::now();
+                        let mut tim = RidgeTimings::default();
+                        let mut sds = Vec::with_capacity(splits.len());
+                        for s in &splits {
+                            let (sd, t) = ridge::factorize_split(&blas, x, s);
+                            tim.add(&t);
+                            sds.push(Arc::new(sd));
+                        }
+                        let (full, t) = ridge::factorize_full(&blas, x);
+                        tim.add(&t);
+                        let plan = Arc::new(DesignPlan::assemble(
+                            first.x.to_shared(),
+                            sds,
+                            full,
+                            &first.lambdas,
+                            tim,
+                        ));
+                        let secs = started.elapsed().as_secs_f64();
+                        // Publish with the measured build time: eviction
+                        // prices this entry by what rebuilding it
+                        // actually cost here, floored at the nominal
+                        // perfmodel estimate.
+                        guard.fulfill_measured(&plan, secs);
+                        (plan, secs, false)
+                    }
+                };
+                let started = Instant::now();
+                let ycat = Mat::hcat(&ys);
+                let (fits, _timings) =
+                    ridge::fit_coalesced_with_plan(&blas, &plan, &ycat, &widths);
+                let wall = started.elapsed().as_secs_f64();
+                (fits, plan.x.cols(), plan_secs, reused, wall)
+            }
+            Precision::F32 => {
+                let (plan, plan_secs, reused) = match self.plans.lease_f32(key) {
+                    LeaseF32::Hit(plan) => (plan, 0.0, true),
+                    LeaseF32::Build(guard) => {
+                        // Same serial build as fit_f32's cold arm, so a
+                        // coalesced f32 member stays bit-identical to
+                        // its solo fit (pinned by tests/serving.rs for
+                        // f64; the invariant is structural).
+                        let started = Instant::now();
+                        let x32 = MatF32::from_f64(x);
+                        let plan = Arc::new(DesignPlanBase::<f32>::build(
+                            &blas,
+                            &x32,
+                            &first.lambdas,
+                            &splits,
+                        ));
+                        let secs = started.elapsed().as_secs_f64();
+                        guard.fulfill_measured_f32(&plan, secs);
+                        (plan, secs, false)
+                    }
+                };
+                let started = Instant::now();
+                let ycat = MatF32::from_f64(&Mat::hcat(&ys));
+                let (fits32, _timings) =
+                    ridge::fit_coalesced_with_plan(&blas, &plan, &ycat, &widths);
+                let wall = started.elapsed().as_secs_f64();
+                let fits: Vec<RidgeCvFit> = fits32.into_iter().map(promote_fit32).collect();
+                (fits, plan.x.cols(), plan_secs, reused, wall)
+            }
+        };
+
         let mut it = fits.into_iter();
         let mut out = Vec::with_capacity(reqs.len());
         for (r, batches) in reqs.iter().zip(all_batches) {
@@ -1600,6 +1893,51 @@ fn warm_fit(plan: &Arc<DesignPlan>, y: &Mat, cfg: &DistConfig) -> DistributedFit
     collect_fits(p, t, fits, batches, RidgeTimings::default(), wall_secs, 0.0, true)
 }
 
+/// Promote an f32 batch fit to the f64 API boundary type: weights cross
+/// once (`MatBase::to_f64`), everything else — λ*, mean scores, per-fold
+/// score table, timings — was already accumulated in f64 so the λ
+/// selection semantics are shared with the f64 path.
+fn promote_fit32(f: ridge::RidgeCvFitBase<f32>) -> RidgeCvFit {
+    RidgeCvFit {
+        weights: f.weights.to_f64(),
+        best_lambda: f.best_lambda,
+        best_idx: f.best_idx,
+        mean_scores: f.mean_scores,
+        scores: f.scores,
+        timings: f.timings,
+    }
+}
+
+/// [`warm_fit`] against an f32 plan: targets are demoted once, each
+/// batch sweeps through the generic [`ridge::fit_batch_with_plan`], and
+/// the per-batch fits come back promoted (f64 weights) for
+/// [`collect_fits`]. The f32 scatter is deterministic per thread count
+/// for the same reason the f64 one is — batch boundaries and collection
+/// order do not depend on the worker that ran them.
+fn warm_fit_f32(plan: &Arc<DesignPlanBase<f32>>, y: &Mat, cfg: &DistConfig) -> DistributedFit {
+    let t = y.cols();
+    let p = plan.x.cols();
+    let batches = strategy_batches(Strategy::Bmor, t, cfg.nodes);
+    let backend = cfg.backend;
+    let threads = cfg.threads_per_node;
+    let y32 = MatF32::from_f64(y);
+    let started = Instant::now();
+    let jobs: Vec<_> = batches
+        .iter()
+        .map(|&(j0, j1)| {
+            let yb = y32.cols_slice(j0, j1);
+            let plan = Arc::clone(plan);
+            move || {
+                let blas = Blas::new(backend, threads);
+                Box::new(promote_fit32(ridge::fit_batch_with_plan(&blas, &plan, &yb)))
+            }
+        })
+        .collect();
+    let fits = ThreadExecutor::new(cfg.nodes).run_bag(jobs);
+    let wall_secs = started.elapsed().as_secs_f64();
+    collect_fits(p, t, fits, batches, RidgeTimings::default(), wall_secs, 0.0, true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1630,6 +1968,60 @@ mod tests {
         assert_eq!(cfg.inner_folds, d.inner_folds);
         assert_eq!(cfg.seed, d.seed);
         assert_eq!(req.lambdas, ridge::LAMBDA_GRID.to_vec());
+        assert_eq!(req.precision, Precision::F64, "f64 is the default compute floor");
+    }
+
+    #[test]
+    fn f32_requests_key_disjointly_and_reject_unsupported_combos() {
+        let (x, y) = planted(50, 8, 4, 40);
+        let engine = Engine::new();
+        let req64 = FitRequest::new(&x, &y).strategy(Strategy::Bmor);
+        let req32 = req64.clone().precision(Precision::F32);
+        let f64fpr = engine.plan_fingerprint(&req64).unwrap().unwrap();
+        let f32fpr = engine.plan_fingerprint(&req32).unwrap().unwrap();
+        assert_ne!(f64fpr, f32fpr, "precision must be part of the plan identity");
+
+        // f32 is plan-backed and in-process only.
+        assert_eq!(
+            engine.fit(&req32.clone().strategy(Strategy::Single)).unwrap_err(),
+            EngineError::PrecisionUnsupported { what: "the self-contained baseline strategies" }
+        );
+        assert_eq!(
+            engine
+                .fit(&req32.clone().executor(ExecutorKind::Process { workers: 2 }))
+                .unwrap_err(),
+            EngineError::PrecisionUnsupported { what: "the process executor" }
+        );
+        assert_eq!(engine.cached_plans(), 0, "rejected requests must not build");
+
+        // A valid f32 fit lands in its own cache entry and warm-hits.
+        let cold = engine.fit(&req32).unwrap();
+        assert!(!cold.plan_reused);
+        assert_eq!(engine.cached_plans(), 1);
+        let warm = engine.fit(&req32).unwrap();
+        assert!(warm.plan_reused);
+        assert_eq!(warm.weights.max_abs_diff(&cold.weights), 0.0, "warm f32 fit diverged");
+        assert_eq!(engine.cache_stats().entries[0].key, f32fpr);
+    }
+
+    #[test]
+    fn append_fingerprint_resolves_without_streaming() {
+        let (x_all, y_all) = planted(60, 6, 3, 41);
+        let x0 = x_all.rows_slice(0, 40);
+        let x1 = x_all.rows_slice(40, 60);
+        let engine = Engine::new();
+        let req = AppendRequest::new(&x0, &x1, &y_all);
+        let fpr = engine.append_fingerprint(&req).unwrap();
+        assert_eq!(engine.cached_plans(), 0, "fingerprinting must not factorize");
+        // The real append publishes exactly that child.
+        let out = engine.append_fit(&req).unwrap();
+        assert_eq!(out.plan_fingerprint, fpr);
+        // And re-resolving after the head advanced still matches the
+        // warm-hit identity.
+        assert_eq!(engine.append_fingerprint(&req).unwrap(), fpr);
+        // The f32 lineage is a different identity altogether.
+        let fpr32 = engine.append_fingerprint(&req.clone().precision(Precision::F32)).unwrap();
+        assert_ne!(fpr32, fpr);
     }
 
     #[test]

@@ -128,6 +128,27 @@
 //! `linalg::PARALLEL_EIGH_MIN_P` columns. All three fast paths are
 //! deterministic: results are bit-identical across thread counts, and
 //! parity/bit-stability contracts live in `tests/kernel_parity.rs`.
+//!
+//! The whole compute floor is **precision-generic** over an element
+//! dtype (`linalg::Elem`: f64 and f32). `linalg::MatBase`, the
+//! microkernels (f32 runs a 4×16 tile — double the lane count per
+//! register), `Blas::gemm`/`syrk`, `ridge::DesignPlanBase` /
+//! `ridge::StreamingDesignBase` and the λ sweeps all monomorphize per
+//! dtype; f64 callers compile to the historical path bit for bit.
+//! Eigendecompositions follow a promote-solve-demote policy (Jacobi
+//! rotations always run in f64; the result is truncated once), so f32
+//! factor storage halves `DesignPlan::resident_bytes` without giving up
+//! eigensolver robustness. The dtype surfaces as `linalg::Precision` on
+//! `engine::FitRequest` / `engine::AppendRequest` /
+//! `serve::ServeConfig` and `cli fit --precision`; plan-cache keys carry
+//! it (no cross-precision hits — same design at two precisions is two
+//! entries, visible per entry in `engine::CacheEntryStats`), byte
+//! accounting everywhere derives from one `size_of::<E>()` source of
+//! truth, and the wire protocol tags every matrix frame with its dtype.
+//! f32 fits are pinned against the f64 oracle within documented
+//! tolerances, and SIMD-vs-scalar parity plus thread-count bit-stability
+//! hold exactly per dtype (`tests/kernel_parity.rs`,
+//! `tests/engine_api.rs`).
 //! - **L2 (JAX, `python/compile`)**: the brain-encoding compute graph
 //!   (gram, Jacobi eigendecomposition, multi-lambda ridge sweep, Pearson
 //!   scoring, VGG16-surrogate feature extractor), AOT-lowered to HLO text.

@@ -81,11 +81,40 @@ fn count_sweeps(sweeps: usize) {
 }
 
 /// Eigendecomposition result: ascending eigenvalues, matching columns.
+///
+/// Generic over the element dtype. The Jacobi iterations themselves
+/// always run in f64 (promote-solve-demote: an f32 caller pays the
+/// promotion once per O(p³) decomposition, negligible next to the
+/// bandwidth-bound GEMM stages, and gains f64 rotation accuracy); the
+/// generic result type is the demoted container.
 #[derive(Clone, Debug)]
-pub struct Eigh {
-    pub values: Vec<f64>,
-    pub vectors: Mat,
+pub struct EighBase<E: super::elem::Elem> {
+    pub values: Vec<E>,
+    pub vectors: super::mat::MatBase<E>,
     pub sweeps_used: usize,
+}
+
+/// The reference f64 decomposition result (the historical `Eigh`).
+pub type Eigh = EighBase<f64>;
+
+impl<E: super::elem::Elem> EighBase<E> {
+    /// Demote (or copy, for `E = f64`) an f64 decomposition result.
+    pub fn from_f64(e: &Eigh) -> Self {
+        Self {
+            values: e.values.iter().map(|&v| E::from_f64(v)).collect(),
+            vectors: super::mat::MatBase::from_f64(&e.vectors),
+            sweeps_used: e.sweeps_used,
+        }
+    }
+
+    /// Widen to the reference f64 result (bit-identical for `E = f64`).
+    pub fn to_f64(&self) -> Eigh {
+        Eigh {
+            values: self.values.iter().map(|v| v.to_f64()).collect(),
+            vectors: self.vectors.to_f64(),
+            sweeps_used: self.sweeps_used,
+        }
+    }
 }
 
 /// Off-diagonal Frobenius norm.

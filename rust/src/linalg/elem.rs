@@ -1,0 +1,224 @@
+//! The element-type axis of the compute stack.
+//!
+//! Every layer from the register microkernels up to the serving cache is
+//! generic over one [`Elem`] implementor — `f64` (the reference dtype,
+//! bit-stable against all pinned fixtures) or `f32` (half the bytes,
+//! double the SIMD lanes, tolerance-pinned against the f64 oracle).
+//! The trait carries exactly the per-dtype constants the stack needs:
+//! the microkernel lane/strip geometry, the Jacobi convergence epsilon,
+//! the wire-protocol dtype tag, and the element width that all byte
+//! accounting (`resident_bytes`, `perfmodel`) derives from.
+//!
+//! [`Precision`] is the runtime-facing mirror of the compile-time axis:
+//! request structs (`FitRequest`, `AppendRequest`, `ServeConfig`) carry a
+//! `Precision` value, and the engine monomorphizes to the matching
+//! `Elem` at the dispatch boundary. `PlanKey` folds the dtype in, so an
+//! f32 plan and an f64 plan of the same design are distinct cache
+//! entries — there are no cross-precision cache hits.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Sub};
+
+/// A matrix element type the whole stack can be generic over.
+///
+/// Implemented for `f64` and `f32` only. The constants encode the
+/// per-dtype contracts:
+/// * `LANES`/`NR` — AVX2 register geometry: 4 f64 lanes per ymm (NR=8,
+///   two registers per kernel row) vs 8 f32 lanes (NR=16, same two
+///   registers, double the width).
+/// * `EIGH_TOL` — the off-diagonal convergence epsilon the Jacobi eigh
+///   iterates to. For f64 this is the historical hard-coded `1e-12`
+///   (bit-identity with pre-generic fixtures); for f32 the target is
+///   relaxed to what the mantissa can express.
+/// * `WIRE_TAG` — the dtype byte the `scheduler::wire` matrix framing
+///   writes before the dimensions, so a decoder can never reinterpret
+///   f32 bits as f64.
+/// * `BYTES` — `size_of::<Self>()`, the single source of truth for all
+///   resident-byte and modeled-bandwidth accounting.
+pub trait Elem:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + fmt::Debug
+    + fmt::Display
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + AddAssign
+    + MulAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// SIMD lanes per 256-bit register.
+    const LANES: usize;
+    /// Microkernel strip width (two registers per row: `2 * LANES`).
+    const NR: usize;
+    /// Jacobi eigh off-diagonal convergence epsilon for this dtype.
+    const EIGH_TOL: f64;
+    /// Wire-protocol dtype tag (0 = f64, 1 = f32).
+    const WIRE_TAG: u8;
+    /// Human-readable dtype name (`"f64"` / `"f32"`).
+    const NAME: &'static str;
+    /// Element width in bytes (`size_of::<Self>()`).
+    const BYTES: usize;
+    /// The runtime-facing precision value for this dtype.
+    const PRECISION: Precision;
+
+    /// Narrow (or pass through) an `f64` value into this dtype.
+    fn from_f64(v: f64) -> Self;
+    /// Widen this value to `f64` (exact for both dtypes).
+    fn to_f64(self) -> f64;
+}
+
+impl Elem for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const LANES: usize = 4;
+    const NR: usize = 8;
+    const EIGH_TOL: f64 = 1e-12;
+    const WIRE_TAG: u8 = 0;
+    const NAME: &'static str = "f64";
+    const BYTES: usize = std::mem::size_of::<f64>();
+    const PRECISION: Precision = Precision::F64;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const LANES: usize = 8;
+    const NR: usize = 16;
+    const EIGH_TOL: f64 = 1e-6;
+    const WIRE_TAG: u8 = 1;
+    const NAME: &'static str = "f32";
+    const BYTES: usize = std::mem::size_of::<f32>();
+    const PRECISION: Precision = Precision::F32;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// Runtime dtype selector mirroring the compile-time [`Elem`] axis.
+///
+/// Carried by `FitRequest`/`AppendRequest`/`ServeConfig` and folded into
+/// `PlanKey`, so plans built at different precisions never alias in the
+/// cache. `F64` is the default everywhere — existing callers see no
+/// behavior change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Single precision: half the bytes, double the SIMD lanes,
+    /// tolerance-pinned against the f64 oracle.
+    F32,
+    /// Double precision: the reference dtype every bit-exact fixture
+    /// pins.
+    F64,
+}
+
+impl Precision {
+    /// Element width in bytes for this precision.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => f32::BYTES,
+            Precision::F64 => f64::BYTES,
+        }
+    }
+
+    /// Human-readable dtype name (`"f32"` / `"f64"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => f32::NAME,
+            Precision::F64 => f64::NAME,
+        }
+    }
+
+    /// The wire-protocol dtype tag for this precision.
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            Precision::F32 => f32::WIRE_TAG,
+            Precision::F64 => f64::WIRE_TAG,
+        }
+    }
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::F64
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "F32" | "single" => Ok(Precision::F32),
+            "f64" | "F64" | "double" => Ok(Precision::F64),
+            other => Err(format!("unknown precision '{other}' (expected f32 or f64)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_constants() {
+        assert_eq!(f64::BYTES, 8);
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f64::NR, 2 * f64::LANES);
+        assert_eq!(f32::NR, 2 * f32::LANES);
+        assert_eq!(f32::NR, 2 * f64::NR);
+        assert_ne!(f32::WIRE_TAG, f64::WIRE_TAG);
+        // The f64 epsilon must stay bitwise what the pre-generic stack
+        // hard-coded, or every pinned eigh fixture shifts.
+        assert_eq!(f64::EIGH_TOL, 1e-12);
+    }
+
+    #[test]
+    fn precision_roundtrip() {
+        for p in [Precision::F32, Precision::F64] {
+            let s = p.to_string();
+            assert_eq!(s.parse::<Precision>().unwrap(), p);
+        }
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::F64.bytes(), 8);
+    }
+
+    #[test]
+    fn widen_narrow() {
+        assert_eq!(<f32 as Elem>::from_f64(1.5), 1.5f32);
+        assert_eq!(1.5f32.to_f64(), 1.5f64);
+        assert_eq!(<f64 as Elem>::from_f64(1.5), 1.5f64);
+    }
+}

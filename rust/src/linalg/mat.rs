@@ -1,30 +1,39 @@
-//! Dense row-major f64 matrix.
+//! Dense row-major matrix, generic over the element dtype.
 //!
 //! The native compute path mirrors scikit-learn's float64 ridge (paper
-//! §2.1.5 Table 1 sizes are float64). Row-major layout matches the C
-//! ordering numpy/scikit-learn use, so the blocking analysis in `blas/`
-//! transfers.
+//! §2.1.5 Table 1 sizes are float64); [`Mat`] is the f64 alias every
+//! pre-generic call site keeps using. [`MatBase`] threads the [`Elem`]
+//! axis through storage, so the same blocking analysis in `blas/`
+//! transfers to f32 at half the bytes per element. Row-major layout
+//! matches the C ordering numpy/scikit-learn use.
 
+use super::elem::Elem;
 use crate::util::Pcg64;
 
+/// Dense row-major matrix over element type `E`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Mat {
+pub struct MatBase<E: Elem> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<E>,
 }
 
-impl Mat {
+/// The reference double-precision matrix (the historical `Mat`).
+pub type Mat = MatBase<f64>;
+/// Single-precision matrix for the f32 compute path.
+pub type MatF32 = MatBase<f32>;
+
+impl<E: Elem> MatBase<E> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        Self { rows, cols, data: vec![E::ZERO; rows * cols] }
     }
 
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<E>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Self { rows, cols, data }
     }
 
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> E) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -35,12 +44,25 @@ impl Mat {
     }
 
     pub fn eye(n: usize) -> Self {
-        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+        Self::from_fn(n, n, |i, j| if i == j { E::ONE } else { E::ZERO })
     }
 
-    /// Matrix of standard normal entries (deterministic per rng stream).
-    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
-        Self { rows, cols, data: rng.normal_vec(rows * cols) }
+    /// Narrow (or copy, for `E = f64`) an f64 matrix into this dtype.
+    pub fn from_f64(m: &Mat) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| E::from_f64(v)).collect(),
+        }
+    }
+
+    /// Widen to the reference f64 matrix (bit-identical for `E = f64`).
+    pub fn to_f64(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v.to_f64()).collect(),
+        }
     }
 
     #[inline]
@@ -59,51 +81,52 @@ impl Mat {
     }
 
     #[inline]
-    pub fn get(&self, i: usize, j: usize) -> f64 {
+    pub fn get(&self, i: usize, j: usize) -> E {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+    pub fn set(&mut self, i: usize, j: usize, v: E) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j] = v;
     }
 
     #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> &[E] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [E] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[E] {
         &self.data
     }
 
     #[inline]
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [E] {
         &mut self.data
     }
 
-    pub fn into_data(self) -> Vec<f64> {
+    pub fn into_data(self) -> Vec<E> {
         self.data
     }
 
     /// Heap bytes held by this matrix's element storage — the real
     /// memory-accounting unit for plan-cache budgeting (the `Vec` is
-    /// allocated exactly at `rows · cols`, never over-reserved).
+    /// allocated exactly at `rows · cols`, never over-reserved). An f32
+    /// matrix reports exactly half its f64 twin.
     #[inline]
     pub fn resident_bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f64>()
+        self.data.len() * std::mem::size_of::<E>()
     }
 
-    pub fn transpose(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
+    pub fn transpose(&self) -> MatBase<E> {
+        let mut out = MatBase::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness on big matrices.
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
@@ -119,10 +142,10 @@ impl Mat {
     }
 
     /// Copy a column range into a new matrix (B-MOR target batching).
-    pub fn cols_slice(&self, j0: usize, j1: usize) -> Mat {
+    pub fn cols_slice(&self, j0: usize, j1: usize) -> MatBase<E> {
         assert!(j0 <= j1 && j1 <= self.cols);
         let w = j1 - j0;
-        let mut out = Mat::zeros(self.rows, w);
+        let mut out = MatBase::zeros(self.rows, w);
         for i in 0..self.rows {
             out.row_mut(i)
                 .copy_from_slice(&self.row(i)[j0..j1]);
@@ -131,9 +154,9 @@ impl Mat {
     }
 
     /// Copy a row range (CV splits slice time samples).
-    pub fn rows_slice(&self, i0: usize, i1: usize) -> Mat {
+    pub fn rows_slice(&self, i0: usize, i1: usize) -> MatBase<E> {
         assert!(i0 <= i1 && i1 <= self.rows);
-        Mat {
+        MatBase {
             rows: i1 - i0,
             cols: self.cols,
             data: self.data[i0 * self.cols..i1 * self.cols].to_vec(),
@@ -141,8 +164,8 @@ impl Mat {
     }
 
     /// Gather rows by index (random CV splits, shuffles).
-    pub fn rows_gather(&self, idx: &[usize]) -> Mat {
-        let mut out = Mat::zeros(idx.len(), self.cols);
+    pub fn rows_gather(&self, idx: &[usize]) -> MatBase<E> {
+        let mut out = MatBase::zeros(idx.len(), self.cols);
         for (r, &i) in idx.iter().enumerate() {
             out.row_mut(r).copy_from_slice(self.row(i));
         }
@@ -150,8 +173,8 @@ impl Mat {
     }
 
     /// Gather columns by index.
-    pub fn cols_gather(&self, idx: &[usize]) -> Mat {
-        let mut out = Mat::zeros(self.rows, idx.len());
+    pub fn cols_gather(&self, idx: &[usize]) -> MatBase<E> {
+        let mut out = MatBase::zeros(self.rows, idx.len());
         for i in 0..self.rows {
             let src = self.row(i);
             let dst = out.row_mut(i);
@@ -163,12 +186,12 @@ impl Mat {
     }
 
     /// Horizontal concatenation (feature windowing concatenates TRs).
-    pub fn hcat(mats: &[&Mat]) -> Mat {
+    pub fn hcat(mats: &[&MatBase<E>]) -> MatBase<E> {
         assert!(!mats.is_empty());
         let rows = mats[0].rows;
         assert!(mats.iter().all(|m| m.rows == rows));
         let cols: usize = mats.iter().map(|m| m.cols).sum();
-        let mut out = Mat::zeros(rows, cols);
+        let mut out = MatBase::zeros(rows, cols);
         for i in 0..rows {
             let dst = out.row_mut(i);
             let mut o = 0;
@@ -181,7 +204,7 @@ impl Mat {
     }
 
     /// Vertical concatenation (streaming chunks back together).
-    pub fn vcat(mats: &[&Mat]) -> Mat {
+    pub fn vcat(mats: &[&MatBase<E>]) -> MatBase<E> {
         assert!(!mats.is_empty());
         let cols = mats[0].cols;
         assert!(mats.iter().all(|m| m.cols == cols));
@@ -190,42 +213,62 @@ impl Mat {
         for m in mats {
             data.extend_from_slice(&m.data);
         }
-        Mat { rows, cols, data }
+        MatBase { rows, cols, data }
     }
 
-    pub fn scale(&mut self, s: f64) {
+    pub fn scale(&mut self, s: E) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
-    pub fn add_assign(&mut self, other: &Mat) {
+    pub fn add_assign(&mut self, other: &MatBase<E>) {
         assert_eq!(self.shape(), other.shape());
         for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
+            *a += *b;
         }
     }
 
-    pub fn sub(&self, other: &Mat) -> Mat {
+    pub fn sub(&self, other: &MatBase<E>) -> MatBase<E> {
         assert_eq!(self.shape(), other.shape());
-        Mat {
+        MatBase {
             rows: self.rows,
             cols: self.cols,
-            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| a - b).collect(),
         }
     }
 
     pub fn frob_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data
+            .iter()
+            .map(|x| {
+                let v = x.to_f64();
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
     }
 
-    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+    pub fn max_abs_diff(&self, other: &MatBase<E>) -> f64 {
         assert_eq!(self.shape(), other.shape());
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
             .fold(0.0, f64::max)
+    }
+
+    /// Memory footprint in bytes (Table 1 accounting at this dtype's
+    /// element width).
+    pub fn nbytes(&self) -> u64 {
+        (self.rows * self.cols * std::mem::size_of::<E>()) as u64
+    }
+}
+
+impl Mat {
+    /// Matrix of standard normal entries (deterministic per rng stream).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        Self { rows, cols, data: rng.normal_vec(rows * cols) }
     }
 
     /// Z-score each column over rows (the paper's per-voxel normalization).
@@ -248,11 +291,6 @@ impl Mat {
                 self.set(i, j, v);
             }
         }
-    }
-
-    /// Memory footprint in bytes at float64 (Table 1 accounting).
-    pub fn nbytes(&self) -> u64 {
-        (self.rows * self.cols * 8) as u64
     }
 }
 
@@ -323,5 +361,21 @@ mod tests {
             assert!(mean.abs() < 1e-12);
             assert!((var - 1.0).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn f32_conversion_roundtrip() {
+        let mut rng = Pcg64::seeded(7);
+        let m = Mat::randn(13, 9, &mut rng);
+        let m32 = MatF32::from_f64(&m);
+        assert_eq!(m32.shape(), m.shape());
+        // f64→f32→f64 loses mantissa bits but stays within f32 eps
+        // relatively; for N(0,1) entries the absolute error is < 1e-6.
+        assert!(m32.to_f64().max_abs_diff(&m) < 1e-6);
+        // The f64 identity conversion is bit-exact.
+        assert_eq!(MatBase::<f64>::from_f64(&m), m);
+        // Byte accounting halves with the element width.
+        assert_eq!(m32.resident_bytes() * 2, m.resident_bytes());
+        assert_eq!(m32.nbytes() * 2, m.nbytes());
     }
 }

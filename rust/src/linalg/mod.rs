@@ -7,15 +7,17 @@
 
 pub mod cholesky;
 pub mod eigh;
+pub mod elem;
 pub mod mat;
 pub mod qr;
 
 pub use eigh::{
     eigh_calls_this_thread, eigh_calls_total, eigh_sweeps_this_thread, eigh_sweeps_total,
-    jacobi_eigh, jacobi_eigh_auto, jacobi_eigh_parallel, jacobi_eigh_warm, Eigh,
+    jacobi_eigh, jacobi_eigh_auto, jacobi_eigh_parallel, jacobi_eigh_warm, Eigh, EighBase,
     PARALLEL_EIGH_MIN_P,
 };
-pub use mat::Mat;
+pub use elem::{Elem, Precision};
+pub use mat::{Mat, MatBase, MatF32};
 
 /// Solve the 2-norm condition-style reconstruction error ‖VEVᵀ − K‖_F / ‖K‖_F.
 pub fn reconstruction_error(k: &Mat, e: &[f64], v: &Mat) -> f64 {

@@ -143,14 +143,37 @@ pub struct FitShape {
     pub splits: usize,
 }
 
+/// Element-size speedup factor for GEMM-bound terms: the explicit-SIMD
+/// kernels process `8 / elem_bytes` times as many lanes per vector op at
+/// narrower dtypes (f32 doubles the AVX2 lane count), so modeled GEMM
+/// throughput scales by the same factor. For `elem_bytes = 8` this is
+/// exactly 1.0 — multiplying by it is bit-identical, which keeps every
+/// f64 pin intact. Jacobi eigh terms are NOT scaled: the eigensolver
+/// promotes to f64 internally at every precision (promote-solve-demote),
+/// so its wall-clock is dtype-independent.
+fn gemm_elem_scale(elem_bytes: usize) -> f64 {
+    assert!(elem_bytes > 0, "zero-sized element");
+    std::mem::size_of::<f64>() as f64 / elem_bytes as f64
+}
+
 /// Shared-decomposition seconds for ONE validation split: Gram matrix of
 /// the training rows, Jacobi eigendecomposition, and the validation
 /// projection A = X_val·V. Target-count independent — this is the work
 /// the plan/execute refactor computes once and shares across batches.
 pub fn split_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    split_decompose_secs_elem(cal, backend, shape, std::mem::size_of::<f64>())
+}
+
+/// [`split_decompose_secs`] at an explicit element width (bytes/elem).
+pub fn split_decompose_secs_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    elem_bytes: usize,
+) -> f64 {
     let FitShape { n, p, splits, .. } = shape;
     let s = splits.max(1) as f64;
-    let gemm_tp = cal.gemm_flops(backend);
+    let gemm_tp = cal.gemm_flops(backend) * gemm_elem_scale(elem_bytes);
     // Triangular syrk: K = XᵀX computes only the upper triangle and
     // mirrors, so the Gram term is p²n FLOPs, not the full-GEMM 2p²n.
     let gram = (p * p) as f64 * n as f64 / gemm_tp;
@@ -163,8 +186,18 @@ pub fn split_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape
 /// Shared-decomposition seconds for the full training set (final-fit
 /// factorization: no validation projection).
 pub fn full_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    full_decompose_secs_elem(cal, backend, shape, std::mem::size_of::<f64>())
+}
+
+/// [`full_decompose_secs`] at an explicit element width (bytes/elem).
+pub fn full_decompose_secs_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    elem_bytes: usize,
+) -> f64 {
     let FitShape { n, p, .. } = shape;
-    let gemm_tp = cal.gemm_flops(backend);
+    let gemm_tp = cal.gemm_flops(backend) * gemm_elem_scale(elem_bytes);
     // Triangular syrk (see split_decompose_secs): p²n, not 2p²n.
     let gram = (p * p) as f64 * n as f64 / gemm_tp;
     let eigh = 12.0 * (p as f64).powi(3) / cal.eigh_flops;
@@ -174,9 +207,20 @@ pub fn full_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape)
 /// Total shared-plan seconds: one decompose per split + the full-train
 /// decompose (the `s+1` eigendecompositions of `ridge::DesignPlan`).
 pub fn plan_decompose_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    plan_decompose_secs_elem(cal, backend, shape, std::mem::size_of::<f64>())
+}
+
+/// [`plan_decompose_secs`] at an explicit element width (bytes/elem) —
+/// what the engine cache prices f32 entries with.
+pub fn plan_decompose_secs_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    elem_bytes: usize,
+) -> f64 {
     let s = shape.splits.max(1) as f64;
-    s * split_decompose_secs(cal, backend, shape)
-        + full_decompose_secs(cal, backend, shape)
+    s * split_decompose_secs_elem(cal, backend, shape, elem_bytes)
+        + full_decompose_secs_elem(cal, backend, shape, elem_bytes)
 }
 
 /// Fraction of the cold eigh sweep budget a warm-started decomposition
@@ -233,9 +277,19 @@ pub fn update_decompose_secs(
 /// projection and the λ validation sweep, plus the final-fit C,
 /// projection and solve (everything `ridge::fit_batch_with_plan` does).
 pub fn batch_sweep_secs(cal: &Calibration, backend: Backend, shape: FitShape) -> f64 {
+    batch_sweep_secs_elem(cal, backend, shape, std::mem::size_of::<f64>())
+}
+
+/// [`batch_sweep_secs`] at an explicit element width (bytes/elem).
+pub fn batch_sweep_secs_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    elem_bytes: usize,
+) -> f64 {
     let FitShape { n, p, t, r, splits } = shape;
     let s = splits.max(1) as f64;
-    let gemm_tp = cal.gemm_flops(backend);
+    let gemm_tp = cal.gemm_flops(backend) * gemm_elem_scale(elem_bytes);
     let nv = (n as f64 / s).max(1.0);
     // C = XᵀY: (ntr×p)ᵀ(ntr×t) per split, (n×p)ᵀ(n×t) for the final fit
     // (lands in RidgeTimings::gram_secs on the functional path).
@@ -266,12 +320,25 @@ pub fn batch_task_cost(
     shape: FitShape,
     x_shared_by: usize,
 ) -> TaskCost {
-    let secs = ridge_compute_secs(cal, backend, shape);
+    batch_task_cost_elem(cal, backend, shape, x_shared_by, std::mem::size_of::<f64>())
+}
+
+/// [`batch_task_cost`] at an explicit element width: staging bytes and
+/// GEMM-bound seconds both scale with `elem_bytes`.
+pub fn batch_task_cost_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    x_shared_by: usize,
+    elem_bytes: usize,
+) -> TaskCost {
+    let secs = plan_decompose_secs_elem(cal, backend, shape, elem_bytes)
+        + batch_sweep_secs_elem(cal, backend, shape, elem_bytes);
     // Staging: the Y batch always ships; X is broadcast once per node and
     // amortized over the tasks that share it.
-    let y_bytes = (shape.n * shape.t * 8) as f64;
-    let x_bytes = broadcast_share((shape.n * shape.p * 8) as f64, x_shared_by);
-    let w_bytes = (shape.p * shape.t * 8) as f64;
+    let y_bytes = (shape.n * shape.t * elem_bytes) as f64;
+    let x_bytes = broadcast_share((shape.n * shape.p * elem_bytes) as f64, x_shared_by);
+    let w_bytes = (shape.p * shape.t * elem_bytes) as f64;
     TaskCost {
         compute_secs: secs,
         input_bytes: y_bytes + x_bytes,
@@ -294,8 +361,17 @@ pub fn batch_task_cost(
 /// instead, which additionally counts X and the per-split Xtr gathers a
 /// resident plan pins.
 pub fn plan_bytes(shape: FitShape) -> f64 {
+    plan_bytes_elem(shape, std::mem::size_of::<f64>())
+}
+
+/// [`plan_bytes`] at an explicit element width (bytes/elem) — the single
+/// source of truth for factor-byte accounting. An f32 plan ships exactly
+/// half the f64 factor bytes (pinned against
+/// [`crate::ridge::DesignPlanBase::factor_bytes`] by a test).
+pub fn plan_bytes_elem(shape: FitShape, elem_bytes: usize) -> f64 {
     let s = shape.splits.max(1);
-    ((s + 1) * (shape.p * shape.p + shape.p) * 8 + shape.n * shape.p * 8) as f64
+    ((s + 1) * (shape.p * shape.p + shape.p) * elem_bytes + shape.n * shape.p * elem_bytes)
+        as f64
 }
 
 /// Task cost of the B-MOR plan-assembly barrier: the leader gathers every
@@ -303,9 +379,14 @@ pub fn plan_bytes(shape: FitShape) -> f64 {
 /// no further output here — the (V, e, A) broadcast to the sweep nodes is
 /// charged on the sweep side, amortized per node like the X broadcast.
 pub fn assemble_task_cost(shape: FitShape) -> TaskCost {
+    assemble_task_cost_elem(shape, std::mem::size_of::<f64>())
+}
+
+/// [`assemble_task_cost`] at an explicit element width (bytes/elem).
+pub fn assemble_task_cost_elem(shape: FitShape, elem_bytes: usize) -> TaskCost {
     TaskCost {
         compute_secs: 0.0,
-        input_bytes: plan_bytes(shape),
+        input_bytes: plan_bytes_elem(shape, elem_bytes),
         output_bytes: 0.0,
     }
 }
@@ -319,15 +400,26 @@ pub fn decompose_task_cost(
     shape: FitShape,
     with_val_projection: bool,
 ) -> TaskCost {
+    decompose_task_cost_elem(cal, backend, shape, with_val_projection, std::mem::size_of::<f64>())
+}
+
+/// [`decompose_task_cost`] at an explicit element width (bytes/elem).
+pub fn decompose_task_cost_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    with_val_projection: bool,
+    elem_bytes: usize,
+) -> TaskCost {
     let secs = if with_val_projection {
-        split_decompose_secs(cal, backend, shape)
+        split_decompose_secs_elem(cal, backend, shape, elem_bytes)
     } else {
-        full_decompose_secs(cal, backend, shape)
+        full_decompose_secs_elem(cal, backend, shape, elem_bytes)
     };
-    let x_bytes = (shape.n * shape.p * 8) as f64;
+    let x_bytes = (shape.n * shape.p * elem_bytes) as f64;
     let nv = (shape.n / shape.splits.max(1)).max(1);
-    let factor_bytes = (shape.p * shape.p * 8 + shape.p * 8) as f64
-        + if with_val_projection { (nv * shape.p * 8) as f64 } else { 0.0 };
+    let factor_bytes = (shape.p * shape.p * elem_bytes + shape.p * elem_bytes) as f64
+        + if with_val_projection { (nv * shape.p * elem_bytes) as f64 } else { 0.0 };
     TaskCost {
         compute_secs: secs,
         input_bytes: x_bytes,
@@ -349,11 +441,22 @@ pub fn sweep_task_cost(
     shape: FitShape,
     plan_shared_by: usize,
 ) -> TaskCost {
-    let secs = batch_sweep_secs(cal, backend, shape);
-    let y_bytes = (shape.n * shape.t * 8) as f64;
-    let x_bytes = broadcast_share((shape.n * shape.p * 8) as f64, plan_shared_by);
-    let factor_bytes = broadcast_share(plan_bytes(shape), plan_shared_by);
-    let w_bytes = (shape.p * shape.t * 8) as f64;
+    sweep_task_cost_elem(cal, backend, shape, plan_shared_by, std::mem::size_of::<f64>())
+}
+
+/// [`sweep_task_cost`] at an explicit element width (bytes/elem).
+pub fn sweep_task_cost_elem(
+    cal: &Calibration,
+    backend: Backend,
+    shape: FitShape,
+    plan_shared_by: usize,
+    elem_bytes: usize,
+) -> TaskCost {
+    let secs = batch_sweep_secs_elem(cal, backend, shape, elem_bytes);
+    let y_bytes = (shape.n * shape.t * elem_bytes) as f64;
+    let x_bytes = broadcast_share((shape.n * shape.p * elem_bytes) as f64, plan_shared_by);
+    let factor_bytes = broadcast_share(plan_bytes_elem(shape, elem_bytes), plan_shared_by);
+    let w_bytes = (shape.p * shape.t * elem_bytes) as f64;
     TaskCost {
         compute_secs: secs,
         input_bytes: y_bytes + x_bytes + factor_bytes,
@@ -568,6 +671,61 @@ mod tests {
             // the gathered per-split training rows.
             assert!((plan.resident_bytes() as f64) > plan_bytes(shape));
         }
+    }
+
+    #[test]
+    fn elem_variants_delegate_bit_identically_at_f64_and_halve_f32_bytes() {
+        let cal = Calibration::nominal();
+        let shape = FitShape { n: 1000, p: 128, t: 100, r: 11, splits: 3 };
+        let b = Backend::MklLike;
+        // eb = 8 is the f64 path: every pinned f64 quantity unchanged.
+        assert_eq!(plan_bytes(shape), plan_bytes_elem(shape, 8));
+        assert_eq!(
+            plan_decompose_secs(&cal, b, shape),
+            plan_decompose_secs_elem(&cal, b, shape, 8)
+        );
+        assert_eq!(
+            batch_sweep_secs(&cal, b, shape),
+            batch_sweep_secs_elem(&cal, b, shape, 8)
+        );
+        let t8 = sweep_task_cost(&cal, b, shape, 1);
+        let t8e = sweep_task_cost_elem(&cal, b, shape, 1, 8);
+        assert_eq!(t8.input_bytes, t8e.input_bytes);
+        assert_eq!(t8.compute_secs, t8e.compute_secs);
+        // eb = 4: factor bytes exactly halve; GEMM-bound time shrinks
+        // (doubled SIMD lanes) but never below half (the eigh term is
+        // promote-to-f64 and dtype-independent).
+        assert_eq!(plan_bytes_elem(shape, 4) * 2.0, plan_bytes(shape));
+        let s32 = plan_decompose_secs_elem(&cal, b, shape, 4);
+        let s64 = plan_decompose_secs(&cal, b, shape);
+        assert!(s32 < s64, "f32 decompose modeled slower than f64");
+        assert!(s32 > s64 / 2.0, "eigh term must not scale with dtype");
+        let d32 = decompose_task_cost_elem(&cal, b, shape, true, 4);
+        let d64 = decompose_task_cost(&cal, b, shape, true);
+        assert_eq!(d32.output_bytes * 2.0, d64.output_bytes);
+        assert_eq!(
+            assemble_task_cost_elem(shape, 4).input_bytes * 2.0,
+            assemble_task_cost(shape).input_bytes
+        );
+    }
+
+    #[test]
+    fn plan_bytes_elem_matches_real_f32_factor_allocation() {
+        // The f32 twin of plan_bytes_matches_real_factor_allocation: one
+        // source of truth for element size means the model at 4 B/elem
+        // equals the f32 plan's real Arc-backed factor bytes.
+        use crate::cv::kfold;
+        use crate::linalg::MatF32;
+        use crate::ridge::{DesignPlanBase, LAMBDA_GRID};
+        let mut rng = Pcg64::seeded(43);
+        let (n, s, p) = (100usize, 3usize, 6usize);
+        let x = MatF32::from_f64(&Mat::randn(n, p, &mut rng));
+        let splits = kfold(n, s, Some(1));
+        let blas = Blas::new(Backend::MklLike, 1);
+        let plan = DesignPlanBase::<f32>::build(&blas, &x, &LAMBDA_GRID, &splits);
+        let shape = FitShape { n, p, t: 1, r: LAMBDA_GRID.len(), splits: s };
+        assert_eq!(plan_bytes_elem(shape, 4), plan.factor_bytes() as f64);
+        assert_eq!(plan_bytes_elem(shape, 4) * 2.0, plan_bytes(shape));
     }
 
     #[test]

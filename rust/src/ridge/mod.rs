@@ -41,16 +41,17 @@
 pub mod plan;
 pub mod stream;
 
+use crate::blas::micro::KernelElem;
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
-use crate::linalg::{cholesky, Mat};
+use crate::linalg::{cholesky, Elem, Mat, MatBase};
 use crate::util::Stopwatch;
 
 pub use plan::{
     factorize_full, factorize_split, fit_batch_with_plan, fit_coalesced_with_plan, DesignPlan,
-    FullDesign, SplitDesign,
+    DesignPlanBase, FullDesign, FullDesignBase, SplitDesign, SplitDesignBase,
 };
-pub use stream::{AppendUpdate, SplitSchedule, StreamingDesign};
+pub use stream::{AppendUpdate, SplitSchedule, StreamingDesign, StreamingDesignBase};
 
 /// The paper's λ grid (§2.2.4).
 pub const LAMBDA_GRID: [f64; 11] = [
@@ -83,11 +84,17 @@ impl RidgeTimings {
     }
 }
 
-/// Fitted multi-target ridge model.
+/// Fitted multi-target ridge model, generic over the weight dtype
+/// ([`RidgeCvFit`] is the f64 alias).
+///
+/// Only the weights carry the element precision `E`. The validation
+/// scores, their means and the λ grid are always f64: Pearson scoring
+/// accumulates in f64 regardless of `E` (see [`pearson_cols`]), so λ
+/// selection compares identical quantities at every precision.
 #[derive(Clone, Debug)]
-pub struct RidgeCvFit {
+pub struct RidgeCvFitBase<E: Elem> {
     /// (p × t) weights at the selected λ, fitted on the full training set.
-    pub weights: Mat,
+    pub weights: MatBase<E>,
     /// Selected λ (shared across targets, as in the paper).
     pub best_lambda: f64,
     /// Index of the selected λ in the grid.
@@ -103,6 +110,9 @@ pub struct RidgeCvFit {
     pub timings: RidgeTimings,
 }
 
+/// The reference double-precision fit.
+pub type RidgeCvFit = RidgeCvFitBase<f64>;
+
 /// Eigendecomposition-reusing ridge CV over explicit validation splits.
 ///
 /// Thin wrapper over the plan API: builds a [`DesignPlan`] for `x` and
@@ -110,15 +120,15 @@ pub struct RidgeCvFit {
 /// same design should build the plan once and call
 /// [`fit_batch_with_plan`] per batch instead (what `coordinator::fit`
 /// does) — this wrapper pays the full decomposition on every call.
-pub fn fit_ridge_cv(
+pub fn fit_ridge_cv<E: KernelElem>(
     blas: &Blas,
-    x: &Mat,
-    y: &Mat,
+    x: &MatBase<E>,
+    y: &MatBase<E>,
     lambdas: &[f64],
     splits: &[Split],
-) -> RidgeCvFit {
+) -> RidgeCvFitBase<E> {
     assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
-    let plan = DesignPlan::build(blas, x, lambdas, splits);
+    let plan = DesignPlanBase::build(blas, x, lambdas, splits);
     let mut fit = fit_batch_with_plan(blas, &plan, y);
     fit.timings.add(&plan.build_timings);
     fit
@@ -231,9 +241,15 @@ pub fn gram(blas: &Blas, x: &Mat, y: &Mat) -> (Mat, Mat) {
 }
 
 /// W = V (Z ⊘ (e+λ)).
-pub fn weights_for_lambda(blas: &Blas, v: &Mat, e: &[f64], z: &Mat, lam: f64) -> Mat {
-    let mut zs = Mat::zeros(z.rows(), z.cols());
-    let mut w = Mat::zeros(v.rows(), z.cols());
+pub fn weights_for_lambda<E: KernelElem>(
+    blas: &Blas,
+    v: &MatBase<E>,
+    e: &[E],
+    z: &MatBase<E>,
+    lam: f64,
+) -> MatBase<E> {
+    let mut zs = MatBase::<E>::zeros(z.rows(), z.cols());
+    let mut w = MatBase::<E>::zeros(v.rows(), z.cols());
     weights_for_lambda_into(blas, v, e, z, lam, &mut zs, &mut w);
     w
 }
@@ -241,29 +257,39 @@ pub fn weights_for_lambda(blas: &Blas, v: &Mat, e: &[f64], z: &Mat, lam: f64) ->
 /// W = V (Z ⊘ (e+λ)) into caller-owned buffers: `zs` is (p × t) scratch
 /// for the scaled Z, `w` the (p × t) output. Sweep callers preallocate
 /// both once instead of allocating per λ.
-pub fn weights_for_lambda_into(
+pub fn weights_for_lambda_into<E: KernelElem>(
     blas: &Blas,
-    v: &Mat,
-    e: &[f64],
-    z: &Mat,
+    v: &MatBase<E>,
+    e: &[E],
+    z: &MatBase<E>,
     lam: f64,
-    zs: &mut Mat,
-    w: &mut Mat,
+    zs: &mut MatBase<E>,
+    w: &mut MatBase<E>,
 ) {
     scale_rows_into(z, e, lam, zs);
     blas.gemm_into(v, zs, w);
 }
 
 /// zs[i, :] = z[i, :] / (e[i] + λ).
-pub(crate) fn scale_rows_into(z: &Mat, e: &[f64], lam: f64, zs: &mut Mat) {
+///
+/// The reciprocal is always formed in f64 — λ lives on the f64 grid at
+/// every precision — and each product rounds once back to `E`. For
+/// `E = f64` the widen/narrow hops are identity, so this is bit-for-bit
+/// the historical `*o = s * d`.
+pub(crate) fn scale_rows_into<E: Elem>(
+    z: &MatBase<E>,
+    e: &[E],
+    lam: f64,
+    zs: &mut MatBase<E>,
+) {
     assert_eq!(z.shape(), zs.shape());
     assert_eq!(z.rows(), e.len());
     for i in 0..z.rows() {
-        let d = 1.0 / (e[i] + lam);
+        let d = 1.0 / (e[i].to_f64() + lam);
         let src = z.row(i);
         let dst = zs.row_mut(i);
         for (o, s) in dst.iter_mut().zip(src) {
-            *o = s * d;
+            *o = E::from_f64(s.to_f64() * d);
         }
     }
 }

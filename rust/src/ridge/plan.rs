@@ -22,40 +22,48 @@
 
 use std::sync::Arc;
 
+use crate::blas::micro::KernelElem;
 use crate::blas::Blas;
 use crate::cv::{pearson_cols, Split};
-use crate::linalg::Mat;
+use crate::linalg::{Elem, MatBase};
 use crate::util::Stopwatch;
 
 use super::{
-    argmax_finite, nanmean, scale_rows_into, weights_for_lambda_into, RidgeCvFit, RidgeTimings,
-    ScoreAccumulator,
+    argmax_finite, nanmean, scale_rows_into, weights_for_lambda_into, RidgeCvFitBase,
+    RidgeTimings, ScoreAccumulator,
 };
 
-/// Target-independent factorization of one CV split's training design.
+/// Target-independent factorization of one CV split's training design,
+/// generic over the element dtype ([`SplitDesign`] is the f64 alias).
 #[derive(Clone, Debug)]
-pub struct SplitDesign {
+pub struct SplitDesignBase<E: Elem> {
     /// Gathered training rows of X for this split (ntr × p) — kept so the
     /// per-batch C = XtrᵀYtr needs no re-gather.
-    pub xtr: Mat,
+    pub xtr: MatBase<E>,
     /// Row indices (into the full design) used to gather Y training rows.
     pub train_idx: Vec<usize>,
     /// Row indices used to gather Y validation rows.
     pub val_idx: Vec<usize>,
     /// Eigenvectors V of K = XtrᵀXtr (p × p).
-    pub v: Mat,
+    pub v: MatBase<E>,
     /// Eigenvalues of K, ascending.
-    pub e: Vec<f64>,
+    pub e: Vec<E>,
     /// Validation projection A = X_val · V (nv × p).
-    pub a: Mat,
+    pub a: MatBase<E>,
 }
 
-impl SplitDesign {
+/// The reference double-precision split factorization.
+pub type SplitDesign = SplitDesignBase<f64>;
+
+impl<E: Elem> SplitDesignBase<E> {
     /// Bytes of the shared factors this split contributes to a resident
     /// plan: V, e and A — A with this split's *true* validation row
-    /// count (kfold folds are uneven when `s ∤ n`).
+    /// count (kfold folds are uneven when `s ∤ n`). All terms scale with
+    /// `size_of::<E>()`: an f32 split charges exactly half its f64 twin.
     pub fn factor_bytes(&self) -> usize {
-        self.v.resident_bytes() + self.e.len() * 8 + self.a.resident_bytes()
+        self.v.resident_bytes()
+            + self.e.len() * std::mem::size_of::<E>()
+            + self.a.resident_bytes()
     }
 
     /// Full heap footprint of this split: the factors plus the gathered
@@ -68,14 +76,18 @@ impl SplitDesign {
 }
 
 /// Target-independent factorization of the FULL training design (the
-/// final-fit factors; no validation projection).
+/// final-fit factors; no validation projection). [`FullDesign`] is the
+/// f64 alias.
 #[derive(Clone, Debug)]
-pub struct FullDesign {
+pub struct FullDesignBase<E: Elem> {
     /// Eigenvectors V of K = XᵀX (p × p).
-    pub v: Mat,
+    pub v: MatBase<E>,
     /// Eigenvalues of K, ascending.
-    pub e: Vec<f64>,
+    pub e: Vec<E>,
 }
+
+/// The reference double-precision full-train factorization.
+pub type FullDesign = FullDesignBase<f64>;
 
 /// Factorize ONE CV split's training design: gather the training and
 /// validation rows, form the Gram matrix, eigendecompose it (exactly one
@@ -83,7 +95,11 @@ pub struct FullDesign {
 /// validation rows. This is one decompose task of the coordinator's B-MOR
 /// graph; [`DesignPlan::build`] runs it serially per split for
 /// single-batch callers.
-pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, RidgeTimings) {
+pub fn factorize_split<E: KernelElem>(
+    blas: &Blas,
+    x: &MatBase<E>,
+    split: &Split,
+) -> (SplitDesignBase<E>, RidgeTimings) {
     let mut tim = RidgeTimings::default();
     let xtr = x.rows_gather(&split.train);
     let xval = x.rows_gather(&split.val);
@@ -93,14 +109,14 @@ pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, Rid
     tim.gram_secs += sw.secs();
 
     let sw = Stopwatch::start();
-    let dec = blas.eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, E::EIGH_TOL);
     tim.eigh_secs += sw.secs();
 
     let sw = Stopwatch::start();
     let a = blas.gemm(&xval, &dec.vectors);
     tim.sweep_secs += sw.secs();
 
-    let sd = SplitDesign {
+    let sd = SplitDesignBase {
         xtr,
         train_idx: split.train.clone(),
         val_idx: split.val.clone(),
@@ -113,15 +129,18 @@ pub fn factorize_split(blas: &Blas, x: &Mat, split: &Split) -> (SplitDesign, Rid
 
 /// Factorize the full training design (one eigh call) — the
 /// `decompose-full` task of the coordinator's B-MOR graph.
-pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
+pub fn factorize_full<E: KernelElem>(
+    blas: &Blas,
+    x: &MatBase<E>,
+) -> (FullDesignBase<E>, RidgeTimings) {
     let mut tim = RidgeTimings::default();
     let sw = Stopwatch::start();
     let k = blas.syrk(x);
     tim.gram_secs += sw.secs();
     let sw = Stopwatch::start();
-    let dec = blas.eigh(&k, 30, 1e-12);
+    let dec = blas.eigh(&k, 30, E::EIGH_TOL);
     tim.eigh_secs += sw.secs();
-    (FullDesign { v: dec.vectors, e: dec.values }, tim)
+    (FullDesignBase { v: dec.vectors, e: dec.values }, tim)
 }
 
 /// The shared plan: everything a batch fit needs that does not depend on
@@ -134,25 +153,29 @@ pub fn factorize_full(blas: &Blas, x: &Mat) -> (FullDesign, RidgeTimings) {
 /// X, and a cached `Arc<DesignPlan>` can serve any number of concurrent
 /// warm fits without duplicating the factors.
 #[derive(Clone, Debug)]
-pub struct DesignPlan {
+pub struct DesignPlanBase<E: Elem> {
     /// The full design matrix (n × p), for the final-fit C = XᵀY of each
     /// batch. Shared, not owned: cloning the plan or caching it does not
     /// copy X.
-    pub x: Arc<Mat>,
+    pub x: Arc<MatBase<E>>,
     /// Per-split factorizations (shared with the decompose tasks that
     /// produced them — assembly is pointer-swaps, not matrix copies).
-    pub splits: Vec<Arc<SplitDesign>>,
+    pub splits: Vec<Arc<SplitDesignBase<E>>>,
     /// Full-training-set eigenvectors (p × p).
-    pub v_full: Mat,
+    pub v_full: MatBase<E>,
     /// Full-training-set eigenvalues, ascending.
-    pub e_full: Vec<f64>,
-    /// The λ grid every batch sweeps.
+    pub e_full: Vec<E>,
+    /// The λ grid every batch sweeps. Always f64 — λ selection compares
+    /// the same grid values at every element precision.
     pub lambdas: Vec<f64>,
     /// Wall-clock spent building the plan, by stage.
     pub build_timings: RidgeTimings,
 }
 
-impl DesignPlan {
+/// The reference double-precision plan.
+pub type DesignPlan = DesignPlanBase<f64>;
+
+impl<E: KernelElem> DesignPlanBase<E> {
     /// Factorize the design once for all batches: per split, the Gram
     /// matrix, its eigendecomposition and the validation projection; plus
     /// the full-train decomposition for the final fit. Performs exactly
@@ -161,7 +184,12 @@ impl DesignPlan {
     /// [`factorize_full`] as independent graph tasks and joins them with
     /// [`DesignPlan::assemble`] — same code path per factorization, so
     /// the two builds are bit-identical.
-    pub fn build(blas: &Blas, x: &Mat, lambdas: &[f64], splits: &[Split]) -> DesignPlan {
+    pub fn build(
+        blas: &Blas,
+        x: &MatBase<E>,
+        lambdas: &[f64],
+        splits: &[Split],
+    ) -> DesignPlanBase<E> {
         let mut tim = RidgeTimings::default();
         let mut designs = Vec::with_capacity(splits.len());
         for split in splits {
@@ -171,7 +199,7 @@ impl DesignPlan {
         }
         let (full, t) = factorize_full(blas, x);
         tim.add(&t);
-        DesignPlan::assemble(Arc::new(x.clone()), designs, full, lambdas, tim)
+        DesignPlanBase::assemble(Arc::new(x.clone()), designs, full, lambdas, tim)
     }
 
     /// Join independently produced factorizations into the shared plan —
@@ -180,15 +208,15 @@ impl DesignPlan {
     /// factorization accounting. Takes `Arc`s, so joining is reference
     /// sharing: no factorization or design matrix is copied.
     pub fn assemble(
-        x: Arc<Mat>,
-        splits: Vec<Arc<SplitDesign>>,
-        full: FullDesign,
+        x: Arc<MatBase<E>>,
+        splits: Vec<Arc<SplitDesignBase<E>>>,
+        full: FullDesignBase<E>,
         lambdas: &[f64],
         build_timings: RidgeTimings,
-    ) -> DesignPlan {
+    ) -> DesignPlanBase<E> {
         assert!(!lambdas.is_empty(), "empty λ grid");
         assert!(!splits.is_empty(), "need at least one CV split");
-        DesignPlan {
+        DesignPlanBase {
             x,
             splits,
             v_full: full.v,
@@ -210,7 +238,7 @@ impl DesignPlan {
     /// sizes; a test pins the two against each other.
     pub fn factor_bytes(&self) -> usize {
         self.v_full.resident_bytes()
-            + self.e_full.len() * 8
+            + self.e_full.len() * std::mem::size_of::<E>()
             + self.splits.iter().map(|sd| sd.factor_bytes()).sum::<usize>()
     }
 
@@ -228,8 +256,8 @@ impl DesignPlan {
     pub fn resident_bytes(&self) -> usize {
         self.x.resident_bytes()
             + self.v_full.resident_bytes()
-            + self.e_full.len() * 8
-            + self.lambdas.len() * 8
+            + self.e_full.len() * std::mem::size_of::<E>()
+            + self.lambdas.len() * std::mem::size_of::<f64>()
             + self.splits.iter().map(|sd| sd.resident_bytes()).sum::<usize>()
     }
 }
@@ -241,7 +269,11 @@ impl DesignPlan {
 /// `y` holds the batch's target columns over the same rows the plan was
 /// built from. Returned timings cover this call only; add
 /// `plan.build_timings` (once, not per batch) for the full account.
-pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFit {
+pub fn fit_batch_with_plan<E: KernelElem>(
+    blas: &Blas,
+    plan: &DesignPlanBase<E>,
+    y: &MatBase<E>,
+) -> RidgeCvFitBase<E> {
     assert_eq!(plan.x.rows(), y.rows(), "plan/Y row mismatch");
     let t = y.cols();
     let r = plan.lambdas.len();
@@ -250,10 +282,11 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
     // NaN-aware per-cell accumulation across splits (see
     // [`ScoreAccumulator`]): a zero-variance validation column on one
     // split must not poison that (λ, target) cell for the whole fit.
+    // Scores always accumulate in f64, whatever E is.
     let mut acc = ScoreAccumulator::new(r, t);
     // One scratch for the λ-scaled Z, reused across splits, λ values and
     // the final solve (the sweep's only per-λ work writes into it).
-    let mut zs = Mat::zeros(p, t);
+    let mut zs = MatBase::<E>::zeros(p, t);
 
     for sd in &plan.splits {
         let ytr = y.rows_gather(&sd.train_idx);
@@ -267,7 +300,7 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
         let z = blas.at_b(&sd.v, &c);
         // One prediction buffer per split (fold sizes differ by one row),
         // overwritten per λ instead of freshly allocated.
-        let mut pred = Mat::zeros(sd.a.rows(), t);
+        let mut pred = MatBase::<E>::zeros(sd.a.rows(), t);
         for (li, &lam) in plan.lambdas.iter().enumerate() {
             scale_rows_into(&z, &sd.e, lam, &mut zs);
             blas.gemm_into(&sd.a, &zs, &mut pred);
@@ -291,7 +324,7 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
     timings.gram_secs += sw.secs();
     let sw = Stopwatch::start();
     let z = blas.at_b(&plan.v_full, &c);
-    let mut weights = Mat::zeros(p, t);
+    let mut weights = MatBase::<E>::zeros(p, t);
     weights_for_lambda_into(
         blas,
         &plan.v_full,
@@ -303,7 +336,7 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
     );
     timings.solve_secs += sw.secs();
 
-    RidgeCvFit {
+    RidgeCvFitBase {
         weights,
         best_lambda,
         best_idx,
@@ -340,12 +373,12 @@ pub fn fit_batch_with_plan(blas: &Blas, plan: &DesignPlan, y: &Mat) -> RidgeCvFi
 /// Returned timings cover the whole coalesced call (they are not
 /// separable per segment); each returned [`RidgeCvFit`] carries zeroed
 /// timings.
-pub fn fit_coalesced_with_plan(
+pub fn fit_coalesced_with_plan<E: KernelElem>(
     blas: &Blas,
-    plan: &DesignPlan,
-    y: &Mat,
+    plan: &DesignPlanBase<E>,
+    y: &MatBase<E>,
     widths: &[usize],
-) -> (Vec<RidgeCvFit>, RidgeTimings) {
+) -> (Vec<RidgeCvFitBase<E>>, RidgeTimings) {
     assert_eq!(plan.x.rows(), y.rows(), "plan/Y row mismatch");
     let total: usize = widths.iter().sum();
     assert_eq!(total, y.cols(), "segment widths must cover Y's columns");
@@ -355,7 +388,7 @@ pub fn fit_coalesced_with_plan(
     let p = plan.x.cols();
     let mut timings = RidgeTimings::default();
     let mut acc = ScoreAccumulator::new(r, t);
-    let mut zs = Mat::zeros(p, t);
+    let mut zs = MatBase::<E>::zeros(p, t);
 
     // Shared sweep over the CONCATENATED targets: identical structure to
     // fit_batch_with_plan, just wider matrices.
@@ -369,7 +402,7 @@ pub fn fit_coalesced_with_plan(
 
         let sw = Stopwatch::start();
         let z = blas.at_b(&sd.v, &c);
-        let mut pred = Mat::zeros(sd.a.rows(), t);
+        let mut pred = MatBase::<E>::zeros(sd.a.rows(), t);
         for (li, &lam) in plan.lambdas.iter().enumerate() {
             scale_rows_into(&z, &sd.e, lam, &mut zs);
             blas.gemm_into(&sd.a, &zs, &mut pred);
@@ -402,8 +435,8 @@ pub fn fit_coalesced_with_plan(
 
         let sw = Stopwatch::start();
         let z_seg = z.cols_slice(j0, j1);
-        let mut zs_seg = Mat::zeros(p, w);
-        let mut weights = Mat::zeros(p, w);
+        let mut zs_seg = MatBase::<E>::zeros(p, w);
+        let mut weights = MatBase::<E>::zeros(p, w);
         weights_for_lambda_into(
             blas,
             &plan.v_full,
@@ -415,7 +448,7 @@ pub fn fit_coalesced_with_plan(
         );
         timings.solve_secs += sw.secs();
 
-        fits.push(RidgeCvFit {
+        fits.push(RidgeCvFitBase {
             weights,
             best_lambda,
             best_idx,
@@ -433,6 +466,7 @@ mod tests {
     use super::*;
     use crate::blas::Backend;
     use crate::cv::kfold;
+    use crate::linalg::Mat;
     use crate::ridge::{fit_ridge_cv_unshared, LAMBDA_GRID};
     use crate::util::Pcg64;
 
@@ -495,6 +529,25 @@ mod tests {
         }
         assert_eq!(plan.resident_bytes(), want);
         assert!(plan.resident_bytes() > plan.factor_bytes());
+    }
+
+    #[test]
+    fn f32_plan_reports_exactly_half_the_factor_bytes_of_its_f64_twin() {
+        // The one-source-of-truth byte accounting: every factor term goes
+        // through size_of::<E>(), so an f32 plan's shared factors weigh
+        // exactly half the f64 plan built from the identical design and
+        // splits. (resident_bytes does NOT halve exactly: index vectors
+        // and the always-f64 λ grid are dtype-independent.)
+        let (x, _) = planted(100, 8, 4, 7);
+        let splits = kfold(100, 3, Some(4));
+        let b = blas();
+        let plan64 = DesignPlan::build(&b, &x, &LAMBDA_GRID, &splits);
+        let x32 = crate::linalg::MatF32::from_f64(&x);
+        let plan32 = DesignPlanBase::<f32>::build(&b, &x32, &LAMBDA_GRID, &splits);
+        assert_eq!(plan32.factor_bytes() * 2, plan64.factor_bytes());
+        assert!(plan32.resident_bytes() < plan64.resident_bytes());
+        // Both still strictly dominated by residency (X + gathers pinned).
+        assert!(plan32.resident_bytes() > plan32.factor_bytes());
     }
 
     #[test]

@@ -40,12 +40,13 @@
 use std::ops::Range;
 use std::sync::Arc;
 
+use crate::blas::micro::KernelElem;
 use crate::blas::Blas;
 use crate::cv::Split;
-use crate::linalg::Mat;
+use crate::linalg::{Elem, MatBase};
 use crate::util::Stopwatch;
 
-use super::plan::{DesignPlan, FullDesign, SplitDesign};
+use super::plan::{DesignPlanBase, FullDesignBase, SplitDesignBase};
 use super::RidgeTimings;
 
 /// Deterministic fold assignment for a block of appended rows: every
@@ -98,10 +99,12 @@ impl SplitSchedule {
 
 /// One append's outcome: the freshly assembled plan plus the update's
 /// observability surface (schedule, warm sweep count, wall-clock).
+/// [`AppendUpdate`] is the f64 alias.
 #[derive(Clone, Debug)]
-pub struct AppendUpdate {
-    /// The updated plan — a drop-in [`DesignPlan`] over the grown design.
-    pub plan: Arc<DesignPlan>,
+pub struct AppendUpdateBase<E: Elem> {
+    /// The updated plan — a drop-in [`DesignPlanBase`] over the grown
+    /// design.
+    pub plan: Arc<DesignPlanBase<E>>,
     /// Where the appended rows landed (training folds of every split).
     pub schedule: SplitSchedule,
     /// Total Jacobi sweeps across the `s+1` warm-started
@@ -114,38 +117,51 @@ pub struct AppendUpdate {
     pub secs: f64,
 }
 
+/// The reference double-precision append outcome.
+pub type AppendUpdate = AppendUpdateBase<f64>;
+
 /// Retained per-split factorization state: the live Gram (updated in
 /// place per append) and the current shared design (whose `v` seeds the
 /// next warm start).
 #[derive(Clone, Debug)]
-struct StreamSplit {
-    gram: Mat,
-    design: Arc<SplitDesign>,
+struct StreamSplit<E: Elem> {
+    gram: MatBase<E>,
+    design: Arc<SplitDesignBase<E>>,
 }
 
 /// A versioned, updatable design factorization — the streaming twin of
-/// [`DesignPlan::build`]. Holds the current design matrix, the per-split
-/// and full-train Grams, and the previous eigenbases; [`Self::append`]
-/// turns a block of new rows into a fresh plan at delta cost.
+/// [`DesignPlanBase::build`], generic over the element dtype
+/// ([`StreamingDesign`] is the f64 alias). Holds the current design
+/// matrix, the per-split and full-train Grams, and the previous
+/// eigenbases; [`Self::append`] turns a block of new rows into a fresh
+/// plan at delta cost.
 #[derive(Clone, Debug)]
-pub struct StreamingDesign {
-    x: Arc<Mat>,
+pub struct StreamingDesignBase<E: Elem> {
+    x: Arc<MatBase<E>>,
     lambdas: Vec<f64>,
-    splits: Vec<StreamSplit>,
-    full_gram: Mat,
-    v_full: Mat,
-    e_full: Vec<f64>,
-    plan: Arc<DesignPlan>,
+    splits: Vec<StreamSplit<E>>,
+    full_gram: MatBase<E>,
+    v_full: MatBase<E>,
+    e_full: Vec<E>,
+    plan: Arc<DesignPlanBase<E>>,
     version: usize,
     base_sweeps: usize,
 }
 
-impl StreamingDesign {
+/// The reference double-precision streaming design.
+pub type StreamingDesign = StreamingDesignBase<f64>;
+
+impl<E: KernelElem> StreamingDesignBase<E> {
     /// Cold-build the base version (exactly the factorizations of
     /// [`DesignPlan::build`], same kernels in the same order — the base
     /// plan is bit-identical to a cold build), retaining the Grams and
     /// eigenbases for future appends.
-    pub fn new(blas: &Blas, x: &Mat, lambdas: &[f64], splits: &[Split]) -> StreamingDesign {
+    pub fn new(
+        blas: &Blas,
+        x: &MatBase<E>,
+        lambdas: &[f64],
+        splits: &[Split],
+    ) -> StreamingDesignBase<E> {
         assert!(!lambdas.is_empty(), "empty λ grid");
         assert!(!splits.is_empty(), "need at least one CV split");
         let mut tim = RidgeTimings::default();
@@ -159,13 +175,13 @@ impl StreamingDesign {
             let k = blas.syrk(&xtr);
             tim.gram_secs += sw.secs();
             let sw = Stopwatch::start();
-            let dec = blas.eigh(&k, 30, 1e-12);
+            let dec = blas.eigh(&k, 30, E::EIGH_TOL);
             tim.eigh_secs += sw.secs();
             sweeps += dec.sweeps_used;
             let sw = Stopwatch::start();
             let a = blas.gemm(&xval, &dec.vectors);
             tim.sweep_secs += sw.secs();
-            let design = Arc::new(SplitDesign {
+            let design = Arc::new(SplitDesignBase {
                 xtr,
                 train_idx: split.train.clone(),
                 val_idx: split.val.clone(),
@@ -180,18 +196,18 @@ impl StreamingDesign {
         let full_gram = blas.syrk(x);
         tim.gram_secs += sw.secs();
         let sw = Stopwatch::start();
-        let dec = blas.eigh(&full_gram, 30, 1e-12);
+        let dec = blas.eigh(&full_gram, 30, E::EIGH_TOL);
         tim.eigh_secs += sw.secs();
         sweeps += dec.sweeps_used;
         let x = Arc::new(x.clone());
-        let plan = Arc::new(DesignPlan::assemble(
+        let plan = Arc::new(DesignPlanBase::assemble(
             x.clone(),
             designs,
-            FullDesign { v: dec.vectors.clone(), e: dec.values.clone() },
+            FullDesignBase { v: dec.vectors.clone(), e: dec.values.clone() },
             lambdas,
             tim,
         ));
-        StreamingDesign {
+        StreamingDesignBase {
             x,
             lambdas: lambdas.to_vec(),
             splits: retained,
@@ -209,7 +225,7 @@ impl StreamingDesign {
     /// `s+1` Grams, a warm-started eigendecomposition per Gram seeded by
     /// the previous eigenbasis, and per-split validation reprojections
     /// A = X_val·V. Emits a fresh [`DesignPlan`] over the grown design.
-    pub fn append(&mut self, blas: &Blas, x_new: &Mat) -> AppendUpdate {
+    pub fn append(&mut self, blas: &Blas, x_new: &MatBase<E>) -> AppendUpdateBase<E> {
         let p = self.x.cols();
         assert_eq!(x_new.cols(), p, "appended rows must match the design width");
         assert!(x_new.rows() > 0, "empty append");
@@ -221,7 +237,7 @@ impl StreamingDesign {
         let sw = Stopwatch::start();
         let delta = blas.syrk(x_new);
         tim.gram_secs += sw.secs();
-        let x_grown = Arc::new(Mat::vcat(&[self.x.as_ref(), x_new]));
+        let x_grown = Arc::new(MatBase::vcat(&[self.x.as_ref(), x_new]));
 
         let mut sweeps = 0usize;
         let mut designs = Vec::with_capacity(self.splits.len());
@@ -230,17 +246,17 @@ impl StreamingDesign {
             ss.gram.add_assign(&delta);
             tim.gram_secs += sw.secs();
             let sw = Stopwatch::start();
-            let dec = blas.eigh_warm(&ss.gram, &ss.design.v, 30, 1e-12);
+            let dec = blas.eigh_warm(&ss.gram, &ss.design.v, 30, E::EIGH_TOL);
             tim.eigh_secs += sw.secs();
             sweeps += dec.sweeps_used;
             let mut train_idx = ss.design.train_idx.clone();
             schedule.extend_train(&mut train_idx);
-            let xtr = Mat::vcat(&[&ss.design.xtr, x_new]);
+            let xtr = MatBase::vcat(&[&ss.design.xtr, x_new]);
             let xval = x_grown.rows_gather(&ss.design.val_idx);
             let sw = Stopwatch::start();
             let a = blas.gemm(&xval, &dec.vectors);
             tim.sweep_secs += sw.secs();
-            ss.design = Arc::new(SplitDesign {
+            ss.design = Arc::new(SplitDesignBase {
                 xtr,
                 train_idx,
                 val_idx: ss.design.val_idx.clone(),
@@ -255,7 +271,7 @@ impl StreamingDesign {
         self.full_gram.add_assign(&delta);
         tim.gram_secs += sw.secs();
         let sw = Stopwatch::start();
-        let dec = blas.eigh_warm(&self.full_gram, &self.v_full, 30, 1e-12);
+        let dec = blas.eigh_warm(&self.full_gram, &self.v_full, 30, E::EIGH_TOL);
         tim.eigh_secs += sw.secs();
         sweeps += dec.sweeps_used;
         self.v_full = dec.vectors;
@@ -263,19 +279,19 @@ impl StreamingDesign {
         self.x = x_grown;
         self.version += 1;
 
-        let plan = Arc::new(DesignPlan::assemble(
+        let plan = Arc::new(DesignPlanBase::assemble(
             self.x.clone(),
             designs,
-            FullDesign { v: self.v_full.clone(), e: self.e_full.clone() },
+            FullDesignBase { v: self.v_full.clone(), e: self.e_full.clone() },
             &self.lambdas,
             tim,
         ));
         self.plan = plan.clone();
-        AppendUpdate { plan, schedule, warm_sweeps: sweeps, secs: wall.secs() }
+        AppendUpdateBase { plan, schedule, warm_sweeps: sweeps, secs: wall.secs() }
     }
 
     /// The current head plan (base build or last append).
-    pub fn plan(&self) -> &Arc<DesignPlan> {
+    pub fn plan(&self) -> &Arc<DesignPlanBase<E>> {
         &self.plan
     }
 
@@ -302,7 +318,8 @@ mod tests {
     use super::*;
     use crate::blas::Backend;
     use crate::cv::kfold;
-    use crate::ridge::{fit_batch_with_plan, LAMBDA_GRID};
+    use crate::linalg::Mat;
+    use crate::ridge::{fit_batch_with_plan, DesignPlan, LAMBDA_GRID};
     use crate::util::Pcg64;
 
     fn blas() -> Blas {

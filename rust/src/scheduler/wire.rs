@@ -29,19 +29,31 @@
 //! * `Fail` — the task panicked in the worker; the message carries the
 //!   panic payload so the coordinator can surface a typed error instead
 //!   of hanging.
+//!
+//! **Dtypes.** Every matrix frame leads with a one-byte dtype tag
+//! ([`crate::linalg::Precision::wire_tag`]: 0 = f64, 1 = f32), so frames
+//! are self-describing and a decoder expecting one precision rejects the
+//! other as a typed protocol error instead of misreading bit patterns.
+//! f32 frames ship each element as its exact IEEE-754 `f32::to_bits`
+//! (u32 LE) — bit-identical after the round-trip, same as f64. The
+//! process executor's task vocabulary (Init/Plan/Task/Done) is f64-only
+//! today — f32 fits run in-process (`engine::fit_f32`), so no f64→f32
+//! re-encode ever happens on this wire — but the tag reserves the frame
+//! format the day f32 graphs are dispatched.
 
 use std::io::{self, Read, Write};
 
 use crate::blas::Backend;
 use crate::coordinator::TaskKind;
 use crate::cv::Split;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatF32, Precision};
 use crate::ridge::{RidgeCvFit, RidgeTimings};
 
 /// Protocol version, embedded in every [`InitMsg`]: a worker binary from
 /// a different build refuses mismatched frames instead of misreading
-/// them.
-pub(crate) const WIRE_VERSION: u32 = 1;
+/// them. v2 added the per-matrix dtype tag byte (a v1 worker would read
+/// the tag as the row count, so the version gate is load-bearing).
+pub(crate) const WIRE_VERSION: u32 = 2;
 
 // Message tags (coordinator → worker).
 pub(crate) const TAG_INIT: u8 = 1;
@@ -118,6 +130,14 @@ impl Enc {
         self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
     }
 
+    // Reserved frame format: no f64→f32 re-encode happens on this wire
+    // yet (f32 fits run in-process), but the codec is pinned by tests so
+    // dispatching f32 graphs later is a protocol no-op.
+    #[allow(dead_code)]
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
     pub fn str(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
@@ -138,10 +158,23 @@ impl Enc {
     }
 
     pub fn mat(&mut self, m: &Mat) {
+        self.u8(Precision::F64.wire_tag());
         self.u64(m.rows() as u64);
         self.u64(m.cols() as u64);
         for &x in m.data() {
             self.f64(x);
+        }
+    }
+
+    /// The f32 matrix frame: same shape header under the f32 dtype tag,
+    /// elements as exact `f32::to_bits` — bit-identical after decode.
+    #[allow(dead_code)]
+    pub fn mat_f32(&mut self, m: &MatF32) {
+        self.u8(Precision::F32.wire_tag());
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.data() {
+            self.f32(x);
         }
     }
 
@@ -199,6 +232,12 @@ impl<'a> Dec<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    // See `Enc::f32`: reserved for f32 task graphs, pinned by tests.
+    #[allow(dead_code)]
+    pub fn f32(&mut self) -> io::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
     pub fn str(&mut self) -> io::Result<String> {
         let n = self.u64()? as usize;
         let raw = self.take(n, "str")?;
@@ -216,6 +255,10 @@ impl<'a> Dec<'a> {
     }
 
     pub fn mat(&mut self) -> io::Result<Mat> {
+        let tag = self.u8()?;
+        if tag != Precision::F64.wire_tag() {
+            return Err(proto_err("mat dtype tag (expected f64)"));
+        }
         let rows = self.u64()? as usize;
         let cols = self.u64()? as usize;
         let n = rows
@@ -226,6 +269,24 @@ impl<'a> Dec<'a> {
             data.push(self.f64()?);
         }
         Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    #[allow(dead_code)]
+    pub fn mat_f32(&mut self) -> io::Result<MatF32> {
+        let tag = self.u8()?;
+        if tag != Precision::F32.wire_tag() {
+            return Err(proto_err("mat dtype tag (expected f32)"));
+        }
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| proto_err("mat shape"))?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f32()?);
+        }
+        Ok(MatF32::from_vec(rows, cols, data))
     }
 
     pub fn timings(&mut self) -> io::Result<RidgeTimings> {
@@ -670,6 +731,41 @@ mod tests {
         }
         assert_eq!(m.full_v.max_abs_diff(&plan.v_full), 0.0);
         assert_eq!(m.full_e, plan.e_full);
+    }
+
+    #[test]
+    fn f32_mat_roundtrip_is_bit_exact_and_tagged() {
+        let mut rng = Pcg64::seeded(11);
+        let m = MatF32::from_f64(&Mat::randn(5, 3, &mut rng));
+        let mut e = Enc::new();
+        e.mat_f32(&m);
+        let raw = e.into_vec();
+        assert_eq!(raw[0], Precision::F32.wire_tag(), "frame must lead with the dtype tag");
+        // Header byte + shape + 15 elements at 4 bytes each.
+        assert_eq!(raw.len(), 1 + 16 + 15 * 4);
+        let mut d = Dec::new(&raw);
+        let m2 = d.mat_f32().unwrap();
+        assert!(d.done());
+        assert_eq!((m2.rows(), m2.cols()), (5, 3));
+        assert_eq!(m2.data(), m.data(), "f32 frames must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn mat_frames_reject_wrong_dtype_tag() {
+        let mut rng = Pcg64::seeded(12);
+        let m64 = Mat::randn(3, 2, &mut rng);
+        let m32 = MatF32::from_f64(&m64);
+        let mut e = Enc::new();
+        e.mat(&m64);
+        let f64_frame = e.into_vec();
+        let mut e = Enc::new();
+        e.mat_f32(&m32);
+        let f32_frame = e.into_vec();
+        assert!(Dec::new(&f64_frame).mat_f32().is_err(), "f64 frame must not decode as f32");
+        assert!(Dec::new(&f32_frame).mat().is_err(), "f32 frame must not decode as f64");
+        // Same frame, matching decoder: fine.
+        assert!(Dec::new(&f64_frame).mat().is_ok());
+        assert!(Dec::new(&f32_frame).mat_f32().is_ok());
     }
 
     #[test]

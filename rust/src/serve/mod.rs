@@ -41,6 +41,21 @@
 //!
 //! Non-plan-backed requests (Single / MOR baselines) are admitted but
 //! never coalesced — they run as individual [`Engine::fit`] calls.
+//!
+//! **Streaming appends** ([`Server::submit_append`]): an
+//! [`ServeAppendRequest`] rides the same bounded queue. Its identity is
+//! resolved at admission through [`Engine::append_fingerprint`] —
+//! exactly how plain fits resolve [`Engine::plan_fingerprint`] — so
+//! invalid appends reject synchronously with the engine's typed error.
+//! Appends never coalesce (an append *mutates* the lineage's stream
+//! state; merging two would race the head) and flush immediately as
+//! single-member batches.
+//!
+//! **Precision** ([`ServeConfig::precision`]): the server's compute
+//! floor is a deployment knob, not a per-request one — every fit and
+//! append it executes runs at the configured [`Precision`], and the
+//! engine's dtype-disjoint plan cache keeps an f32 server's entries
+//! separate from any f64 traffic against the same designs.
 
 pub mod trace;
 
@@ -52,8 +67,8 @@ use std::time::{Duration, Instant};
 
 use crate::blas::Backend;
 use crate::coordinator::{DistConfig, DistributedFit, Strategy};
-use crate::engine::{Engine, EngineError, FitRequest};
-use crate::linalg::Mat;
+use crate::engine::{AppendRequest, Engine, EngineError, FitRequest};
+use crate::linalg::{Mat, Precision};
 use crate::ridge;
 
 /// Recover from a poisoned lock: counters and queue entries stay
@@ -154,8 +169,9 @@ impl ServeRequest {
         self.y.cols()
     }
 
-    /// The borrow-view the engine consumes.
-    fn to_fit(&self) -> FitRequest<'_> {
+    /// The borrow-view the engine consumes, at the server's configured
+    /// compute floor.
+    fn to_fit(&self, precision: Precision) -> FitRequest<'_> {
         FitRequest::new(&self.x, &self.y)
             .strategy(self.strategy)
             .nodes(self.nodes)
@@ -164,6 +180,103 @@ impl ServeRequest {
             .folds(self.folds)
             .seed(self.seed)
             .lambdas(&self.lambdas)
+            .precision(precision)
+    }
+}
+
+/// An owned streaming-append request for the serving queue — the knobs
+/// of [`AppendRequest`] without its borrow lifetimes (see
+/// [`ServeRequest`] for the ownership rationale). `x` is the lineage
+/// head the engine already factorized; `x_new` the appended block; `y`
+/// targets over the grown rows.
+#[derive(Clone, Debug)]
+pub struct ServeAppendRequest {
+    x: Arc<Mat>,
+    x_new: Arc<Mat>,
+    y: Arc<Mat>,
+    nodes: usize,
+    threads_per_node: usize,
+    backend: Backend,
+    folds: usize,
+    seed: u64,
+    lambdas: Vec<f64>,
+    deadline: Option<Duration>,
+}
+
+impl ServeAppendRequest {
+    /// Defaults mirror [`AppendRequest::new`]: one node, one thread,
+    /// MKL-like backend, 3 folds, seed 0, the paper's λ grid, no
+    /// deadline. The strategy is implicitly B-MOR (streaming updates a
+    /// shared plan).
+    pub fn new(x: Arc<Mat>, x_new: impl Into<Arc<Mat>>, y: impl Into<Arc<Mat>>) -> Self {
+        let d = DistConfig::default();
+        ServeAppendRequest {
+            x,
+            x_new: x_new.into(),
+            y: y.into(),
+            nodes: d.nodes,
+            threads_per_node: d.threads_per_node,
+            backend: d.backend,
+            folds: d.inner_folds,
+            seed: d.seed,
+            lambdas: ridge::LAMBDA_GRID.to_vec(),
+            deadline: None,
+        }
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn threads_per_node(mut self, threads: usize) -> Self {
+        self.threads_per_node = threads;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn folds(mut self, folds: usize) -> Self {
+        self.folds = folds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lambdas(mut self, lambdas: &[f64]) -> Self {
+        self.lambdas = lambdas.to_vec();
+        self
+    }
+
+    /// Relative deadline, measured from admission (see
+    /// [`ServeRequest::deadline`]).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Number of target columns this request carries.
+    pub fn targets(&self) -> usize {
+        self.y.cols()
+    }
+
+    /// The borrow-view the engine consumes, at the server's configured
+    /// compute floor.
+    fn to_append(&self, precision: Precision) -> AppendRequest<'_> {
+        AppendRequest::new(&self.x, &self.x_new, &self.y)
+            .nodes(self.nodes)
+            .threads_per_node(self.threads_per_node)
+            .backend(self.backend)
+            .folds(self.folds)
+            .seed(self.seed)
+            .lambdas(&self.lambdas)
+            .precision(precision)
     }
 }
 
@@ -247,6 +360,11 @@ pub struct ServeConfig {
     /// same-fingerprint arrivals before flushing. Zero flushes
     /// immediately (coalesce only what is already queued).
     pub max_linger: Duration,
+    /// Compute floor every fit and append this server executes runs at
+    /// (default [`Precision::F64`]). A deployment knob, not a
+    /// per-request one: plan fingerprints are dtype-disjoint, so an f32
+    /// server's cache population never collides with f64 traffic.
+    pub precision: Precision,
 }
 
 impl Default for ServeConfig {
@@ -256,6 +374,7 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             max_coalesce_targets: 4096,
             max_linger: Duration::from_millis(2),
+            precision: Precision::F64,
         }
     }
 }
@@ -283,6 +402,9 @@ pub struct ServeStats {
     pub completed: u64,
     /// Requests that failed in the engine.
     pub failed: u64,
+    /// Streaming appends admitted through [`Server::submit_append`]
+    /// (a subset of `queued`).
+    pub appends: u64,
     /// Executed sweeps (every batch, coalesced or not).
     pub batches: u64,
     /// Batch-size histogram: `batch_sizes[i]` = executed batches holding
@@ -326,6 +448,7 @@ impl ServeStats {
             ("expired".into(), self.expired.to_string()),
             ("completed".into(), self.completed.to_string()),
             ("failed".into(), self.failed.to_string()),
+            ("appends".into(), self.appends.to_string()),
             ("batches".into(), self.batches.to_string()),
             ("batch sizes".into(), hist),
         ]
@@ -336,10 +459,26 @@ impl ServeStats {
 // Server
 // ---------------------------------------------------------------------------
 
+/// What a queue slot holds: a plain fit, or a streaming append.
+enum WorkReq {
+    Fit(ServeRequest),
+    Append(ServeAppendRequest),
+}
+
+impl WorkReq {
+    fn targets(&self) -> usize {
+        match self {
+            WorkReq::Fit(r) => r.targets(),
+            WorkReq::Append(r) => r.targets(),
+        }
+    }
+}
+
 struct Queued {
-    req: ServeRequest,
+    work: WorkReq,
     /// Plan fingerprint ([`Engine::plan_fingerprint`]); `None` =
-    /// uncoalescible (baseline strategies).
+    /// uncoalescible (baseline strategies, and every append — an append
+    /// mutates its lineage's stream state, so merging two would race).
     fpr: Option<u64>,
     /// Absolute execution deadline (admission time + requested delta).
     expires: Option<Instant>,
@@ -414,7 +553,11 @@ impl Server {
     /// [`ServeError::QueueFull`] (backpressure). On success the request
     /// is queued and a [`Ticket`] returned.
     pub fn submit(&self, req: ServeRequest) -> Result<Ticket, ServeError> {
-        let fpr = self.inner.engine.plan_fingerprint(&req.to_fit()).map_err(ServeError::Engine)?;
+        let fpr = self
+            .inner
+            .engine
+            .plan_fingerprint(&req.to_fit(self.inner.cfg.precision))
+            .map_err(ServeError::Engine)?;
         let expires = req.deadline.map(|d| Instant::now() + d);
         let (tx, rx) = mpsc::channel();
         {
@@ -426,9 +569,43 @@ impl Server {
                 lock_recover(&self.inner.stats).rejected += 1;
                 return Err(ServeError::QueueFull { capacity: self.inner.cfg.queue_capacity });
             }
-            st.q.push_back(Queued { req, fpr, expires, tx });
+            st.q.push_back(Queued { work: WorkReq::Fit(req), fpr, expires, tx });
         }
         lock_recover(&self.inner.stats).queued += 1;
+        self.inner.cv.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Admit a streaming append. The request's identity — the grown
+    /// (child) plan fingerprint — is resolved synchronously through
+    /// [`Engine::append_fingerprint`], exactly how [`Server::submit`]
+    /// resolves [`Engine::plan_fingerprint`]: an invalid append rejects
+    /// here with the engine's typed error instead of poisoning a
+    /// worker. Appends are never coalesced and execute as single-member
+    /// batches in queue order.
+    pub fn submit_append(&self, req: ServeAppendRequest) -> Result<Ticket, ServeError> {
+        self.inner
+            .engine
+            .append_fingerprint(&req.to_append(self.inner.cfg.precision))
+            .map_err(ServeError::Engine)?;
+        let expires = req.deadline.map(|d| Instant::now() + d);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock_recover(&self.inner.state);
+            if st.shutdown {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.q.len() >= self.inner.cfg.queue_capacity {
+                lock_recover(&self.inner.stats).rejected += 1;
+                return Err(ServeError::QueueFull { capacity: self.inner.cfg.queue_capacity });
+            }
+            st.q.push_back(Queued { work: WorkReq::Append(req), fpr: None, expires, tx });
+        }
+        {
+            let mut stats = lock_recover(&self.inner.stats);
+            stats.queued += 1;
+            stats.appends += 1;
+        }
         self.inner.cv.notify_one();
         Ok(Ticket { rx })
     }
@@ -491,7 +668,7 @@ fn worker_loop(inner: &Inner) {
         // Assemble: absorb same-fingerprint requests, lingering for
         // late arrivals while there is room.
         let max_targets = inner.cfg.max_coalesce_targets;
-        let mut targets = leader.req.targets();
+        let mut targets = leader.work.targets();
         let mut batch = vec![leader];
         let mut flush = Flush::Immediate;
         if batch[0].fpr.is_some() && targets < max_targets {
@@ -568,7 +745,7 @@ fn absorb(
             let _ = item.tx.send(Err(ServeError::DeadlineExpired));
             continue;
         }
-        let t = st.q[i].req.targets();
+        let t = st.q[i].work.targets();
         if *targets + t > max_targets {
             i += 1;
             continue;
@@ -586,26 +763,45 @@ fn expire(inner: &Inner, item: Queued) {
     let _ = item.tx.send(Err(ServeError::DeadlineExpired));
 }
 
+/// Run one queue slot on its own: a plain fit or a streaming append
+/// (the append's response is its fit over the grown design; lineage
+/// observability lives on [`Engine::append_fit`] for direct callers).
+fn run_single(inner: &Inner, q: &Queued) -> ServeResult {
+    let precision = inner.cfg.precision;
+    match &q.work {
+        WorkReq::Fit(r) => inner.engine.fit(&r.to_fit(precision)).map_err(ServeError::Engine),
+        WorkReq::Append(r) => inner
+            .engine
+            .append_fit(&r.to_append(precision))
+            .map(|o| o.fit)
+            .map_err(ServeError::Engine),
+    }
+}
+
 fn execute(inner: &Inner, batch: Vec<Queued>, flush: Flush) {
     let coalescible = batch[0].fpr.is_some();
     let results: Vec<ServeResult> = if coalescible {
-        let fits: Vec<FitRequest<'_>> = batch.iter().map(|q| q.req.to_fit()).collect();
+        let fits: Vec<FitRequest<'_>> = batch
+            .iter()
+            .map(|q| match &q.work {
+                WorkReq::Fit(r) => r.to_fit(inner.cfg.precision),
+                // Appends carry fpr: None, so they can never lead or
+                // join a coalescible batch.
+                WorkReq::Append(_) => unreachable!("appends are never fingerprint-coalescible"),
+            })
+            .collect();
         match inner.engine.fit_coalesced(&fits) {
             Ok(fits) => fits.into_iter().map(Ok).collect(),
             // A fingerprint collision across distinct real keys (or any
             // group-level rejection): degrade to individual fits rather
             // than failing every member.
-            Err(EngineError::CoalesceKeyMismatch) if batch.len() > 1 => batch
-                .iter()
-                .map(|q| inner.engine.fit(&q.req.to_fit()).map_err(ServeError::Engine))
-                .collect(),
+            Err(EngineError::CoalesceKeyMismatch) if batch.len() > 1 => {
+                batch.iter().map(|q| run_single(inner, q)).collect()
+            }
             Err(e) => vec![Err(ServeError::Engine(e)); batch.len()],
         }
     } else {
-        batch
-            .iter()
-            .map(|q| inner.engine.fit(&q.req.to_fit()).map_err(ServeError::Engine))
-            .collect()
+        batch.iter().map(|q| run_single(inner, q)).collect()
     };
 
     {
@@ -690,6 +886,45 @@ mod tests {
             server.submit(ServeRequest::new(x, y)),
             Err(ServeError::ShuttingDown)
         ));
+    }
+
+    #[test]
+    fn append_round_trips_through_the_queue() {
+        let mut rng = Pcg64::seeded(11);
+        let x0 = Mat::randn(40, 6, &mut rng);
+        let x_new = Mat::randn(10, 6, &mut rng);
+        let y = Mat::randn(50, 3, &mut rng);
+        let server = Server::new(Engine::new(), ServeConfig::default());
+
+        // Invalid appends reject synchronously at admission, like fits.
+        let bad = ServeAppendRequest::new(Arc::new(x0.clone()), Mat::zeros(0, 6), y.clone());
+        match server.submit_append(bad) {
+            Err(ServeError::Engine(EngineError::EmptyAppend)) => {}
+            other => panic!("expected typed admission rejection, got {other:?}"),
+        }
+
+        let req = ServeAppendRequest::new(Arc::new(x0), x_new, y);
+        let fit = server.submit_append(req).unwrap().wait().expect("serve append");
+        assert_eq!(fit.weights.shape(), (6, 3));
+        let st = server.stats();
+        assert_eq!(st.appends, 1);
+        assert_eq!(st.queued, 1);
+        assert_eq!(st.completed, 1);
+        // The append resolved its lineage: head plan + grown child plan.
+        assert_eq!(server.engine().cached_plans(), 2);
+    }
+
+    #[test]
+    fn f32_server_populates_f32_cache_entries() {
+        let (x, y) = planted(50, 6, 4, 7);
+        let cfg = ServeConfig { precision: Precision::F32, ..ServeConfig::default() };
+        let server = Server::new(Engine::new(), cfg);
+        let fit = server.submit(ServeRequest::new(x, y)).unwrap().wait().expect("f32 serve fit");
+        assert_eq!(fit.weights.shape(), (6, 4));
+        let stats = server.engine().cache_stats();
+        assert_eq!(stats.entries.len(), 1);
+        assert_eq!(stats.entries[0].dtype, Precision::F32);
+        assert_eq!(stats.entries[0].elem_bytes, 4);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use fmri_encode::cv::kfold;
 use fmri_encode::engine::{
     DEFAULT_CACHE_BUDGET, EncodeRequest, Engine, EngineError, FitRequest, SimRequest,
 };
-use fmri_encode::linalg::{eigh_calls_total, Mat};
+use fmri_encode::linalg::{eigh_calls_total, Mat, Precision};
 use fmri_encode::perfmodel::FitShape;
 use fmri_encode::ridge::{DesignPlan, LAMBDA_GRID};
 use fmri_encode::util::Pcg64;
@@ -499,6 +499,66 @@ fn arc_design_is_adopted_not_cloned_into_the_cache() {
     // Dropping the cache releases the adopted Arc.
     engine.clear_plan_cache();
     assert_eq!(Arc::strong_count(&x), before);
+}
+
+// ---------------------------------------------------------------------------
+// Precision: f32 fits against the f64 oracle, dtype-disjoint cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32_fit_tracks_the_f64_oracle_within_documented_tolerance() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(80, 10, 8, 80);
+    let engine = Engine::new();
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    let f64_fit = engine.fit(&FitRequest::new(&x, &y).config(&cfg)).unwrap();
+    let f32_fit = engine
+        .fit(&FitRequest::new(&x, &y).config(&cfg).precision(Precision::F32))
+        .unwrap();
+
+    // The whole pipeline — Gram, eigh (f64 rotations demoted once),
+    // sweeps, solve — runs at ε_f32; on this well-conditioned planted
+    // problem the accumulated error stays ~1e-5, 1e-3 is the documented
+    // bound. λ selection itself always scores in f64, and the grid
+    // points are far apart relative to the f32 noise, so the selected
+    // λ* must agree exactly.
+    assert_eq!(f32_fit.weights.shape(), f64_fit.weights.shape());
+    let d = f32_fit.weights.max_abs_diff(&f64_fit.weights);
+    assert!(d < 1e-3, "f32 weights diverge from the f64 oracle: {d}");
+    assert_eq!(f32_fit.best_lambda_per_batch, f64_fit.best_lambda_per_batch);
+    assert_eq!(f32_fit.batches, f64_fit.batches);
+}
+
+#[test]
+fn same_design_at_two_precisions_occupies_two_cache_entries() {
+    let _guard = serialize_eigh_counting();
+    let (x, y) = planted(70, 9, 6, 81);
+    let engine = Engine::new();
+    let cfg = DistConfig { strategy: Strategy::Bmor, nodes: 2, ..Default::default() };
+    engine.fit(&FitRequest::new(&x, &y).config(&cfg)).unwrap();
+    assert_eq!(engine.cached_plans(), 1);
+
+    // The identical design/splits/grid at f32 must MISS (the dtype is an
+    // identity component of the plan key) and add a second entry.
+    let req32 = FitRequest::new(&x, &y).config(&cfg).precision(Precision::F32);
+    let cold32 = engine.fit(&req32).unwrap();
+    assert!(!cold32.plan_reused, "f32 request must not hit the f64 plan");
+    assert_eq!(engine.cached_plans(), 2);
+
+    // ... and serve its own warm hits thereafter, bit-identically.
+    let warm32 = engine.fit(&req32).unwrap();
+    assert!(warm32.plan_reused);
+    assert_eq!(engine.cached_plans(), 2);
+    assert_eq!(warm32.weights.max_abs_diff(&cold32.weights), 0.0);
+
+    // Per-entry stats surface the dtype split; the f32 residency is
+    // strictly smaller at the same shape.
+    let st = engine.cache_stats();
+    let b64 = st.entries.iter().find(|e| e.dtype == Precision::F64).unwrap();
+    let b32 = st.entries.iter().find(|e| e.dtype == Precision::F32).unwrap();
+    assert_eq!(b64.elem_bytes, 8);
+    assert_eq!(b32.elem_bytes, 4);
+    assert!(b32.bytes < b64.bytes, "f32 plan must be smaller: {} vs {}", b32.bytes, b64.bytes);
 }
 
 #[test]

@@ -13,13 +13,14 @@
 use std::sync::{Mutex, MutexGuard};
 
 use fmri_encode::blas::micro::{
-    self, active_isa, kernel_4x8_triangular_with, kernel_4x8_with, KernelIsa, MR, NR,
+    self, active_isa, kernel_4x16_triangular_with, kernel_4x16_with, kernel_4x8_triangular_with,
+    kernel_4x8_with, KernelIsa, MR, NR, NR_F32,
 };
 use fmri_encode::blas::{Backend, Blas};
 use fmri_encode::cv::kfold;
 use fmri_encode::linalg::{
     eigh_calls_this_thread, eigh_calls_total, jacobi_eigh, jacobi_eigh_parallel,
-    reconstruction_error, Mat, PARALLEL_EIGH_MIN_P,
+    reconstruction_error, Mat, MatF32, PARALLEL_EIGH_MIN_P,
 };
 use fmri_encode::ridge::{DesignPlan, LAMBDA_GRID};
 use fmri_encode::util::pool::ThreadPool;
@@ -144,6 +145,99 @@ fn simd_and_scalar_triangular_kernels_agree_and_mask_identically() {
 }
 
 #[test]
+fn f32_simd_and_scalar_kernels_agree_on_odd_panels() {
+    // The f32 kernel runs 2×16-lane FMA at double the f64 lane count, so
+    // its contraction roundoff against the scalar kernel is O(kb·ε_f32)
+    // per output — with N(0,1) inputs and kb ≤ KC = 256 that is ~1e-4
+    // absolute; 1e-3 is the documented bound. Runs only where both
+    // kernels exist.
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: host lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Pcg64::seeded(41);
+        for kb in [1, 2, 3, 7, 64, 117, 256] {
+            let a = MatF32::from_f64(&Mat::randn(MR, kb, &mut rng));
+            let b = MatF32::from_f64(&Mat::randn(kb, NR_F32, &mut rng));
+            let mut apack = vec![0.0f32; MR * kb];
+            let mut bpack = vec![0.0f32; NR_F32 * kb];
+            micro::pack_a_e(&a, 0, MR, 0, kb, &mut apack);
+            micro::pack_b_e(&b, 0, kb, 0, NR_F32, &mut bpack);
+            // Non-zero starting accumulators so the spill path's
+            // load-add-store is exercised too.
+            let mut acc_scalar = [[0.5f32; NR_F32]; MR];
+            let mut acc_simd = [[0.5f32; NR_F32]; MR];
+            kernel_4x16_with(KernelIsa::Scalar, &apack, &bpack, kb, &mut acc_scalar);
+            kernel_4x16_with(KernelIsa::Avx2Fma, &apack, &bpack, kb, &mut acc_simd);
+            for r in 0..MR {
+                for c in 0..NR_F32 {
+                    let d = (acc_scalar[r][c] - acc_simd[r][c]).abs();
+                    assert!(d < 1e-3, "kb={kb} ({r},{c}): diff {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_triangular_kernels_agree_and_mask_identically() {
+    // Same contract as the f64 triangular tile, at 16 lanes: accumulated
+    // lanes agree within f32 FMA-contraction roundoff, masked lanes stay
+    // bit-exactly untouched.
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: host lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Pcg64::seeded(42);
+        for kb in [1, 3, 64, 117, 256] {
+            // Diagonal geometries spanning both 8-lane registers of the
+            // 16-wide strip: staircase starts, full rows, masked rows.
+            for lane_start in [[0, 1, 2, 3], [5, 6, 7, 8], [13, 14, 15, 16], [0, 0, 15, 16]] {
+                for mrows in [1, 2, 4] {
+                    let a = MatF32::from_f64(&Mat::randn(MR, kb, &mut rng));
+                    let b = MatF32::from_f64(&Mat::randn(kb, NR_F32, &mut rng));
+                    let mut apack = vec![0.0f32; MR * kb];
+                    let mut bpack = vec![0.0f32; NR_F32 * kb];
+                    micro::pack_a_e(&a, 0, MR, 0, kb, &mut apack);
+                    micro::pack_b_e(&b, 0, kb, 0, NR_F32, &mut bpack);
+                    let mut acc_scalar = [[0.5f32; NR_F32]; MR];
+                    let mut acc_simd = [[0.5f32; NR_F32]; MR];
+                    kernel_4x16_triangular_with(
+                        KernelIsa::Scalar, &apack, &bpack, kb, &mut acc_scalar, mrows, &lane_start,
+                    );
+                    kernel_4x16_triangular_with(
+                        KernelIsa::Avx2Fma, &apack, &bpack, kb, &mut acc_simd, mrows, &lane_start,
+                    );
+                    for r in 0..MR {
+                        for c in 0..NR_F32 {
+                            let masked = r >= mrows || c < lane_start[r].min(NR_F32);
+                            if masked {
+                                assert_eq!(
+                                    acc_simd[r][c], 0.5,
+                                    "kb={kb} mrows={mrows} ({r},{c}): masked lane written"
+                                );
+                                assert_eq!(acc_scalar[r][c], 0.5);
+                            } else {
+                                let d = (acc_scalar[r][c] - acc_simd[r][c]).abs();
+                                assert!(d < 1e-3, "kb={kb} mrows={mrows} ({r},{c}): diff {d}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn forced_scalar_override_is_respected() {
     // Under FMRI_ENCODE_FORCE_SCALAR the dispatcher must pin the scalar
     // kernel even on AVX2 hosts (CI's second run asserts this arm).
@@ -209,6 +303,57 @@ fn triangular_syrk_matches_at_b_product() {
             }
             for threads in [2, 5] {
                 let kt = Blas::new(backend, threads).syrk(&x);
+                assert_eq!(k1.max_abs_diff(&kt), 0.0, "{backend:?} p={p} t={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_all_tiers_match_f64_oracle_and_are_thread_stable() {
+    // The f32 instantiation of every backend tier must track the f64
+    // product of the same (already f32-truncated) inputs within
+    // accumulation roundoff — O(k·ε_f32) ≈ 1e-4 at k = 257 with N(0,1)
+    // data; 1e-3 documented — and must be BIT-stable across thread
+    // counts (the chunking never changes per-element accumulation
+    // order, at either dtype).
+    let mut rng = Pcg64::seeded(43);
+    for (m, k, n) in [(5, 3, 9), (67, 130, 33), (129, 257, 41)] {
+        let a32 = MatF32::from_f64(&Mat::randn(m, k, &mut rng));
+        let b32 = MatF32::from_f64(&Mat::randn(k, n, &mut rng));
+        let want = Blas::new(Backend::Naive, 1).gemm(&a32.to_f64(), &b32.to_f64());
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let c1 = Blas::new(backend, 1).gemm(&a32, &b32);
+            let d = c1.to_f64().max_abs_diff(&want);
+            assert!(d < 1e-3, "{backend:?} ({m},{k},{n}): {d}");
+            for threads in [2, 4] {
+                let ct = Blas::new(backend, threads).gemm(&a32, &b32);
+                assert_eq!(c1.max_abs_diff(&ct), 0.0, "{backend:?} t={threads} not bit-stable");
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_triangular_syrk_is_exactly_symmetric_and_thread_stable() {
+    // The mirrored lower triangle makes symmetry EXACT (bitwise), and
+    // tile-origin-keyed masking keeps the result bit-stable across
+    // thread counts — both contracts are dtype-independent.
+    let mut rng = Pcg64::seeded(44);
+    for p in [9, Blas::SYRK_TILE, Blas::SYRK_TILE + 31] {
+        let x32 = MatF32::from_f64(&Mat::randn(64, p, &mut rng));
+        let want = naive_at_a(&x32.to_f64());
+        for backend in [Backend::Naive, Backend::OpenBlasLike, Backend::MklLike] {
+            let k1 = Blas::new(backend, 1).syrk(&x32);
+            let d = k1.to_f64().max_abs_diff(&want);
+            assert!(d < 1e-3, "{backend:?} p={p}: {d}");
+            for i in 0..p {
+                for j in 0..p {
+                    assert_eq!(k1.get(i, j), k1.get(j, i), "{backend:?} p={p}");
+                }
+            }
+            for threads in [2, 5] {
+                let kt = Blas::new(backend, threads).syrk(&x32);
                 assert_eq!(k1.max_abs_diff(&kt), 0.0, "{backend:?} p={p} t={threads}");
             }
         }
@@ -312,6 +457,50 @@ fn parallel_eigh_handles_ill_conditioned_spectrum() {
     for w in d.values.windows(2) {
         assert!(w[0] <= w[1], "eigenvalues not ascending");
     }
+}
+
+#[test]
+fn f32_eigh_handles_ill_conditioned_spectrum() {
+    let _guard = serialize_eigh_counting();
+    // The same 10-decade spectrum through the f32 entry point. The
+    // promote-solve-demote policy rotates in f64, so convergence is the
+    // f64 Jacobi's; accuracy is then bounded by the single demotion of
+    // the result (and the initial f32 truncation of K): errors scale as
+    // ε_f32·λ_max ≈ 1e-2 here. Eigenvalues below that noise floor are
+    // unrecoverable at this dtype — exactly the documented trade.
+    let p = PARALLEL_EIGH_MIN_P + 5;
+    let mut rng = Pcg64::seeded(45);
+    let q = gram_schmidt(&Mat::randn(p, p, &mut rng));
+    let evals: Vec<f64> = (0..p)
+        .map(|i| 10f64.powf(-5.0 + 10.0 * i as f64 / (p - 1) as f64))
+        .collect();
+    let lambda_max = evals[p - 1];
+    let mut k = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let mut acc = 0.0;
+            for l in 0..p {
+                acc += q.get(i, l) * evals[l] * q.get(j, l);
+            }
+            k.set(i, j, acc);
+        }
+    }
+    let k32 = MatF32::from_f64(&k);
+    let d = Blas::new(Backend::MklLike, 4).eigh(&k32, 30, 1e-13);
+    let vals: Vec<f64> = d.values.iter().map(|&v| v as f64).collect();
+    // `reconstruction_error` is relative (Frobenius ratio), so the f32
+    // demotion's ε_f32·√p shows up directly: ~1e-6 here, 1e-5 bound.
+    let err = reconstruction_error(&k32.to_f64(), &vals, &d.vectors.to_f64());
+    assert!(err < 1e-5, "reconstruction err {err}");
+    for w in d.values.windows(2) {
+        assert!(w[0] <= w[1], "eigenvalues not ascending");
+    }
+    // The top of the spectrum survives the precision trade intact.
+    assert!(
+        (vals[p - 1] - lambda_max).abs() < 1e-4 * lambda_max,
+        "λmax {} vs {lambda_max}",
+        vals[p - 1]
+    );
 }
 
 fn gram_schmidt(m: &Mat) -> Mat {
